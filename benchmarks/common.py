@@ -1,0 +1,45 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                            "bench")
+
+
+def save_result(name: str, data: Dict[str, Any]) -> str:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    path = os.path.abspath(os.path.join(ARTIFACT_DIR, f"{name}.json"))
+    with open(path, "w") as fh:
+        json.dump(data, fh, indent=1, default=str)
+    return path
+
+
+def reduced_model(arch: str, seed: int = 0, dropless: bool = False):
+    import dataclasses
+
+    from repro.configs import base as config_base
+    from repro.models import model_zoo
+
+    cfg = config_base.get(arch).reduced()
+    if dropless and cfg.is_moe:
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    model = model_zoo.build(cfg, model_axis=1)
+    params = model.init(jax.random.PRNGKey(seed))
+    return model, params, cfg
+
+
+def lm_batch(cfg, B=2, S=32):
+    b = {"tokens": jnp.arange(B * S, dtype=jnp.int32).reshape(B, S)
+         % min(cfg.vocab, 97),
+         "labels": jnp.ones((B, S), jnp.int32)}
+    if cfg.frontend == "audio_frames":
+        b["frames"] = jnp.ones((B, 8, cfg.d_model), jnp.bfloat16) * 0.1
+    if cfg.frontend == "vision_patches":
+        b["patches"] = jnp.ones((B, 8, cfg.d_model), jnp.bfloat16) * 0.1
+    return b

@@ -1,0 +1,47 @@
+"""Fig 12: communication time vs network topology and bandwidth (what-if
+simulation with the Mixtral 8x7B workload).
+
+Expected orderings: switch <= ring <= fully-connected at equal end-link
+bandwidth; improvements converge as bandwidth grows (latency dominance)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from .common import save_result
+
+BWS_GBPS = (75, 150, 300, 450, 600, 900)
+
+
+def run() -> Dict[str, Any]:
+    from repro.core.generator import symbolic_transformer_step
+    from repro.sim import Fabric, SimConfig, simulate_single_trace
+
+    def trace():
+        # mixtral-8x7b-flavored step on 8 devices (TP=2, EP=4-ish)
+        return symbolic_transformer_step(layers=8, d_model=4096, d_ff=14336,
+                                         heads=32, seq=2048, batch=8,
+                                         tp=2, dp=4, moe_experts=8)
+
+    table: Dict[str, Dict[str, float]] = {}
+    for topo in ("switch", "ring", "fully_connected"):
+        row = {}
+        for bw in BWS_GBPS:
+            fab = Fabric.build(topo, 8, link_bw=bw * 1e9)
+            res = simulate_single_trace(trace(), fab,
+                                        SimConfig(congestion=False))
+            row[str(bw)] = sum(res.collective_time_s.values())
+        table[topo] = row
+    base = max(v for row in table.values() for v in row.values())
+    norm = {t: {bw: v / base for bw, v in row.items()}
+            for t, row in table.items()}
+    out = {"comm_time_s": table, "normalized": norm}
+    save_result("fig12_whatif", out)
+    return out
+
+
+if __name__ == "__main__":
+    r = run()
+    print(f"{'topology':18s}" + "".join(f"{bw:>9}G" for bw in BWS_GBPS))
+    for topo, row in r["comm_time_s"].items():
+        print(f"{topo:18s}" + "".join(f"{row[str(bw)] * 1e3:9.2f}m"
+                                      for bw in BWS_GBPS))

@@ -1,0 +1,34 @@
+"""Fig 15: per-layer KV-cache transfer sizes between prefill and decode
+stages (P/D disaggregation point-to-point messages)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+from .common import reduced_model, save_result
+
+
+def run() -> Dict[str, Any]:
+    from repro.core import ExecutionTrace, NodeType
+    from repro.serve import Engine, ServeConfig
+
+    et = ExecutionTrace()
+    model, params, cfg = reduced_model("granite-8b")
+    eng = Engine(model, params, ServeConfig(max_len=32, trace=et))
+    eng.prefill(jnp.ones((2, 8), jnp.int32))
+    xfer = [n for n in et if n.attrs.get("op") == "kv_transfer"]
+    out = {
+        "n_messages": len(xfer),
+        "per_layer_bytes": eng.stats["kv_transfer_bytes"],
+        "total_bytes": sum(eng.stats["kv_transfer_bytes"]),
+        "layers": cfg.n_layers,
+    }
+    save_result("fig15_kv_transfer", out)
+    return out
+
+
+if __name__ == "__main__":
+    r = run()
+    print(f"{r['n_messages']} messages, total {r['total_bytes']} bytes "
+          f"({r['layers']} layers)")

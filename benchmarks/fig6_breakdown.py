@@ -1,0 +1,47 @@
+"""Fig 6: measured vs trace-reconstructed runtime breakdown.
+
+The paper shows Kineto-measured and Chakra-reconstructed compute/exposed-
+comm breakdowns aligning, with Chakra excluding inter-kernel idle.  Here:
+execute the step for wall time (measured), reconstruct the timeline from
+the ET (Chakra), and compare compute fractions."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from .common import lm_batch, reduced_model, save_result
+
+
+def run(archs=("granite-8b", "deepseek-7b", "seamless-m4t-large-v2")
+        ) -> Dict[str, Any]:
+    from repro.collect.capture import capture
+    from repro.core.reconstructor import reconstruct
+
+    rows = {}
+    for arch in archs:
+        model, params, cfg = reduced_model(arch)
+        batch = lm_batch(cfg)
+        et, rep = capture(lambda p, b: model.loss_fn(p, b)[0], params, batch,
+                          stage="post", execute=True)
+        timeline = reconstruct(et)
+        breakdown = timeline.breakdown()
+        wall = et.metadata.get("measured_wall_us", 0.0)
+        # the paper's Fig 6 point: Chakra's reconstruction covers the busy
+        # time and excludes inter-kernel idle — on this CPU host the wall
+        # clock is dominated by dispatch idle, so the excluded fraction is
+        # large; on a production NPU they align closely
+        rows[arch] = {
+            "measured_wall_us": wall,
+            "reconstructed_busy_us": timeline.makespan_us,
+            "idle_excluded_fraction": (1.0 - timeline.makespan_us
+                                       / max(wall, 1e-9)),
+            "breakdown": breakdown,
+        }
+    out = {"rows": rows}
+    save_result("fig6_breakdown", out)
+    return out
+
+
+if __name__ == "__main__":
+    for arch, row in run()["rows"].items():
+        print(f"{arch:24s} wall={row['measured_wall_us']:.0f}us "
+              f"busy={row['reconstructed_busy_us']:.0f}us")

@@ -1,0 +1,49 @@
+"""Benchmark harness driver: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # run everything
+  PYTHONPATH=src python -m benchmarks.run fig12      # run one
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("table5_opcounts", "Table 5: per-rank operation counts"),
+    ("fig6_breakdown", "Fig 6: measured vs reconstructed breakdown"),
+    ("fig7_bandwidth", "Fig 7: collective time vs bandwidth"),
+    ("table6_replay_bw", "Table 6: replay bus-bandwidth report"),
+    ("fig10_11_mixing", "Figs 10/11: AR x A2A mixing long tail"),
+    ("fig12_whatif", "Fig 12: topology/bandwidth what-if"),
+    ("fig13_nic_util", "Fig 13: NIC utilization phases"),
+    ("table7_kv_offload", "Table 7: KV offload op counts"),
+    ("fig14_moe_routing", "Fig 14: MoE routing imbalance"),
+    ("fig15_kv_transfer", "Fig 15: P/D KV transfer sizes"),
+    ("roofline", "§Roofline table from dry-run artifacts"),
+]
+
+
+def main() -> int:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    failures = 0
+    for name, desc in MODULES:
+        if only and only not in name:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            mod.run()
+            print(f"[ok]   {name:20s} {desc} ({time.time() - t0:.1f}s)",
+                  flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"[FAIL] {name:20s} {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+    print(f"\n{len(MODULES) - failures}/{len(MODULES)} benchmarks ok; "
+          f"artifacts under artifacts/bench/")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,61 @@
+"""Quickstart: collect -> analyze -> visualize -> simulate one Chakra ET.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.collect.capture import capture
+from repro.configs import base as config_base
+from repro.core import analysis, save, visualize
+from repro.core.reconstructor import reconstruct
+from repro.models import model_zoo
+from repro.sim import Fabric, simulate_single_trace
+
+
+def main():
+    # 1. a reduced granite-8b training step (full configs are for dry-runs)
+    cfg = config_base.get("granite-8b").reduced()
+    model = model_zoo.build(cfg, model_axis=1)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.ones((2, 32), jnp.int32),
+             "labels": jnp.ones((2, 32), jnp.int32)}
+
+    # 2. capture a post-execution Chakra ET (host jaxpr + device HLO, linked)
+    et, report = capture(lambda p, b: model.loss_fn(p, b)[0], params, batch,
+                         stage="post", execute=True)
+    print(f"captured {len(et)} nodes | {report['link']}")
+
+    # 3. analyze: op counts, comm summary, critical path
+    print("op counts:", analysis.op_counts(et))
+    cp = analysis.critical_path(et)
+    print(f"critical path: {len(cp.node_ids)} nodes, "
+          f"{cp.length_us:.0f}us (compute {cp.compute_us:.0f}us, "
+          f"comm {cp.comm_us:.0f}us)")
+
+    # 4. serialize (JSON + windowed binary) and visualize
+    out = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                       "quickstart")
+    save(et, os.path.join(out, "granite.train.json"))
+    save(et, os.path.join(out, "granite.train.chkb"))
+    with open(os.path.join(out, "granite.dot"), "w") as fh:
+        fh.write(visualize.to_dot(et, max_nodes=60))
+    timeline = reconstruct(et)
+    with open(os.path.join(out, "granite.perfetto.json"), "wb") as fh:
+        fh.write(visualize.timeline_to_perfetto(timeline))
+    print(f"saved traces + dot + perfetto under {os.path.abspath(out)}")
+
+    # 5. what-if: the same trace on three fabrics
+    for topo in ("switch", "ring", "fully_connected"):
+        res = simulate_single_trace(et, Fabric.build(topo, 8))
+        print(f"  {topo:16s} simulated makespan "
+              f"{res.makespan_s * 1e3:.2f} ms")
+
+
+if __name__ == "__main__":
+    main()

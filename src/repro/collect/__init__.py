@@ -1,0 +1,2 @@
+"""Trace collection: jaxpr observer (host), HLO trace (device), cost model,
+one-call capture."""

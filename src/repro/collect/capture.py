@@ -1,0 +1,88 @@
+"""One-call Chakra trace capture (the paper's Fig 3 flow, in JAX).
+
+  capture(fn, *args, stage="pre")   -> host ET from the jaxpr (device- and
+                                       system-agnostic; projection-ready)
+  capture(fn, *args, stage="post")  -> lower+compile, build the device ET
+                                       from HLO, link host<->device, convert
+                                       to the standardized canonical ET
+
+``stage="post"`` with ``execute=True`` additionally runs the compiled
+function and stamps measured wall-clock durations on the root node
+(duration_source="measured"); otherwise durations come from the TPU v5e
+cost model (duration_source="model") — the same property the paper's
+pre-execution traces have.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+
+from ..core.converter import convert
+from ..core.linker import link
+from ..core.schema import ExecutionTrace
+from .cost_model import TpuCostModel
+from .hlo_trace import build_device_trace, module_cost
+from .jaxpr_observer import observe, trace_jaxpr
+
+
+def capture(fn: Callable, *args, stage: str = "post",
+            execute: bool = False, rank: int = 0, world_size: int = 1,
+            expand_loops: bool = False, max_expand: int = 4,
+            name: Optional[str] = None) -> Tuple[ExecutionTrace, Dict[str, Any]]:
+    """Collect a Chakra ET for one step function.
+
+    Returns (canonical ET, report dict with link/convert/cost summaries).
+    """
+    name = name or getattr(fn, "__name__", "step")
+    report: Dict[str, Any] = {"stage": stage, "name": name}
+
+    host = observe(fn, *args, name=name, expand_loops=expand_loops,
+                   max_expand=max_expand, rank=rank, world_size=world_size)
+    host.metadata["stage"] = stage
+    if stage == "pre":
+        out, conv_report = convert(host)
+        report["convert"] = conv_report.summary()
+        return out, report
+
+    jitted = fn if isinstance(fn, jax.stages.Wrapped) else jax.jit(fn)
+    lowered = jitted.lower(*args)
+    compiled = lowered.compile()
+    hlo = compiled.as_text()
+    device = build_device_trace(hlo, rank=rank, world_size=world_size,
+                                expand_loops=expand_loops,
+                                max_expand=max_expand)
+    device.metadata["stage"] = "post-execution"
+    report["cost"] = module_cost(hlo)
+
+    if execute:
+        t0 = time.perf_counter()
+        result = compiled(*args)
+        jax.block_until_ready(result)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        device.metadata["measured_wall_us"] = wall_us
+        device.metadata["duration_source"] = "measured"
+    else:
+        device.metadata["duration_source"] = "model"
+
+    linked, link_report = link(host, device)
+    report["link"] = link_report.summary()
+    out, conv_report = convert(linked)
+    report["convert"] = conv_report.summary()
+    return out, report
+
+
+def capture_per_rank(fn: Callable, *args, world_size: int,
+                     stage: str = "post", **kw):
+    """Per-device traces (paper §2.2 default storage model): the SPMD module
+    is identical across ranks; rank identity differentiates process-group
+    membership.  Returns a list of ETs, one per rank."""
+    base, report = capture(fn, *args, stage=stage, world_size=world_size,
+                           **kw)
+    traces = []
+    for r in range(world_size):
+        d = base.to_dict()
+        d["rank"] = r
+        traces.append(ExecutionTrace.from_dict(d))
+    return traces, report

@@ -1,0 +1,40 @@
+"""TPU v5e roofline cost model: op duration = max(compute, memory) time.
+
+Used to stamp ``duration_micros`` on device-trace nodes when the trace is
+collected from a compile-only dry-run (the TPU target is not the runtime).
+Post-execution traces collected from real CPU execution carry wall-clock
+durations instead, tagged ``duration_source: measured``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from ..core.infragraph import TPU_V5E
+
+
+@dataclass(frozen=True)
+class TpuCostModel:
+    peak_flops: float = TPU_V5E["peak_bf16_flops"]
+    hbm_bw: float = TPU_V5E["hbm_bw"]
+    ici_bw: float = TPU_V5E["ici_link_bw"]
+    ici_latency_s: float = TPU_V5E["ici_latency_s"]
+    # MXU utilization derate for non-ideal tiles (≈ production average)
+    mxu_derate: float = 0.8
+
+    def duration_us(self, flops: float, bytes_: float) -> float:
+        t_c = flops / (self.peak_flops * self.mxu_derate)
+        t_m = bytes_ / self.hbm_bw
+        return max(t_c, t_m) * 1e6
+
+    def comm_duration_us(self, payload_bytes: float, group: int = 2,
+                         kind: str = "all-reduce") -> float:
+        """alpha-beta ring estimate for one collective on the ICI."""
+        if group <= 1:
+            return 0.0
+        factor = {"all-reduce": 2.0 * (group - 1) / group,
+                  "all-gather": (group - 1) / group,
+                  "reduce-scatter": (group - 1) / group,
+                  "all-to-all": (group - 1) / group,
+                  "collective-permute": 1.0}.get(kind, 1.0)
+        t = factor * payload_bytes / self.ici_bw
+        return (t + (group - 1) * self.ici_latency_s) * 1e6

@@ -1,0 +1,245 @@
+"""HLO-text parsing utilities: shapes, instructions, collective byte counts.
+
+The roofline's *collective term* is not available from ``cost_analysis()`` —
+per the methodology we parse the compiled module text and sum operand sizes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.  The same parser feeds the device-side Chakra trace
+(collect.hlo_trace).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape string; tuples sum their elements.
+
+    Accepts e.g. ``bf16[256,4096]{1,0}`` or ``(f32[8,128], f32[8,128])``.
+    """
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class HloInstr:
+    name: str
+    opcode: str
+    shape: str
+    operands: List[str]
+    raw: str
+    computation: str = ""
+    replica_groups: Optional[str] = None
+    metadata_op_name: str = ""
+    control_predecessors: List[str] = field(default_factory=list)
+
+    @property
+    def result_bytes(self) -> int:
+        return shape_bytes(self.shape)
+
+
+# one HLO instruction line:  %name = shape opcode(...operands...), attrs
+_NAME_RE = re.compile(r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%?([\w.\-]+)")
+_RG_RE = re.compile(r"replica_groups=(\{.*?\}\}|\[[^\]]*\]<=\[[^\]]*\]T?\([^)]*\)|\[[^\]]*\]<=\[[^\]]*\])")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+_CTRL_RE = re.compile(r"control-predecessors=\{([^}]*)\}")
+
+
+def _split_top_level(s: str) -> List[str]:
+    """Split an operand list on top-level commas."""
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+def _scan_shape(rest: str):
+    """Split 'shape remainder' — shape may be a nested tuple."""
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return rest[:i + 1], rest[i + 1:]
+        return rest, ""
+    m = re.match(r"\S+", rest)
+    return (m.group(0), rest[m.end():]) if m else ("", rest)
+
+
+def parse_instructions(hlo_text: str) -> List[HloInstr]:
+    """Parse every instruction line of an HLO module dump."""
+    instrs: List[HloInstr] = []
+    computation = ""
+    for line in hlo_text.splitlines():
+        striped = line.strip()
+        if striped.endswith("{") and "=" not in striped.split("(", 1)[0]:
+            computation = striped.split("(")[0].lstrip("%").replace(
+                "ENTRY ", "").strip()
+            continue
+        m = _NAME_RE.match(line)
+        if not m:
+            continue
+        name = m.group(2)
+        shape, rest2 = _scan_shape(line[m.end():])
+        m2 = _OPCODE_RE.match(rest2)
+        if not m2:
+            continue
+        opcode = m2.group(1)
+        rest = rest2[m2.end():]
+        # operand section terminates at the matching close paren
+        depth = 1
+        i = 0
+        while i < len(rest) and depth:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        opsec, attrs = rest[:max(i - 1, 0)], rest[i:]
+        operands = []
+        for part in _split_top_level(opsec):
+            part = part.strip()
+            mm = _OPERAND_RE.match(part)
+            if mm:
+                operands.append(mm.group(1))
+        rg = _RG_RE.search(attrs)
+        opn = _OPNAME_RE.search(line)
+        ctrl = _CTRL_RE.search(attrs)
+        instrs.append(HloInstr(
+            name=name, opcode=opcode, shape=shape, operands=operands,
+            raw=striped, computation=computation,
+            replica_groups=rg.group(1) if rg else None,
+            metadata_op_name=opn.group(1) if opn else "",
+            control_predecessors=[c.strip().lstrip("%") for c in
+                                  ctrl.group(1).split(",")] if ctrl else [],
+        ))
+    return instrs
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum *operand* bytes of every collective op, keyed by op kind.
+
+    ``*-start`` variants are counted; their ``*-done`` twins are not (the
+    payload moves once).  Returns {"all-reduce": bytes, ..., "total": bytes}.
+    """
+    instrs = parse_instructions(hlo_text)
+    by_name: Dict[str, HloInstr] = {}
+    for ins in instrs:
+        by_name.setdefault(ins.name, ins)
+    out: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for ins in instrs:
+        op = ins.opcode
+        if op.endswith("-done"):
+            continue
+        base = op[:-6] if op.endswith("-start") else op
+        if base not in COLLECTIVE_OPS:
+            continue
+        b = 0
+        for o in ins.operands:
+            src = by_name.get(o)
+            if src is not None:
+                b += src.result_bytes
+        if b == 0:  # operands unresolved (e.g. parameters): fall back
+            b = ins.result_bytes
+        out[base] += b
+    out["total"] = sum(out[k] for k in COLLECTIVE_OPS)
+    return out
+
+
+_WRAPPED_CONVERT_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%[\w.\-]+ = f32\[([0-9,]+)\]\S*\s+fusion\([^)]*\),"
+    r".*calls=%?wrapped_convert_computation")
+_PLAIN_CONVERT_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%[\w.\-]+ = f32\[([0-9,]+)\]\S*\s+convert\(")
+
+
+def cpu_bf16_artifact_bytes(hlo_text: str) -> int:
+    """Bytes of whole-buffer bf16->f32 upcasts inserted by XLA-CPU's float
+    normalization (bf16 is not a native CPU compute type, so every bf16
+    input gets one full f32 copy).  These buffers CANNOT exist on the TPU
+    target (the MXU consumes bf16 natively), so the dry-run reports memory
+    both raw and with this CPU-only legalization subtracted.
+
+    Counted: top-level ``wrapped_convert`` fusions and plain whole-parameter
+    converts producing f32 buffers >= 64 MiB (smaller ones are noise).
+    """
+    total = 0
+    in_entry = False
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.startswith("ENTRY "):
+            in_entry = True
+        elif s.endswith("{") and s.startswith("%"):
+            in_entry = False
+        if not in_entry:
+            continue
+        m = _WRAPPED_CONVERT_RE.match(line) or _PLAIN_CONVERT_RE.match(line)
+        if not m:
+            continue
+        n = 1
+        for d in m.group(1).split(","):
+            if d:
+                n *= int(d)
+        b = n * 4
+        if b >= (64 << 20):
+            total += b
+    return total
+
+
+def replica_group_sizes(hlo_text: str) -> Dict[str, List[int]]:
+    """Process-group sizes per collective kind (for per-group modeling)."""
+    out: Dict[str, List[int]] = {}
+    for ins in parse_instructions(hlo_text):
+        base = ins.opcode[:-6] if ins.opcode.endswith("-start") else ins.opcode
+        if base not in COLLECTIVE_OPS or not ins.replica_groups:
+            continue
+        rg = ins.replica_groups
+        size = 0
+        if rg.startswith("{{"):
+            first = rg[2:].split("}")[0]
+            size = len([x for x in first.split(",") if x.strip() != ""])
+        else:
+            m = re.match(r"\[(\d+)(?:,(\d+))*\]<=", rg)
+            if m:
+                size = int(m.group(1))
+        out.setdefault(base, []).append(size)
+    return out

@@ -1,0 +1,171 @@
+"""Host-side execution trace from the jaxpr (the Execution-Graph-Observer
+role of the paper's collection stack, DESIGN.md §2).
+
+In eager PyTorch the observer hooks operator launches; in JAX the canonical
+host-level program IS the jaxpr of the jitted step.  Every equation becomes
+a host COMP/COMM node whose *data dependencies are exact by construction*
+(SSA use-def chains) — the paper reconstructs these heuristically from
+profiler streams; here the framework gives them to us losslessly.
+
+Nested structure (pjit / scan / while / remat / custom_vjp) becomes scoped
+sub-traces: inner jaxprs are walked with a scope prefix, and loop bodies are
+recorded once with an ``iterations`` attribute (pre-execution traces stay
+compact, §6.2.1), expandable via ``expand_loops=True``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.extend import core as jcore
+
+from ..core.schema import (CollectiveType, ETNode, ExecutionTrace, NodeType,
+                           TensorDesc)
+
+_COMM_PRIMS = {
+    "psum": CollectiveType.ALL_REDUCE,
+    "all_gather": CollectiveType.ALL_GATHER,
+    "psum_scatter": CollectiveType.REDUCE_SCATTER,
+    "reduce_scatter": CollectiveType.REDUCE_SCATTER,
+    "all_to_all": CollectiveType.ALL_TO_ALL,
+    "ppermute": CollectiveType.COLLECTIVE_PERMUTE,
+}
+
+_SUBJAXPR_PARAMS = ("jaxpr", "call_jaxpr", "cond_jaxpr", "body_jaxpr",
+                    "branches", "fun_jaxpr")
+
+
+def _aval_tensor(et: ExecutionTrace, aval, cache: Dict[int, int]) -> int:
+    key = id(aval)
+    if key in cache:
+        return cache[key]
+    shape = tuple(getattr(aval, "shape", ()) or ())
+    dtype = str(getattr(aval, "dtype", "f32"))
+    t = et.add_tensor(shape, dtype)
+    cache[key] = t.id
+    return t.id
+
+
+def _flops_estimate(eqn) -> float:
+    prim = eqn.primitive.name
+    out_elems = sum(int(np.prod(v.aval.shape)) if v.aval.shape else 1
+                    for v in eqn.outvars if hasattr(v.aval, "shape"))
+    if prim == "dot_general":
+        dims = eqn.params.get("dimension_numbers")
+        lhs = eqn.invars[0].aval.shape
+        rhs = eqn.invars[1].aval.shape
+        (lc, rc), (lb, rb) = dims
+        lhs_prod = int(np.prod(lhs)) if lhs else 1
+        rhs_free = 1
+        for i, d in enumerate(rhs):
+            if i not in rc and i not in rb:
+                rhs_free *= int(d)
+        return 2.0 * lhs_prod * rhs_free
+    return float(out_elems)
+
+
+def trace_jaxpr(closed_jaxpr, *, name: str = "step",
+                expand_loops: bool = False, max_expand: int = 4,
+                rank: int = 0, world_size: int = 1) -> ExecutionTrace:
+    """Walk a ClosedJaxpr into a host-side Chakra ET."""
+    et = ExecutionTrace(rank=rank, world_size=world_size,
+                        metadata={"source": "jaxpr", "name": name,
+                                  "stage": "pre-execution"})
+    tensor_cache: Dict[int, int] = {}
+
+    def walk(jaxpr, scope: str, var_node: Dict[Any, int],
+             iterations: int = 1) -> None:
+        for i, eqn in enumerate(jaxpr.eqns):
+            prim = eqn.primitive.name
+            sub = _sub_jaxprs(eqn)
+            scope_name = f"{scope}{prim}.{i}"
+            deps = sorted({var_node[v] for v in eqn.invars
+                           if not isinstance(v, jcore.Literal)
+                           and v in var_node})
+            if sub and prim in ("scan", "while"):
+                trip = int(eqn.params.get("length", 0) or 0) or 1
+                if expand_loops and trip <= max_expand:
+                    for it in range(trip):
+                        walk(sub[0].jaxpr, f"{scope_name}/it{it}/", var_node)
+                    node = et.add_node(name=scope_name, type=NodeType.METADATA,
+                                       attrs={"op": prim, "scope": scope_name,
+                                              "level": "host"})
+                else:
+                    node = et.add_node(
+                        name=scope_name, type=NodeType.COMP,
+                        attrs={"op": prim, "iterations": trip,
+                               "scope": scope_name, "level": "host",
+                               "flops": _body_flops(sub[0].jaxpr) * trip})
+                    inner_map: Dict[Any, int] = {}
+                    walk(sub[0].jaxpr, scope_name + "/", inner_map)
+            elif sub:
+                node = et.add_node(name=scope_name, type=NodeType.COMP,
+                                   attrs={"op": prim, "scope": scope_name,
+                                          "level": "host"})
+                for s_i, s in enumerate(sub):
+                    walk(s.jaxpr, f"{scope_name}/b{s_i}/", dict(var_node))
+            elif prim in _COMM_PRIMS:
+                bytes_ = sum(
+                    int(np.prod(v.aval.shape)) * v.aval.dtype.itemsize
+                    for v in eqn.invars
+                    if hasattr(v.aval, "shape") and v.aval.shape)
+                axes = eqn.params.get("axes", eqn.params.get("axis_name", ()))
+                pg = et.add_process_group(tuple(range(world_size)),
+                                          tag=str(axes))
+                node = et.add_node(
+                    name=scope_name, type=NodeType.COMM_COLL,
+                    comm_type=_COMM_PRIMS[prim], comm_group=pg.id,
+                    comm_bytes=bytes_,
+                    attrs={"op": prim, "scope": scope_name, "level": "host"})
+            else:
+                node = et.add_node(
+                    name=scope_name, type=NodeType.COMP,
+                    attrs={"op": prim, "scope": scope_name, "level": "host",
+                           "flops": _flops_estimate(eqn)})
+            node.data_deps = [d for d in deps if d != node.id]
+            node.inputs = [_aval_tensor(et, v.aval, tensor_cache)
+                           for v in eqn.invars
+                           if not isinstance(v, jcore.Literal)
+                           and hasattr(v, "aval")][:8]
+            node.outputs = [_aval_tensor(et, v.aval, tensor_cache)
+                            for v in eqn.outvars if hasattr(v, "aval")][:8]
+            for v in eqn.outvars:
+                var_node[v] = node.id
+
+    def _body_flops(jaxpr) -> float:
+        total = 0.0
+        for eqn in jaxpr.eqns:
+            sub = _sub_jaxprs(eqn)
+            if sub and eqn.primitive.name in ("scan", "while"):
+                trip = int(eqn.params.get("length", 0) or 0) or 1
+                total += _body_flops(sub[0].jaxpr) * trip
+            elif sub:
+                total += sum(_body_flops(s.jaxpr) for s in sub)
+            else:
+                total += _flops_estimate(eqn)
+        return total
+
+    walk(closed_jaxpr.jaxpr, "", {})
+    return et
+
+
+def _sub_jaxprs(eqn) -> List[Any]:
+    subs: List[Any] = []
+    for key in _SUBJAXPR_PARAMS:
+        v = eqn.params.get(key)
+        if v is None:
+            continue
+        if isinstance(v, (tuple, list)):
+            subs.extend(x for x in v if hasattr(x, "jaxpr"))
+        elif hasattr(v, "jaxpr"):
+            subs.append(v)
+    return subs
+
+
+def observe(fn: Callable, *example_args, name: Optional[str] = None,
+            expand_loops: bool = False, **kw) -> ExecutionTrace:
+    """One-call host-trace collection: make_jaxpr + walk."""
+    closed = jax.make_jaxpr(fn)(*example_args)
+    return trace_jaxpr(closed, name=name or getattr(fn, "__name__", "step"),
+                       expand_loops=expand_loops, **kw)

@@ -1,0 +1,4 @@
+"""Architecture configs: one module per assigned architecture."""
+from .base import SHAPES, ArchConfig, ShapeSpec, all_configs, get, names
+
+__all__ = ["SHAPES", "ArchConfig", "ShapeSpec", "all_configs", "get", "names"]

@@ -1,0 +1,283 @@
+"""Architecture / shape configuration system.
+
+One ``ArchConfig`` dataclass covers every assigned architecture family
+(dense / MoE / hybrid attn+SSM / xLSTM / enc-dec audio / VLM backbone).
+Each architecture file in this package exports ``CONFIG`` with the exact
+published configuration and the registry maps ``--arch <id>`` to it.
+
+Shapes: every architecture is paired with the same four input-shape cells
+(train_4k / prefill_32k / decode_32k / long_500k).  ``input_specs`` returns
+``jax.ShapeDtypeStruct`` stand-ins — weak-type-correct and shardable, never
+allocating device memory — so full-size configs are exercised only through
+``.lower().compile()`` dry-runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------- shapes
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One input-shape cell (seq_len x global_batch, and which step it drives)."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str           # "train" | "prefill" | "decode"
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ----------------------------------------------------------------------- arch
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    """Complete architecture description (exact values from public literature).
+
+    ``block_pattern`` selects the per-layer block family:
+      * "attn"           — standard pre-norm attention + GLU MLP (dense LMs)
+      * "moe"            — attention + top-k routed expert MLPs
+      * "hymba"          — parallel attention & Mamba heads fused per layer
+      * "xlstm"          — mLSTM blocks with sLSTM blocks at ``slstm_every``
+      * "encdec"         — encoder-decoder (seamless backbone); decoder adds
+                            cross-attention over encoder output
+    """
+
+    name: str
+    family: str                       # moe | hybrid | audio | ssm | dense | vlm
+    source: str                       # [arXiv/hf citation; verified tier]
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int                         # dense-MLP hidden (per-expert for MoE)
+    vocab: int
+    block_pattern: str = "attn"
+    head_dim: int = 0                 # 0 => d_model // n_heads
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # --- attention flavor ---
+    attn_window: int = 0              # 0 => full attention; >0 => SWA window
+    global_attn_every: int = 0        # hymba: every k-th layer is full-attn
+    block_q: int = 512                # flash-attention q-block
+    block_k: int = 1024               # flash-attention kv-block
+    train_n_micro: int = 1            # gradient-accumulation microbatches
+    remat_policy: str = "full"        # full | save_dots (activation ckpt)
+    rope_theta: float = 10_000.0
+    act: str = "silu"                 # silu-GLU | gelu-GLU ("geglu")
+    logit_softcap: float = 0.0
+    # --- SSM / recurrent ---
+    ssm_state: int = 0                # Mamba state dim (hymba)
+    slstm_every: int = 0              # xlstm: every k-th block is sLSTM
+    proj_factor: float = 2.0          # mLSTM up-projection factor
+    # --- enc-dec / multimodal frontend stubs ---
+    enc_layers: int = 0               # encoder depth (enc-dec archs)
+    frontend: str = "none"            # none | audio_frames | vision_patches
+    frontend_tokens: int = 0          # stub tokens prepended (vlm) / enc input
+    # --- norms / misc ---
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    # shape cells this arch skips (with the documented reason)
+    skip_shapes: Dict[str, str] = field(default_factory=dict)
+
+    # ------------------------------------------------------------- derived
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim_
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim_
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def dec_layers(self) -> int:
+        return self.n_layers
+
+    def runs_shape(self, shape: str) -> bool:
+        return shape not in self.skip_shapes
+
+    # ------------------------------------------------------------- params
+    def param_count(self) -> Dict[str, float]:
+        """Analytic parameter counts (total and per-token-active) in units of 1."""
+        hd, d = self.head_dim_, self.d_model
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+        if self.block_pattern == "xlstm":
+            up = int(self.proj_factor * d)
+            mlstm = 3 * d * up + up * d + 3 * up * (up // max(self.n_heads, 1))
+            ff = int(4 * d / 3)
+            slstm = 4 * d * d + 2 * d * ff
+            n_s = (self.n_layers // self.slstm_every) if self.slstm_every else 0
+            body = (self.n_layers - n_s) * mlstm + n_s * slstm
+            dense_body, active_body = body, body
+        elif self.block_pattern == "hymba":
+            ssm_inner = 2 * d
+            mamba = 2 * d * ssm_inner + ssm_inner * (2 * self.ssm_state + 1) + ssm_inner * d
+            mlp = 3 * d * self.d_ff
+            body = self.n_layers * (attn + mamba + mlp)
+            dense_body, active_body = body, body
+        elif self.is_moe:
+            expert = 3 * d * self.d_ff
+            router = d * self.n_experts
+            per_layer = attn + router + self.n_experts * expert
+            active_per_layer = attn + router + self.top_k * expert
+            dense_body = self.n_layers * per_layer
+            active_body = self.n_layers * active_per_layer
+        else:
+            mlp = 3 * d * self.d_ff
+            dense_body = self.n_layers * (attn + mlp)
+            active_body = dense_body
+        if self.block_pattern == "encdec":
+            # encoder layers + decoder cross-attention
+            enc = self.enc_layers * (attn + 3 * d * self.d_ff)
+            dense_body += enc + self.n_layers * attn   # cross-attn in decoder
+            active_body = dense_body
+        embed = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return {
+            "total": float(dense_body + embed),
+            "active": float(active_body + embed),
+            "body": float(dense_body),
+        }
+
+    def model_flops_per_token(self) -> float:
+        """MODEL_FLOPS/token = 6*N_active (+ attention term), for roofline."""
+        pc = self.param_count()
+        return 6.0 * pc["active"]
+
+    # -------------------------------------------------------------- reduce
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+
+        def shrink(v: int, lo: int, hi: int) -> int:
+            return max(lo, min(v, hi))
+
+        n_heads = shrink(self.n_heads, 2, 4)
+        n_kv = max(1, min(self.n_kv_heads, n_heads))
+        # keep the GQA ratio flavor: kv < heads stays kv < heads
+        if self.n_kv_heads < self.n_heads:
+            n_kv = max(1, n_heads // 2)
+        return dataclasses.replace(
+            self,
+            n_layers=shrink(self.n_layers, 2, 2 if self.block_pattern != "xlstm"
+                            else 4),
+            enc_layers=shrink(self.enc_layers, 0, 2) if self.enc_layers else 0,
+            d_model=64,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            head_dim=16,
+            d_ff=128 if self.d_ff else 0,
+            vocab=256,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            ssm_state=min(self.ssm_state, 8) if self.ssm_state else 0,
+            slstm_every=min(self.slstm_every, 2) if self.slstm_every else 0,
+            global_attn_every=min(self.global_attn_every, 2)
+            if self.global_attn_every else 0,
+            attn_window=min(self.attn_window, 64) if self.attn_window else 0,
+            frontend_tokens=min(self.frontend_tokens, 8) if self.frontend_tokens else 0,
+        )
+
+    # --------------------------------------------------------- input specs
+    def input_specs(self, shape: str, dtype: Any = jnp.int32) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of one shape cell.
+
+        * train   -> {tokens, labels} (B, S)
+        * prefill -> {tokens} (B, S)
+        * decode  -> {token} (B, 1) + KV-cache / recurrent-state specs are
+          produced separately by the serving engine (they are state, not input).
+        Frontend stubs: precomputed frame/patch embeddings (B, T_f, d_model)
+        replace raw audio/pixels per the assignment spec.
+        """
+        sp = SHAPES[shape]
+        B, S = sp.global_batch, sp.seq_len
+        specs: Dict[str, Any] = {}
+        if sp.kind == "train":
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), dtype)
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), dtype)
+        elif sp.kind == "prefill":
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), dtype)
+        else:  # decode: one new token against a KV cache of S
+            specs["token"] = jax.ShapeDtypeStruct((B, 1), dtype)
+            specs["cache_len"] = jax.ShapeDtypeStruct((), jnp.int32)
+        if self.frontend == "audio_frames":
+            # encoder consumes precomputed speech-frame embeddings
+            t_f = self.frontend_tokens or max(S // 8, 8)
+            if sp.kind == "train" or sp.kind == "prefill":
+                specs["frames"] = jax.ShapeDtypeStruct((B, t_f, self.d_model),
+                                                       jnp.bfloat16)
+            else:
+                specs["frames"] = jax.ShapeDtypeStruct((B, t_f, self.d_model),
+                                                       jnp.bfloat16)
+        elif self.frontend == "vision_patches" and sp.kind != "decode":
+            t_p = self.frontend_tokens or 1024
+            specs["patches"] = jax.ShapeDtypeStruct((B, t_p, self.d_model),
+                                                    jnp.bfloat16)
+        return specs
+
+
+# ------------------------------------------------------------------ registry
+
+_REGISTRY: Dict[str, ArchConfig] = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get(name: str) -> ArchConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def names() -> List[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    _ensure_loaded()
+    return dict(_REGISTRY)
+
+
+_LOADED = False
+
+
+def _ensure_loaded() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    from . import (mixtral_8x7b, olmoe_1b_7b, hymba_1_5b,         # noqa: F401
+                   seamless_m4t_large_v2, xlstm_1_3b, granite_8b,  # noqa: F401
+                   gemma_7b, deepseek_7b, glm4_9b, internvl2_26b)  # noqa: F401
+    _LOADED = True

@@ -1,0 +1,20 @@
+"""DeepSeek-7B — dense llama-architecture decoder (MHA: kv_heads == heads).
+
+[arXiv:2401.02954; hf]
+"""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="deepseek-7b",
+    family="dense",
+    source="[arXiv:2401.02954; hf]",
+    n_layers=30,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=11008,
+    vocab=102400,
+    block_pattern="attn",
+    skip_shapes={"long_500k": "pure full attention; skipped per assignment "
+                              "rule"},
+))

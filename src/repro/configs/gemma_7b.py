@@ -1,0 +1,24 @@
+"""Gemma-7B — dense decoder with GeGLU MLP and head_dim=256.
+
+[arXiv:2403.08295; hf]  16 heads x 256 head_dim (q_dim 4096 > d_model 3072);
+huge 256k vocabulary with tied embeddings.
+"""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="gemma-7b",
+    family="dense",
+    source="[arXiv:2403.08295; hf]",
+    n_layers=28,
+    d_model=3072,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=256,
+    d_ff=24576,
+    vocab=256000,
+    block_pattern="attn",
+    act="geglu",
+    tie_embeddings=True,
+    skip_shapes={"long_500k": "pure full attention; skipped per assignment "
+                              "rule"},
+))

@@ -1,0 +1,20 @@
+"""GLM4-9B — dense decoder with extreme GQA (2 KV heads) and RoPE.
+
+[hf:THUDM/glm-4-9b; hf]
+"""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="glm4-9b",
+    family="dense",
+    source="[hf:THUDM/glm-4-9b; hf]",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=2,
+    d_ff=13696,
+    vocab=151552,
+    block_pattern="attn",
+    skip_shapes={"long_500k": "pure full attention; skipped per assignment "
+                              "rule"},
+))

@@ -1,0 +1,33 @@
+"""Hymba-1.5B — hybrid-head: parallel attention + Mamba heads per layer.
+
+[arXiv:2411.13676; hf]  Every layer runs an attention branch and an SSM
+(Mamba) branch in parallel on the same input and fuses (mean of normed
+outputs).  Most attention is sliding-window; every 8th layer is global —
+combined with the O(1) SSM state this keeps long_500k sub-quadratic, so the
+long-context decode cell runs.
+"""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    source="[arXiv:2411.13676; hf]",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab=32001,
+    block_pattern="hymba",
+    ssm_state=16,
+    attn_window=1024,
+    global_attn_every=8,         # layers 0, 8, 16, 24 use full attention
+    # 25 heads are not TP-divisible (they stay replicated); smaller blocks
+    # keep the per-block score temps within HBM.
+    block_q=256,
+    block_k=512,
+    # replicated-head attention + mamba scan states are activation-heavy:
+    # 2-way gradient accumulation keeps the per-microbatch working set in HBM
+    train_n_micro=2,
+))

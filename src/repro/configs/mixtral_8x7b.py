@@ -1,0 +1,28 @@
+"""Mixtral 8x7B — MoE 8 experts top-2, GQA kv=8, sliding-window attention.
+
+[arXiv:2401.04088; hf]  The paper's own headline workload (Tables 5, Figs 7,
+12, 14 all use Mixtral traces), so this arch is the most representative cell
+for the Chakra reproduction.
+"""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    source="[arXiv:2401.04088; hf]",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,                  # per-expert
+    vocab=32000,
+    block_pattern="moe",
+    n_experts=8,
+    top_k=2,
+    attn_window=4096,            # SWA => bounded KV => long_500k is runnable
+    rope_theta=1e6,
+    # expert dispatch buffers + attention working set: 2-way gradient
+    # accumulation keeps the per-microbatch footprint inside 16 GiB HBM
+    train_n_micro=2,
+))

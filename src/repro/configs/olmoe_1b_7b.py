@@ -1,0 +1,23 @@
+"""OLMoE-1B-7B — 64-expert top-8 MoE with small per-expert FFN.
+
+[arXiv:2409.02060; hf]  d_ff=1024 is the *per-expert* hidden dim; full
+attention (no window) so long_500k is a documented skip.
+"""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    source="[arXiv:2409.02060; hf]",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1024,                   # per-expert
+    vocab=50304,
+    block_pattern="moe",
+    n_experts=64,
+    top_k=8,
+    skip_shapes={"long_500k": "pure full attention: 524k prefill/KV is "
+                              "quadratic; skipped per assignment rule"},
+))

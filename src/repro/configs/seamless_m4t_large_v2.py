@@ -1,0 +1,28 @@
+"""SeamlessM4T-large-v2 — encoder-decoder multimodal (speech/text) backbone.
+
+[arXiv:2308.11596; hf]  Per the assignment the modality frontend is a STUB:
+``input_specs`` provides precomputed speech-frame embeddings for the encoder;
+the transformer backbone (24L enc + 24L dec, d=1024, 16H, d_ff=8192,
+vocab=256206) is what we build.  Decode runs on the decoder (with
+cross-attention KV over the encoder output); long_500k is a documented skip
+(full attention).
+"""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    source="[arXiv:2308.11596; hf]",
+    n_layers=24,                 # decoder depth
+    enc_layers=24,               # encoder depth
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab=256206,
+    block_pattern="encdec",
+    frontend="audio_frames",
+    frontend_tokens=1024,        # precomputed speech-frame embeddings (stub)
+    skip_shapes={"long_500k": "pure full attention enc-dec; skipped per "
+                              "assignment rule"},
+))

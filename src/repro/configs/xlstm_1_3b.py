@@ -1,0 +1,27 @@
+"""xLSTM-1.3B — sLSTM + mLSTM recurrent blocks (no attention, no KV growth).
+
+[arXiv:2405.04517; unverified]  48 blocks, d=2048, 4 heads, vocab=50304,
+d_ff=0 (the mLSTM block carries its own 2x up-projection; sLSTM blocks carry
+a 4/3 GLU FFN).  Ratio follows the paper's xLSTM[7:1]: every 8th block is an
+sLSTM.  Linear recurrence => O(1) decode state => long_500k runs.
+"""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    source="[arXiv:2405.04517; unverified]",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab=50304,
+    block_pattern="xlstm",
+    slstm_every=8,               # blocks 7, 15, 23, ... are sLSTM
+    proj_factor=2.0,
+    # sLSTM's sequential backward saves per-step residuals (4096 x [B, D]
+    # f32 per layer): 4-way gradient accumulation keeps the per-microbatch
+    # working set inside HBM
+    train_n_micro=4,
+))

@@ -1,0 +1,218 @@
+"""Chakra trace analysis (paper §4.1, §5.1).
+
+Implements the analyses behind the paper's evaluation artifacts:
+* op-category counts per rank (Table 5: GeMM/Attn/ElemWise/Others + per-collective),
+* node-duration CDF and data-dependency fan-in distribution (Fig 9),
+* memory-utilization timeline (Fig 8),
+* per-collective total runtime + volume (Fig 7),
+* critical-path extraction and exposed-communication accounting.
+"""
+from __future__ import annotations
+
+import math
+from collections import Counter, defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .schema import CollectiveType, ETNode, ExecutionTrace, NodeType
+
+COLLECTIVE_NAMES = {
+    CollectiveType.ALL_REDUCE: "AllReduce",
+    CollectiveType.ALL_GATHER: "AllGather",
+    CollectiveType.REDUCE_SCATTER: "ReduceScatter",
+    CollectiveType.ALL_TO_ALL: "All2All",
+    CollectiveType.POINT_TO_POINT: "P2P",
+    CollectiveType.BROADCAST: "Broadcast",
+    CollectiveType.BARRIER: "Barrier",
+    CollectiveType.COLLECTIVE_PERMUTE: "CollPermute",
+}
+
+_GEMM_OPS = {"dot_general", "dot", "conv_general_dilated", "convolution",
+             "einsum", "fusion_gemm", "cublas_gemm", "custom-call_gemm"}
+_ELEMWISE_OPS = {
+    "add", "sub", "subtract", "mul", "multiply", "div", "divide", "neg",
+    "exp", "log", "tanh", "logistic", "sqrt", "rsqrt", "pow", "integer_pow",
+    "max", "maximum", "min", "minimum", "abs", "sign", "floor", "ceil",
+    "erf", "select_n", "select", "and", "or", "xor", "not", "compare",
+    "eq", "ne", "lt", "le", "gt", "ge", "convert_element_type", "convert",
+    "cos", "sin", "squared", "clamp", "round", "expm1", "log1p",
+}
+
+
+def categorize(node: ETNode) -> str:
+    """Map a node onto Table 5's categories."""
+    if node.type in (NodeType.COMM_COLL, NodeType.COMM_SEND, NodeType.COMM_RECV):
+        return COLLECTIVE_NAMES.get(node.comm_type, "P2P")
+    if node.type in (NodeType.MEM_LOAD, NodeType.MEM_STORE):
+        return "Mem"
+    if node.type == NodeType.DATA_LOAD:
+        return "DataLoad"
+    if node.type != NodeType.COMP:
+        return "Others"
+    op = node.attrs.get("op", node.name.rsplit("/", 1)[-1]).lower()
+    scope = node.name.lower()
+    # Table 5 counts the attention core separately; projections are GEMMs.
+    leaf = scope.rsplit("/", 1)[-1]
+    attn_core = ("softmax_qk" in scope or "attn_core" in scope
+                 or "flash" in leaf or "attention" in op or "softmax" in op
+                 or node.attrs.get("attn_core", False))
+    if attn_core and (op in _GEMM_OPS or "softmax" in op or "attention" in op):
+        return "Attn"
+    if op in _GEMM_OPS:
+        return "GeMM"
+    if op in _ELEMWISE_OPS:
+        return "ElemWise"
+    return "Others"
+
+
+def op_counts(et: ExecutionTrace) -> Dict[str, int]:
+    """Table-5-style operation counts for one rank's trace."""
+    c: Counter = Counter()
+    for n in et:
+        c[categorize(n)] += 1
+    return dict(c)
+
+
+def comm_summary(et: ExecutionTrace) -> Dict[str, Dict[str, float]]:
+    """Per-collective count / bytes / total duration (Fig 7 input)."""
+    out: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "bytes": 0.0, "duration_us": 0.0})
+    for n in et.comm_nodes():
+        k = COLLECTIVE_NAMES.get(n.comm_type, "P2P")
+        out[k]["count"] += 1
+        out[k]["bytes"] += n.comm_bytes
+        out[k]["duration_us"] += n.duration_micros
+    return dict(out)
+
+
+def duration_cdf(et: ExecutionTrace, node_type: Optional[NodeType] = NodeType.COMP
+                 ) -> List[Tuple[float, float]]:
+    """(duration_us, cumulative_fraction) points — Fig 9a."""
+    ds = sorted(n.duration_micros for n in et
+                if node_type is None or n.type == node_type)
+    n = len(ds)
+    return [(d, (i + 1) / n) for i, d in enumerate(ds)] if n else []
+
+
+def data_dep_distribution(et: ExecutionTrace) -> Dict[int, int]:
+    """Histogram of per-node data-dependency fan-in — Fig 9b."""
+    c: Counter = Counter()
+    for n in et:
+        c[len(n.data_deps)] += 1
+    return dict(c)
+
+
+def memory_timeline(et: ExecutionTrace, resolution: int = 64
+                    ) -> List[Tuple[float, float]]:
+    """(time_us, live_bytes) samples — Fig 8.
+
+    A tensor is live from the end of its producer to the end of its last
+    consumer; persistent tensors (attrs["persistent"]) are live throughout.
+    """
+    if not et.tensors:
+        return []
+    producer: Dict[int, ETNode] = {}
+    last_use: Dict[int, float] = {}
+    t_end = 0.0
+    for n in et:
+        t_end = max(t_end, n.end_time_micros)
+        for t in n.outputs:
+            producer[t] = n
+        for t in n.inputs:
+            last_use[t] = max(last_use.get(t, 0.0), n.end_time_micros)
+    events: List[Tuple[float, int]] = []   # (time, +/- bytes)
+    persistent = 0
+    for tid, t in et.tensors.items():
+        if tid in producer:
+            start = producer[tid].end_time_micros
+        else:
+            persistent += t.size_bytes
+            continue
+        end = max(last_use.get(tid, start), start)
+        events.append((start, t.size_bytes))
+        events.append((end, -t.size_bytes))
+    events.sort()
+    samples: List[Tuple[float, float]] = []
+    live = float(persistent)
+    step = max(t_end / max(resolution, 1), 1e-9)
+    next_sample = 0.0
+    for time, delta in events:
+        while next_sample <= time:
+            samples.append((next_sample, live))
+            next_sample += step
+        live += delta
+    while next_sample <= t_end + 1e-9:
+        samples.append((next_sample, live))
+        next_sample += step
+    return samples
+
+
+@dataclass
+class CriticalPath:
+    node_ids: List[int] = field(default_factory=list)
+    length_us: float = 0.0
+    compute_us: float = 0.0
+    comm_us: float = 0.0
+
+
+def critical_path(et: ExecutionTrace) -> CriticalPath:
+    """Longest path by duration through the dependency DAG."""
+    order = et.topological_order()
+    dist: Dict[int, float] = {}
+    pred: Dict[int, Optional[int]] = {}
+    for nid in order:
+        n = et.nodes[nid]
+        best, best_p = 0.0, None
+        for d, _ in n.all_deps():
+            if d in dist and dist[d] > best:
+                best, best_p = dist[d], d
+        dist[nid] = best + n.duration_micros
+        pred[nid] = best_p
+    if not dist:
+        return CriticalPath()
+    end = max(dist, key=lambda i: dist[i])
+    path: List[int] = []
+    cur: Optional[int] = end
+    while cur is not None:
+        path.append(cur)
+        cur = pred[cur]
+    path.reverse()
+    cp = CriticalPath(node_ids=path, length_us=dist[end])
+    for nid in path:
+        n = et.nodes[nid]
+        if n.is_comm:
+            cp.comm_us += n.duration_micros
+        else:
+            cp.compute_us += n.duration_micros
+    return cp
+
+
+def exposed_comm(et: ExecutionTrace) -> Dict[str, float]:
+    """Measured-timeline compute/comm/exposed/idle split (needs timestamps)."""
+    comp = [(n.start_time_micros, n.end_time_micros)
+            for n in et if n.type == NodeType.COMP and n.duration_micros > 0]
+    comm = [(n.start_time_micros, n.end_time_micros)
+            for n in et.comm_nodes() if n.duration_micros > 0]
+    from .reconstructor import _subtract, _union_len
+    total = max((e for _, e in comp + comm), default=0.0)
+    return {
+        "compute_us": _union_len(comp),
+        "comm_us": _union_len(comm),
+        "exposed_comm_us": _union_len(_subtract(comm, comp)),
+        "idle_us": max(0.0, total - _union_len(comp + comm)),
+        "makespan_us": total,
+    }
+
+
+def table5_row(et: ExecutionTrace) -> Dict[str, int]:
+    """One Table-5 row: computation + communication counts."""
+    c = op_counts(et)
+    return {
+        "GeMM": c.get("GeMM", 0), "Attn": c.get("Attn", 0),
+        "ElemWise": c.get("ElemWise", 0),
+        "Others": c.get("Others", 0) + c.get("Mem", 0) + c.get("DataLoad", 0),
+        "P2P": c.get("P2P", 0) + c.get("CollPermute", 0),
+        "AllReduce": c.get("AllReduce", 0), "All2All": c.get("All2All", 0),
+        "AllGather": c.get("AllGather", 0),
+        "ReduceScatter": c.get("ReduceScatter", 0),
+    }

@@ -1,0 +1,202 @@
+"""Synthetic Chakra ET generation (paper §3: "test case generator").
+
+Pre-execution-style traces created directly from workload descriptions:
+* microbenchmark chains (compute-only, comm-only),
+* data-parallel patterns (compute + periodic AllReduce),
+* the §5.3 HIL mixed-collective MoE pattern (interleaved AllReduce and
+  All-to-All, opposite extremes of communication structure),
+* a symbolic transformer-step generator (STAGE-flavored) used when we want a
+  trace for a model/parallelism without lowering anything.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from .schema import (CollectiveType, ETNode, ExecutionTrace, NodeType)
+
+
+def compute_chain(n: int = 16, duration_us: float = 100.0,
+                  flops_per_node: float = 1e9) -> ExecutionTrace:
+    et = ExecutionTrace(metadata={"generator": "compute_chain"})
+    prev: Optional[int] = None
+    for i in range(n):
+        node = et.add_node(name=f"comp_{i}", type=NodeType.COMP,
+                           duration_micros=duration_us,
+                           attrs={"op": "dot_general", "flops": flops_per_node})
+        if prev is not None:
+            node.data_deps.append(prev)
+        prev = node.id
+    return et
+
+
+def dp_allreduce_pattern(
+    steps: int = 4, layers: int = 8, ranks: int = 8,
+    compute_us: float = 200.0, grad_bytes: int = 64 << 20,
+    rank: int = 0,
+) -> ExecutionTrace:
+    """Classic DP training: per-layer backward compute + gradient AllReduce
+    that may overlap with the next layer's compute."""
+    et = ExecutionTrace(rank=rank, world_size=ranks,
+                        metadata={"generator": "dp_allreduce"})
+    pg = et.add_process_group(list(range(ranks)), tag="dp")
+    for s in range(steps):
+        prev_comp: Optional[int] = None
+        ar_ids: List[int] = []
+        for l in range(layers):
+            c = et.add_node(name=f"step{s}/bwd_layer{l}", type=NodeType.COMP,
+                            duration_micros=compute_us,
+                            attrs={"op": "dot_general"})
+            if prev_comp is not None:
+                c.data_deps.append(prev_comp)
+            prev_comp = c.id
+            ar = et.add_node(name=f"step{s}/allreduce_l{l}",
+                             type=NodeType.COMM_COLL,
+                             comm_type=CollectiveType.ALL_REDUCE,
+                             comm_group=pg.id, comm_bytes=grad_bytes)
+            ar.data_deps.append(c.id)
+            ar_ids.append(ar.id)
+        opt = et.add_node(name=f"step{s}/optimizer", type=NodeType.COMP,
+                          duration_micros=compute_us,
+                          attrs={"op": "elemwise_update"})
+        opt.data_deps.extend(ar_ids)
+    return et
+
+
+def moe_mixed_collectives(
+    iters: int = 8, ranks: int = 32,
+    allreduce_bytes: int = 256 << 20, alltoall_bytes: int = 8 << 20,
+    compute_us: float = 500.0, mode: str = "mixed", rank: int = 0,
+    jitter: bool = True,
+) -> ExecutionTrace:
+    """§5.3 HIL workload: MoE iteration interleaving AllReduce (few large
+    flows) and All-to-All (mesh of many small flows).
+
+    mode: "allreduce" | "alltoall" | "mixed" — Figs 10(a)/(b)/(c).
+    """
+    et = ExecutionTrace(rank=rank, world_size=ranks,
+                        metadata={"generator": "moe_mixed", "mode": mode})
+    pg = et.add_process_group(list(range(ranks)), tag="ep")
+    prev: Optional[int] = None
+    lagged_ar: Optional[int] = None
+    for i in range(iters):
+        # deterministic per-iteration skew (MoE token imbalance): shifts the
+        # A2A/AR overlap pattern so some flows hit congestion and others
+        # don't — the long-tail mechanism of the §5.3 study
+        dur = compute_us * (1.0 + (0.4 * (i % 3) if jitter else 0.0))
+        c = et.add_node(name=f"iter{i}/expert_compute", type=NodeType.COMP,
+                        duration_micros=dur, attrs={"op": "dot_general"})
+        if prev is not None:
+            c.data_deps.append(prev)
+        deps = [c.id]
+        if mode in ("alltoall", "mixed"):
+            a2a = et.add_node(name=f"iter{i}/dispatch_a2a",
+                              type=NodeType.COMM_COLL,
+                              comm_type=CollectiveType.ALL_TO_ALL,
+                              comm_group=pg.id, comm_bytes=alltoall_bytes)
+            a2a.data_deps.append(c.id)
+            deps.append(a2a.id)
+        ar_id = None
+        if mode in ("allreduce", "mixed"):
+            ar = et.add_node(name=f"iter{i}/grad_allreduce",
+                             type=NodeType.COMM_COLL,
+                             comm_type=CollectiveType.ALL_REDUCE,
+                             comm_group=pg.id, comm_bytes=allreduce_bytes)
+            ar.data_deps.append(c.id)
+            ar_id = ar.id
+        join = et.add_node(name=f"iter{i}/join", type=NodeType.COMP,
+                           duration_micros=compute_us * 0.25,
+                           attrs={"op": "add"})
+        join.data_deps.extend(deps)
+        # the gradient AR lags one iteration (it only gates the *next*
+        # optimizer boundary) — this is what lets AR flows run concurrently
+        # with the following iteration's A2A, the §5.3 mixing condition
+        if lagged_ar is not None:
+            join.sync_deps.append(lagged_ar)
+        lagged_ar = ar_id
+        prev = join.id
+    return et
+
+
+def symbolic_transformer_step(
+    layers: int, d_model: int, d_ff: int, heads: int, seq: int, batch: int,
+    tp: int = 1, dp: int = 1, dtype_bytes: int = 2, rank: int = 0,
+    vocab: int = 32000, moe_experts: int = 0, moe_topk: int = 2,
+) -> ExecutionTrace:
+    """STAGE-style symbolic pre-execution trace of one training step.
+
+    Emits per-layer fwd/bwd compute nodes with FLOP counts, TP collectives
+    (AllReduce per block in Megatron 1D TP), MoE All-to-Alls, and the DP
+    gradient ReduceScatter/AllGather pair.  No timings — `duration_source:
+    none` — downstream simulators assign times (paper's pre-execution stage).
+    """
+    world = tp * dp
+    et = ExecutionTrace(rank=rank, world_size=world,
+                        metadata={"generator": "symbolic_transformer",
+                                  "duration_source": "none"})
+    tp_group = et.add_process_group(list(range(tp)), tag="tp") if tp > 1 else None
+    dp_group = et.add_process_group(list(range(dp)), tag="dp") if dp > 1 else None
+    tokens = seq * batch // max(dp, 1)
+    d_head = d_model // heads
+    prev = None
+
+    def comp(name: str, flops: float, op: str = "dot_general") -> ETNode:
+        nonlocal prev
+        n = et.add_node(name=name, type=NodeType.COMP,
+                        attrs={"op": op, "flops": flops})
+        if prev is not None:
+            n.data_deps.append(prev)
+        prev = n.id
+        return n
+
+    def coll(name: str, ctype: CollectiveType, nbytes: int, group) -> ETNode:
+        nonlocal prev
+        n = et.add_node(name=name, type=NodeType.COMM_COLL, comm_type=ctype,
+                        comm_group=group.id if group else -1, comm_bytes=nbytes)
+        if prev is not None:
+            n.data_deps.append(prev)
+        prev = n.id
+        return n
+
+    emb_flops = 2.0 * tokens * d_model
+    comp("embed/gather", emb_flops, op="gather")
+    act_bytes = tokens * d_model * dtype_bytes
+    for l in range(layers):
+        pre = f"layer{l}"
+        qkv_flops = 2.0 * tokens * d_model * (3 * d_model) / tp
+        comp(f"{pre}/attn/qkv_proj", qkv_flops)
+        attn_flops = 4.0 * tokens * seq * d_model / tp
+        comp(f"{pre}/attn/softmax_qk", attn_flops, op="dot_general")
+        comp(f"{pre}/attn/o_proj", 2.0 * tokens * d_model * d_model / tp)
+        if tp > 1:
+            coll(f"{pre}/attn/tp_allreduce", CollectiveType.ALL_REDUCE,
+                 act_bytes, tp_group)
+        if moe_experts:
+            if tp > 1:
+                coll(f"{pre}/moe/dispatch_a2a", CollectiveType.ALL_TO_ALL,
+                     act_bytes * moe_topk, tp_group)
+            comp(f"{pre}/moe/experts",
+                 2.0 * tokens * moe_topk * d_model * d_ff * 2 / tp)
+            if tp > 1:
+                coll(f"{pre}/moe/combine_a2a", CollectiveType.ALL_TO_ALL,
+                     act_bytes * moe_topk, tp_group)
+        else:
+            comp(f"{pre}/mlp/up", 2.0 * tokens * d_model * d_ff / tp)
+            comp(f"{pre}/mlp/down", 2.0 * tokens * d_ff * d_model / tp)
+            if tp > 1:
+                coll(f"{pre}/mlp/tp_allreduce", CollectiveType.ALL_REDUCE,
+                     act_bytes, tp_group)
+    comp("lm_head", 2.0 * tokens * d_model * vocab / tp)
+    # backward ~ 2x forward compute
+    comp("backward", 2.0 * sum(n.attrs.get("flops", 0.0)
+                               for n in et.compute_nodes()))
+    if dp > 1:
+        param_bytes = int(
+            (12 * d_model * d_model + (2 if not moe_experts else 2 * moe_experts)
+             * d_model * d_ff) * layers * dtype_bytes / max(tp, 1))
+        coll("grad/reduce_scatter", CollectiveType.REDUCE_SCATTER,
+             param_bytes, dp_group)
+        comp("optimizer/adamw", 10.0 * param_bytes / dtype_bytes,
+             op="elemwise_update")
+        coll("params/all_gather", CollectiveType.ALL_GATHER,
+             param_bytes, dp_group)
+    return et

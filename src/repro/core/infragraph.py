@@ -1,0 +1,169 @@
+"""InfraGraph: graph-based infrastructure abstraction (paper §6.2.2).
+
+The paper identifies standardized *infrastructure* descriptions as the missing
+complement to workload ETs; we implement the emerging-InfraGraph idea:
+compute nodes (NPUs with peak FLOP/s, HBM bytes + bandwidth), links
+(bandwidth, latency), and topology builders.  The simulator (repro.sim)
+consumes an InfraGraph the same way it consumes an ET — enabling
+infrastructure-aware performance projection and topology comparison (Fig 12).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import orjson
+
+# TPU v5e production constants used across the repo (roofline + simulator).
+TPU_V5E = {
+    "name": "tpu-v5e",
+    "peak_bf16_flops": 197e12,      # per chip
+    "hbm_bytes": 16 << 30,
+    "hbm_bw": 819e9,                # bytes/s
+    "ici_link_bw": 50e9,            # bytes/s per link direction
+    "ici_latency_s": 1e-6,
+    "dcn_link_bw": 25e9,            # inter-pod (data-center network)
+    "dcn_latency_s": 10e-6,
+}
+
+
+@dataclass
+class NpuSpec:
+    id: int
+    peak_flops: float = TPU_V5E["peak_bf16_flops"]
+    hbm_bytes: int = TPU_V5E["hbm_bytes"]
+    hbm_bw: float = TPU_V5E["hbm_bw"]
+    speed_factor: float = 1.0       # <1.0 models a straggler
+
+
+@dataclass
+class Link:
+    src: int
+    dst: int
+    bandwidth: float                # bytes/s
+    latency_s: float = 1e-6
+    name: str = ""
+
+
+@dataclass
+class InfraGraph:
+    name: str = "infra"
+    npus: Dict[int, NpuSpec] = field(default_factory=dict)
+    links: List[Link] = field(default_factory=list)
+    attrs: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def num_npus(self) -> int:
+        return len(self.npus)
+
+    def adjacency(self) -> Dict[int, List[Link]]:
+        adj: Dict[int, List[Link]] = {i: [] for i in self.npus}
+        for l in self.links:
+            adj[l.src].append(l)
+        return adj
+
+    def link_between(self, a: int, b: int) -> Optional[Link]:
+        for l in self.links:
+            if l.src == a and l.dst == b:
+                return l
+        return None
+
+    def to_json(self) -> bytes:
+        return orjson.dumps({
+            "name": self.name, "attrs": self.attrs,
+            "npus": [vars(n) for n in self.npus.values()],
+            "links": [vars(l) for l in self.links],
+        })
+
+    @classmethod
+    def from_json(cls, data: bytes) -> "InfraGraph":
+        d = orjson.loads(data)
+        g = cls(name=d.get("name", "infra"), attrs=d.get("attrs", {}))
+        for nd in d.get("npus", []):
+            g.npus[nd["id"]] = NpuSpec(**nd)
+        for ld in d.get("links", []):
+            g.links.append(Link(**ld))
+        return g
+
+
+def _mk_npus(n: int, **kw) -> Dict[int, NpuSpec]:
+    return {i: NpuSpec(id=i, **kw) for i in range(n)}
+
+
+def ring(n: int, bandwidth: float, latency_s: float = 1e-6, **kw) -> InfraGraph:
+    g = InfraGraph(name=f"ring{n}", npus=_mk_npus(n, **kw))
+    for i in range(n):
+        j = (i + 1) % n
+        g.links.append(Link(i, j, bandwidth, latency_s, f"ring{i}->{j}"))
+        g.links.append(Link(j, i, bandwidth, latency_s, f"ring{j}->{i}"))
+    g.attrs["topology"] = 1
+    return g
+
+
+def fully_connected(n: int, bandwidth: float, latency_s: float = 1e-6,
+                    **kw) -> InfraGraph:
+    """Total per-NPU egress equals `bandwidth` (split across n-1 peers) —
+    matching the paper's equal-end-link-bandwidth comparison in Fig 12."""
+    g = InfraGraph(name=f"fc{n}", npus=_mk_npus(n, **kw))
+    per_peer = bandwidth / max(n - 1, 1)
+    for i in range(n):
+        for j in range(n):
+            if i != j:
+                g.links.append(Link(i, j, per_peer, latency_s))
+    g.attrs["topology"] = 2
+    return g
+
+
+def switch(n: int, bandwidth: float, latency_s: float = 1e-6, **kw) -> InfraGraph:
+    """Single non-blocking switch: every NPU has a full-bw up/down link.
+    Node id -1 is the switch."""
+    g = InfraGraph(name=f"switch{n}", npus=_mk_npus(n, **kw))
+    for i in range(n):
+        g.links.append(Link(i, -1, bandwidth, latency_s / 2, f"up{i}"))
+        g.links.append(Link(-1, i, bandwidth, latency_s / 2, f"down{i}"))
+    g.attrs["topology"] = 0
+    return g
+
+
+def clos_two_tier(n: int, leaf_ports: int, nic_bw: float,
+                  uplink_bw: float, latency_s: float = 2e-6, **kw) -> InfraGraph:
+    """Two-tier leaf/spine Clos (SCP case study §5.4.2): NPUs under leaves,
+    leaves to a spine layer. Leaf id = -(1+leaf), spine id = -(1000+spine)."""
+    g = InfraGraph(name=f"clos{n}", npus=_mk_npus(n, **kw))
+    n_leaves = (n + leaf_ports - 1) // leaf_ports
+    for i in range(n):
+        leaf = -(1 + i // leaf_ports)
+        g.links.append(Link(i, leaf, nic_bw, latency_s / 2))
+        g.links.append(Link(leaf, i, nic_bw, latency_s / 2))
+    for leaf_i in range(n_leaves):
+        g.links.append(Link(-(1 + leaf_i), -1000, uplink_bw, latency_s / 2))
+        g.links.append(Link(-1000, -(1 + leaf_i), uplink_bw, latency_s / 2))
+    g.attrs["topology"] = 3
+    return g
+
+
+def tpu_pod_2d(data: int = 16, model: int = 16,
+               ici_bw: float = TPU_V5E["ici_link_bw"],
+               latency_s: float = TPU_V5E["ici_latency_s"], **kw) -> InfraGraph:
+    """2D torus over a (data, model) mesh — the production single-pod fabric."""
+    n = data * model
+    g = InfraGraph(name=f"tpu2d_{data}x{model}", npus=_mk_npus(n, **kw))
+    def nid(d: int, m: int) -> int:
+        return d * model + m
+    for d in range(data):
+        for m in range(model):
+            for (dd, mm) in ((d, (m + 1) % model), ((d + 1) % data, m)):
+                a, b = nid(d, m), nid(dd, mm)
+                g.links.append(Link(a, b, ici_bw, latency_s))
+                g.links.append(Link(b, a, ici_bw, latency_s))
+    g.attrs["topology"] = 4
+    return g
+
+
+TOPOLOGIES = {
+    "switch": switch,
+    "ring": ring,
+    "fully_connected": fully_connected,
+    "clos": clos_two_tier,
+    "tpu2d": tpu_pod_2d,
+}

@@ -1,0 +1,206 @@
+"""Chakra trace linker (paper §3.1.1).
+
+Merges a *host-side* trace (framework level — in Chakra-JAX, the jaxpr
+observer's ET, which carries exact SSA data dependencies and scope names) with
+a *device-side* trace (HLO level — per-op timing/flops/bytes, async collective
+start/done pairs, but compiler-reshaped structure) into one unified dependency
+graph.
+
+Dependency classes reconstructed (exactly the paper's three):
+* **control**: host op -> the device ops it lowered to (CPU->GPU launch edges
+  in the paper; here: jaxpr eqn -> HLO ops matched via `op_name` metadata),
+  plus host program order.
+* **data**: producer/consumer edges among device ops (HLO operands) and among
+  host ops (jaxpr SSA) — already present in the inputs, preserved.
+* **sync**: async collective start/done pairs (TPU analogue of
+  cudaEventRecord/StreamWaitEvent) and explicit HLO control-predecessors.
+
+The shared-identifier problem the paper solved with a PyTorch patch does not
+arise here: XLA propagates jaxpr scope paths into HLO metadata, which is our
+common identifier.  Unmatched device ops (compiler-created: fusions, copies,
+bitcasts) attach to the host node whose scope is the longest prefix of their
+op_name, or to a synthetic "xla/unattributed" host node.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .schema import ETNode, ExecutionTrace, NodeType
+
+
+@dataclass
+class LinkReport:
+    host_nodes: int = 0
+    device_nodes: int = 0
+    matched: int = 0
+    prefix_matched: int = 0
+    kind_matched: int = 0
+    unattributed: int = 0
+    sync_edges: int = 0
+    ctrl_edges: int = 0
+
+    def summary(self) -> str:
+        return (f"link: host={self.host_nodes} device={self.device_nodes} "
+                f"matched={self.matched} prefix={self.prefix_matched} "
+                f"kind={self.kind_matched} "
+                f"unattributed={self.unattributed} "
+                f"ctrl_edges={self.ctrl_edges} sync_edges={self.sync_edges}")
+
+
+# HLO opcode -> jaxpr primitive family (structural-signature matching: the
+# compiler reshapes structure, but op *kinds* survive lowering)
+_KIND_FAMILIES = {
+    "dot": "gemm", "dot_general": "gemm", "convolution": "gemm",
+    "conv_general_dilated": "gemm",
+    "while": "loop", "scan": "loop", "while_loop": "loop",
+    "all-reduce": "all_reduce", "psum": "all_reduce",
+    "all-gather": "all_gather", "all_gather": "all_gather",
+    "reduce-scatter": "reduce_scatter", "psum_scatter": "reduce_scatter",
+    "all-to-all": "all_to_all", "all_to_all": "all_to_all",
+    "collective-permute": "permute", "ppermute": "permute",
+    "reduce": "reduce", "reduce_sum": "reduce", "reduce_max": "reduce",
+    "gather": "gather", "scatter": "scatter",
+    "dynamic-slice": "slice", "dynamic_slice": "slice",
+    "dynamic-update-slice": "dus", "dynamic_update_slice": "dus",
+}
+
+
+def _kind_of(node: ETNode) -> str:
+    op = str(node.attrs.get("op", node.name))
+    return _KIND_FAMILIES.get(op, "")
+
+
+def _scope_of(node: ETNode) -> str:
+    """Normalized scope path used as the cross-trace identifier."""
+    s = node.attrs.get("scope", node.name)
+    # strip jit wrapper prefixes: "jit(train_step)/a/b" -> "a/b"
+    while s.startswith("jit(") and "/" in s:
+        s = s.split("/", 1)[1]
+    return s.strip("/")
+
+
+def link(host: ExecutionTrace, device: ExecutionTrace) -> Tuple[ExecutionTrace, LinkReport]:
+    """Merge host + device traces into a unified Chakra dependency graph."""
+    report = LinkReport(host_nodes=len(host), device_nodes=len(device))
+    out = ExecutionTrace(rank=device.rank or host.rank,
+                         world_size=max(device.world_size, host.world_size),
+                         metadata={**host.metadata, **device.metadata,
+                                   "linked": True})
+    # Carry tensors/storages/process groups from both (device ids offset).
+    out.tensors = dict(host.tensors)
+    out.storages = dict(host.storages)
+    t_off = (max(out.tensors) + 1) if out.tensors else 0
+    s_off = (max(out.storages) + 1) if out.storages else 0
+    for tid, t in device.tensors.items():
+        import dataclasses as _dc
+        out.tensors[tid + t_off] = _dc.replace(t, id=tid + t_off,
+                                               storage_id=t.storage_id + s_off)
+    for sid, s in device.storages.items():
+        import dataclasses as _dc
+        out.storages[sid + s_off] = _dc.replace(s, id=sid + s_off)
+    pg_map: Dict[int, int] = {}
+    for pg in list(host.process_groups.values()) + list(device.process_groups.values()):
+        npg = out.add_process_group(pg.ranks, pg.tag)
+        pg_map[id(pg)] = npg.id
+
+    # ---- 1. host nodes come first (stable ids), preserving their deps ----
+    h_map: Dict[int, int] = {}
+    for n in host.sorted_nodes():
+        nn = out.add_node(_clone(n, out.new_node_id()))
+        nn.attrs.setdefault("level", "host")
+        h_map[n.id] = nn.id
+    for n in host.sorted_nodes():
+        nn = out.nodes[h_map[n.id]]
+        nn.ctrl_deps = [h_map[d] for d in n.ctrl_deps if d in h_map]
+        nn.data_deps = [h_map[d] for d in n.data_deps if d in h_map]
+        nn.sync_deps = [h_map[d] for d in n.sync_deps if d in h_map]
+
+    # scope index for matching
+    by_scope: Dict[str, List[int]] = {}
+    for hid, nid in h_map.items():
+        sc = _scope_of(host.nodes[hid])
+        by_scope.setdefault(sc, []).append(nid)
+    scopes_sorted = sorted(by_scope, key=len, reverse=True)
+
+    unattributed: Optional[int] = None
+
+    # order-preserving kind index: host nodes of each kind family, in id
+    # order, with a moving cursor (structural-signature matching — the
+    # paper's fallback when shared identifiers are unavailable)
+    host_by_kind: Dict[str, List[int]] = {}
+    for hid in sorted(h_map):
+        k = _kind_of(host.nodes[hid])
+        if k:
+            host_by_kind.setdefault(k, []).append(h_map[hid])
+    kind_cursor: Dict[str, int] = {k: 0 for k in host_by_kind}
+
+    def _host_anchor(dev_node: ETNode) -> Tuple[Optional[int], str]:
+        sc = _scope_of(dev_node)
+        if sc in by_scope:
+            return by_scope[sc][0], "exact"
+        for cand in scopes_sorted:
+            if cand and (sc.startswith(cand + "/") or cand.startswith(sc + "/")
+                         or (cand and cand in sc)):
+                return by_scope[cand][0], "prefix"
+        k = _kind_of(dev_node)
+        if k in host_by_kind:
+            lst = host_by_kind[k]
+            cur = kind_cursor[k]
+            anchor = lst[min(cur, len(lst) - 1)]
+            kind_cursor[k] = cur + 1
+            return anchor, "kind"
+        return None, "none"
+
+    # ---- 2. device nodes, anchored to host nodes via ctrl edges ----------
+    d_map: Dict[int, int] = {}
+    for n in device.sorted_nodes():
+        nn = _clone(n, out.new_node_id())
+        nn.attrs.setdefault("level", "device")
+        nn.inputs = [t + t_off for t in n.inputs]
+        nn.outputs = [t + t_off for t in n.outputs]
+        if n.comm_group >= 0 and n.comm_group in device.process_groups:
+            pg = device.process_groups[n.comm_group]
+            nn.comm_group = pg_map.get(id(pg), nn.comm_group)
+        out.add_node(nn)
+        d_map[n.id] = nn.id
+        anchor, how = _host_anchor(n)
+        if how == "exact":
+            report.matched += 1
+        elif how == "prefix":
+            report.prefix_matched += 1
+        elif how == "kind":
+            report.kind_matched += 1
+        else:
+            if unattributed is None:
+                ua = out.add_node(name="xla/unattributed", type=NodeType.METADATA,
+                                  attrs={"level": "host"})
+                unattributed = ua.id
+            anchor = unattributed
+            report.unattributed += 1
+        if anchor is not None:
+            nn.ctrl_deps.append(anchor)      # CPU -> device launch edge
+            report.ctrl_edges += 1
+
+    # device-internal data/sync deps
+    for n in device.sorted_nodes():
+        nn = out.nodes[d_map[n.id]]
+        nn.data_deps = sorted(set(nn.data_deps) |
+                              {d_map[d] for d in n.data_deps if d in d_map})
+        sync = {d_map[d] for d in n.sync_deps if d in d_map}
+        nn.sync_deps = sorted(sync)
+        report.sync_edges += len(sync)
+
+    return out, report
+
+
+def _clone(n: ETNode, new_id: int) -> ETNode:
+    return ETNode(
+        id=new_id, name=n.name, type=n.type,
+        ctrl_deps=[], data_deps=[], sync_deps=[],
+        start_time_micros=n.start_time_micros,
+        duration_micros=n.duration_micros,
+        inputs=list(n.inputs), outputs=list(n.outputs),
+        comm_type=n.comm_type, comm_group=n.comm_group, comm_tag=n.comm_tag,
+        comm_bytes=n.comm_bytes, comm_src=n.comm_src, comm_dst=n.comm_dst,
+        attrs=dict(n.attrs))

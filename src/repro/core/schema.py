@@ -1,0 +1,405 @@
+"""Chakra execution-trace (ET) schema.
+
+Faithful JAX-side implementation of the Chakra node/tensor/storage/process-group
+schema (paper §2, Tables 1-4): a directed acyclic graph whose nodes are typed
+operations (compute / memory / communication) and whose edges encode control,
+data, and synchronization dependencies.  The schema is deliberately *minimal yet
+extensible*: a small closed set of node categories plus a free-form attribute
+mechanism (`attrs`) for system-specific annotations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+
+SCHEMA_VERSION = "0.3.0-jax"
+
+
+class NodeType(enum.IntEnum):
+    """Chakra node categories (paper Table 1 + §3.1.2 emission types)."""
+
+    INVALID = 0
+    METADATA = 1
+    COMP = 2            # compute operator (host or device)
+    MEM_LOAD = 3        # memory read (HBM -> core, or host<->device copy in)
+    MEM_STORE = 4       # memory write
+    COMM_COLL = 5       # collective communication
+    COMM_SEND = 6       # point-to-point send
+    COMM_RECV = 7       # point-to-point recv
+    DATA_LOAD = 8       # storage/data-pipeline op (MLPerf-Storage extension, §6.2.3)
+
+
+class CollectiveType(enum.IntEnum):
+    """Communication primitive (paper Table 2), plus TPU-native permute."""
+
+    INVALID = 0
+    ALL_REDUCE = 1
+    ALL_GATHER = 2
+    REDUCE_SCATTER = 3
+    BROADCAST = 4
+    POINT_TO_POINT = 5
+    ALL_TO_ALL = 6
+    BARRIER = 7
+    COLLECTIVE_PERMUTE = 8   # TPU ICI neighbor exchange (no direct NCCL analogue)
+
+
+class DepType(enum.IntEnum):
+    """Edge label for the converter's normalized edge set (paper §3.1.2)."""
+
+    CTRL = 0
+    DATA = 1
+    SYNC = 2
+
+
+_DTYPE_SIZES = {
+    "f64": 8, "float64": 8, "f32": 4, "float32": 4, "tf32": 4,
+    "bf16": 2, "bfloat16": 2, "f16": 2, "float16": 2,
+    "f8": 1, "float8_e4m3fn": 1, "float8_e5m2": 1,
+    "s64": 8, "int64": 8, "u64": 8, "uint64": 8,
+    "s32": 4, "int32": 4, "u32": 4, "uint32": 4,
+    "s16": 2, "int16": 2, "u16": 2, "uint16": 2,
+    "s8": 1, "int8": 1, "u8": 1, "uint8": 1,
+    "pred": 1, "bool": 1,
+}
+
+
+def dtype_size(dtype: str) -> int:
+    """Bytes per element for a dtype name (JAX/HLO spellings accepted)."""
+    return _DTYPE_SIZES.get(str(dtype).lower(), 4)
+
+
+@dataclass(slots=True)
+class TensorDesc:
+    """Tensor descriptor (paper Table 3).
+
+    Tensors and their storages are split so aliasing (two tensors sharing one
+    storage at different offsets/shapes) is representable.
+    """
+
+    id: int
+    shape: Tuple[int, ...] = ()
+    dtype: str = "f32"
+    storage_id: int = 0
+    storage_offset: int = 0
+    stride: Tuple[int, ...] = ()
+    size_bytes: int = 0
+
+    def __post_init__(self) -> None:
+        if not self.size_bytes:
+            n = 1
+            for d in self.shape:
+                n *= int(d)
+            self.size_bytes = n * dtype_size(self.dtype)
+
+
+@dataclass(slots=True)
+class StorageDesc:
+    """Physical memory backing one or more tensors (paper Table 4)."""
+
+    id: int
+    size_bytes: int = 0
+    device: str = "tpu:0"
+
+
+@dataclass(slots=True)
+class ProcessGroup:
+    """Set of ranks participating in a collective (paper §2.2).
+
+    In Chakra-JAX a process group is typically one group of a mesh axis, e.g.
+    the 16 ranks of one "model"-axis ring in a (data=16, model=16) mesh.
+    """
+
+    id: int
+    ranks: Tuple[int, ...] = ()
+    tag: str = ""           # e.g. "mesh_axis=model"
+
+    @property
+    def size(self) -> int:
+        return len(self.ranks)
+
+
+@dataclass(slots=True)
+class ETNode:
+    """One operation in the execution trace (paper Table 1 + Table 2 fields)."""
+
+    id: int
+    name: str = ""
+    type: NodeType = NodeType.COMP
+    ctrl_deps: List[int] = field(default_factory=list)
+    data_deps: List[int] = field(default_factory=list)
+    sync_deps: List[int] = field(default_factory=list)
+    start_time_micros: float = 0.0
+    duration_micros: float = 0.0
+    inputs: List[int] = field(default_factory=list)    # tensor ids
+    outputs: List[int] = field(default_factory=list)   # tensor ids
+    # --- communication-node fields (Table 2) ---
+    comm_type: CollectiveType = CollectiveType.INVALID
+    comm_group: int = -1            # process-group id
+    comm_tag: str = ""
+    comm_bytes: int = 0             # payload bytes (per-rank operand size)
+    comm_src: int = -1              # p2p only
+    comm_dst: int = -1              # p2p only
+    # --- extensible attributes (AttributeProto analogue) ---
+    attrs: Dict[str, Any] = field(default_factory=dict)
+
+    # -- convenience -------------------------------------------------------
+    def all_deps(self) -> Iterator[Tuple[int, DepType]]:
+        for d in self.ctrl_deps:
+            yield d, DepType.CTRL
+        for d in self.data_deps:
+            yield d, DepType.DATA
+        for d in self.sync_deps:
+            yield d, DepType.SYNC
+
+    @property
+    def is_comm(self) -> bool:
+        return self.type in (NodeType.COMM_COLL, NodeType.COMM_SEND, NodeType.COMM_RECV)
+
+    @property
+    def is_compute(self) -> bool:
+        return self.type == NodeType.COMP
+
+    @property
+    def end_time_micros(self) -> float:
+        return self.start_time_micros + self.duration_micros
+
+
+class ExecutionTrace:
+    """A per-rank Chakra execution trace: nodes + tensors + storages + groups.
+
+    The default storage model is per-device traces (paper §2.2 "Trace Storage");
+    rank/world_size identify this trace's position in the job.
+    """
+
+    def __init__(
+        self,
+        rank: int = 0,
+        world_size: int = 1,
+        metadata: Optional[Dict[str, Any]] = None,
+    ) -> None:
+        self.schema_version = SCHEMA_VERSION
+        self.rank = int(rank)
+        self.world_size = int(world_size)
+        self.metadata: Dict[str, Any] = dict(metadata or {})
+        self.nodes: Dict[int, ETNode] = {}
+        self.tensors: Dict[int, TensorDesc] = {}
+        self.storages: Dict[int, StorageDesc] = {}
+        self.process_groups: Dict[int, ProcessGroup] = {}
+        self._next_node_id = 0
+        self._next_tensor_id = 0
+        self._next_storage_id = 0
+        self._next_pg_id = 0
+
+    # ------------------------------------------------------------------ ids
+    def new_node_id(self) -> int:
+        i = self._next_node_id
+        self._next_node_id += 1
+        return i
+
+    # ---------------------------------------------------------------- build
+    def add_node(self, node: Optional[ETNode] = None, **kw: Any) -> ETNode:
+        if node is None:
+            kw.setdefault("id", self.new_node_id())
+            node = ETNode(**kw)
+        if node.id in self.nodes:
+            raise ValueError(f"duplicate node id {node.id}")
+        self.nodes[node.id] = node
+        self._next_node_id = max(self._next_node_id, node.id + 1)
+        return node
+
+    def add_tensor(
+        self,
+        shape: Sequence[int],
+        dtype: str = "f32",
+        storage_id: Optional[int] = None,
+        storage_offset: int = 0,
+        device: str = "tpu:0",
+    ) -> TensorDesc:
+        tid = self._next_tensor_id
+        self._next_tensor_id += 1
+        t = TensorDesc(id=tid, shape=tuple(int(s) for s in shape), dtype=str(dtype),
+                       storage_offset=storage_offset)
+        if storage_id is None:
+            sid = self._next_storage_id
+            self._next_storage_id += 1
+            self.storages[sid] = StorageDesc(id=sid, size_bytes=t.size_bytes, device=device)
+            storage_id = sid
+        t.storage_id = storage_id
+        self.tensors[tid] = t
+        return t
+
+    def add_process_group(self, ranks: Sequence[int], tag: str = "") -> ProcessGroup:
+        key = (tuple(int(r) for r in ranks), tag)
+        for pg in self.process_groups.values():
+            if (pg.ranks, pg.tag) == key:
+                return pg
+        pid = self._next_pg_id
+        self._next_pg_id += 1
+        pg = ProcessGroup(id=pid, ranks=key[0], tag=tag)
+        self.process_groups[pid] = pg
+        return pg
+
+    # --------------------------------------------------------------- access
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    def __iter__(self) -> Iterator[ETNode]:
+        return iter(self.nodes.values())
+
+    def node(self, node_id: int) -> ETNode:
+        return self.nodes[node_id]
+
+    def sorted_nodes(self) -> List[ETNode]:
+        return [self.nodes[i] for i in sorted(self.nodes)]
+
+    def successors(self) -> Dict[int, List[int]]:
+        """Adjacency: node id -> ids of nodes depending on it."""
+        succ: Dict[int, List[int]] = {i: [] for i in self.nodes}
+        for n in self.nodes.values():
+            for dep, _ in n.all_deps():
+                if dep in succ:
+                    succ[dep].append(n.id)
+        return succ
+
+    def in_degree(self) -> Dict[int, int]:
+        deg: Dict[int, int] = {}
+        for n in self.nodes.values():
+            deg[n.id] = sum(1 for d, _ in n.all_deps() if d in self.nodes)
+        return deg
+
+    def topological_order(self) -> List[int]:
+        """Kahn topological order; raises ValueError on a cycle.
+
+        Deterministic: ties broken by node id (stable across runs — the
+        converter's canonical ordering relies on this).
+        """
+        import heapq
+
+        deg = self.in_degree()
+        succ = self.successors()
+        ready = [i for i, d in deg.items() if d == 0]
+        heapq.heapify(ready)
+        order: List[int] = []
+        while ready:
+            i = heapq.heappop(ready)
+            order.append(i)
+            for s in succ[i]:
+                deg[s] -= 1
+                if deg[s] == 0:
+                    heapq.heappush(ready, s)
+        if len(order) != len(self.nodes):
+            raise ValueError(
+                f"cycle detected: {len(self.nodes) - len(order)} nodes unordered")
+        return order
+
+    def is_acyclic(self) -> bool:
+        try:
+            self.topological_order()
+            return True
+        except ValueError:
+            return False
+
+    # ----------------------------------------------------------- summaries
+    def comm_nodes(self) -> List[ETNode]:
+        return [n for n in self.nodes.values() if n.is_comm]
+
+    def compute_nodes(self) -> List[ETNode]:
+        return [n for n in self.nodes.values() if n.type == NodeType.COMP]
+
+    def total_bytes(self, node_type: Optional[NodeType] = None) -> int:
+        total = 0
+        for n in self.nodes.values():
+            if node_type is None or n.type == node_type:
+                total += n.comm_bytes
+        return total
+
+    # --------------------------------------------------------------- dicts
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "schema_version": self.schema_version,
+            "rank": self.rank,
+            "world_size": self.world_size,
+            "metadata": self.metadata,
+            "nodes": [_node_to_dict(n) for n in self.sorted_nodes()],
+            "tensors": [dataclasses.asdict(t) for t in self.tensors.values()],
+            "storages": [dataclasses.asdict(s) for s in self.storages.values()],
+            "process_groups": [dataclasses.asdict(p) for p in self.process_groups.values()],
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ExecutionTrace":
+        et = cls(rank=d.get("rank", 0), world_size=d.get("world_size", 1),
+                 metadata=d.get("metadata", {}))
+        et.schema_version = d.get("schema_version", SCHEMA_VERSION)
+        for td in d.get("tensors", []):
+            t = TensorDesc(id=td["id"], shape=tuple(td.get("shape", ())),
+                           dtype=td.get("dtype", "f32"),
+                           storage_id=td.get("storage_id", 0),
+                           storage_offset=td.get("storage_offset", 0),
+                           stride=tuple(td.get("stride", ())),
+                           size_bytes=td.get("size_bytes", 0))
+            et.tensors[t.id] = t
+            et._next_tensor_id = max(et._next_tensor_id, t.id + 1)
+        for sd in d.get("storages", []):
+            s = StorageDesc(id=sd["id"], size_bytes=sd.get("size_bytes", 0),
+                            device=sd.get("device", ""))
+            et.storages[s.id] = s
+            et._next_storage_id = max(et._next_storage_id, s.id + 1)
+        for pd in d.get("process_groups", []):
+            p = ProcessGroup(id=pd["id"], ranks=tuple(pd.get("ranks", ())),
+                             tag=pd.get("tag", ""))
+            et.process_groups[p.id] = p
+            et._next_pg_id = max(et._next_pg_id, p.id + 1)
+        for nd in d.get("nodes", []):
+            et.add_node(_node_from_dict(nd))
+        return et
+
+
+def _node_to_dict(n: ETNode) -> Dict[str, Any]:
+    d: Dict[str, Any] = {"id": n.id, "name": n.name, "type": int(n.type)}
+    if n.ctrl_deps:
+        d["ctrl_deps"] = n.ctrl_deps
+    if n.data_deps:
+        d["data_deps"] = n.data_deps
+    if n.sync_deps:
+        d["sync_deps"] = n.sync_deps
+    if n.start_time_micros:
+        d["start_time_micros"] = n.start_time_micros
+    if n.duration_micros:
+        d["duration_micros"] = n.duration_micros
+    if n.inputs:
+        d["inputs"] = n.inputs
+    if n.outputs:
+        d["outputs"] = n.outputs
+    if n.comm_type != CollectiveType.INVALID:
+        d["comm_type"] = int(n.comm_type)
+        d["comm_group"] = n.comm_group
+        d["comm_bytes"] = n.comm_bytes
+        if n.comm_tag:
+            d["comm_tag"] = n.comm_tag
+        if n.comm_src >= 0:
+            d["comm_src"] = n.comm_src
+        if n.comm_dst >= 0:
+            d["comm_dst"] = n.comm_dst
+    if n.attrs:
+        d["attrs"] = n.attrs
+    return d
+
+
+def _node_from_dict(d: Dict[str, Any]) -> ETNode:
+    return ETNode(
+        id=d["id"], name=d.get("name", ""), type=NodeType(d.get("type", 2)),
+        ctrl_deps=list(d.get("ctrl_deps", [])),
+        data_deps=list(d.get("data_deps", [])),
+        sync_deps=list(d.get("sync_deps", [])),
+        start_time_micros=d.get("start_time_micros", 0.0),
+        duration_micros=d.get("duration_micros", 0.0),
+        inputs=list(d.get("inputs", [])), outputs=list(d.get("outputs", [])),
+        comm_type=CollectiveType(d.get("comm_type", 0)),
+        comm_group=d.get("comm_group", -1), comm_tag=d.get("comm_tag", ""),
+        comm_bytes=d.get("comm_bytes", 0),
+        comm_src=d.get("comm_src", -1), comm_dst=d.get("comm_dst", -1),
+        attrs=dict(d.get("attrs", {})),
+    )

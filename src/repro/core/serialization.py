@@ -1,0 +1,200 @@
+"""Chakra ET serialization: JSON (human-readable) and CHKB binary.
+
+The paper ships Protobuf (compact) and JSON (AMD's human-readable contribution)
+encodings; downstream tools must support both.  Here:
+
+* ``.json`` / ``.json.zst``  — orjson-encoded schema dict, optionally zstd-framed.
+* ``.chkb``                  — "CHaKra Binary": msgpack-encoded with a *hierarchical
+  index* so nodes can be loaded in windows without reading the whole trace.  This
+  implements the paper's §6.2.1 future work (lossless compression + hierarchical
+  indexing for partial loading / selective replay) as a first-class feature.
+
+CHKB layout::
+
+    [8B magic "CHKB\\x00\\x03\\x00\\x00"]
+    [4B header_len][header msgpack: metadata, tensors, storages, pgs,
+                    node_count, block_size, block_offsets[], compressed?]
+    [node block 0][node block 1] ...    # each: msgpack list of node dicts,
+                                        # individually zstd-compressed
+
+The feeder (core.feeder) reads CHKB blocks lazily — memory stays proportional
+to the window size, not the trace (paper §4.1 "Dependency-Aware ET Feeder").
+"""
+from __future__ import annotations
+
+import io
+import os
+import struct
+from typing import Any, Dict, Iterator, List, Optional
+
+import msgpack
+import orjson
+import zstandard
+
+from .schema import ExecutionTrace, ETNode, _node_from_dict, _node_to_dict
+
+_MAGIC = b"CHKB\x00\x03\x00\x00"
+_DEFAULT_BLOCK = 1024
+
+
+# --------------------------------------------------------------------- JSON
+def to_json_bytes(et: ExecutionTrace) -> bytes:
+    return orjson.dumps(et.to_dict())
+
+
+def from_json_bytes(data: bytes) -> ExecutionTrace:
+    return ExecutionTrace.from_dict(orjson.loads(data))
+
+
+# --------------------------------------------------------------------- CHKB
+def to_chkb_bytes(et: ExecutionTrace, block_size: int = _DEFAULT_BLOCK,
+                  compress: bool = True) -> bytes:
+    d = et.to_dict()
+    nodes = d.pop("nodes")
+    cctx = zstandard.ZstdCompressor(level=3) if compress else None
+    blocks: List[bytes] = []
+    for i in range(0, len(nodes), block_size):
+        raw = msgpack.packb(nodes[i:i + block_size], use_bin_type=True)
+        blocks.append(cctx.compress(raw) if cctx else raw)
+    header = dict(d)
+    header["node_count"] = len(nodes)
+    header["block_size"] = block_size
+    header["compressed"] = compress
+    header["block_lengths"] = [len(b) for b in blocks]
+    hb = msgpack.packb(header, use_bin_type=True)
+    out = io.BytesIO()
+    out.write(_MAGIC)
+    out.write(struct.pack("<I", len(hb)))
+    out.write(hb)
+    for b in blocks:
+        out.write(b)
+    return out.getvalue()
+
+
+def _read_chkb_header(data: bytes) -> tuple[Dict[str, Any], int]:
+    if data[:8] != _MAGIC:
+        raise ValueError("not a CHKB trace (bad magic)")
+    (hlen,) = struct.unpack_from("<I", data, 8)
+    header = msgpack.unpackb(data[12:12 + hlen], raw=False)
+    return header, 12 + hlen
+
+
+def from_chkb_bytes(data: bytes) -> ExecutionTrace:
+    header, off = _read_chkb_header(data)
+    nodes: List[Dict[str, Any]] = []
+    for nd in iter_chkb_node_dicts(data):
+        nodes.append(nd)
+    d = dict(header)
+    d["nodes"] = nodes
+    return ExecutionTrace.from_dict(d)
+
+
+def iter_chkb_node_dicts(data: bytes) -> Iterator[Dict[str, Any]]:
+    """Stream node dicts block-by-block (partial loading)."""
+    header, off = _read_chkb_header(data)
+    dctx = zstandard.ZstdDecompressor() if header.get("compressed") else None
+    for blen in header["block_lengths"]:
+        raw = data[off:off + blen]
+        off += blen
+        if dctx:
+            raw = dctx.decompress(raw)
+        for nd in msgpack.unpackb(raw, raw=False):
+            yield nd
+
+
+class ChkbReader:
+    """Random-access windowed reader over a CHKB file (hierarchical index).
+
+    Only the header is resident; node blocks are read + decompressed on demand.
+    """
+
+    def __init__(self, path: str) -> None:
+        self.path = path
+        self._fh = open(path, "rb")
+        self._fh.seek(0)
+        head = self._fh.read(12)
+        if head[:8] != _MAGIC:
+            raise ValueError("not a CHKB trace")
+        (hlen,) = struct.unpack("<I", head[8:12])
+        self.header: Dict[str, Any] = msgpack.unpackb(self._fh.read(hlen), raw=False)
+        self._data_start = 12 + hlen
+        offs = [self._data_start]
+        for blen in self.header["block_lengths"]:
+            offs.append(offs[-1] + blen)
+        self._block_offsets = offs
+        self._dctx = (zstandard.ZstdDecompressor()
+                      if self.header.get("compressed") else None)
+
+    @property
+    def node_count(self) -> int:
+        return int(self.header["node_count"])
+
+    @property
+    def block_size(self) -> int:
+        return int(self.header["block_size"])
+
+    @property
+    def num_blocks(self) -> int:
+        return len(self.header["block_lengths"])
+
+    def skeleton(self) -> ExecutionTrace:
+        """Trace with metadata/tensors/storages/pgs but no nodes."""
+        d = dict(self.header)
+        d["nodes"] = []
+        return ExecutionTrace.from_dict(d)
+
+    def read_block(self, idx: int) -> List[ETNode]:
+        if not 0 <= idx < self.num_blocks:
+            raise IndexError(idx)
+        self._fh.seek(self._block_offsets[idx])
+        raw = self._fh.read(self.header["block_lengths"][idx])
+        if self._dctx:
+            raw = self._dctx.decompress(raw)
+        return [_node_from_dict(nd) for nd in msgpack.unpackb(raw, raw=False)]
+
+    def iter_nodes(self) -> Iterator[ETNode]:
+        for b in range(self.num_blocks):
+            yield from self.read_block(b)
+
+    def close(self) -> None:
+        self._fh.close()
+
+    def __enter__(self) -> "ChkbReader":
+        return self
+
+    def __exit__(self, *a: Any) -> None:
+        self.close()
+
+
+# ------------------------------------------------------------------ file IO
+def save(et: ExecutionTrace, path: str, **kw: Any) -> str:
+    """Write a trace; format selected by suffix (.json, .json.zst, .chkb)."""
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    if path.endswith(".json"):
+        data = to_json_bytes(et)
+    elif path.endswith(".json.zst"):
+        data = zstandard.ZstdCompressor(level=3).compress(to_json_bytes(et))
+    elif path.endswith(".chkb"):
+        data = to_chkb_bytes(et, **kw)
+    else:
+        raise ValueError(f"unknown trace suffix: {path}")
+    with open(path, "wb") as fh:
+        fh.write(data)
+    return path
+
+
+def load(path: str) -> ExecutionTrace:
+    with open(path, "rb") as fh:
+        data = fh.read()
+    if path.endswith(".json"):
+        return from_json_bytes(data)
+    if path.endswith(".json.zst"):
+        return from_json_bytes(zstandard.ZstdDecompressor().decompress(data))
+    if path.endswith(".chkb"):
+        return from_chkb_bytes(data)
+    raise ValueError(f"unknown trace suffix: {path}")
+
+
+def roundtrip_equal(a: ExecutionTrace, b: ExecutionTrace) -> bool:
+    """Structural equality (used by property tests)."""
+    return a.to_dict() == b.to_dict()

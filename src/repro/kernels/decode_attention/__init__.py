@@ -1,0 +1,3 @@
+from .ops import decode_attention, reference
+
+__all__ = ["decode_attention", "reference"]

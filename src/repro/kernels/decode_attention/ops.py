@@ -1,0 +1,25 @@
+"""Op wrapper for split-KV flash decode (GQA expansion included)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention_tpu
+from .ref import decode_attention_ref
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     cache_len, *, window: int = 0, block_s: int = 256,
+                     interpret: bool = True) -> jax.Array:
+    """q: [B, H, D]; k, v: [B, S, Hkv, D] -> [B, H, D]."""
+    H, Hkv = q.shape[1], k.shape[2]
+    if Hkv != H:
+        k = jnp.repeat(k, H // Hkv, axis=2)
+        v = jnp.repeat(v, H // Hkv, axis=2)
+    return decode_attention_tpu(q, k, v, cache_len, window=window,
+                                block_s=block_s, interpret=interpret)
+
+
+reference = decode_attention_ref

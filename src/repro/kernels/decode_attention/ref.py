@@ -1,0 +1,29 @@
+"""Oracle for split-KV flash decode: one query token vs a masked cache."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         cache_len: int, *, window: int = 0,
+                         scale: Optional[float] = None) -> jax.Array:
+    """q: [B, H, D]; k, v: [B, S, H, D]; -> [B, H, D]."""
+    B, H, D = q.shape
+    S = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    pos = jnp.arange(S)
+    valid = pos < cache_len
+    if window > 0:
+        valid &= pos >= cache_len - window
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,3 @@
+from .ops import flash_attention, reference
+
+__all__ = ["flash_attention", "reference"]

@@ -1,0 +1,116 @@
+"""Flash attention as a Pallas TPU kernel.
+
+TPU adaptation of the flash algorithm (DESIGN.md §2): blocks are tiled for
+VMEM with MXU-aligned (multiples-of-128) matmul dims; the grid walks
+(batch*heads, q-blocks) and the kernel streams KV blocks HBM->VMEM,
+maintaining the online-softmax running (m, l, acc) entirely in VMEM scratch.
+Only q/k/v/o cross HBM — the [S, S] score matrix never exists, which is
+exactly the memory-roofline term the §Perf pass removes relative to the
+unfused XLA baseline.
+
+Validated in interpret mode against ref.attention_ref over shape/dtype
+sweeps (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
+            window: int, block_k: int, seq_kv: int):
+    # q_ref: [block_q, D]; k_ref/v_ref: [seq_kv, D]; o_ref: [block_q, D]
+    block_q, d = q_ref.shape
+    q_blk = pl.program_id(1)
+    q0 = q_blk * block_q
+    q = q_ref[...].astype(jnp.float32) * scale
+
+    n_kv = seq_kv // block_k
+
+    def body(i, carry):
+        m, l, acc = carry
+        k0 = i * block_k
+        k_blk = pl.load(k_ref, (pl.dslice(k0, block_k), slice(None))
+                        ).astype(jnp.float32)
+        v_blk = pl.load(v_ref, (pl.dslice(k0, block_k), slice(None))
+                        ).astype(jnp.float32)
+        s = jax.lax.dot_general(q, k_blk, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        q_pos = q0 + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k0 + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        ok = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            ok &= k_pos <= q_pos
+        if window > 0:
+            ok &= k_pos > q_pos - window
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc = acc * corr + jax.lax.dot(p, v_blk,
+                                       preferred_element_type=jnp.float32)
+        return m_new, l, acc
+
+    m0 = jnp.full((block_q, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q, 1), jnp.float32)
+    a0 = jnp.zeros((block_q, d), jnp.float32)
+    if causal or window > 0:
+        # skip blocks fully outside the (causal, windowed) band
+        hi = lax.div(q0 + block_q + block_k - 1, block_k)
+        hi = jnp.minimum(hi, n_kv)
+        lo = 0
+        if window > 0:
+            lo = jnp.maximum(lax.div(q0 - window + 1, block_k), 0)
+        m, l, acc = lax.fori_loop(lo, hi, body, (m0, l0, a0))
+    else:
+        m, l, acc = lax.fori_loop(0, n_kv, body, (m0, l0, a0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention_tpu(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        block_q: int = 128, block_k: int = 128,
+                        scale: Optional[float] = None,
+                        interpret: bool = True) -> jax.Array:
+    """q: [B, Sq, H, D]; k, v: [B, Skv, H, D] (GQA pre-expanded).
+
+    Grid: (B*H, Sq/block_q).  K/V enter VMEM per (batch, head) program via
+    BlockSpec; the kernel streams block_k-sized slices of them.
+    """
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0
+
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, Skv, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, Skv, D)
+
+    grid = (B * H, Sq // block_q)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          block_k=block_k, seq_kv=Skv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, Skv, D), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, Skv, D), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, D), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,29 @@
+"""Public op wrapper: GQA expansion + dispatch to the Pallas kernel (TPU)
+or the pure-jnp flash pattern (CPU / any backend)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_tpu
+from .ref import attention_ref
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    scale: Optional[float] = None,
+                    interpret: bool = True) -> jax.Array:
+    """q: [B, Sq, H, D]; k, v: [B, Skv, Hkv, D] with Hkv | H (GQA)."""
+    H, Hkv = q.shape[2], k.shape[2]
+    if Hkv != H:
+        k = jnp.repeat(k, H // Hkv, axis=2)
+        v = jnp.repeat(v, H // Hkv, axis=2)
+    return flash_attention_tpu(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k, scale=scale,
+                               interpret=interpret)
+
+
+reference = attention_ref

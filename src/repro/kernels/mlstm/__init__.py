@@ -1,0 +1,3 @@
+from .ops import mlstm_chunkwise, reference
+
+__all__ = ["mlstm_chunkwise", "reference"]

@@ -1,0 +1,111 @@
+"""Chunkwise mLSTM Pallas kernel (TFLA-style: quadratic within a chunk,
+O(1) matrix state across chunks).
+
+Grid: (B*H,) — each program owns one head and walks its chunks sequentially
+with the [D, D] matrix state, normalizer and stabilizer resident in VMEM.
+The intra-chunk part is two MXU matmuls over [chunk, D] tiles; the
+inter-chunk part is a rank-`chunk` state update — HBM sees q/k/v/gates once
+and h once, never a per-position matrix state (which would be S*D*D).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, li_ref, lf_ref, h_ref, *, chunk: int,
+            seq: int, scale: float):
+    d = q_ref.shape[-1]
+    n_chunks = seq // chunk
+
+    def body(ci, carry):
+        C, n, m = carry                         # [D,D], [D], scalar-ish [1]
+        s0 = ci * chunk
+        qc = pl.load(q_ref, (pl.dslice(s0, chunk), slice(None))
+                     ).astype(jnp.float32)
+        kc = pl.load(k_ref, (pl.dslice(s0, chunk), slice(None))
+                     ).astype(jnp.float32)
+        vc = pl.load(v_ref, (pl.dslice(s0, chunk), slice(None))
+                     ).astype(jnp.float32)
+        li = pl.load(li_ref, (pl.dslice(s0, chunk),)).astype(jnp.float32)
+        lf = pl.load(lf_ref, (pl.dslice(s0, chunk),)).astype(jnp.float32)
+        a = jnp.cumsum(lf)                       # [chunk] inclusive decay
+        # intra-chunk log weights L[i, j] = a_i - a_j + li_j (j <= i)
+        L = a[:, None] - a[None, :] + li[None, :]
+        ii = lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        jj = lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+        L = jnp.where(jj <= ii, L, NEG)
+        b = a + m[0]                             # inter-chunk log scale
+        m_new = jnp.maximum(jnp.max(L, axis=1), b)   # [chunk]
+        intra = jnp.exp(L - m_new[:, None])
+        scores = jax.lax.dot_general(qc, kc, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32) \
+            * scale * intra
+        y = jax.lax.dot(scores, vc, preferred_element_type=jnp.float32)
+        inter_sc = jnp.exp(b - m_new)
+        y += jax.lax.dot(qc, C, preferred_element_type=jnp.float32) \
+            * scale * inter_sc[:, None]
+        n_i = jax.lax.dot(intra, kc, preferred_element_type=jnp.float32) \
+            + n[None, :] * inter_sc[:, None]
+        den = jnp.maximum(jnp.abs(jnp.sum(qc * n_i, axis=1)) * scale,
+                          jnp.exp(-m_new))
+        pl.store(h_ref, (pl.dslice(s0, chunk), slice(None)),
+                 (y / den[:, None]).astype(h_ref.dtype))
+        # ---- carry ----
+        a_last = a[chunk - 1]
+        lo = a_last - a + li                     # [chunk]
+        m_out = jnp.maximum(jnp.max(lo), a_last + m[0])
+        w = jnp.exp(lo - m_out)
+        C = jnp.exp(a_last + m[0] - m_out) * C \
+            + jax.lax.dot_general(kc * w[:, None], vc,
+                                  (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        n = jnp.exp(a_last + m[0] - m_out) * n + jnp.sum(kc * w[:, None],
+                                                         axis=0)
+        return C, n, m.at[0].set(m_out) if hasattr(m, "at") else m
+
+    C0 = jnp.zeros((d, d), jnp.float32)
+    n0 = jnp.zeros((d,), jnp.float32)
+    m0 = jnp.zeros((1,), jnp.float32)
+    lax.fori_loop(0, n_chunks, body, (C0, n0, m0))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_tpu(q: jax.Array, k: jax.Array, v: jax.Array, i_raw: jax.Array,
+              f_raw: jax.Array, chunk: int = 64,
+              interpret: bool = True) -> jax.Array:
+    """q/k/v: [B, S, H, D]; i_raw/f_raw: [B, S, H] -> [B, S, H, D]."""
+    B, S, H, D = q.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    scale = 1.0 / math.sqrt(D)
+    lf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    lif = i_raw.astype(jnp.float32).transpose(0, 2, 1).reshape(B * H, S)
+    lff = lf.transpose(0, 2, 1).reshape(B * H, S)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, seq=S, scale=scale),
+        grid=(B * H,),
+        in_specs=[
+            pl.BlockSpec((None, S, D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, S, D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, S, D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, S), lambda b: (b, 0)),
+            pl.BlockSpec((None, S), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, S, D), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), jnp.float32),
+        interpret=interpret,
+    )(qf, kf, vf, lif, lff)
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,10 @@
+from .kernel import mlstm_tpu
+from .ref import mlstm_ref
+
+
+def mlstm_chunkwise(q, k, v, i_raw, f_raw, chunk: int = 64,
+                    interpret: bool = True):
+    return mlstm_tpu(q, k, v, i_raw, f_raw, chunk=chunk, interpret=interpret)
+
+
+reference = mlstm_ref

@@ -1,0 +1,48 @@
+"""Oracle for the chunkwise mLSTM kernel: exact stabilized step recurrence."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def mlstm_ref(q: jax.Array, k: jax.Array, v: jax.Array, i_raw: jax.Array,
+              f_raw: jax.Array) -> jax.Array:
+    """Sequential stabilized mLSTM.
+
+    q/k/v: [B, S, H, D]; i_raw/f_raw: [B, S, H] -> h [B, S, H, D].
+    """
+    B, S, H, D = q.shape
+    scale = 1.0 / math.sqrt(D)
+    lf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, li, lft = inp
+        m_new = jnp.maximum(lft + m, li)
+        f_sc = jnp.exp(lft + m - m_new)[..., None]
+        i_sc = jnp.exp(li - m_new)[..., None]
+        kf = kt.astype(jnp.float32)
+        vf = vt.astype(jnp.float32)
+        C = C * f_sc[..., None] + i_sc[..., None] * kf[..., :, None] \
+            * vf[..., None, :]
+        n = n * f_sc + i_sc * kf
+        qf = qt.astype(jnp.float32)
+        num = jnp.einsum("bhd,bhdv->bhv", qf, C) * scale
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)) * scale,
+                          jnp.exp(-m_new))
+        return (C, n, m_new), (num / den[..., None])
+
+    C0 = jnp.zeros((B, H, D, D), jnp.float32)
+    n0 = jnp.zeros((B, H, D), jnp.float32)
+    m0 = jnp.zeros((B, H), jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in
+               (q.swapaxes(1, 1), k, v, i_raw.astype(jnp.float32), lf))
+    (_, _, _), hs = lax.scan(step, (C0, n0, m0),
+                             (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0),
+                              jnp.moveaxis(v, 1, 0),
+                              jnp.moveaxis(i_raw.astype(jnp.float32), 1, 0),
+                              jnp.moveaxis(lf, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)                      # [B, S, H, D]

@@ -1,0 +1,3 @@
+from .ops import reference, rms_norm
+
+__all__ = ["rms_norm", "reference"]

@@ -1,0 +1,9 @@
+from .kernel import rms_norm_tpu
+from .ref import rms_norm_ref
+
+
+def rms_norm(x, w, eps: float = 1e-5, interpret: bool = True):
+    return rms_norm_tpu(x, w, eps=eps, interpret=interpret)
+
+
+reference = rms_norm_ref

@@ -1,0 +1,3 @@
+from .ops import reference, slstm_recurrence
+
+__all__ = ["slstm_recurrence", "reference"]

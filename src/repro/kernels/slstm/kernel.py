@@ -1,0 +1,74 @@
+"""sLSTM Pallas kernel: the sequential recurrence with the recurrent weights
+R and the (h, c, n, m) state RESIDENT IN VMEM across all timesteps.
+
+This is the §Perf fix for the xlstm-1.3b memory term: the XLA while-loop
+baseline streams R (4 x H x dh x dh, ~8 MiB bf16 at d=2048) plus the state
+from HBM on every one of S steps; the kernel loads R once per program, so
+HBM sees only x_proj once in and h once out — sequence-length-independent
+weight traffic.  sLSTM remains inherently sequential (hidden-to-hidden
+nonlinearity), so the win is bandwidth, not parallelism.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _kernel(xp_ref, r_ref, y_ref, *, seq: int, n_heads: int):
+    # xp_ref: [S, Bblk, 4D]; r_ref: [4, H, dh, dh]; y_ref: [S, Bblk, D]
+    _, bblk, d4 = xp_ref.shape
+    d = d4 // 4
+    dh = d // n_heads
+    r = r_ref[...].astype(jnp.float32)          # VMEM-resident all steps
+
+    def step(t, carry):
+        h, c, n, m = carry
+        xp = pl.load(xp_ref, (pl.dslice(t, 1), slice(None), slice(None))
+                     )[0].astype(jnp.float32)   # [Bblk, 4D]
+        hh = h.reshape(bblk, n_heads, dh)
+        rec = jnp.einsum("bhd,ghde->gbhe", hh, r).reshape(4, bblk, d)
+        pre = xp.reshape(bblk, 4, d).transpose(1, 0, 2) + rec
+        z = jnp.tanh(pre[0])
+        i_t, f_t, o_t = pre[1], pre[2], jax.nn.sigmoid(pre[3])
+        m_new = jnp.maximum(f_t + m, i_t)
+        i_sc = jnp.exp(i_t - m_new)
+        f_sc = jnp.exp(f_t + m - m_new)
+        c = f_sc * c + i_sc * z
+        n = f_sc * n + i_sc
+        h = o_t * (c / jnp.maximum(n, 1e-6))
+        pl.store(y_ref, (pl.dslice(t, 1), slice(None), slice(None)),
+                 h[None].astype(y_ref.dtype))
+        return h, c, n, m_new
+
+    zeros = jnp.zeros((bblk, d), jnp.float32)
+    lax.fori_loop(0, seq, step, (zeros, zeros, zeros, zeros))
+
+
+@functools.partial(jax.jit, static_argnames=("n_heads", "block_b",
+                                             "interpret"))
+def slstm_tpu(x_proj: jax.Array, r: jax.Array, n_heads: int,
+              block_b: int = 8, interpret: bool = True) -> jax.Array:
+    """x_proj: [B, S, 4D]; r: [4, H, dh, dh] -> h [B, S, D]."""
+    B, S, D4 = x_proj.shape
+    D = D4 // 4
+    block_b = min(block_b, B)
+    if B % block_b:
+        block_b = B
+    xp = jnp.moveaxis(x_proj, 1, 0)             # [S, B, 4D]
+    out = pl.pallas_call(
+        functools.partial(_kernel, seq=S, n_heads=n_heads),
+        grid=(B // block_b,),
+        in_specs=[
+            pl.BlockSpec((S, block_b, D4), lambda b: (0, b, 0)),
+            pl.BlockSpec((4, n_heads, D // n_heads, D // n_heads),
+                         lambda b: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((S, block_b, D), lambda b: (0, b, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, B, D), jnp.float32),
+        interpret=interpret,
+    )(xp, r)
+    return jnp.moveaxis(out, 0, 1)

@@ -1,0 +1,9 @@
+from .kernel import slstm_tpu
+from .ref import slstm_ref
+
+
+def slstm_recurrence(x_proj, r, n_heads: int, interpret: bool = True):
+    return slstm_tpu(x_proj, r, n_heads, interpret=interpret)
+
+
+reference = slstm_ref

@@ -1,0 +1,35 @@
+"""Oracle for the sLSTM kernel: exact stabilized sequential recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def slstm_ref(x_proj: jax.Array, r: jax.Array) -> jax.Array:
+    """x_proj: [B, S, 4D] (input projections, gate-major z|i|f|o);
+    r: [4, H, dh, dh] block-diagonal recurrent weights -> h [B, S, D]."""
+    B, S, D4 = x_proj.shape
+    D = D4 // 4
+    H = r.shape[1]
+    dh = D // H
+
+    def step(carry, xp):
+        h, c, n, m = carry
+        hh = h.reshape(B, H, dh)
+        rec = jnp.einsum("bhd,ghde->gbhe", hh, r).reshape(4, B, D)
+        pre = xp.reshape(B, 4, D).transpose(1, 0, 2) + rec
+        z = jnp.tanh(pre[0])
+        i_t, f_t, o_t = pre[1], pre[2], jax.nn.sigmoid(pre[3])
+        m_new = jnp.maximum(f_t + m, i_t)
+        i_sc = jnp.exp(i_t - m_new)
+        f_sc = jnp.exp(f_t + m - m_new)
+        c = f_sc * c + i_sc * z
+        n = f_sc * n + i_sc
+        h = o_t * (c / jnp.maximum(n, 1e-6))
+        return (h, c, n, m_new), h
+
+    zeros = jnp.zeros((B, D), jnp.float32)
+    _, hs = lax.scan(step, (zeros, zeros, zeros, zeros),
+                     jnp.moveaxis(x_proj.astype(jnp.float32), 1, 0))
+    return jnp.moveaxis(hs, 0, 1)

@@ -1,0 +1,3 @@
+from .ops import reference, ssm_scan
+
+__all__ = ["ssm_scan", "reference"]

@@ -1,0 +1,63 @@
+"""Selective-scan (Mamba) Pallas kernel.
+
+GPU Mamba fuses the recurrence into one kernel with warp-level scans; the
+TPU adaptation tiles the *channel* dim over the grid (the recurrence is
+elementwise across D, so channel blocks are independent programs) and walks
+the sequence inside the kernel with the O(1) state [block_d, N] resident in
+VMEM — HBM sees each input exactly once, no [B, S, D, N] intermediates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _kernel(decay_ref, drive_ref, c_ref, h0_ref, y_ref, *, seq: int):
+    # decay/drive: [S, block_d, N]; c: [S, N]; h0: [block_d, N]
+    block_d, n = h0_ref.shape
+    h0 = h0_ref[...].astype(jnp.float32)
+
+    def step(t, h):
+        a = pl.load(decay_ref, (pl.dslice(t, 1), slice(None), slice(None))
+                    )[0].astype(jnp.float32)
+        b = pl.load(drive_ref, (pl.dslice(t, 1), slice(None), slice(None))
+                    )[0].astype(jnp.float32)
+        ct = pl.load(c_ref, (pl.dslice(t, 1), slice(None))
+                     )[0].astype(jnp.float32)
+        h = a * h + b
+        y = jnp.sum(h * ct[None, :], axis=1)            # [block_d]
+        pl.store(y_ref, (pl.dslice(t, 1), slice(None)),
+                 y[None, :].astype(y_ref.dtype))
+        return h
+
+    lax.fori_loop(0, seq, step, h0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def ssm_scan_tpu(decay: jax.Array, drive: jax.Array, c: jax.Array,
+                 h0: jax.Array, block_d: int = 128,
+                 interpret: bool = True) -> jax.Array:
+    """decay/drive: [B, S, D, N]; c: [B, S, N]; h0: [B, D, N] -> [B, S, D]."""
+    B, S, D, N = decay.shape
+    block_d = min(block_d, D)
+    if D % block_d:
+        block_d = D
+    grid = (B, D // block_d)
+    out = pl.pallas_call(
+        functools.partial(_kernel, seq=S),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, S, block_d, N), lambda b, d: (b, 0, d, 0)),
+            pl.BlockSpec((None, S, block_d, N), lambda b, d: (b, 0, d, 0)),
+            pl.BlockSpec((None, S, N), lambda b, d: (b, 0, 0)),
+            pl.BlockSpec((None, block_d, N), lambda b, d: (b, d, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, S, block_d), lambda b, d: (b, 0, d)),
+        out_shape=jax.ShapeDtypeStruct((B, S, D), jnp.float32),
+        interpret=interpret,
+    )(decay, drive, c, h0)
+    return out

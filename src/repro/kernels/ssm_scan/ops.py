@@ -1,0 +1,9 @@
+from .kernel import ssm_scan_tpu
+from .ref import ssm_scan_ref
+
+
+def ssm_scan(decay, drive, c, h0, interpret: bool = True):
+    return ssm_scan_tpu(decay, drive, c, h0, interpret=interpret)
+
+
+reference = ssm_scan_ref

@@ -1,0 +1,23 @@
+"""Oracle for the selective-scan kernel: exact sequential recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssm_scan_ref(decay: jax.Array, drive: jax.Array, c: jax.Array,
+                 h0: jax.Array) -> jax.Array:
+    """h_t = decay_t * h_{t-1} + drive_t ;  y_t = <h_t, c_t>.
+
+    decay/drive: [B, S, D, N]; c: [B, S, N]; h0: [B, D, N] -> y [B, S, D].
+    """
+    def step(h, inp):
+        a, b, ct = inp
+        h = a * h + b
+        return h, jnp.einsum("bdn,bn->bd", h, ct)
+
+    xs = (jnp.moveaxis(decay, 1, 0), jnp.moveaxis(drive, 1, 0),
+          jnp.moveaxis(c, 1, 0))
+    _, ys = lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1)

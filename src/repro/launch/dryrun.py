@@ -1,0 +1,300 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first backend initialization).  Only the dry-run sees 512
+# placeholder devices; smoke tests and benches see the single real CPU.
+#
+# CPU-backend faithfulness fix: the CPU emitter converts bf16 dot operands to
+# f32, and XLA's expensive-invariant-code-motion then hoists those converts
+# out of the scan-over-layers loop — materializing a full f32 copy of e.g.
+# an 8 GiB KV-cache stack that would NEVER exist on TPU (the MXU consumes
+# bf16 natively).  Disabling the hoist keeps memory_analysis representative
+# of the TPU target; every other pass runs unmodified.
+os.environ["XLA_FLAGS"] += (
+    " --xla_disable_hlo_passes=while-loop-expensive-invariant-code-motion")
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell with ShapeDtypeStruct stand-ins (no allocation), print
+memory_analysis / cost_analysis, and extract the roofline terms.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # 40-cell sweep
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..collect.hlo_text import (collective_bytes, cpu_bf16_artifact_bytes,
+                                replica_group_sizes)
+from ..collect.hlo_trace import module_cost
+from ..configs import base as config_base
+from ..configs.base import SHAPES
+from ..core.infragraph import TPU_V5E
+from ..models import decode as decode_mod
+from ..models import model_zoo
+from ..parallel import sharding as shd
+from ..train.optimizer import AdamWConfig, opt_state_specs, zero1_shardings
+from ..train.train_step import make_train_step
+from .mesh import make_production_mesh
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+def batch_shardings(mesh, specs: Dict[str, Any], rules) -> Dict[str, Any]:
+    def f(sds):
+        logical = ("batch",) + (None,) * (len(sds.shape) - 1)
+        return shd.named_sharding(mesh, sds.shape, logical, rules)
+    return jax.tree.map(f, specs)
+
+
+def build_cell(arch: str, shape: str, mesh, *, n_micro: int = 1,
+               rules: Optional[Dict[str, Any]] = None,
+               cfg_overrides: Optional[Dict[str, Any]] = None):
+    """Returns (jitted_fn, example_args (SDS), donate) for one cell."""
+    import dataclasses as _dc
+    cfg = config_base.get(arch)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    sp = SHAPES[shape]
+    model_axis = int(mesh.shape["model"])
+    multi_pod = "pod" in mesh.shape
+    rules = rules or shd.default_rules(multi_pod)
+    model = model_zoo.build(cfg, model_axis=model_axis)
+    pspecs, plogical = model.param_specs()
+    psh = shd.tree_shardings(mesh, pspecs, plogical, rules)
+    in_specs = cfg.input_specs(shape)
+    in_specs.pop("cache_len", None)
+
+    if sp.kind == "train":
+        ospecs = opt_state_specs(pspecs)
+        osh = zero1_shardings(
+            mesh, psh, pspecs,
+            data_axes=("pod", "data") if multi_pod else ("data",))
+        state_specs = {"params": pspecs, "opt": ospecs}
+        state_sh = {"params": psh, "opt": osh}
+        bsh = batch_shardings(mesh, in_specs, rules)
+        step = make_train_step(model, AdamWConfig(),
+                               n_micro=max(n_micro, cfg.train_n_micro))
+
+        def fn(state, batch):
+            with shd.use_rules(rules, mesh):
+                return step(state, batch)
+
+        jitted = jax.jit(fn, in_shardings=(state_sh, bsh),
+                         out_shardings=(state_sh, None), donate_argnums=0)
+        return jitted, (state_specs, in_specs)
+
+    if sp.kind == "prefill":
+        bsh = batch_shardings(mesh, in_specs, rules)
+
+        def fn(params, batch):
+            with shd.use_rules(rules, mesh):
+                out = model.forward(params, batch, capture_cache=True)
+                x, caches = out[0], out[2]
+                # serving returns the last position's next-token distribution
+                logits = model_zoo._head_logits(params, model.cfg,
+                                                x[:, -1:])[:, 0]
+                return logits.astype(jnp.float32), caches
+
+        jitted = jax.jit(fn, in_shardings=(psh, bsh))
+        return jitted, (pspecs, in_specs)
+
+    # decode
+    sspecs, slogical = decode_mod.state_specs(cfg, shape)
+    ssh = shd.tree_shardings(mesh, sspecs, slogical, rules)
+    token_spec = {"token": in_specs["token"]}
+    tsh = batch_shardings(mesh, token_spec, rules)
+
+    def fn(params, state, token):
+        with shd.use_rules(rules, mesh):
+            return decode_mod.decode_step(model, params, state, token)
+
+    jitted = jax.jit(fn, in_shardings=(psh, ssh, tsh["token"]),
+                     out_shardings=(None, ssh), donate_argnums=1)
+    return jitted, (pspecs, sspecs, in_specs["token"])
+
+
+def model_flops(cfg, sp) -> float:
+    """MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (inference fwd)."""
+    n_active = cfg.param_count()["active"]
+    if sp.kind == "train":
+        return 6.0 * n_active * sp.tokens
+    if sp.kind == "prefill":
+        return 2.0 * n_active * sp.tokens
+    return 2.0 * n_active * sp.global_batch  # decode: one token per sequence
+
+
+def roofline_terms(flops: float, bytes_: float, coll_bytes: float,
+                   chips: int) -> Dict[str, float]:
+    compute_s = flops / TPU_V5E["peak_bf16_flops"]
+    memory_s = bytes_ / TPU_V5E["hbm_bw"]
+    collective_s = coll_bytes / TPU_V5E["ici_link_bw"]
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k] if k.endswith("_s")
+                              else -1.0)
+    terms["step_s"] = max(compute_s, memory_s, collective_s)
+    return terms
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             n_micro: int = 1, rules=None, save: bool = True,
+             tag: str = "baseline",
+             cfg_overrides: Optional[Dict[str, Any]] = None
+             ) -> Dict[str, Any]:
+    cfg = config_base.get(arch)
+    sp = SHAPES[shape]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if not cfg.runs_shape(shape):
+        rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+               "status": "skipped", "reason": cfg.skip_shapes[shape]}
+        if save:
+            _save(rec, tag)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.time()
+    try:
+        jitted, args = build_cell(arch, shape, mesh, n_micro=n_micro,
+                                  rules=rules, cfg_overrides=cfg_overrides)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    except Exception as e:  # a failure here is a bug in the system
+        rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+        if save:
+            _save(rec, tag)
+        return rec
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    rgs = replica_group_sizes(hlo)
+    cpu_artifact = cpu_bf16_artifact_bytes(hlo)
+    # trip-count-scaled cost (XLA's cost_analysis counts while bodies once —
+    # a 32-layer scan would be under-reported ~30x): collect.hlo_trace
+    scaled = module_cost(hlo)
+    coll = {k: int(v) for k, v in scaled["collective_bytes"].items()}
+
+    flops = float(scaled["flops"])
+    bytes_ = float(scaled["bytes_tpu"])
+    coll_tpu = float(scaled["collective_bytes_tpu"])
+    terms = roofline_terms(flops, bytes_, coll_tpu, chips)
+    mf = model_flops(cfg, sp)
+    hlo_total_flops = flops * chips
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape, "mesh": mesh_name, "status": "ok",
+        "chips": chips, "kind": sp.kind, "tag": tag,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "per_device": {
+            "hlo_flops": flops,
+            "hlo_bytes_raw": float(scaled["bytes"]),
+            "hlo_bytes": bytes_,
+            "collective_bytes": coll,
+            "collective_bytes_tpu": coll_tpu,
+            "xla_cost_analysis_flops_unscaled": float(ca.get("flops", 0.0)),
+            "by_category": {k: round(v, 1) for k, v in
+                            scaled["by_category"].items()},
+            "replica_group_sizes": {
+                k: sorted(set(v)) for k, v in rgs.items()},
+        },
+        "memory_analysis": _mem_dict(mem, cpu_artifact),
+        "roofline": terms,
+        "model_flops": mf,
+        "useful_flops_ratio": (mf / hlo_total_flops) if hlo_total_flops else 0,
+    }
+    if save:
+        _save(rec, tag)
+    return rec
+
+
+def _mem_dict(mem, cpu_artifact: int = 0) -> Dict[str, Any]:
+    if mem is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if "argument_size_in_bytes" in out and "temp_size_in_bytes" in out:
+        out["total_hbm_bytes"] = (out["argument_size_in_bytes"]
+                                  + out["output_size_in_bytes"]
+                                  + out["temp_size_in_bytes"]
+                                  - out.get("alias_size_in_bytes", 0))
+        # XLA-CPU float normalization makes one whole-buffer f32 copy of
+        # every bf16 input (bf16 dots are not native on CPU).  These copies
+        # cannot exist on the TPU target; report both numbers.
+        out["cpu_bf16_convert_artifact_bytes"] = int(cpu_artifact)
+        out["total_hbm_bytes_tpu_projected"] = (out["total_hbm_bytes"]
+                                                - int(cpu_artifact))
+    return out
+
+
+def _save(rec: Dict[str, Any], tag: str) -> None:
+    d = os.path.abspath(os.path.join(ARTIFACT_DIR, tag, rec["mesh"]))
+    os.makedirs(d, exist_ok=True)
+    path = os.path.join(d, f"{rec['arch']}__{rec['shape']}.json")
+    with open(path, "w") as fh:
+        json.dump(rec, fh, indent=1)
+
+
+def summarize(rec: Dict[str, Any]) -> str:
+    if rec["status"] == "skipped":
+        return (f"{rec['arch']:24s} {rec['shape']:12s} {rec['mesh']:8s} "
+                f"SKIP ({rec['reason'][:60]})")
+    if rec["status"] == "error":
+        return (f"{rec['arch']:24s} {rec['shape']:12s} {rec['mesh']:8s} "
+                f"ERROR {rec['error'][:90]}")
+    r = rec["roofline"]
+    ma = rec["memory_analysis"]
+    mem = ma.get("total_hbm_bytes_tpu_projected",
+                 ma.get("total_hbm_bytes", 0)) / (1 << 30)
+    return (f"{rec['arch']:24s} {rec['shape']:12s} {rec['mesh']:8s} "
+            f"comp={r['compute_s']:.4f}s mem={r['memory_s']:.4f}s "
+            f"coll={r['collective_s']:.4f}s dom={r['bottleneck'][:-2]} "
+            f"hbm={mem:.1f}GiB useful={rec['useful_flops_ratio']:.2f} "
+            f"compile={rec['compile_s']:.0f}s")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+
+    archs = config_base.names() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                rec = run_cell(a, s, multi_pod=mp, n_micro=args.n_micro,
+                               tag=args.tag)
+                print(summarize(rec), flush=True)
+                if rec["status"] == "error":
+                    failures += 1
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,35 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+initialization, and smoke tests/benches must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1, data: Optional[int] = None):
+    """Small mesh over whatever devices exist (tests / examples / replay)."""
+    n = jax.device_count()
+    if data is None:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh) -> Tuple[int, int]:
+    """(model_axis, data_like) sizes for a production-or-host mesh."""
+    model = int(mesh.shape.get("model", 1))
+    total = 1
+    for v in mesh.shape.values():
+        total *= int(v)
+    return model, total // model

@@ -1,0 +1,6 @@
+"""Model definitions: layers, MoE, SSM, xLSTM, assembly, decode."""
+from . import decode, layers, model_zoo, moe, ssm, transformer, xlstm
+from .model_zoo import Model, build, init_params, param_specs
+
+__all__ = ["Model", "build", "init_params", "param_specs", "decode",
+           "layers", "model_zoo", "moe", "ssm", "transformer", "xlstm"]

@@ -1,0 +1,232 @@
+"""Decode path: per-architecture decode state (KV caches / recurrent states)
+and the one-new-token ``decode_step``.
+
+KV caches are laid out [L, B, Smax, Hkv, hd] with the *sequence* dim sharded
+over the "model" axis — the split-KV flash-decode layout (DESIGN.md §2): each
+model rank holds Smax/|model| of every cache and the partial-softmax combine
+is two small all-reduces per layer.  Recurrent archs (xlstm, hymba's mamba
+branch) carry O(1) state instead — which is exactly why they run long_500k.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import SHAPES, ArchConfig
+from ..parallel.sharding import shard
+from . import ssm as ssm_mod
+from . import xlstm as xlstm_mod
+from .layers import rms_norm
+from .model_zoo import Model, _embed_tokens, _head_logits
+from .transformer import (attn_sublayer_decode, cross_attn_decode,
+                          expert_split, mlp_sublayer, moe_sublayer)
+
+Params = Dict[str, Any]
+CACHE_DTYPE = jnp.bfloat16
+
+_KV_LOGICAL = ("batch", "kv_seq", None, None)
+
+
+def _kv_spec(cfg: ArchConfig, batch: int, s_max: int, *lead: int):
+    shape = (*lead, batch, s_max, cfg.n_kv_heads, cfg.head_dim_)
+    logical = ((None,) * len(lead)) + _KV_LOGICAL
+    return (jax.ShapeDtypeStruct(shape, CACHE_DTYPE), logical)
+
+
+def _prepend(specs: Dict[str, Any], *lead: int) -> Dict[str, Any]:
+    def f(leaf):
+        sds, logical = leaf
+        return (jax.ShapeDtypeStruct((*lead, *sds.shape), sds.dtype),
+                ((None,) * len(lead)) + tuple(logical))
+    return jax.tree.map(f, specs, is_leaf=lambda x: isinstance(x, tuple)
+                        and len(x) == 2
+                        and isinstance(x[0], jax.ShapeDtypeStruct))
+
+
+def state_specs(cfg: ArchConfig, shape_name: str
+                ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """(ShapeDtypeStruct tree, logical tree) for the decode state of one cell."""
+    sp = SHAPES[shape_name]
+    B, S = sp.global_batch, sp.seq_len
+    out: Dict[str, Any] = {"cache_len": (jax.ShapeDtypeStruct((), jnp.int32),
+                                         ())}
+    pat = cfg.block_pattern
+    if pat in ("attn", "moe"):
+        out["k"] = _kv_spec(cfg, B, S, cfg.n_layers)
+        out["v"] = _kv_spec(cfg, B, S, cfg.n_layers)
+    elif pat == "encdec":
+        out["k"] = _kv_spec(cfg, B, S, cfg.n_layers)
+        out["v"] = _kv_spec(cfg, B, S, cfg.n_layers)
+        t_f = cfg.frontend_tokens or 1024
+        out["ck"] = _kv_spec(cfg, B, t_f, cfg.n_layers)
+        out["cv"] = _kv_spec(cfg, B, t_f, cfg.n_layers)
+    elif pat == "hymba":
+        every = cfg.global_attn_every or cfg.n_layers + 1
+        n_g = max(cfg.n_layers // every, 1)
+        swa = every - 1
+        mamba = ssm_mod.mamba_state_specs(B, cfg.d_model, cfg.ssm_state,
+                                          dtype=CACHE_DTYPE)
+        out["global"] = {"k": _kv_spec(cfg, B, S, n_g),
+                         "v": _kv_spec(cfg, B, S, n_g),
+                         "mamba": _prepend(mamba, n_g)}
+        out["swa"] = {"k": _kv_spec(cfg, B, S, n_g, swa),
+                      "v": _kv_spec(cfg, B, S, n_g, swa),
+                      "mamba": _prepend(mamba, n_g, swa)}
+    elif pat == "xlstm":
+        every = cfg.slstm_every or cfg.n_layers + 1
+        n_g = max(cfg.n_layers // every, 1)
+        m_per = every - 1
+        out["mlstm"] = _prepend(
+            xlstm_mod.mlstm_state_specs(B, cfg.d_model, cfg.n_heads,
+                                        cfg.proj_factor), n_g, m_per)
+        out["slstm"] = _prepend(xlstm_mod.slstm_state_specs(B, cfg.d_model),
+                                n_g)
+    else:
+        raise ValueError(pat)
+    specs = jax.tree.map(lambda leaf: leaf[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+    logical = jax.tree.map(lambda leaf: leaf[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+    return specs, logical
+
+
+def init_state(cfg: ArchConfig, shape_name: str) -> Dict[str, Any]:
+    specs, _ = state_specs(cfg, shape_name)
+    return jax.tree.map(lambda sds: jnp.zeros(sds.shape, sds.dtype), specs)
+
+
+# ================================================================ decode step
+def decode_step(model: Model, params: Params, state: Dict[str, Any],
+                token: jax.Array) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One new token against the decode state.  token: [B, 1] int32.
+
+    Returns (logits [B, vocab], updated state).
+    """
+    cfg = model.cfg
+    split = expert_split(cfg, model.model_axis)
+    cache_len = state["cache_len"]
+    x = _embed_tokens(params, cfg, token)            # [B, 1, D]
+    new_state: Dict[str, Any] = {"cache_len": cache_len + 1}
+    pat = cfg.block_pattern
+
+    def insert(cache: jax.Array, new_kv: jax.Array) -> jax.Array:
+        """One vectorized K/V insert across all (grouped) layers.
+
+        cache: [..., B, Smax, Hkv, hd]; new_kv: [..., B, 1, Hkv, hd]."""
+        lead = cache.ndim - 4
+        idx = (0,) * lead + (0, cache_len, 0, 0)
+        return lax.dynamic_update_slice(cache, new_kv, idx)
+
+    if pat in ("attn", "moe"):
+        def body(carry, inp):
+            x, aux = carry
+            blk, kc, vc = inp
+            y, (kn, vn) = attn_sublayer_decode(x, blk["attn"], cfg,
+                                               {"k": kc, "v": vc}, cache_len,
+                                               window=cfg.attn_window)
+            x = x + y
+            if pat == "moe":
+                m, a = moe_sublayer(x, blk["moe"], cfg, split)
+                x, aux = x + m, aux + a
+            else:
+                x = x + mlp_sublayer(x, blk["mlp"], cfg)
+            return (x, aux), (kn, vn)
+
+        (x, _), (ks, vs) = lax.scan(body, (x, jnp.float32(0.0)),
+                                    (params["blocks"], state["k"], state["v"]))
+        new_state["k"] = insert(state["k"], ks)
+        new_state["v"] = insert(state["v"], vs)
+
+    elif pat == "encdec":
+        def body(carry, inp):
+            x = carry
+            blk, kc, vc, ck, cv = inp
+            y, (kn, vn) = attn_sublayer_decode(x, blk["self"], cfg,
+                                               {"k": kc, "v": vc}, cache_len)
+            x = x + y
+            x = x + cross_attn_decode(x, blk["cross"], cfg,
+                                      {"k": ck, "v": cv})
+            x = x + mlp_sublayer(x, blk["mlp"], cfg)
+            return x, (kn, vn)
+
+        x, (ks, vs) = lax.scan(body, x, (params["blocks"], state["k"],
+                                         state["v"], state["ck"], state["cv"]))
+        new_state.update(k=insert(state["k"], ks), v=insert(state["v"], vs),
+                         ck=state["ck"], cv=state["cv"])
+
+    elif pat == "hymba":
+        def one(x, blk, kc, vc, mamba, window):
+            y, kv_new = attn_sublayer_decode(x, blk["attn"], cfg,
+                                             {"k": kc, "v": vc}, cache_len,
+                                             window=window)
+            h = rms_norm(x, blk["attn"]["ln"], cfg.norm_eps)
+            m_out, m_state = ssm_mod.mamba_step(h[:, 0], mamba, blk["mamba"])
+            fused = 0.5 * (rms_norm(y, blk["attn_out_norm"], cfg.norm_eps)
+                           + rms_norm(m_out[:, None], blk["mamba_out_norm"],
+                                      cfg.norm_eps))
+            x = x + fused
+            x = x + mlp_sublayer(x, blk["mlp"], cfg)
+            return x, kv_new, m_state
+
+        def group(x, inp):
+            gp, gs = inp
+            x, (gkn, gvn), m_state = one(x, gp["global"], gs["global"]["k"],
+                                         gs["global"]["v"],
+                                         gs["global"]["mamba"], 0)
+
+            def inner(xx, sinp):
+                sp_, kc, vc, ms = sinp
+                xx, kv_new, m_state = one(xx, sp_, kc, vc, ms,
+                                          cfg.attn_window)
+                return xx, (*kv_new, m_state)
+
+            x, (sk, sv, sms) = lax.scan(
+                inner, x, (gp["swa"], gs["swa"]["k"], gs["swa"]["v"],
+                           gs["swa"]["mamba"]))
+            return x, {"global": {"k": gkn, "v": gvn, "mamba": m_state},
+                       "swa": {"k": sk, "v": sv, "mamba": sms}}
+
+        x, gs_new = lax.scan(group, x,
+                             (params["groups"],
+                              {"global": state["global"], "swa": state["swa"]}))
+        new_state["global"] = {
+            "k": insert(state["global"]["k"], gs_new["global"]["k"]),
+            "v": insert(state["global"]["v"], gs_new["global"]["v"]),
+            "mamba": gs_new["global"]["mamba"]}
+        new_state["swa"] = {
+            "k": insert(state["swa"]["k"], gs_new["swa"]["k"]),
+            "v": insert(state["swa"]["v"], gs_new["swa"]["v"]),
+            "mamba": gs_new["swa"]["mamba"]}
+
+    elif pat == "xlstm":
+        def group(x, inp):
+            gp, gs = inp
+
+            def inner(xx, sinp):
+                p, st = sinp
+                h = rms_norm(xx, p["ln"], cfg.norm_eps)
+                y, st2 = xlstm_mod.mlstm_step(h[:, 0], st, p["cell"],
+                                              cfg.n_heads)
+                return xx + y[:, None], st2
+
+            x, m_new = lax.scan(inner, x, (gp["mlstm"], gs["mlstm"]))
+            h = rms_norm(x, gp["slstm"]["ln"], cfg.norm_eps)
+            y, s_new = xlstm_mod.slstm_step(h[:, 0], gs["slstm"],
+                                            gp["slstm"]["cell"], cfg.n_heads)
+            x = x + y[:, None]
+            return x, {"mlstm": m_new, "slstm": s_new}
+
+        x, g_new = lax.scan(group, x, (params["groups"],
+                                       {"mlstm": state["mlstm"],
+                                        "slstm": state["slstm"]}))
+        new_state["mlstm"] = g_new["mlstm"]
+        new_state["slstm"] = g_new["slstm"]
+    else:
+        raise ValueError(pat)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _head_logits(params, cfg, x)[:, 0, :cfg.vocab]
+    return logits.astype(jnp.float32), new_state

@@ -1,0 +1,311 @@
+"""Core model layers: RMSNorm, RoPE, GLU MLPs, memory-efficient attention.
+
+Attention is implemented as a pure-JAX flash pattern (q-block scan with
+online softmax over KV blocks) so full-size dry-run cells fit HBM without a
+materialized [S, S] score matrix.  Sliding-window (SWA) attention uses a
+*banded* path — a fixed-width KV slice per q block — making SWA prefill
+O(S*W) instead of O(S^2) in both FLOPs and memory.
+
+Sharding inside attention: (batch -> data, heads -> model when divisible);
+the sequence dim stays unsharded *inside* the layer (Megatron-SP style: the
+residual stream between layers is sequence-sharded, XLA inserts the
+all-gather at layer entry).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..parallel.sharding import shard
+
+_NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: [..., S] (broadcastable)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # [...,S,1,D/2]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- MLP
+def glu_mlp(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+            w_down: jax.Array, act: str = "silu") -> jax.Array:
+    """Gated-linear-unit MLP (SwiGLU / GeGLU).  w_*: [D, F] / [F, D]."""
+    g = jnp.einsum("bsd,df->bsf", x, w_gate)
+    u = jnp.einsum("bsd,df->bsf", x, w_up)
+    g = shard(g, "batch", None, "ff")
+    u = shard(u, "batch", None, "ff")
+    h = (jax.nn.gelu(g) if act == "geglu" else jax.nn.silu(g)) * u
+    out = jnp.einsum("bsf,fd->bsd", h, w_down)
+    # sequence-sharded output: the TP partial-sum lowers to reduce-scatter
+    # (half the wire bytes of the all-reduce a seq-replicated constraint
+    # would force), matching the sequence-sharded residual stream
+    return shard(out, "batch", "seq", "embed")
+
+
+# --------------------------------------------------------------- attention
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """GQA: [B, S, Hkv, D] -> [B, S, H, D] by head-repeat (no-op when MHA)."""
+    hkv = k.shape[2]
+    if hkv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // hkv, axis=2)
+
+
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, *, causal: bool,
+               window: int, prefix_len: int) -> jax.Array:
+    """[bq, bk] additive bias: 0 where visible, -inf where masked."""
+    q = q_pos[:, None]
+    k = k_pos[None, :]
+    ok = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), dtype=bool)
+    if causal:
+        vis = k <= q
+        if prefix_len:
+            vis = vis | (k < prefix_len)
+        ok &= vis
+    if window > 0:
+        w_ok = k > q - window
+        if prefix_len:
+            w_ok = w_ok | (k < prefix_len)
+        ok &= w_ok
+    return jnp.where(ok, 0.0, _NEG_INF).astype(jnp.float32)
+
+
+def _softcap(s: jax.Array, cap: float) -> jax.Array:
+    return cap * jnp.tanh(s / cap) if cap else s
+
+
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: int = 0, prefix_len: int = 0,
+    block_q: int = 512, block_k: int = 1024, softcap: float = 0.0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Memory-efficient attention.
+
+    q: [B, Sq, H, Dh]; k, v: [B, Skv, Hkv, Dh].  Returns [B, Sq, H, Dh].
+    window > 0 selects the banded SWA path (O(S*W) FLOPs); otherwise an
+    online-softmax scan over KV blocks (O(S^2) FLOPs, O(block) memory).
+    """
+    B, Sq, H, Dh = q.shape
+    Skv = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "heads", None)
+    v = shard(v, "batch", None, "heads", None)
+
+    bq = min(block_q, Sq)
+    if Sq % bq:
+        bq = Sq  # tiny/smoke shapes: single block
+    nq = Sq // bq
+    band = 0
+    if window > 0:
+        band = window + bq
+        bkk = min(block_k, Skv)
+        band = ((band + bkk - 1) // bkk) * bkk
+        if band >= Skv:
+            band = 0  # window covers everything: use the full path
+
+    qb = jnp.moveaxis(q.reshape(B, nq, bq, H, Dh), 1, 0)      # [nq,B,bq,H,D]
+    q_starts = jnp.arange(nq, dtype=jnp.int32) * bq
+
+    # flash-attention memory contract: scores never survive a block step.
+    # Without the inner remat, scan-AD stacks per-block f32 scores across
+    # the whole sequence for backward (measured: 25 GiB/layer on hymba) —
+    # the checkpoint makes backward recompute them blockwise, which IS the
+    # flash-attention backward.
+    if band:
+        @jax.checkpoint
+        def q_step(_, inp):
+            qi, q_start = inp
+            start = jnp.clip(q_start + bq - band, 0, Skv - band)
+            kb = lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            vb = lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qi, kb,
+                           preferred_element_type=jnp.float32) * scale
+            s = _softcap(s, softcap)
+            q_pos = q_start + jnp.arange(bq)
+            k_pos = start + jnp.arange(band)
+            s = s + _mask_bias(q_pos, k_pos, causal=causal, window=window,
+                               prefix_len=0)
+            m = jnp.max(s, axis=-1, keepdims=True)
+            p = jnp.exp(s - m)
+            l = jnp.sum(p, axis=-1, keepdims=True)
+            o = jnp.einsum("bhqk,bkhd->bqhd", (p / l).astype(v.dtype), vb)
+            return None, o
+
+        _, ob = lax.scan(q_step, None, (qb, q_starts))
+    else:
+        bk = min(block_k, Skv)
+        if Skv % bk:
+            bk = Skv
+        nk = Skv // bk
+        kb_all = jnp.moveaxis(k.reshape(B, nk, bk, H, Dh), 1, 0)
+        vb_all = jnp.moveaxis(v.reshape(B, nk, bk, H, Dh), 1, 0)
+        k_starts = jnp.arange(nk, dtype=jnp.int32) * bk
+
+        @jax.checkpoint
+        def q_step(_, inp):
+            qi, q_start = inp
+            q_pos = q_start + jnp.arange(bq)
+
+            @jax.checkpoint
+            def kv_step(carry, kv):
+                m, l, acc = carry
+                kj, vj, k_start = kv
+                s = jnp.einsum("bqhd,bkhd->bhqk", qi, kj,
+                               preferred_element_type=jnp.float32) * scale
+                s = _softcap(s, softcap)
+                k_pos = k_start + jnp.arange(bk)
+                s = s + _mask_bias(q_pos, k_pos, causal=causal, window=0,
+                                   prefix_len=prefix_len)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+                p = jnp.exp(s - m_new)
+                corr = jnp.exp(m - m_new)
+                l = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+                acc = acc * corr[..., 0][..., None] + jnp.einsum(
+                    "bhqk,bkhd->bhqd", p, vj.astype(jnp.float32))
+                return (m_new, l, acc), None
+
+            m0 = jnp.full((B, H, bq, 1), _NEG_INF, jnp.float32)
+            l0 = jnp.zeros((B, H, bq, 1), jnp.float32)
+            a0 = jnp.zeros((B, H, bq, Dh), jnp.float32)
+            (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0),
+                                      (kb_all, vb_all, k_starts))
+            o = acc / jnp.maximum(l, 1e-30)
+            return None, jnp.moveaxis(o, 1, 2).astype(q.dtype)  # [B,bq,H,D]
+
+        _, ob = lax.scan(q_step, None, (qb, q_starts))
+
+    out = jnp.moveaxis(ob, 0, 1).reshape(B, Sq, H, Dh)
+    return shard(out, "batch", None, "heads", None)
+
+
+def decode_attention(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+    cache_len: jax.Array, *, window: int = 0, softcap: float = 0.0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """One-token attention against a KV cache.
+
+    q: [B, 1, H, Dh]; caches: [B, S, Hkv, Dh] (sequence dim sharded over the
+    "model" axis — the split-KV / flash-decode layout; XLA resolves the
+    softmax max/sum and the PV contraction over the sharded dim with small
+    all-reduces).  ``cache_len`` is the number of valid cache positions
+    (the new token's position is cache_len - 1 after insertion).
+    """
+    B, _, H, Dh = q.shape
+    S = k_cache.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
+    k = _expand_kv(k_cache, H)
+    v = _expand_kv(v_cache, H)
+    k = shard(k, "batch", "kv_seq", "heads", None)
+    v = shard(v, "batch", "kv_seq", "heads", None)
+    s = jnp.einsum("bohd,bkhd->bhok", q, k,
+                   preferred_element_type=jnp.float32) * scale  # [B,H,1,S]
+    s = _softcap(s, softcap)
+    pos = jnp.arange(S)
+    valid = pos < cache_len
+    if window > 0:
+        valid &= pos >= cache_len - window
+    s = jnp.where(valid[None, None, None, :], s, _NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhok,bkhd->bohd", p.astype(v.dtype), v)
+    return out  # [B, 1, H, Dh]
+
+
+def decode_attention_append(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+    k_new: jax.Array, v_new: jax.Array, cache_len: jax.Array, *,
+    window: int = 0, softcap: float = 0.0, scale: Optional[float] = None,
+) -> jax.Array:
+    """Decode attention over cache + the not-yet-inserted new token.
+
+    Avoids any cache write inside the layer: the fresh token's (k, v) join
+    the softmax through a two-part online combine, and the caller inserts
+    all layers' K/V with ONE vectorized dynamic-update-slice after the layer
+    scan (in-place on the donated cache stack — no per-layer double buffer).
+
+    q, k_new, v_new: [B, 1, H(kv), Dh]; caches: [B, S, Hkv, Dh].
+    """
+    B, _, H, Dh = q.shape
+    S = k_cache.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
+    k = _expand_kv(k_cache, H)
+    v = _expand_kv(v_cache, H)
+    kn = _expand_kv(k_new, H)
+    vn = _expand_kv(v_new, H)
+    k = shard(k, "batch", "kv_seq", "heads", None)
+    v = shard(v, "batch", "kv_seq", "heads", None)
+    s_c = jnp.einsum("bohd,bkhd->bhok", q, k,
+                     preferred_element_type=jnp.float32) * scale
+    s_n = jnp.einsum("bohd,bohd->bho", q, kn,
+                     preferred_element_type=jnp.float32)[..., None] * scale
+    s_c = _softcap(s_c, softcap)
+    s_n = _softcap(s_n, softcap)
+    pos = jnp.arange(S)
+    valid = pos < cache_len
+    if window > 0:
+        valid &= pos > cache_len - window
+    s_c = jnp.where(valid[None, None, None, :], s_c, _NEG_INF)
+    m = jnp.maximum(jnp.max(s_c, axis=-1, keepdims=True), s_n)
+    p_c = jnp.exp(s_c - m)
+    p_n = jnp.exp(s_n - m)
+    denom = jnp.sum(p_c, axis=-1, keepdims=True) + p_n      # [B,H,1,1]
+    p_n_bohd = jnp.moveaxis(p_n, 1, 2)                       # [B,1,H,1]
+    denom_bohd = jnp.moveaxis(denom, 1, 2)
+    out = (jnp.einsum("bhok,bkhd->bohd", p_c.astype(v.dtype), v)
+           + p_n_bohd.astype(v.dtype) * vn)
+    return out / denom_bohd.astype(out.dtype)
+
+
+# ---------------------------------------------------------- causal conv1d
+def causal_conv1d(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None
+                  ) -> jax.Array:
+    """Depthwise causal conv over sequence.  x: [B, S, C]; w: [K, C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    if b is not None:
+        out = out + b
+    return out
+
+
+def conv1d_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array,
+                b: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step of causal_conv1d.  x_t: [B, C]; conv_state: [B, K-1, C]."""
+    K = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # [B,K,C]
+    out = jnp.einsum("bkc,kc->bc", window, w)
+    if b is not None:
+        out = out + b
+    return out, window[:, 1:, :]

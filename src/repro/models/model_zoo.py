@@ -1,0 +1,433 @@
+"""Model zoo: build param specs / init / forward / prefill / decode for every
+assigned architecture from its ArchConfig.
+
+All APIs are pure functions over pytrees:
+  * ``param_specs(cfg)``  -> (ShapeDtypeStruct tree, logical-axes tree)
+  * ``init_params(cfg, key)`` -> concrete params matching the specs
+  * ``build(cfg)``       -> Model with loss_fn / forward / prefill / decode
+  * ``state_specs(cfg, shape)`` -> decode-state stand-ins for dry-runs
+
+Scan-over-layers parameters are stacked on a leading L dim; heterogeneous
+stacks (hymba global-attention positions, xlstm sLSTM positions) use
+super-block grouping (see transformer.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import SHAPES, ArchConfig
+from ..parallel.sharding import shard
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from . import xlstm as xlstm_mod
+from .layers import rms_norm
+from .transformer import (attn_sublayer, attn_sublayer_decode,
+                          cross_attn_decode, dense_block, expert_split,
+                          hymba_block, mlp_sublayer, mlstm_block, moe_block,
+                          moe_sublayer, slstm_block, vocab_padded)
+
+Params = Dict[str, Any]
+SpecLeaf = Tuple[Tuple[int, ...], Tuple]   # (shape, logical_axes)
+
+AUX_LOSS_WEIGHT = 0.01
+CE_CHUNK = 512
+
+
+# ============================================================== spec builders
+def _attn_specs(cfg: ArchConfig) -> Dict[str, SpecLeaf]:
+    d, hd = cfg.d_model, cfg.head_dim_
+    return {
+        "ln": ((d,), (None,)),
+        "wq": ((d, cfg.n_heads * hd), ("embed", "qkv")),
+        "wk": ((d, cfg.n_kv_heads * hd), ("embed", "qkv")),
+        "wv": ((d, cfg.n_kv_heads * hd), ("embed", "qkv")),
+        "wo": ((cfg.n_heads * hd, d), ("qkv", "embed")),
+    }
+
+
+def _mlp_specs(cfg: ArchConfig) -> Dict[str, SpecLeaf]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "ln": ((d,), (None,)),
+        "w_gate": ((d, f), ("embed", "ff")),
+        "w_up": ((d, f), ("embed", "ff")),
+        "w_down": ((f, d), ("ff", "embed")),
+    }
+
+
+def _block_specs(cfg: ArchConfig, split: int) -> Dict[str, Any]:
+    if cfg.block_pattern == "moe":
+        return {"attn": _attn_specs(cfg),
+                "moe": {"ln": ((cfg.d_model,), (None,)),
+                        **moe_mod.moe_param_specs(cfg.d_model, cfg.d_ff,
+                                                  cfg.n_experts, split)}}
+    if cfg.block_pattern == "hymba":
+        return {"attn": _attn_specs(cfg),
+                "mamba": ssm_mod.mamba_param_specs(cfg.d_model, cfg.ssm_state),
+                "attn_out_norm": ((cfg.d_model,), (None,)),
+                "mamba_out_norm": ((cfg.d_model,), (None,)),
+                "mlp": _mlp_specs(cfg)}
+    if cfg.block_pattern == "encdec":
+        return {"self": _attn_specs(cfg), "cross": _attn_specs(cfg),
+                "mlp": _mlp_specs(cfg)}
+    return {"attn": _attn_specs(cfg), "mlp": _mlp_specs(cfg)}
+
+
+def _stack(tree: Dict[str, Any], n: int) -> Dict[str, Any]:
+    def f(leaf: SpecLeaf) -> SpecLeaf:
+        shape, logical = leaf
+        return ((n, *shape), (None, *logical))
+    return jax.tree.map(f, tree, is_leaf=lambda x: isinstance(x, tuple)
+                        and len(x) == 2 and isinstance(x[0], tuple))
+
+
+def _is_spec_leaf(x: Any) -> bool:
+    return (isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple)
+            and isinstance(x[1], tuple))
+
+
+def raw_param_specs(cfg: ArchConfig, model_axis: int = 16) -> Dict[str, Any]:
+    """{name: (shape, logical)} nested tree."""
+    split = expert_split(cfg, model_axis)
+    vp = vocab_padded(cfg)
+    d = cfg.d_model
+    specs: Dict[str, Any] = {
+        "embed": ((vp, d), ("vocab", "embed")),
+        "final_norm": ((d,), (None,)),
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = ((d, vp), ("embed", "vocab"))
+
+    if cfg.block_pattern == "xlstm":
+        every = cfg.slstm_every or cfg.n_layers + 1
+        n_groups = max(cfg.n_layers // every, 1)
+        m_per = every - 1
+        mlstm = {"ln": ((d,), (None,)),
+                 "cell": xlstm_mod.mlstm_param_specs(d, cfg.n_heads,
+                                                     cfg.proj_factor)}
+        slstm = {"ln": ((d,), (None,)),
+                 "cell": xlstm_mod.slstm_param_specs(d, cfg.n_heads)}
+        specs["groups"] = {"mlstm": _stack(_stack(mlstm, m_per), n_groups),
+                           "slstm": _stack(slstm, n_groups)}
+    elif cfg.block_pattern == "hymba":
+        every = cfg.global_attn_every or cfg.n_layers + 1
+        n_groups = max(cfg.n_layers // every, 1)
+        swa_per = every - 1
+        blk = _block_specs(cfg, split)
+        specs["groups"] = {"global": _stack(blk, n_groups),
+                           "swa": _stack(_stack(blk, swa_per), n_groups)}
+    elif cfg.block_pattern == "encdec":
+        enc_blk = {"attn": _attn_specs(cfg), "mlp": _mlp_specs(cfg)}
+        specs["enc_blocks"] = _stack(enc_blk, cfg.enc_layers)
+        specs["enc_norm"] = ((d,), (None,))
+        specs["blocks"] = _stack(_block_specs(cfg, split), cfg.n_layers)
+    else:
+        specs["blocks"] = _stack(_block_specs(cfg, split), cfg.n_layers)
+
+    if cfg.frontend == "vision_patches":
+        specs["vis_proj"] = ((d, d), ("embed", "embed2"))
+    return specs
+
+
+_F32_NAMES = ("router", "a_log", "dt_bias", "d_skip", "b_i", "b_f", "ln",
+              "norm", "conv_b", "b")
+
+
+def _leaf_dtype(path: Tuple[str, ...], shape: Tuple[int, ...]) -> Any:
+    name = path[-1]
+    if name in _F32_NAMES or len(shape) == 1:
+        return jnp.float32
+    return jnp.bfloat16
+
+
+def param_specs(cfg: ArchConfig, model_axis: int = 16
+                ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """(ShapeDtypeStruct tree, logical-axes tree)."""
+    raw = raw_param_specs(cfg, model_axis)
+    specs: Dict[str, Any] = {}
+    logical: Dict[str, Any] = {}
+
+    def walk(src, dst_s, dst_l, path):
+        for k, v in src.items():
+            if _is_spec_leaf(v):
+                shape, log = v
+                dst_s[k] = jax.ShapeDtypeStruct(shape,
+                                                _leaf_dtype((*path, k), shape))
+                dst_l[k] = log
+            else:
+                dst_s[k], dst_l[k] = {}, {}
+                walk(v, dst_s[k], dst_l[k], (*path, k))
+
+    walk(raw, specs, logical, ())
+    return specs, logical
+
+
+def init_params(cfg: ArchConfig, key: jax.Array, model_axis: int = 16
+                ) -> Params:
+    """Concrete initialization matching ``param_specs`` (smoke/examples)."""
+    specs, _ = param_specs(cfg, model_axis)
+    leaves, treedef = jax.tree.flatten_with_path(specs)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for (path, sds), k in zip(leaves, keys):
+        name = path[-1].key
+        shape, dtype = sds.shape, sds.dtype
+        if name == "a_log":
+            n = shape[-1]
+            v = jnp.broadcast_to(jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)),
+                                 shape)
+        elif name == "dt_bias":
+            v = jnp.full(shape, -4.6, dtype)        # softplus^-1(0.01)
+        elif name == "d_skip":
+            v = jnp.ones(shape, dtype)
+        elif name == "b_f":
+            v = jnp.full(shape, 3.0, dtype)         # open forget gates
+        elif len(shape) == 1 or name in ("ln", "norm"):
+            v = jnp.zeros(shape, dtype)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            v = (jax.random.normal(k, shape, jnp.float32)
+                 / math.sqrt(fan_in)).astype(dtype)
+        out.append(v)
+    return jax.tree.unflatten(treedef, out)
+
+
+# =================================================================== forward
+def _embed_tokens(params: Params, cfg: ArchConfig, tokens: jax.Array
+                  ) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return shard(x, "batch", "seq", "embed")
+
+
+def _head_logits(params: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    return logits
+
+
+def _remat(cfg: ArchConfig, fn):
+    """Per-layer activation checkpointing with the configured policy.
+
+    "full": recompute everything in backward (lowest memory).
+    "save_dots": keep matmul outputs — removes the remat forward re-run
+    (useful-flops ratio -> ~1.0) at higher activation memory (§Perf lever).
+    """
+    if cfg.remat_policy == "save_dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _run_stack(params: Params, cfg: ArchConfig, x: jax.Array, *,
+               split: int, prefix_len: int = 0,
+               capture_cache: bool = False, enc_out: Optional[jax.Array] = None):
+    """Run the layer stack; returns (x, aux[, caches])."""
+    pat = cfg.block_pattern
+
+    if pat in ("attn", "moe"):
+        if pat == "moe":
+            blk_fn = lambda x, p: moe_block(x, p, cfg, split,
+                                            window=cfg.attn_window)
+        else:
+            blk_fn = lambda x, p: dense_block(x, p, cfg,
+                                              window=cfg.attn_window,
+                                              prefix_len=prefix_len)
+        blk_fn = _remat(cfg, blk_fn)
+
+        def body(carry, blk):
+            x, aux = carry
+            x, a = blk_fn(x, blk)
+            ys = None
+            if capture_cache:
+                h = rms_norm(x, blk["attn"]["ln"], cfg.norm_eps)
+                ys = _kv_of(h, blk["attn"], cfg)
+            return (x, aux + a), ys
+
+        (x, aux), caches = lax.scan(body, (x, jnp.float32(0.0)),
+                                    params["blocks"])
+        return x, aux, caches
+
+    if pat == "hymba":
+        g_fn = _remat(cfg, lambda x, p: hymba_block(x, p, cfg, window=0))
+        s_fn = _remat(cfg, lambda x, p: hymba_block(x, p, cfg,
+                                                    window=cfg.attn_window))
+
+        def group(carry, grp):
+            x, aux = carry
+            x, a = g_fn(x, grp["global"])
+
+            def inner(c, p):
+                xx, aa = c
+                xx, a2 = s_fn(xx, p)
+                return (xx, aa + a2), None
+
+            (x, aux2), _ = lax.scan(inner, (x, aux + a), grp["swa"])
+            return (x, aux2), None
+
+        (x, aux), _ = lax.scan(group, (x, jnp.float32(0.0)), params["groups"])
+        return x, aux, None
+
+    if pat == "xlstm":
+        m_fn = _remat(cfg, lambda x, p: mlstm_block(x, p, cfg))
+        s_fn = _remat(cfg, lambda x, p: slstm_block(x, p, cfg))
+
+        def group(carry, grp):
+            x, aux = carry
+
+            def inner(c, p):
+                xx, aa = c
+                xx, a2 = m_fn(xx, p)
+                return (xx, aa + a2), None
+
+            (x, aux), _ = lax.scan(inner, (x, aux), grp["mlstm"])
+            x, a = s_fn(x, grp["slstm"])
+            return (x, aux + a), None
+
+        (x, aux), _ = lax.scan(group, (x, jnp.float32(0.0)), params["groups"])
+        return x, aux, None
+
+    if pat == "encdec":
+        def dec_blk(x, p):
+            x = x + attn_sublayer(x, p["self"], cfg, causal=True)
+            x = shard(x, "batch", "seq", "embed")
+            x = x + attn_sublayer(x, p["cross"], cfg, causal=False,
+                                  rope=False, kv_src=enc_out)
+            x = shard(x, "batch", "seq", "embed")
+            x = x + mlp_sublayer(x, p["mlp"], cfg)
+            return shard(x, "batch", "seq", "embed"), jnp.float32(0.0)
+
+        dec_blk_r = _remat(cfg, dec_blk)
+
+        def body(carry, blk):
+            x, aux = carry
+            x, a = dec_blk_r(x, blk)
+            ys = None
+            if capture_cache:
+                h = rms_norm(x, blk["self"]["ln"], cfg.norm_eps)
+                ys = _kv_of(h, blk["self"], cfg)
+            return (x, aux + a), ys
+
+        (x, aux), caches = lax.scan(body, (x, jnp.float32(0.0)),
+                                    params["blocks"])
+        return x, aux, caches
+
+    raise ValueError(f"unknown block pattern {pat!r}")
+
+
+def _kv_of(h: jax.Array, p: Params, cfg: ArchConfig):
+    """(pre-rotation) K/V capture used by prefill-cache emission."""
+    B, S, _ = h.shape
+    hd = cfg.head_dim_
+    from .layers import apply_rope
+    k = jnp.einsum("bsd,dq->bsq", h, p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,dq->bsq", h, p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    pos = jnp.arange(S)[None, :]
+    k = apply_rope(k, pos, cfg.rope_theta)
+    return k, v
+
+
+def _encode(params: Params, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
+    def body(x, blk):
+        x = x + attn_sublayer(x, blk["attn"], cfg, causal=False)
+        x = x + mlp_sublayer(x, blk["mlp"], cfg)
+        return shard(x, "batch", None, "embed"), None
+
+    x, _ = lax.scan(jax.checkpoint(body), frames.astype(jnp.bfloat16),
+                    params["enc_blocks"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+# ================================================================ loss (train)
+def chunked_cross_entropy(x: jax.Array, params: Params, cfg: ArchConfig,
+                          labels: jax.Array, chunk: int = CE_CHUNK
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Sequence-chunked softmax CE: avoids the full [B, S, V] f32 logits."""
+    B, S, _ = x.shape
+    c = min(chunk, S)
+    if S % c:
+        c = S
+    nc = S // c
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+
+    def body(carry, inp):
+        tot, cnt = carry
+        xc, yc = inp                                  # [B,c,D], [B,c]
+        logits = jnp.einsum("bsd,dv->bsv", xc, head.astype(xc.dtype)
+                            ).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        valid = (yc >= 0) & (yc < cfg.vocab)
+        nll = jnp.where(valid, logz - gold, 0.0)
+        return (tot + jnp.sum(nll), cnt + jnp.sum(valid)), None
+
+    xs = (jnp.moveaxis(x.reshape(B, nc, c, -1), 1, 0),
+          jnp.moveaxis(labels.reshape(B, nc, c), 1, 0))
+    (tot, cnt), _ = lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)), xs)
+    return tot / jnp.maximum(cnt, 1.0), cnt
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    model_axis: int = 16
+
+    # ---------------------------------------------------------------- params
+    def param_specs(self):
+        return param_specs(self.cfg, self.model_axis)
+
+    def init(self, key: jax.Array) -> Params:
+        return init_params(self.cfg, key, self.model_axis)
+
+    # --------------------------------------------------------------- forward
+    def forward(self, params: Params, batch: Dict[str, jax.Array],
+                capture_cache: bool = False):
+        cfg = self.cfg
+        split = expert_split(cfg, self.model_axis)
+        enc_out = None
+        prefix_len = 0
+        if cfg.block_pattern == "encdec":
+            enc_out = _encode(params, cfg, batch["frames"])
+            x = _embed_tokens(params, cfg, batch["tokens"])
+        elif cfg.frontend == "vision_patches" and "patches" in batch:
+            vis = jnp.einsum("btd,de->bte", batch["patches"].astype(jnp.bfloat16),
+                             params["vis_proj"])
+            x = _embed_tokens(params, cfg, batch["tokens"])
+            x = jnp.concatenate([vis, x], axis=1)
+            x = shard(x, "batch", "seq", "embed")
+            prefix_len = vis.shape[1]
+        else:
+            x = _embed_tokens(params, cfg, batch["tokens"])
+        x, aux, caches = _run_stack(params, cfg, x, split=split,
+                                    prefix_len=prefix_len,
+                                    capture_cache=capture_cache,
+                                    enc_out=enc_out)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if prefix_len:
+            x = x[:, prefix_len:]
+        return (x, aux, caches, enc_out) if capture_cache else (x, aux)
+
+    def loss_fn(self, params: Params, batch: Dict[str, jax.Array]
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        x, aux = self.forward(params, batch)
+        nll, tokens = chunked_cross_entropy(x, params, self.cfg,
+                                            batch["labels"])
+        loss = nll + AUX_LOSS_WEIGHT * aux
+        return loss, {"nll": nll, "aux_loss": aux, "tokens": tokens}
+
+    # --------------------------------------------------------------- logits
+    def logits(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        x, _ = self.forward(params, batch)
+        return _head_logits(params, self.cfg, x)[..., :self.cfg.vocab]
+
+
+def build(cfg: ArchConfig, model_axis: int = 16) -> Model:
+    return Model(cfg, model_axis)

@@ -1,0 +1,135 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-bounded scatter dispatch.
+
+TPU adaptation (DESIGN.md §2): the published GPU MoE path (all_to_all over an
+NCCL EP group) maps onto XLA SPMD by sharding a *(virtual-)expert* dimension
+over the "model" mesh axis and letting GSPMD derive the dispatch collectives
+from the scatter/gather sharding.  When n_experts < |model| the experts are
+*split* into ``split = |model| / n_experts`` virtual experts of d_ff/split
+each — the pjit-expressible equivalent of the paper's factored "EP=8, TP=2"
+parallelizations (Table 5) on a single mesh axis.
+
+Dispatch is scatter-based (k x split scatters of the *unduplicated* token
+array), not one-hot-matmul based: the [tokens, E, C] one-hot of the Switch
+formulation would be ~1e13 elements at our shapes.  Tokens over capacity are
+dropped (capacity_factor 1.25, faithful to capacity-based production MoE);
+the router aux (load-balance) loss is returned for the training objective.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..parallel.sharding import shard
+
+
+def moe_param_specs(d_model: int, d_ff: int, n_experts: int, split: int = 1
+                    ) -> Dict[str, Tuple[Tuple[int, ...], Tuple]]:
+    e_v, f_v = n_experts * split, d_ff // split
+    return {
+        "router": ((d_model, n_experts), ("embed", None)),
+        "w_gate": ((e_v, d_model, f_v), ("experts", "embed", None)),
+        "w_up": ((e_v, d_model, f_v), ("experts", "embed", None)),
+        "w_down": ((e_v, f_v, d_model), ("experts", None, "embed")),
+    }
+
+
+def moe_ffn(x: jax.Array, p: Dict[str, jax.Array], *, n_experts: int,
+            top_k: int, split: int = 1, capacity_factor: float = 1.25,
+            act: str = "silu") -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar).
+
+    Groups = batch rows for train/prefill; decode (S == 1) folds the batch
+    into a single group so expert slots stay dense.
+    """
+    B, S, D = x.shape
+    decode = S == 1
+    xg = x.reshape(1, B, D) if decode else x
+    G, T, _ = xg.shape
+    E = n_experts
+    e_v = E * split
+
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"].astype(xg.dtype)
+                        ).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # [G, T, E]
+    top_p, top_e = lax.top_k(probs, top_k)                   # [G, T, k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # load-balance aux loss (Switch eq. 4 generalized to top-k)
+    dispatch_frac = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1))                                         # [E]
+    prob_frac = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(dispatch_frac / top_k * prob_frac)
+
+    capacity = max(1, int(math.ceil(T * top_k * capacity_factor / E)))
+    capacity = min(capacity, T * top_k)
+
+    # ---- sort-based dispatch (GSPMD-friendly: every op below is batched
+    # over the group dim, so XLA partitions it over "data" with zero
+    # replication; the only cross-device traffic is the reshard of the
+    # [G, E_v, C, D] expert buffer onto the "model" axis — which IS the MoE
+    # all-to-all).  Scatter-based dispatch defeats the SPMD partitioner and
+    # replicates the dispatch buffers (measured: 271 GiB/device on mixtral).
+    flat_e = top_e.reshape(G, T * top_k)                     # assignment list
+    sorted_e, perm = lax.sort_key_val(
+        flat_e, jnp.broadcast_to(jnp.arange(T * top_k, dtype=jnp.int32),
+                                 flat_e.shape), dimension=1)
+    counts = jnp.sum(jax.nn.one_hot(flat_e, E, dtype=jnp.int32), axis=1)
+    starts = jnp.cumsum(counts, axis=1) - counts             # [G, E] excl.
+
+    # expert_inputs[g, e, c] = x[g, perm[starts[e] + c] // k]  (c < counts)
+    slot_c = jnp.arange(capacity, dtype=jnp.int32)
+    gidx = starts[:, :, None] + slot_c[None, None, :]        # [G, E, C]
+    slot_valid = slot_c[None, None, :] < jnp.minimum(counts, capacity)[..., None]
+    gidx = jnp.clip(gidx, 0, T * top_k - 1)
+    tok_flat = jnp.take_along_axis(perm, gidx.reshape(G, -1), axis=1)
+    tok = tok_flat // top_k                                  # [G, E*C]
+    xin = jnp.take_along_axis(xg, tok[..., None], axis=1)    # [G, E*C, D]
+    xin = xin * slot_valid.reshape(G, -1, 1).astype(xg.dtype)
+    buf = xin.reshape(G, E, capacity, D)
+    if split > 1:   # virtual experts: each real expert split over d_ff
+        buf = jnp.repeat(buf, split, axis=1)                 # [G, E_v, C, D]
+    buf = shard(buf, "batch", "experts", None, None)
+
+    g = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", buf, p["w_up"])
+    h = (jax.nn.gelu(g) if act == "geglu" else jax.nn.silu(g)) * u
+    y = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    y = shard(y, "batch", "experts", None, None)
+    if split > 1:   # sum the d_ff partials of each real expert's halves
+        y = y.reshape(G, E, split, capacity, D).sum(axis=2)
+    y_flat = y.reshape(G, E * capacity, D)
+
+    # ---- combine: position of each (token, choice) inside its expert queue
+    inv = jnp.argsort(perm, axis=1)                          # inverse perm
+    sorted_pos = (jnp.arange(T * top_k, dtype=jnp.int32)[None, :]
+                  - jnp.take_along_axis(starts, sorted_e, axis=1))
+    pos = jnp.take_along_axis(sorted_pos, inv, axis=1)       # [G, T*k]
+    pos3 = pos.reshape(G, T, top_k)
+    keep = pos3 < capacity
+
+    out = jnp.zeros_like(xg)
+    for j in range(top_k):
+        slot = top_e[:, :, j] * capacity + jnp.clip(pos3[:, :, j], 0,
+                                                    capacity - 1)
+        y_j = jnp.take_along_axis(y_flat, slot[..., None], axis=1)
+        w_j = (top_p[:, :, j] * keep[:, :, j]).astype(xg.dtype)[..., None]
+        out = out + w_j * y_j
+    if decode:
+        out = out.reshape(B, S, D)
+    out = shard(out, "batch", "seq", "embed")
+    return out, aux
+
+
+def routing_stats(x: jax.Array, router: jax.Array, n_experts: int,
+                  top_k: int) -> jax.Array:
+    """Per-expert token bin counts (the Fig 14 per-layer routing histogram
+    embedded into Chakra MoE nodes)."""
+    logits = jnp.einsum("btd,de->bte", x, router.astype(x.dtype))
+    _, top_e = lax.top_k(logits.astype(jnp.float32), top_k)
+    return jnp.sum(jax.nn.one_hot(top_e, n_experts, dtype=jnp.int32),
+                   axis=(0, 1, 2))

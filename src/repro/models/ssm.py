@@ -1,0 +1,141 @@
+"""Mamba-style selective SSM (the SSM branch of Hymba's hybrid heads).
+
+Training/prefill uses a *chunked associative scan*: the [B, S, D_in, N]
+decay/drive tensors are materialized only per chunk (outer ``lax.scan`` over
+sequence chunks, inner ``lax.associative_scan`` within the chunk), keeping
+the working set ~ chunk/S of the naive form.  Decode is the exact one-step
+recurrence over an O(1) state — this is what makes the long_500k cell
+runnable for SSM/hybrid archs.
+
+Sharding: the inner dim (D_in) shards over "model" (the scan is elementwise
+across D_in, so TP is communication-free inside the block).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..parallel.sharding import shard
+from .layers import causal_conv1d, conv1d_step
+
+CONV_K = 4
+
+
+def mamba_param_specs(d_model: int, n_state: int, expand: int = 2,
+                      dt_rank: int = 0) -> Dict[str, Tuple[Tuple[int, ...], Tuple]]:
+    """{name: (shape, logical_axes)}."""
+    d_in = expand * d_model
+    dt_rank = dt_rank or max(d_model // 16, 1)
+    return {
+        "in_proj": ((d_model, 2 * d_in), ("embed", "ssm_inner")),
+        "conv_w": ((CONV_K, d_in), (None, "ssm_inner")),
+        "conv_b": ((d_in,), ("ssm_inner",)),
+        "w_b": ((d_in, n_state), ("ssm_inner", None)),
+        "w_c": ((d_in, n_state), ("ssm_inner", None)),
+        "w_dt1": ((d_in, dt_rank), ("ssm_inner", None)),
+        "w_dt2": ((dt_rank, d_in), (None, "ssm_inner")),
+        "dt_bias": ((d_in,), ("ssm_inner",)),
+        "a_log": ((d_in, n_state), ("ssm_inner", None)),
+        "d_skip": ((d_in,), ("ssm_inner",)),
+        "out_proj": ((d_in, d_model), ("ssm_inner", "embed")),
+    }
+
+
+def _ssm_inputs(x: jax.Array, p: Dict[str, jax.Array]):
+    """Shared pre-scan computation.  x: [B, S, D] -> branch tensors."""
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xz = shard(xz, "batch", None, "ssm_inner")
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = jax.nn.silu(causal_conv1d(x_in, p["conv_w"], p["conv_b"]))
+    b_ssm = jnp.einsum("bse,en->bsn", x_in, p["w_b"]).astype(jnp.float32)
+    c_ssm = jnp.einsum("bse,en->bsn", x_in, p["w_c"]).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bse,er,rf->bsf", x_in, p["w_dt1"], p["w_dt2"])
+        + p["dt_bias"]).astype(jnp.float32)
+    return x_in, z, b_ssm, c_ssm, dt
+
+
+def mamba_forward(x: jax.Array, p: Dict[str, jax.Array],
+                  chunk: int = 128) -> jax.Array:
+    """Full-sequence selective scan.  x: [B, S, D] -> [B, S, D]."""
+    B, S, _ = x.shape
+    x_in, z, b_ssm, c_ssm, dt = _ssm_inputs(x, p)
+    d_in = x_in.shape[-1]
+    n = p["a_log"].shape[-1]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))           # [D_in, N]
+
+    c = min(chunk, S)
+    if S % c:
+        c = S
+    nc = S // c
+
+    def chunk_body(h, inp):
+        xc, bc, cc, dtc = inp                               # [B, c, ...]
+        decay = jnp.exp(dtc[..., None] * a)                 # [B, c, D_in, N]
+        drive = (dtc * xc.astype(jnp.float32))[..., None] * bc[:, :, None, :]
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, b1 * a2 + b2
+
+        cum_a, cum_b = lax.associative_scan(combine, (decay, drive), axis=1)
+        h_states = cum_a * h[:, None] + cum_b               # [B, c, D_in, N]
+        y = jnp.einsum("bsdn,bsn->bsd", h_states, cc)
+        return h_states[:, -1], y
+
+    xs = tuple(jnp.moveaxis(t.reshape(B, nc, c, *t.shape[2:]), 1, 0)
+               for t in (x_in, b_ssm, c_ssm, dt))
+    h0 = jnp.zeros((B, d_in, n), jnp.float32)
+    _, yc = lax.scan(chunk_body, h0, xs)
+    y = jnp.moveaxis(yc, 0, 1).reshape(B, S, d_in)
+    y = (y + p["d_skip"] * x_in.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return shard(out, "batch", None, "embed")
+
+
+def mamba_init_state(batch: int, d_model: int, n_state: int,
+                     expand: int = 2, dtype=jnp.float32):
+    d_in = expand * d_model
+    return {
+        "h": jnp.zeros((batch, d_in, n_state), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_K - 1, d_in), dtype),
+    }
+
+
+def mamba_state_specs(batch: int, d_model: int, n_state: int,
+                      expand: int = 2, dtype=jnp.bfloat16):
+    d_in = expand * d_model
+    return {
+        "h": (jax.ShapeDtypeStruct((batch, d_in, n_state), jnp.float32),
+              ("batch", "ssm_inner", None)),
+        "conv": (jax.ShapeDtypeStruct((batch, CONV_K - 1, d_in), dtype),
+                 ("batch", None, "ssm_inner")),
+    }
+
+
+def mamba_step(x_t: jax.Array, state: Dict[str, jax.Array],
+               p: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step.  x_t: [B, D] -> ([B, D], new state)."""
+    xz = jnp.einsum("bd,de->be", x_t, p["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in, conv_state = conv1d_step(x_in, state["conv"], p["conv_w"], p["conv_b"])
+    x_in = jax.nn.silu(x_in)
+    b_ssm = jnp.einsum("be,en->bn", x_in, p["w_b"]).astype(jnp.float32)
+    c_ssm = jnp.einsum("be,en->bn", x_in, p["w_c"]).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("be,er,rf->bf", x_in, p["w_dt1"], p["w_dt2"])
+        + p["dt_bias"]).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt[..., None] * a)                       # [B, D_in, N]
+    drive = (dt * x_in.astype(jnp.float32))[..., None] * b_ssm[:, None, :]
+    h = state["h"] * decay + drive
+    y = jnp.einsum("bdn,bn->bd", h, c_ssm)
+    y = (y + p["d_skip"] * x_in.astype(jnp.float32)).astype(x_t.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"])
+    return out, {"h": h, "conv": conv_state}

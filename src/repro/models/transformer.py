@@ -1,0 +1,186 @@
+"""Model assembly: blocks per architecture family, scan-over-layers stacks,
+train / prefill / decode entry points.
+
+Homogeneous layer stacks run under ``jax.lax.scan`` with per-layer remat
+(``jax.checkpoint``) so (a) compile time per dry-run cell stays small even at
+512 placeholder devices and (b) saved activations are one sequence-sharded
+residual per layer boundary.  Heterogeneous stacks (hymba's periodic global-
+attention layers, xlstm's sLSTM positions) are grouped into *super-blocks*
+(one scan over groups, uniform structure inside) so every shape stays static.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ArchConfig
+from ..parallel.sharding import shard
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from . import xlstm as xlstm_mod
+from .layers import (apply_rope, decode_attention, decode_attention_append,
+                     flash_attention, glu_mlp, rms_norm)
+
+Params = Dict[str, Any]
+
+
+def vocab_padded(cfg: ArchConfig) -> int:
+    return ((cfg.vocab + 255) // 256) * 256
+
+
+def expert_split(cfg: ArchConfig, model_axis: int = 16) -> int:
+    """Virtual-expert split factor: E*split == model-axis multiple when E is
+    smaller than the model axis (mixtral: 8 experts * split 2 = 16)."""
+    if not cfg.is_moe or cfg.n_experts >= model_axis:
+        return 1
+    if model_axis % cfg.n_experts == 0 and cfg.d_ff % (model_axis // cfg.n_experts) == 0:
+        return model_axis // cfg.n_experts
+    return 1
+
+
+# ================================================================ attention
+def _qkv(x: jax.Array, p: Params, cfg: ArchConfig):
+    B, S, _ = x.shape
+    hd = cfg.head_dim_
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = jnp.einsum("bsd,dq->bsq", x, p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,dq->bsq", x, p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def attn_sublayer(x: jax.Array, p: Params, cfg: ArchConfig, *,
+                  causal: bool = True, window: int = 0, prefix_len: int = 0,
+                  rope: bool = True, kv_src: Optional[jax.Array] = None
+                  ) -> jax.Array:
+    """Full-sequence attention sublayer (pre-norm, residual added by caller).
+
+    kv_src: cross-attention source (encoder output); self-attention if None.
+    """
+    B, S, _ = x.shape
+    # seq-sharded norm output (Megatron-SP): the gather into the QKV matmuls
+    # transposes to a reduce-scatter in backward instead of a full
+    # all-reduce of [B, S, D] input-gradients
+    h = shard(rms_norm(x, p["ln"], cfg.norm_eps), "batch", "seq", "embed")
+    src = h if kv_src is None else kv_src
+    hd = cfg.head_dim_
+    q = jnp.einsum("bsd,dq->bsq", h, p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = jnp.einsum("bsd,dq->bsq", src, p["wk"]).reshape(
+        B, src.shape[1], cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,dq->bsq", src, p["wv"]).reshape(
+        B, src.shape[1], cfg.n_kv_heads, hd)
+    if rope and kv_src is None:
+        pos = jnp.arange(S)[None, :]
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          prefix_len=prefix_len, softcap=cfg.logit_softcap,
+                          block_q=cfg.block_q, block_k=cfg.block_k)
+    y = jnp.einsum("bshd,hdo->bso", out,
+                   p["wo"].reshape(cfg.n_heads, hd, cfg.d_model))
+    return shard(y, "batch", "seq", "embed")   # TP psum -> reduce-scatter
+
+
+def attn_sublayer_decode(x_t: jax.Array, p: Params, cfg: ArchConfig,
+                         cache: Dict[str, jax.Array], cache_len: jax.Array, *,
+                         window: int = 0, rope: bool = True
+                         ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One-token self-attention against a *read-only* KV cache.
+
+    x_t: [B, 1, D]; cache: {"k","v": [B, Smax, Hkv, hd]}.  The fresh token's
+    (k, v) join the softmax via a two-part online combine (no cache write
+    inside the layer — the caller inserts all layers' K/V with one vectorized
+    dynamic-update-slice after the layer scan, which aliases in place on the
+    donated cache stack).  Returns (attn_out, (k_new, v_new)).
+    """
+    B = x_t.shape[0]
+    hd = cfg.head_dim_
+    h = rms_norm(x_t, p["ln"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dq->bsq", h, p["wq"]).reshape(B, 1, cfg.n_heads, hd)
+    k = jnp.einsum("bsd,dq->bsq", h, p["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,dq->bsq", h, p["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
+    if rope:
+        pos = jnp.full((B, 1), cache_len, dtype=jnp.int32)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    out = decode_attention_append(q, cache["k"], cache["v"], k, v, cache_len,
+                                  window=window, softcap=cfg.logit_softcap)
+    y = jnp.einsum("bshd,hdo->bso", out,
+                   p["wo"].reshape(cfg.n_heads, hd, cfg.d_model))
+    return y, (k.astype(cache["k"].dtype), v.astype(cache["v"].dtype))
+
+
+def cross_attn_decode(x_t: jax.Array, p: Params, cfg: ArchConfig,
+                      cache: Dict[str, jax.Array]) -> jax.Array:
+    """Decode-time cross-attention against a fixed (prefilled) cross cache."""
+    B = x_t.shape[0]
+    hd = cfg.head_dim_
+    h = rms_norm(x_t, p["ln"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dq->bsq", h, p["wq"]).reshape(B, 1, cfg.n_heads, hd)
+    out = decode_attention(q, cache["k"], cache["v"],
+                           jnp.int32(cache["k"].shape[1]))
+    return jnp.einsum("bshd,hdo->bso", out,
+                      p["wo"].reshape(cfg.n_heads, hd, cfg.d_model))
+
+
+# ==================================================================== blocks
+def mlp_sublayer(x: jax.Array, p: Params, cfg: ArchConfig) -> jax.Array:
+    h = shard(rms_norm(x, p["ln"], cfg.norm_eps), "batch", "seq", "embed")
+    return glu_mlp(h, p["w_gate"], p["w_up"], p["w_down"], cfg.act)
+
+
+def moe_sublayer(x: jax.Array, p: Params, cfg: ArchConfig, split: int
+                 ) -> Tuple[jax.Array, jax.Array]:
+    h = shard(rms_norm(x, p["ln"], cfg.norm_eps), "batch", "seq", "embed")
+    return moe_mod.moe_ffn(h, p, n_experts=cfg.n_experts, top_k=cfg.top_k,
+                           split=split, capacity_factor=cfg.capacity_factor,
+                           act=cfg.act)
+
+
+def dense_block(x: jax.Array, p: Params, cfg: ArchConfig, *, window: int,
+                prefix_len: int = 0) -> Tuple[jax.Array, jax.Array]:
+    x = x + attn_sublayer(x, p["attn"], cfg, window=window,
+                          prefix_len=prefix_len)
+    x = shard(x, "batch", "seq", "embed")
+    x = x + mlp_sublayer(x, p["mlp"], cfg)
+    return shard(x, "batch", "seq", "embed"), jnp.float32(0.0)
+
+
+def moe_block(x: jax.Array, p: Params, cfg: ArchConfig, split: int, *,
+              window: int) -> Tuple[jax.Array, jax.Array]:
+    x = x + attn_sublayer(x, p["attn"], cfg, window=window)
+    x = shard(x, "batch", "seq", "embed")
+    y, aux = moe_sublayer(x, p["moe"], cfg, split)
+    return shard(x + y, "batch", "seq", "embed"), aux
+
+
+def hymba_block(x: jax.Array, p: Params, cfg: ArchConfig, *, window: int
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Parallel attention + Mamba heads on the same input, fused by mean of
+    per-branch RMSNorm outputs (Hymba fig. 2)."""
+    a = attn_sublayer(x, p["attn"], cfg, window=window)
+    h = rms_norm(x, p["attn"]["ln"], cfg.norm_eps)
+    m = ssm_mod.mamba_forward(h, p["mamba"])
+    fused = 0.5 * (rms_norm(a, p["attn_out_norm"], cfg.norm_eps)
+                   + rms_norm(m, p["mamba_out_norm"], cfg.norm_eps))
+    x = shard(x + fused, "batch", "seq", "embed")
+    x = x + mlp_sublayer(x, p["mlp"], cfg)
+    return shard(x, "batch", "seq", "embed"), jnp.float32(0.0)
+
+
+def mlstm_block(x: jax.Array, p: Params, cfg: ArchConfig
+                ) -> Tuple[jax.Array, jax.Array]:
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    y = xlstm_mod.mlstm_forward(h, p["cell"], cfg.n_heads)
+    return shard(x + y, "batch", "seq", "embed"), jnp.float32(0.0)
+
+
+def slstm_block(x: jax.Array, p: Params, cfg: ArchConfig
+                ) -> Tuple[jax.Array, jax.Array]:
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    y = xlstm_mod.slstm_forward(h, p["cell"], cfg.n_heads)
+    return shard(x + y, "batch", "seq", "embed"), jnp.float32(0.0)

@@ -1,0 +1,265 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory with exponential gating, inherently sequential).
+
+mLSTM training runs the stabilized *chunkwise* form: quadratic attention-like
+compute within a chunk, an O(1) matrix state ``C: [B, H, Dk, Dv]`` carried
+across chunks — this is the linear-attention trick that makes a recurrent
+model trainable in parallel, and the O(1) state is why xlstm runs the
+long_500k decode cell.
+
+sLSTM is *not* parallelizable across time (hidden-to-hidden recurrence
+through the nonlinearity) — we run the faithful ``lax.scan`` over steps; it
+occupies only every 8th block (xLSTM[7:1]).
+
+Sharding: the mLSTM value dim Dv shards over "model" (the matrix state and
+all v-side compute are elementwise across Dv); sLSTM stays batch-sharded.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..parallel.sharding import shard
+
+_NEG = -1e30
+
+
+# ====================================================================== mLSTM
+def mlstm_param_specs(d_model: int, n_heads: int, proj_factor: float = 2.0
+                      ) -> Dict[str, Tuple[Tuple[int, ...], Tuple]]:
+    d_m = int(proj_factor * d_model)
+    return {
+        "up_proj": ((d_model, 2 * d_m), ("embed", "qkv")),
+        "w_q": ((d_m, d_m), (None, None)),
+        "w_k": ((d_m, d_m), (None, None)),
+        "w_v": ((d_m, d_m), (None, "qkv")),
+        "w_i": ((d_m, n_heads), (None, None)),
+        "w_f": ((d_m, n_heads), (None, None)),
+        "b_i": ((n_heads,), (None,)),
+        "b_f": ((n_heads,), (None,)),
+        "down_proj": ((d_m, d_model), ("qkv", "embed")),
+    }
+
+
+def _mlstm_qkvif(x_m: jax.Array, p: Dict[str, jax.Array], n_heads: int):
+    B, S, d_m = x_m.shape
+    dh = d_m // n_heads
+    q = jnp.einsum("bse,ef->bsf", x_m, p["w_q"]).reshape(B, S, n_heads, dh)
+    k = jnp.einsum("bse,ef->bsf", x_m, p["w_k"]).reshape(B, S, n_heads, dh)
+    v = jnp.einsum("bse,ef->bsf", x_m, p["w_v"]).reshape(B, S, n_heads, dh)
+    v = shard(v, "batch", None, None, "ff")
+    i_raw = (jnp.einsum("bse,eh->bsh", x_m, p["w_i"])
+             + p["b_i"]).astype(jnp.float32)
+    f_raw = (jnp.einsum("bse,eh->bsh", x_m, p["w_f"])
+             + p["b_f"]).astype(jnp.float32)
+    return q, k, v, i_raw, f_raw, dh
+
+
+def mlstm_forward(x: jax.Array, p: Dict[str, jax.Array], n_heads: int,
+                  chunk: int = 256) -> jax.Array:
+    """Chunkwise-parallel mLSTM.  x: [B, S, D] -> [B, S, D]."""
+    B, S, _ = x.shape
+    xm_z = jnp.einsum("bsd,de->bse", x, p["up_proj"])
+    x_m, z = jnp.split(xm_z, 2, axis=-1)
+    q, k, v, i_raw, f_raw, dh = _mlstm_qkvif(x_m, p, n_heads)
+    scale = 1.0 / math.sqrt(dh)
+
+    c = min(chunk, S)
+    if S % c:
+        c = S
+    nc = S // c
+    lf = jax.nn.log_sigmoid(f_raw)                          # [B, S, H]
+
+    def chunk_body(carry, inp):
+        C_in, n_in, m_in = carry                            # [B,H,Dk,Dv], [B,H,Dk], [B,H]
+        qc, kc, vc, lic, lfc = inp                          # [B,c,...]
+        a = jnp.cumsum(lfc, axis=1)                         # [B,c,H] decay from chunk start (incl.)
+        a_h = jnp.moveaxis(a, -1, 1)                        # [B,H,c]
+        li_h = jnp.moveaxis(lic, -1, 1)
+        # intra-chunk log weights L[i,j] = a_i - (a_j) + li_j  (j <= i; the
+        # decay from j+1..i is a_i - a_j since a includes step j's own gate)
+        L = a_h[:, :, :, None] - a_h[:, :, None, :] + li_h[:, :, None, :]
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        L = jnp.where(tri, L, _NEG)
+        b = a_h + m_in[..., None]                           # inter-chunk log scale
+        m_new = jnp.maximum(jnp.max(L, axis=-1), b)         # [B,H,c]
+        intra = jnp.exp(L - m_new[..., None])               # [B,H,c,c]
+        qh = jnp.moveaxis(qc, 2, 1).astype(jnp.float32)     # [B,H,c,Dk]
+        kh = jnp.moveaxis(kc, 2, 1).astype(jnp.float32)
+        vh = jnp.moveaxis(vc, 2, 1).astype(jnp.float32)
+        scores = jnp.einsum("bhid,bhjd->bhij", qh, kh) * scale * intra
+        y_intra = jnp.einsum("bhij,bhjv->bhiv", scores, vh)
+        inter_sc = jnp.exp(b - m_new)                       # [B,H,c]
+        y_inter = jnp.einsum("bhid,bhdv->bhiv", qh, C_in) * scale \
+            * inter_sc[..., None]
+        n_i = jnp.einsum("bhij,bhjd->bhid", intra, kh) \
+            + n_in[:, :, None, :] * inter_sc[..., None]     # [B,H,c,Dk]
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bhid,bhid->bhi", qh, n_i))
+                            * scale, jnp.exp(-m_new))
+        h = (y_intra + y_inter) / denom[..., None]          # [B,H,c,Dv]
+        # ---- carry to next chunk (state at chunk end) ----
+        a_last = a_h[..., -1:]                              # [B,H,1]
+        lo = a_last - a_h + li_h                            # suffix decay * input gate
+        m_out = jnp.maximum(jnp.max(lo, axis=-1), (a_last[..., 0] + m_in))
+        w = jnp.exp(lo - m_out[..., None])                  # [B,H,c]
+        C_out = (jnp.exp(a_last[..., 0] + m_in - m_out)[..., None, None] * C_in
+                 + jnp.einsum("bhj,bhjd,bhjv->bhdv", w, kh, vh))
+        n_out = (jnp.exp(a_last[..., 0] + m_in - m_out)[..., None] * n_in
+                 + jnp.einsum("bhj,bhjd->bhd", w, kh))
+        y = jnp.moveaxis(h, 1, 2).astype(x.dtype)           # [B,c,H,Dv]
+        return (C_out, n_out, m_out), y
+
+    xs = tuple(jnp.moveaxis(t.reshape(B, nc, c, *t.shape[2:]), 1, 0)
+               for t in (q, k, v, i_raw, lf))
+    d_m = q.shape[2] * dh
+    C0 = jnp.zeros((B, n_heads, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, n_heads, dh), jnp.float32)
+    m0 = jnp.full((B, n_heads), 0.0, jnp.float32)
+    _, yc = lax.scan(chunk_body, (C0, n0, m0), xs)
+    y = jnp.moveaxis(yc, 0, 1).reshape(B, S, d_m)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["down_proj"])
+    return shard(out, "batch", None, "embed")
+
+
+def mlstm_init_state(batch: int, d_model: int, n_heads: int,
+                     proj_factor: float = 2.0):
+    d_m = int(proj_factor * d_model)
+    dh = d_m // n_heads
+    return {
+        "C": jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, dh), jnp.float32),
+        "m": jnp.zeros((batch, n_heads), jnp.float32),
+    }
+
+
+def mlstm_state_specs(batch: int, d_model: int, n_heads: int,
+                      proj_factor: float = 2.0):
+    d_m = int(proj_factor * d_model)
+    dh = d_m // n_heads
+    return {
+        "C": (jax.ShapeDtypeStruct((batch, n_heads, dh, dh), jnp.float32),
+              ("batch", None, None, "ff")),
+        "n": (jax.ShapeDtypeStruct((batch, n_heads, dh), jnp.float32),
+              ("batch", None, None)),
+        "m": (jax.ShapeDtypeStruct((batch, n_heads), jnp.float32),
+              ("batch", None)),
+    }
+
+
+def mlstm_step(x_t: jax.Array, state: Dict[str, jax.Array],
+               p: Dict[str, jax.Array], n_heads: int
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step.  x_t: [B, D]."""
+    xm_z = jnp.einsum("bd,de->be", x_t, p["up_proj"])
+    x_m, z = jnp.split(xm_z, 2, axis=-1)
+    B, d_m = x_m.shape
+    dh = d_m // n_heads
+    q = jnp.einsum("be,ef->bf", x_m, p["w_q"]).reshape(B, n_heads, dh)
+    k = jnp.einsum("be,ef->bf", x_m, p["w_k"]).reshape(B, n_heads, dh)
+    v = jnp.einsum("be,ef->bf", x_m, p["w_v"]).reshape(B, n_heads, dh)
+    li = (jnp.einsum("be,eh->bh", x_m, p["w_i"]) + p["b_i"]).astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(
+        (jnp.einsum("be,eh->bh", x_m, p["w_f"]) + p["b_f"]).astype(jnp.float32))
+    m_new = jnp.maximum(lf + state["m"], li)
+    f_sc = jnp.exp(lf + state["m"] - m_new)[..., None]
+    i_sc = jnp.exp(li - m_new)[..., None]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C = state["C"] * f_sc[..., None] + i_sc[..., None] * kf[..., :, None] \
+        * vf[..., None, :]
+    n = state["n"] * f_sc + i_sc * kf
+    scale = 1.0 / math.sqrt(dh)
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhdv->bhv", qf, C) * scale
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)) * scale,
+                        jnp.exp(-m_new))
+    h = (num / denom[..., None]).reshape(B, d_m).astype(x_t.dtype)
+    y = h * jax.nn.silu(z)
+    out = jnp.einsum("be,ed->bd", y, p["down_proj"])
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# ====================================================================== sLSTM
+def slstm_param_specs(d_model: int, n_heads: int
+                      ) -> Dict[str, Tuple[Tuple[int, ...], Tuple]]:
+    dh = d_model // n_heads
+    ff = int(4 * d_model / 3)
+    return {
+        "w_in": ((d_model, 4 * d_model), ("embed", None)),   # z, i, f, o
+        "r": ((4, n_heads, dh, dh), (None, None, None, None)),
+        "b": ((4 * d_model,), (None,)),
+        "ff_gate": ((d_model, ff), ("embed", "ff")),
+        "ff_up": ((d_model, ff), ("embed", "ff")),
+        "ff_down": ((ff, d_model), ("ff", "embed")),
+    }
+
+
+def _slstm_cell(x_proj: jax.Array, h_prev: jax.Array, state, p, n_heads: int):
+    """x_proj: [B, 4D] precomputed input projection; h_prev: [B, D]."""
+    B, D4 = x_proj.shape
+    D = D4 // 4
+    dh = D // n_heads
+    hh = h_prev.reshape(B, n_heads, dh).astype(jnp.float32)
+    rec = jnp.einsum("bhd,ghde->gbhe", hh, p["r"].astype(jnp.float32))
+    rec = rec.reshape(4, B, D)
+    pre = x_proj.astype(jnp.float32).reshape(B, 4, D).transpose(1, 0, 2) + rec
+    z_t = jnp.tanh(pre[0])
+    i_t, f_t, o_t = pre[1], pre[2], jax.nn.sigmoid(pre[3])
+    c, n, m = state
+    m_new = jnp.maximum(f_t + m, i_t)
+    i_sc = jnp.exp(i_t - m_new)
+    f_sc = jnp.exp(f_t + m - m_new)
+    c = f_sc * c + i_sc * z_t
+    n = f_sc * n + i_sc
+    h = o_t * (c / jnp.maximum(n, 1e-6))
+    return h, (c, n, m_new)
+
+
+def slstm_forward(x: jax.Array, p: Dict[str, jax.Array], n_heads: int
+                  ) -> jax.Array:
+    """Sequential sLSTM over the sequence.  x: [B, S, D]."""
+    B, S, D = x.shape
+    x_proj = jnp.einsum("bsd,de->bse", x, p["w_in"]) + p["b"]
+
+    def step(carry, x_t):
+        h_prev, st = carry
+        h, st = _slstm_cell(x_t, h_prev, st, p, n_heads)
+        return (h, st), h.astype(x.dtype)
+
+    zeros = jnp.zeros((B, D), jnp.float32)
+    (_, _), hs = lax.scan(step, (zeros, (zeros, zeros, zeros)),
+                          jnp.moveaxis(x_proj, 0, 1))
+    y = jnp.moveaxis(hs, 0, 1)                              # [B, S, D]
+    # post-FFN (GLU, 4/3 factor)
+    g = jnp.einsum("bsd,df->bsf", y, p["ff_gate"])
+    u = jnp.einsum("bsd,df->bsf", y, p["ff_up"])
+    out = jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p["ff_down"])
+    return shard(out, "batch", None, "embed")
+
+
+def slstm_init_state(batch: int, d_model: int):
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": z}
+
+
+def slstm_state_specs(batch: int, d_model: int):
+    sds = jax.ShapeDtypeStruct((batch, d_model), jnp.float32)
+    return {k: (sds, ("batch", None)) for k in ("h", "c", "n", "m")}
+
+
+def slstm_step(x_t: jax.Array, state: Dict[str, jax.Array],
+               p: Dict[str, jax.Array], n_heads: int):
+    """One decode step (returns output after the block FFN)."""
+    x_proj = jnp.einsum("bd,de->be", x_t, p["w_in"]) + p["b"]
+    h, (c, n, m) = _slstm_cell(x_proj, state["h"], (state["c"], state["n"],
+                                                    state["m"]), p, n_heads)
+    y = h.astype(x_t.dtype)
+    g = jnp.einsum("bd,df->bf", y, p["ff_gate"])
+    u = jnp.einsum("bd,df->bf", y, p["ff_up"])
+    out = jnp.einsum("bf,fd->bd", jax.nn.silu(g) * u, p["ff_down"])
+    return out, {"h": h, "c": c, "n": n, "m": m}

@@ -1,0 +1,5 @@
+"""Distribution: logical-axis sharding, collectives, pipeline parallelism."""
+from . import sharding
+from .sharding import default_rules, shard, spec_for, use_rules
+
+__all__ = ["sharding", "default_rules", "shard", "spec_for", "use_rules"]

@@ -1,0 +1,127 @@
+"""Explicit collectives: int8 error-feedback gradient compression and
+shard_map building blocks for the replay engine.
+
+Gradient compression (the distributed-optimization trick recorded in the
+ETs): gradients are quantized to int8 with a per-tensor scale before the
+data-parallel all-reduce — 4x less DP traffic at f32, 2x at bf16 — and the
+quantization error is fed back into the next step's gradient (error
+feedback keeps SGD convergence; tested on the 100M example).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+# ------------------------------------------------- int8 error-feedback comp
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads: Any, error: Optional[Any] = None
+                   ) -> Tuple[Any, Any, Any]:
+    """Quantize a gradient pytree with error feedback.
+
+    Returns (quantized tree of (int8, scale), new error tree, bytes ratio).
+    """
+    g_leaves, treedef = jax.tree.flatten(grads)
+    if error is None:
+        e_leaves = [jnp.zeros(g.shape, jnp.float32) for g in g_leaves]
+    else:
+        e_leaves = treedef.flatten_up_to(error)
+    q_leaves, new_e = [], []
+    raw = comp = 0
+    for g, e in zip(g_leaves, e_leaves):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected)
+        q_leaves.append((q, s))
+        new_e.append(corrected - dequantize_int8(q, s))
+        raw += g.size * g.dtype.itemsize
+        comp += q.size
+    return (jax.tree.unflatten(treedef, q_leaves),
+            jax.tree.unflatten(treedef, new_e), comp / max(raw, 1))
+
+
+def compressed_psum_grads(grads: Any, error: Any, axis_name: str) -> Tuple[Any, Any]:
+    """int8-compressed data-parallel gradient all-reduce (inside shard_map).
+
+    Quantize(g + e) -> psum(int8 as int32 accum) -> dequantize -> mean.
+    """
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        # shared scale across the group: int8 values quantized with
+        # different per-rank scales cannot be summed meaningfully
+        local_scale = jnp.maximum(jnp.max(jnp.abs(corrected)), 1e-12) / 127.0
+        s = lax.pmax(local_scale, axis_name)
+        q = jnp.clip(jnp.round(corrected / s), -127, 127).astype(jnp.int8)
+        # accumulate in int32 to avoid overflow across the group
+        total = lax.psum(q.astype(jnp.int32), axis_name)
+        n = lax.psum(jnp.ones((), jnp.float32), axis_name)
+        deq = total.astype(jnp.float32) * s / n
+        new_e = corrected - q.astype(jnp.float32) * s
+        return deq.astype(g.dtype), new_e
+
+    pairs = jax.tree.map(one, grads, error)
+    g_out = jax.tree.map(lambda p: p[0], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+    e_out = jax.tree.map(lambda p: p[1], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+    return g_out, e_out
+
+
+# ------------------------------------------------------ replay collectives
+def make_collective_fn(kind: str, mesh: Mesh, axis: str = "data"):
+    """shard_map-wrapped collective used by the trace replayer (§4.2): takes
+    the local shard, performs the real collective over ``axis``."""
+    spec = P(axis)
+
+    n_shards = int(mesh.shape[axis])
+
+    def ar(x):
+        return lax.psum(x, axis)
+
+    def ag(x):
+        return lax.all_gather(x.reshape(-1), axis, tiled=True)
+
+    def rs(x):
+        # flatten the local shard so the scatter dim tiles the axis
+        flat = x.reshape(-1)
+        pad = (-flat.shape[0]) % n_shards
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        return lax.psum_scatter(flat, axis, tiled=True)
+
+    def a2a(x):
+        flat = x.reshape(-1)
+        pad = (-flat.shape[0]) % n_shards
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        return lax.all_to_all(flat, axis, split_axis=0, concat_axis=0,
+                              tiled=True)
+
+    def permute(x):
+        perm = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+        return lax.ppermute(x, axis, perm)
+
+    fns = {"all_reduce": (ar, spec, spec),
+           "all_gather": (ag, spec, spec),
+           "reduce_scatter": (rs, spec, spec),
+           "all_to_all": (a2a, spec, spec),
+           "collective_permute": (permute, spec, spec)}
+    if kind not in fns:
+        raise KeyError(f"unknown collective {kind!r}")
+    fn, in_spec, out_spec = fns[kind]
+    return shard_map(fn, mesh=mesh, in_specs=(in_spec,), out_specs=out_spec,
+                     check_rep=False)

@@ -1,0 +1,96 @@
+"""GPipe-style pipeline parallelism via shard_map + collective_permute.
+
+At multi-pod scale the "pod" axis can carry pipeline stages (cross-pod DCN
+links are too slow for TP but fine for the once-per-microbatch boundary
+activations of PP).  This module implements the classic GPipe schedule —
+M microbatches streamed through S stages with (S-1) bubble slots — as a
+pure-JAX function over a stage-sharded parameter stack.
+
+The layer stack is viewed as [S, L/S, ...]; each device along the pipeline
+axis owns one stage's params.  A shard_map program rotates microbatch
+activations around the stage ring with ``lax.ppermute`` — the TPU-native
+point-to-point (COMM_SEND/RECV in the Chakra trace).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def pipeline_forward(
+    stage_fn: Callable[[Any, jax.Array], jax.Array],
+    mesh: Mesh,
+    axis: str,
+    n_microbatches: int,
+):
+    """Build a pipelined forward: (stage_params, x) -> y.
+
+    GPipe skew schedule over S stages and M microbatches (M + S - 1 ticks):
+    at tick t, stage s processes microbatch m = t - s; activations move
+    stage s -> s+1 each tick via ``lax.ppermute`` (COMM_SEND/RECV in the
+    Chakra trace).  Stage 0 injects microbatch t at tick t; the last stage
+    accumulates outputs, which a final psum replicates (only the last stage
+    holds non-zeros, so the psum is the identity broadcast).
+
+    ``stage_params`` leaves lead with the stage dim (sharded over ``axis``);
+    ``x``: [M, mb, ...] microbatched input (replicated).
+    """
+    n_stages = int(mesh.shape[axis])
+
+    def local_fn(params, xs):
+        # params arrive as [1(stage), L/S, ...]: strip the sharded dim
+        params = jax.tree.map(lambda p: p[0], params)
+        # xs: [M, mb, ...] replicated
+        stage = lax.axis_index(axis)
+        total_ticks = n_microbatches + n_stages - 1
+        perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+        mb_shape = xs.shape[1:]
+
+        def take(t):
+            return lax.dynamic_index_in_dim(
+                xs, jnp.clip(t, 0, n_microbatches - 1), 0, keepdims=False)
+
+        def tick(carry, t):
+            cur, out = carry
+            active = (t >= stage) & (t - stage < n_microbatches)
+            y = stage_fn(params, cur)
+            y = jnp.where(active, y, cur)
+            m = jnp.clip(t - stage, 0, n_microbatches - 1)
+            write = active & (stage == n_stages - 1)
+            upd = lax.dynamic_update_index_in_dim(out, y, m, 0)
+            out = jnp.where(write, upd, out)
+            nxt = lax.ppermute(y, axis, perm)
+            cur = jnp.where(stage == 0, take(t + 1), nxt)
+            return (cur, out), None
+
+        cur0 = jnp.where(stage == 0, take(0), jnp.zeros(mb_shape, xs.dtype))
+        out0 = jnp.zeros_like(xs)
+        (_, out), _ = lax.scan(tick, (cur0, out0),
+                               jnp.arange(total_ticks, dtype=jnp.int32))
+        # only the last stage holds results; psum == broadcast to all
+        return lax.psum(jnp.where(stage == n_stages - 1, out,
+                                  jnp.zeros_like(out)), axis)
+
+    return shard_map(local_fn, mesh=mesh,
+                     in_specs=(P(axis), P()), out_specs=P(),
+                     check_rep=False)
+
+
+def stage_stack(params_stacked: Any, n_stages: int) -> Any:
+    """[L, ...] param stack -> [S, L/S, ...] stage-major view."""
+    def f(x):
+        L = x.shape[0]
+        assert L % n_stages == 0
+        return x.reshape(n_stages, L // n_stages, *x.shape[1:])
+    return jax.tree.map(f, params_stacked)
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    """GPipe bubble overhead = (S-1)/(M+S-1)."""
+    return (n_stages - 1) / (n_microbatches + n_stages - 1)

@@ -1,0 +1,190 @@
+"""Logical-axis sharding rules -> PartitionSpec plans.
+
+Model code annotates tensors with *logical* axis names (``shard(x, "batch",
+"seq", "embed")``); a rules table maps logical names to mesh axes.  This is
+the MaxText/flax-linen "logical axis" pattern, reduced to one small module.
+
+Robustness rule: a logical->mesh mapping is applied only when the tensor
+dimension is divisible by the mesh-axis size, otherwise that dim is left
+replicated.  This one rule cleanly handles every awkward case in the assigned
+pool (hymba's 25 heads, GQA kv=8/5/2 vs a 16-way model axis, batch=1 decode)
+without per-arch special cases — and the *dropped* shardings are exactly the
+hillclimbing targets that §Perf iterates on (e.g. padded-heads TP).
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Iterator, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+# ---------------------------------------------------------------- rule table
+
+# Default logical-axis rules for the production mesh (("pod",) "data", "model").
+# "batch" shards over data-like axes; everything weight/feature-like shards
+# over "model"; "kv_seq" (the decode KV-cache sequence dim) shards over
+# "model" — the distributed flash-decode design (partial-softmax combine is
+# expressed through XLA's handling of reductions over sharded dims).
+def default_rules(multi_pod: bool = False) -> Dict[str, AxisVal]:
+    batch: AxisVal = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": batch,
+        "seq": "model",          # sequence-parallel residual stream (SP)
+        "embed": None,
+        "heads": "model",        # q heads (TP) — auto-dropped if not divisible
+        "kv_heads": "model",
+        "head_dim": None,
+        "qkv": "model",          # fused q/kv feature dim
+        "ff": "model",           # MLP hidden (TP)
+        "vocab": "model",
+        "experts": "model",      # (virtual-)expert dim for MoE dispatch
+        "capacity": None,
+        "kv_seq": "model",       # decode KV cache sequence shards over model
+        "ssm_inner": "model",    # Mamba inner dim
+        "state": None,
+        "frames": None,
+    }
+
+
+def fsdp_rules(multi_pod: bool = False) -> Dict[str, AxisVal]:
+    """FSDP/ZeRO-3-flavored rules (§Perf experiment): the batch shards over
+    EVERY mesh axis (per-device batch 1 at 256 chips), weights stay sharded
+    over "model" (all-gathered at use, reduce-scattered in backward by
+    GSPMD), and no tensor-parallel activation collectives exist at all.
+    Trades per-layer activation all-reduces (O(B*S*D) each) for per-layer
+    weight gathers (O(params/L)) — the right trade below the TP threshold."""
+    batch: AxisVal = ("pod", "data", "model") if multi_pod \
+        else ("data", "model")
+    return {
+        "batch": batch,
+        "seq": None,
+        "embed": None,
+        "heads": None,            # batch already owns "model"
+        "kv_heads": None,
+        "head_dim": None,
+        "qkv": "model",           # weight shards (gathered at use)
+        "ff": "model",
+        "vocab": "model",
+        "experts": "model",
+        "capacity": None,
+        "kv_seq": "model",
+        "ssm_inner": "model",
+        "state": None,
+        "frames": None,
+    }
+
+
+RULE_SETS = {"default": default_rules, "fsdp": fsdp_rules}
+
+
+class _Ctx(threading.local):
+    def __init__(self) -> None:
+        self.rules: Optional[Dict[str, AxisVal]] = None
+        self.mesh: Optional[Mesh] = None
+
+
+_CTX = _Ctx()
+
+
+@contextmanager
+def use_rules(rules: Dict[str, AxisVal], mesh: Optional[Mesh] = None) -> Iterator[None]:
+    """Activate logical->mesh rules (and optionally a mesh) for model code."""
+    prev = (_CTX.rules, _CTX.mesh)
+    _CTX.rules = rules
+    _CTX.mesh = mesh or (jax.sharding.get_abstract_mesh()
+                         if hasattr(jax.sharding, "get_abstract_mesh") else None)
+    try:
+        yield
+    finally:
+        _CTX.rules, _CTX.mesh = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    if _CTX.mesh is not None:
+        return _CTX.mesh
+    try:
+        m = jax.sharding.get_abstract_mesh()  # inside jit with use_mesh
+        if m is not None and m.shape:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def _axis_size(mesh: Mesh, axis: AxisVal) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return int(mesh.shape[axis])
+    n = 1
+    for a in axis:
+        n *= int(mesh.shape[a])
+    return n
+
+
+def spec_for(shape: Sequence[int], logical: Sequence[Optional[str]],
+             rules: Optional[Dict[str, AxisVal]] = None,
+             mesh: Optional[Mesh] = None) -> P:
+    """PartitionSpec for `shape` under the active rules, with the
+    divisibility guard (non-divisible dims fall back to replicated)."""
+    rules = rules if rules is not None else (_CTX.rules or {})
+    mesh = mesh if mesh is not None else _CTX.mesh
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        ax = rules.get(name) if name else None
+        if ax is None:
+            out.append(None)
+            continue
+        key = ax if isinstance(ax, str) else tuple(ax)
+        if key in used or (isinstance(key, tuple) and any(a in used for a in key)):
+            out.append(None)        # a mesh axis may appear once per spec
+            continue
+        if mesh is not None:
+            sz = _axis_size(mesh, ax)
+            if sz <= 1 or int(dim) % sz != 0:
+                out.append(None)
+                continue
+        out.append(ax)
+        if isinstance(key, tuple):
+            used.update(key)
+        else:
+            used.add(key)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Apply a sharding constraint by logical axis names (no-op without rules
+    or mesh, so reduced-config CPU smoke tests run the same code path)."""
+    if _CTX.rules is None:
+        return x
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    spec = spec_for(x.shape, logical, _CTX.rules, mesh)
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    except ValueError:
+        return jax.lax.with_sharding_constraint(x, spec)
+
+
+def named_sharding(mesh: Mesh, shape: Sequence[int],
+                   logical: Sequence[Optional[str]],
+                   rules: Dict[str, AxisVal]) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(shape, logical, rules, mesh))
+
+
+def tree_shardings(mesh: Mesh, spec_tree, logical_tree, rules: Dict[str, AxisVal]):
+    """Map (ShapeDtypeStruct pytree, logical-axes pytree) -> NamedSharding tree."""
+    # tree_map flattens following spec_tree's structure; the logical tree may
+    # carry tuples at spec_tree's leaf positions (flatten_up_to semantics).
+    return jax.tree.map(
+        lambda sds, log: named_sharding(mesh, sds.shape, log, rules),
+        spec_tree, logical_tree)

@@ -1,0 +1,4 @@
+"""Serving: prefill/decode engine with P/D-disaggregation + offload tracing."""
+from .engine import Engine, ServeConfig
+
+__all__ = ["Engine", "ServeConfig"]

@@ -1,0 +1,200 @@
+"""Serving engine: prefill/decode with batched requests, P/D disaggregation
+tracing, MoE routing stats, and KV host-offload accounting.
+
+Maps the paper's §5.5 inference studies onto JAX serving:
+  * prefill -> decode split with an explicit KV-transfer step whose
+    per-layer message sizes are recorded as COMM_SEND/RECV nodes (Fig 15),
+  * per-layer MoE routing bin counts embedded in trace nodes (Fig 14),
+  * optional KV offload to host memory with Memcpy D2H/H2D node accounting
+    (Table 7).
+
+Prefill for attention-family archs uses the fast forward-with-cache-capture
+path; recurrent archs (xlstm, hymba's mamba branch) prefill by step-scan —
+the exact recurrence, which doubles as the reference for cache-consistency
+tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import SHAPES, ArchConfig, ShapeSpec
+from ..core.schema import CollectiveType, ExecutionTrace, NodeType
+from ..models import decode as decode_mod
+from ..models import model_zoo
+from ..models.model_zoo import Model
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 128
+    offload_kv: bool = False       # host-offload the KV cache between steps
+    trace: Optional[ExecutionTrace] = None
+
+
+def _ensure_shape(cfg: ArchConfig, batch: int, max_len: int) -> str:
+    name = f"_serve_{batch}x{max_len}"
+    if name not in SHAPES:
+        SHAPES[name] = ShapeSpec(name, max_len, batch, "decode")
+    return name
+
+
+class Engine:
+    """Minimal production-shaped engine: submit prompts, get generations."""
+
+    def __init__(self, model: Model, params: Any,
+                 serve_cfg: Optional[ServeConfig] = None) -> None:
+        self.model = model
+        self.params = params
+        self.cfg = serve_cfg or ServeConfig()
+        self._decode = jax.jit(
+            lambda p, s, t: decode_mod.decode_step(model, p, s, t))
+        self._offloaded: Optional[Any] = None
+        self.stats: Dict[str, Any] = {"memcpy_dtoh": 0, "memcpy_htod": 0,
+                                      "kv_transfer_bytes": [],
+                                      "moe_routing": []}
+
+    # ----------------------------------------------------------- prefill
+    def prefill(self, tokens: jax.Array,
+                extra: Optional[Dict[str, jax.Array]] = None
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """tokens: [B, S_prompt] -> (next-token logits [B, V], decode state)."""
+        cfg = self.model.cfg
+        B, S = tokens.shape
+        shape_name = _ensure_shape(cfg, B, self.cfg.max_len)
+        state = decode_mod.init_state(cfg, shape_name)
+        if cfg.block_pattern in ("attn", "moe", "encdec"):
+            batch = {"tokens": tokens, **(extra or {})}
+            out = self.model.forward(self.params, batch, capture_cache=True)
+            x, caches, enc_out = out[0], out[2], out[3]
+            ks, vs = caches                     # [L, B, S, Hkv, hd]
+            pad = self.cfg.max_len - S
+            state["k"] = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0),
+                                      (0, 0))).astype(state["k"].dtype)
+            state["v"] = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0),
+                                      (0, 0))).astype(state["v"].dtype)
+            state["cache_len"] = jnp.int32(S)
+            if cfg.block_pattern == "encdec":
+                ck, cv = self._cross_caches(enc_out)
+                state["ck"], state["cv"] = ck, cv
+            logits = model_zoo._head_logits(self.params, cfg,
+                                            x[:, -1:])[:, 0, :cfg.vocab]
+            self._record_kv_transfer(state)
+            return logits.astype(jnp.float32), state
+        # recurrent archs: exact step-scan prefill
+        logits = None
+        for i in range(S):
+            logits, state = self._decode(self.params, state, tokens[:, i:i+1])
+        self._record_kv_transfer(state)
+        return logits, state
+
+    def _cross_caches(self, enc_out: jax.Array):
+        cfg = self.model.cfg
+        hd = cfg.head_dim_
+        B, T, _ = enc_out.shape
+
+        def kv(blk):
+            h = enc_out
+            k = jnp.einsum("bsd,dq->bsq", h, blk["cross"]["wk"]).reshape(
+                B, T, cfg.n_kv_heads, hd)
+            v = jnp.einsum("bsd,dq->bsq", h, blk["cross"]["wv"]).reshape(
+                B, T, cfg.n_kv_heads, hd)
+            return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+
+        ks, vs = jax.vmap(kv)(self.params["blocks"])
+        return ks, vs
+
+    # ------------------------------------------------------------ decode
+    def decode(self, state: Dict[str, Any], last_logits: jax.Array,
+               n_steps: int, greedy: bool = True
+               ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """Generate n_steps tokens; returns (tokens [B, n], final state)."""
+        B = last_logits.shape[0]
+        outs: List[jax.Array] = []
+        logits = last_logits
+        for _ in range(n_steps):
+            token = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            outs.append(token)
+            if self.cfg.offload_kv:
+                self._offload(state)
+                state = self._restore(state)
+            self._record_moe_routing(token)
+            logits, state = self._decode(self.params, state, token)
+        return jnp.concatenate(outs, axis=1), state
+
+    def generate(self, tokens: jax.Array, n_steps: int,
+                 extra: Optional[Dict[str, jax.Array]] = None) -> jax.Array:
+        logits, state = self.prefill(tokens, extra)
+        out, _ = self.decode(state, logits, n_steps)
+        return out
+
+    # --------------------------------------------------------- tracing
+    def _record_kv_transfer(self, state: Dict[str, Any]) -> None:
+        """P/D disaggregation: per-layer KV message sizes (Fig 15)."""
+        sizes = []
+        for key in ("k", "v"):
+            if key in state:
+                arr = state[key]
+                per_layer = arr.nbytes // arr.shape[0]
+                sizes.extend([per_layer] * arr.shape[0])
+        self.stats["kv_transfer_bytes"] = sizes
+        if self.cfg.trace is not None and sizes:
+            prev = None
+            for i, b in enumerate(sizes):
+                n = self.cfg.trace.add_node(
+                    name=f"kv_transfer/layer{i % (len(sizes) // 2)}",
+                    type=NodeType.COMM_SEND,
+                    comm_type=CollectiveType.POINT_TO_POINT,
+                    comm_bytes=int(b), comm_src=0, comm_dst=1,
+                    attrs={"op": "kv_transfer", "stage": "prefill->decode"})
+                if prev is not None:
+                    n.ctrl_deps.append(prev)
+                prev = n.id
+
+    def _record_moe_routing(self, token: jax.Array) -> None:
+        cfg = self.model.cfg
+        if not cfg.is_moe:
+            return
+        from ..models.moe import routing_stats
+        x = jnp.take(self.params["embed"], token[:, 0], axis=0)[:, None, :]
+        blk0 = jax.tree.map(lambda a: a[0], self.params["blocks"])
+        bins = routing_stats(x, blk0["moe"]["router"], cfg.n_experts,
+                             cfg.top_k)
+        self.stats["moe_routing"].append([int(b) for b in bins])
+        if self.cfg.trace is not None:
+            self.cfg.trace.add_node(
+                name=f"moe_route/step{len(self.stats['moe_routing'])}",
+                type=NodeType.COMP,
+                attrs={"op": "moe_routing",
+                       "expert_bins": [int(b) for b in bins]})
+
+    # -------------------------------------------------------- KV offload
+    def _offload(self, state: Dict[str, Any]) -> None:
+        """Simulate host offload (Table 7): device->host copy accounting."""
+        host = jax.tree.map(lambda a: jax.device_get(a), state)
+        self._offloaded = host
+        nbytes = sum(a.nbytes for a in jax.tree.leaves(state)
+                     if hasattr(a, "nbytes"))
+        self.stats["memcpy_dtoh"] += 1
+        if self.cfg.trace is not None:
+            self.cfg.trace.add_node(
+                name=f"kv_offload/store{self.stats['memcpy_dtoh']}",
+                type=NodeType.MEM_STORE, comm_bytes=nbytes,
+                attrs={"op": "start_store_kv", "bytes": nbytes})
+
+    def _restore(self, state: Dict[str, Any]) -> Dict[str, Any]:
+        assert self._offloaded is not None
+        restored = jax.tree.map(jnp.asarray, self._offloaded)
+        self.stats["memcpy_htod"] += 1
+        if self.cfg.trace is not None:
+            nbytes = sum(getattr(a, "nbytes", 0)
+                         for a in jax.tree.leaves(restored))
+            self.cfg.trace.add_node(
+                name=f"kv_offload/load{self.stats['memcpy_htod']}",
+                type=NodeType.MEM_LOAD, comm_bytes=nbytes,
+                attrs={"op": "start_load_kv", "bytes": nbytes})
+        return restored

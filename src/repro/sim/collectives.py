@@ -1,0 +1,83 @@
+"""Analytic collective-communication models (alpha-beta, per algorithm).
+
+The what-if simulator (paper §4.3.1 / Fig 12) needs collective completion
+times as a function of payload, group size, topology, and link bandwidth.
+We model the standard algorithms:
+
+  ring      all-reduce 2(n-1)/n, all-gather/reduce-scatter (n-1)/n
+  tree      all-reduce 2*log2(n) latency-optimized
+  a2a mesh  all-to-all: each rank sends (n-1)/n of its payload, one flow per
+            peer — many small flows (the paper's §5.3 mixing study hinges on
+            this structural difference vs. the few big ring flows)
+
+Topology enters through the effective per-flow bandwidth and hop latency
+supplied by the Topology object (sim.topology).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from ..core.schema import CollectiveType
+
+
+@dataclass(frozen=True)
+class CollectiveModel:
+    algorithm: str = "ring"            # ring | tree
+
+    def time_s(self, kind: CollectiveType, payload_bytes: float, group: int,
+               link_bw: float, latency_s: float) -> float:
+        """Completion time of one collective over `group` ranks."""
+        if group <= 1 or payload_bytes <= 0:
+            return 0.0
+        n = group
+        if kind == CollectiveType.ALL_REDUCE:
+            if self.algorithm == "tree":
+                steps = 2 * math.ceil(math.log2(n))
+                return steps * (latency_s + payload_bytes / link_bw / n)
+            return (2 * (n - 1) / n) * payload_bytes / link_bw \
+                + 2 * (n - 1) * latency_s
+        if kind in (CollectiveType.ALL_GATHER, CollectiveType.REDUCE_SCATTER):
+            return ((n - 1) / n) * payload_bytes / link_bw \
+                + (n - 1) * latency_s
+        if kind == CollectiveType.ALL_TO_ALL:
+            # each rank exchanges payload/n with each of n-1 peers
+            per_peer = payload_bytes / n
+            return ((n - 1) * per_peer) / link_bw + latency_s
+        if kind == CollectiveType.BROADCAST:
+            return payload_bytes / link_bw + math.ceil(math.log2(n)) * latency_s
+        if kind == CollectiveType.COLLECTIVE_PERMUTE:
+            return payload_bytes / link_bw + latency_s
+        if kind == CollectiveType.POINT_TO_POINT:
+            return payload_bytes / link_bw + latency_s
+        if kind == CollectiveType.BARRIER:
+            return 2 * math.ceil(math.log2(n)) * latency_s
+        return payload_bytes / link_bw + latency_s
+
+    def flow_count(self, kind: CollectiveType, group: int) -> int:
+        """Number of concurrent flows the collective puts on the fabric —
+        the structural property behind the paper's §5.3 congestion study."""
+        if group <= 1:
+            return 0
+        if kind == CollectiveType.ALL_TO_ALL:
+            return group * (group - 1)          # full mesh of small flows
+        if kind == CollectiveType.ALL_REDUCE and self.algorithm == "ring":
+            return group                        # few fat ring flows
+        if kind in (CollectiveType.ALL_GATHER, CollectiveType.REDUCE_SCATTER):
+            return group
+        return max(group - 1, 1)
+
+
+def busbw_factor(kind: CollectiveType, group: int) -> float:
+    """NCCL-tests style bus-bandwidth correction (Table 6 replay reports):
+    busbw = payload / time * factor."""
+    n = group
+    if n <= 1:
+        return 1.0
+    if kind == CollectiveType.ALL_REDUCE:
+        return 2 * (n - 1) / n
+    if kind in (CollectiveType.ALL_GATHER, CollectiveType.REDUCE_SCATTER,
+                CollectiveType.ALL_TO_ALL):
+        return (n - 1) / n
+    return 1.0

@@ -1,0 +1,244 @@
+"""Event-driven trace simulator (the ASTRA-sim role, paper §4.3.1).
+
+Consumes per-rank Chakra ETs through the dependency-aware feeder and models:
+  * one serial compute resource per NPU (durations from the trace or the
+    TPU cost model), with per-rank ``speed_factor`` (straggler injection),
+  * a shared fabric where collective completion times come from the
+    alpha-beta models plus *congestion*: concurrent flows beyond the fabric
+    capacity share bandwidth, and a DCQCN-flavored throttle hits many-small-
+    flow collectives (all-to-all) disproportionately while fat ring flows
+    (all-reduce) are active — reproducing the paper's §5.3 finding that
+    mixing the two long-tails the all-to-all FCT distribution,
+  * collective rendezvous across ranks (a collective starts when every
+    member rank has reached it; early arrivals keep issuing independent
+    compute — compute/comm overlap falls out of the dependency structure).
+
+Outputs: per-rank makespan, per-collective time totals (Fig 7), flow
+records with start/end (Figs 10/11 CDFs), link-utilization samples (Fig 13).
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from ..core.feeder import ETFeeder
+from ..core.schema import CollectiveType, ETNode, ExecutionTrace, NodeType
+from .collectives import CollectiveModel
+from .topology import Fabric
+
+COLL_NAME = {
+    CollectiveType.ALL_REDUCE: "AllReduce",
+    CollectiveType.ALL_GATHER: "AllGather",
+    CollectiveType.REDUCE_SCATTER: "ReduceScatter",
+    CollectiveType.ALL_TO_ALL: "All2All",
+    CollectiveType.POINT_TO_POINT: "P2P",
+    CollectiveType.BROADCAST: "Broadcast",
+    CollectiveType.BARRIER: "Barrier",
+    CollectiveType.COLLECTIVE_PERMUTE: "CollPermute",
+}
+
+
+@dataclass
+class FlowRecord:
+    kind: str
+    start_s: float
+    end_s: float
+    payload: float
+    group: int
+    throttled: float = 1.0
+
+    @property
+    def fct_s(self) -> float:
+        return self.end_s - self.start_s
+
+
+@dataclass
+class SimConfig:
+    congestion: bool = True
+    dcqcn_small_flow_penalty: float = 3.0   # extra sharing for mesh flows
+    collective_model: CollectiveModel = field(default_factory=CollectiveModel)
+    speed_factors: Dict[int, float] = field(default_factory=dict)  # stragglers
+
+
+@dataclass
+class SimResult:
+    makespan_s: float
+    per_rank_finish_s: List[float]
+    collective_time_s: Dict[str, float]
+    collective_bytes: Dict[str, float]
+    flows: List[FlowRecord]
+    compute_busy_s: float
+    exposed_comm_s: float
+    link_util_timeline: List[Tuple[float, float]]
+
+    def summary(self) -> str:
+        coll = ", ".join(f"{k}={v * 1e3:.2f}ms"
+                         for k, v in sorted(self.collective_time_s.items()))
+        return (f"makespan={self.makespan_s * 1e3:.2f}ms "
+                f"compute={self.compute_busy_s * 1e3:.2f}ms "
+                f"exposed_comm={self.exposed_comm_s * 1e3:.2f}ms [{coll}]")
+
+
+class Simulator:
+    """Discrete-event simulation over per-rank ETs + a fabric."""
+
+    def __init__(self, traces: Sequence[ExecutionTrace], fabric: Fabric,
+                 cfg: Optional[SimConfig] = None) -> None:
+        self.traces = list(traces)
+        self.fabric = fabric
+        self.cfg = cfg or SimConfig()
+
+    def run(self, max_events: int = 2_000_000) -> SimResult:
+        cfg = self.cfg
+        n_ranks = len(self.traces)
+        feeders = [ETFeeder(t, policy="comm_priority") for t in self.traces]
+        rank_time = [0.0] * n_ranks
+        compute_busy = 0.0
+        coll_time: Dict[str, float] = {}
+        coll_bytes: Dict[str, float] = {}
+        flows: List[FlowRecord] = []
+        util: List[Tuple[float, float]] = []
+        active_flows: List[Tuple[float, int, str]] = []   # (end, flows, kind)
+
+        # rendezvous state: key -> {rank: (node_id, arrive_time)}
+        pending: Dict[Tuple, Dict[int, Tuple[int, float]]] = {}
+        occurrence: Dict[Tuple[int, Tuple], int] = {}
+
+        # event heap: (time, seq, kind, payload)
+        #   kind 0 = wake rank (payload=rank): try to issue ready nodes
+        #   kind 1 = completion (payload=(rank, node_id)): release deps
+        heap: List[Tuple[float, int, int, Any]] = [
+            (0.0, r, 0, r) for r in range(n_ranks)]
+        heapq.heapify(heap)
+        events = 0
+        seq = n_ranks
+
+        def flows_at(t: float) -> int:
+            return sum(c for end, c, _ in active_flows if end > t)
+
+        def fat_at(t: float) -> bool:
+            return any(end > t and k == "AllReduce"
+                       for end, _, k in active_flows)
+
+        def push(t: float, kind: int, payload) -> None:
+            nonlocal seq
+            seq += 1
+            heapq.heappush(heap, (t, seq, kind, payload))
+
+        def launch_collective(members: Dict[int, Tuple[int, float]],
+                              node: ETNode, group: int) -> None:
+            """All members arrived: collectives are ASYNC — they occupy the
+            fabric for [start, end] but member ranks keep issuing
+            independent work; dependents release at the completion event."""
+            start = max(at for _, at in members.values())
+            dur, throttle, kindname = self._comm_time(node, group, start,
+                                                      flows_at, fat_at)
+            end = start + dur
+            coll_time[kindname] = coll_time.get(kindname, 0.0) + dur
+            coll_bytes[kindname] = (coll_bytes.get(kindname, 0.0)
+                                    + float(node.comm_bytes))
+            nf = cfg.collective_model.flow_count(node.comm_type, group)
+            active_flows.append((end, nf, kindname))
+            flows.append(FlowRecord(kindname, start, end,
+                                    float(node.comm_bytes), group, throttle))
+            for r, (nid, _) in members.items():
+                rank_time[r] = max(rank_time[r], end)
+                push(end, 1, (r, nid))
+
+        while heap and events < max_events:
+            t, _, kind, payload = heapq.heappop(heap)
+            events += 1
+            if kind == 1:
+                r, nid = payload
+                feeders[r].mark_completed(nid)
+                push(t, 0, r)
+                continue
+            rank = payload
+            feeder = feeders[rank]
+            if not feeder.has_pending():
+                continue
+            node = feeder.next_ready()
+            if node is None:
+                # blocked on an in-flight op; re-woken by its completion
+                continue
+
+            if node.is_comm and n_ranks > 1:
+                pg = self.traces[rank].process_groups.get(node.comm_group)
+                ranks = tuple(r for r in (pg.ranks if pg and pg.ranks
+                                          else range(n_ranks))
+                              if r < n_ranks)
+                base = (int(node.comm_type), ranks, node.comm_tag or "")
+                occ = occurrence.get((rank, base), 0)
+                occurrence[(rank, base)] = occ + 1
+                key = (*base, occ)
+                pend = pending.setdefault(key, {})
+                pend[rank] = (node.id, t)
+                if len(pend) == len(ranks):
+                    launch_collective(pend, node, len(ranks))
+                    del pending[key]
+                push(t, 0, rank)     # keep issuing independent work
+            elif node.is_comm:
+                pg = self.traces[rank].process_groups.get(node.comm_group)
+                group = pg.size if pg and pg.size else 2
+                launch_collective({rank: (node.id, t)}, node, group)
+                push(t, 0, rank)     # async: the rank is not blocked
+            else:
+                dur = node.duration_micros * 1e-6
+                dur /= cfg.speed_factors.get(rank, 1.0)
+                end = t + dur
+                compute_busy += dur
+                rank_time[rank] = max(rank_time[rank], end)
+                push(end, 1, (rank, node.id))
+
+            if events % 64 == 0:
+                cap = max(self.fabric.capacity_flows, 1)
+                util.append((t, min(flows_at(t) / cap, 1.0)))
+
+        makespan = max(rank_time) if rank_time else 0.0
+        total_comm = sum(coll_time.values())
+        per_rank_compute = compute_busy / max(n_ranks, 1)
+        exposed = max(0.0, makespan - per_rank_compute)
+        return SimResult(
+            makespan_s=makespan,
+            per_rank_finish_s=rank_time,
+            collective_time_s=coll_time,
+            collective_bytes=coll_bytes,
+            flows=flows,
+            compute_busy_s=per_rank_compute,
+            exposed_comm_s=min(exposed, total_comm),
+            link_util_timeline=util,
+        )
+
+    def _comm_time(self, node: ETNode, group: int, t: float,
+                   flows_at, fat_at) -> Tuple[float, float, str]:
+        cfg = self.cfg
+        kindname = COLL_NAME.get(node.comm_type, "Comm")
+        base = cfg.collective_model.time_s(
+            node.comm_type, float(node.comm_bytes), group,
+            self.fabric.link_bw, self.fabric.latency_s)
+        if node.comm_type == CollectiveType.ALL_TO_ALL:
+            base *= self.fabric.a2a_hop_factor
+        throttle = 1.0
+        if cfg.congestion:
+            # bandwidth sharing with flows ALREADY on the fabric (a
+            # collective's own flows are priced by its alpha-beta model);
+            # capped: ECMP/multipath keeps the worst case bounded
+            others = flows_at(t)
+            throttle = min(1.0 + others / max(self.fabric.capacity_flows, 1),
+                           4.0)
+            # DCQCN-flavored: CNP rate cuts hit the many small flows of an
+            # all-to-all much harder while fat all-reduce flows are active
+            if node.comm_type == CollectiveType.ALL_TO_ALL and fat_at(t):
+                throttle *= cfg.dcqcn_small_flow_penalty
+            elif (node.comm_type == CollectiveType.ALL_REDUCE
+                    and others > self.fabric.capacity_flows):
+                throttle *= 1.5       # fat flows also degrade, less so
+        return base * throttle, throttle, kindname
+
+
+def simulate_single_trace(trace: ExecutionTrace, fabric: Fabric,
+                          cfg: Optional[SimConfig] = None) -> SimResult:
+    """Single-trace what-if (Fig 12 style: sweep topology/bandwidth)."""
+    return Simulator([trace], fabric, cfg).run()

@@ -1,0 +1,56 @@
+"""Simulator-facing topology wrapper over core.infragraph.
+
+Supplies the two numbers the collective models need — effective per-flow
+link bandwidth and hop latency — plus a fabric capacity used by the
+congestion model (how many concurrent full-rate flows the fabric absorbs
+before flows start sharing).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from ..core.infragraph import (InfraGraph, TPU_V5E, clos_two_tier,
+                               fully_connected, ring, switch, tpu_pod_2d)
+
+TOPOLOGIES = ("switch", "ring", "fully_connected", "clos", "tpu_pod")
+
+
+@dataclass
+class Fabric:
+    name: str
+    graph: InfraGraph
+    link_bw: float                   # bytes/s per direction per link
+    latency_s: float
+    capacity_flows: int              # concurrent full-rate flows absorbed
+    a2a_hop_factor: float = 1.0      # mean hop dilution for mesh traffic
+
+    @classmethod
+    def build(cls, name: str, n: int, link_bw: float = TPU_V5E["ici_link_bw"],
+              latency_s: float = TPU_V5E["ici_latency_s"]) -> "Fabric":
+        if name == "ring":
+            # all-to-all traffic crosses ~n/4 hops on average, sharing the
+            # intermediate ring links (switch/FC deliver point-to-point
+            # directly) — this is what separates ring from switch in Fig 12
+            g = ring(n, link_bw, latency_s)
+            return cls(name, g, link_bw, latency_s, capacity_flows=n,
+                       a2a_hop_factor=max(n / 4.0, 1.0))
+        elif name == "fully_connected":
+            # per-NPU egress split across n-1 peers; most links idle under
+            # ring-style collectives => poor utilization (paper Fig 12)
+            g = fully_connected(n, link_bw, latency_s)
+            return cls(name, g, link_bw / max(n - 1, 1), latency_s,
+                       capacity_flows=n * (n - 1))
+        elif name == "switch":
+            g = switch(n, link_bw, latency_s)
+            cap = n                       # full bisection through the switch
+        elif name == "clos":
+            g = clos_two_tier(n, leaf_ports=min(n, 16), nic_bw=link_bw,
+                              uplink_bw=2 * link_bw, latency_s=latency_s)
+            cap = n
+        elif name == "tpu_pod":
+            g = tpu_pod_2d()
+            cap = 2 * n                   # 2D torus: two rings per chip
+        else:
+            raise KeyError(f"unknown topology {name!r}; have {TOPOLOGIES}")
+        return cls(name, g, link_bw, latency_s, capacity_flows=cap)

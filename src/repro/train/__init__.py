@@ -1,0 +1,6 @@
+"""Training substrate: optimizer, train step, data, checkpointing, FT."""
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+from .train_step import init_train_state, make_train_step
+
+__all__ = ["AdamWConfig", "adamw_update", "init_opt_state",
+           "init_train_state", "make_train_step"]

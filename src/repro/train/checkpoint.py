@@ -1,0 +1,158 @@
+"""Sharded, elastic checkpointing.
+
+Layout: one directory per step containing
+  * ``manifest.json`` — tree structure, per-leaf shapes/dtypes/chunking,
+    step number, and a content checksum,
+  * one ``.npy`` chunk per (leaf, chunk) — leaves are chunked along dim 0 to
+    simulate per-shard files (and to allow partial/parallel restore).
+
+Elastic restore: chunks store *logical* (unsharded) array pieces, so a
+checkpoint written from a (16, 16) mesh restores onto any other mesh — the
+caller supplies target shardings and ``restore`` device_puts accordingly.
+Failure atomicity: writes go to ``<dir>.tmp`` then rename; a torn write is
+never visible as a valid checkpoint.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes  # noqa: F401  (registers bfloat16/fp8 dtype names with numpy)
+import numpy as np
+
+_CHUNK_BYTES = 64 << 20
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+_UINT_VIEW = {1: np.uint8, 2: np.uint16, 4: np.uint32}
+
+
+def _to_saveable(arr: np.ndarray) -> np.ndarray:
+    """npy files mangle ml_dtypes (bf16/fp8) arrays: store them as uint
+    views; the manifest records the logical dtype for the restore view."""
+    if arr.dtype.name in np.sctypeDict or arr.dtype.kind in "fiub":
+        try:
+            np.dtype(arr.dtype.name)
+            if arr.dtype.kind != "V" and arr.dtype.name not in (
+                    "bfloat16",) and not arr.dtype.name.startswith("float8"):
+                return arr
+        except TypeError:
+            pass
+    return arr.view(_UINT_VIEW[arr.dtype.itemsize])
+
+
+def _leaf_paths(tree: Any) -> List[Tuple[str, Any]]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save(state: Any, directory: str, step: int) -> str:
+    """Write one atomic checkpoint; returns its path."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    manifest: Dict[str, Any] = {"step": step, "leaves": {}}
+    h = hashlib.sha256()
+    for key, leaf in _leaf_paths(state):
+        arr = np.asarray(jax.device_get(leaf))
+        n_chunks = max(1, -(-arr.nbytes // _CHUNK_BYTES))
+        n_chunks = min(n_chunks, max(arr.shape[0], 1) if arr.ndim else 1)
+        manifest["leaves"][key] = {
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "chunks": n_chunks,
+        }
+        fname = key.replace("/", "__")
+        sarr = _to_saveable(arr)
+        if arr.ndim == 0 or n_chunks == 1:
+            np.save(os.path.join(tmp, f"{fname}.c0.npy"), sarr)
+            h.update(sarr.tobytes())
+        else:
+            for c, piece in enumerate(np.array_split(sarr, n_chunks, axis=0)):
+                np.save(os.path.join(tmp, f"{fname}.c{c}.npy"), piece)
+                h.update(piece.tobytes())
+    manifest["checksum"] = h.hexdigest()
+    with open(os.path.join(tmp, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(template: Any, directory: str, step: Optional[int] = None,
+            shardings: Any = None, verify: bool = True) -> Tuple[Any, int]:
+    """Load a checkpoint into ``template``'s tree structure.
+
+    ``shardings``: optional tree of NamedShardings (elastic restore onto any
+    mesh); without it arrays land on the default device.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as fh:
+        manifest = json.load(fh)
+    sh_map = {}
+    if shardings is not None:
+        sh_map = dict(_leaf_paths(shardings))
+    h = hashlib.sha256()
+    out_leaves: Dict[str, Any] = {}
+    for key, meta in manifest["leaves"].items():
+        fname = key.replace("/", "__")
+        pieces = [np.load(os.path.join(path, f"{fname}.c{c}.npy"))
+                  for c in range(meta["chunks"])]
+        arr = pieces[0] if len(pieces) == 1 else np.concatenate(pieces, 0)
+        for piece in pieces:
+            h.update(piece.tobytes())
+        want = _np_dtype(meta["dtype"])
+        if arr.dtype != want and arr.dtype.itemsize == want.itemsize \
+                and arr.dtype.kind == "u":
+            arr = arr.view(want)            # stored as a uint view
+        arr = arr.reshape(meta["shape"]).astype(want)
+        sh = sh_map.get(key)
+        out_leaves[key] = (jax.device_put(arr, sh) if sh is not None
+                           else jax.device_put(arr))
+    if verify and manifest.get("checksum") not in (None, h.hexdigest()):
+        raise IOError(f"checkpoint {path} checksum mismatch (torn write?)")
+    # rebuild the tree in template order
+    tmpl = _leaf_paths(template)
+    leaves = [out_leaves[k] for k, _ in tmpl]
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+def prune(directory: str, keep: int = 3) -> None:
+    """Keep only the newest ``keep`` checkpoints."""
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"))

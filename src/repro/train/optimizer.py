@@ -1,0 +1,141 @@
+"""Sharded AdamW with fp32 master weights and ZeRO-1-style state sharding.
+
+Parameters are bf16 and sharded per the model's logical axes; optimizer
+moments + the fp32 master copy additionally shard their largest replicated
+dim over the "data" axes (ZeRO-1): at (16,16) the optimizer state of a 20B
+model drops from ~10 GB/device (params-like sharding) to ~0.7 GB/device.
+
+Implemented from scratch (no optax dependency): cosine-with-warmup schedule,
+global-norm clipping, decoupled weight decay, bias correction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    min_lr: float = 3e-5
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr + 0.5 * (cfg.peak_lr - cfg.min_lr) * (1 + jnp.cos(
+        jnp.pi * frac))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params: Dict[str, Any]) -> Dict[str, Any]:
+    f32 = lambda t: jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), t)
+    return {
+        "m": f32(params),
+        "v": f32(params),
+        "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_specs(param_specs: Dict[str, Any]) -> Dict[str, Any]:
+    f32 = lambda t: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), t)
+    return {"m": f32(param_specs), "v": f32(param_specs),
+            "master": f32(param_specs),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def global_norm(tree: Dict[str, Any]) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def adamw_update(cfg: AdamWConfig, params: Dict[str, Any],
+                 grads: Dict[str, Any], opt: Dict[str, Any]
+                 ) -> Tuple[Dict[str, Any], Dict[str, Any], Dict[str, Any]]:
+    """One AdamW step; returns (new bf16 params, new opt state, stats)."""
+    step = opt["step"] + 1
+    lr = lr_at(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        master = master - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                                + cfg.weight_decay * master)
+        return m, v, master
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(opt["m"])
+    flat_v = treedef.flatten_up_to(opt["v"])
+    flat_w = treedef.flatten_up_to(opt["master"])
+    new_m, new_v, new_w = [], [], []
+    for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w):
+        m2, v2, w2 = upd(g, m, v, w)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_w.append(w2)
+    params_tree = jax.tree.unflatten(treedef, flat_g)  # structure only
+    old_params_flat = treedef.flatten_up_to(params)
+    new_params = jax.tree.unflatten(
+        treedef, [w.astype(p.dtype) for w, p in zip(new_w, old_params_flat)])
+    new_opt = {"m": jax.tree.unflatten(treedef, new_m),
+               "v": jax.tree.unflatten(treedef, new_v),
+               "master": jax.tree.unflatten(treedef, new_w),
+               "step": step}
+    return new_params, new_opt, {"lr": lr, "grad_norm": gnorm}
+
+
+# ------------------------------------------------------------- ZeRO-1 specs
+def zero1_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh,
+               data_axes: Tuple[str, ...] = ("data",)) -> P:
+    """Extend a param PartitionSpec: shard the first replicated, divisible
+    dim over the data axes (optimizer-state-only sharding, ZeRO stage 1)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    dsize = 1
+    for a in data_axes:
+        dsize *= int(mesh.shape[a])
+    if dsize <= 1:
+        return spec
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % dsize == 0 and dim >= dsize:
+            entries[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+            break
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def zero1_shardings(mesh: Mesh, param_shardings, param_specs,
+                    data_axes: Tuple[str, ...] = ("data",)):
+    """Optimizer-state NamedShardings derived from param shardings."""
+    def f(sh: NamedSharding, sds):
+        return NamedSharding(mesh, zero1_spec(sh.spec, sds.shape, mesh,
+                                              data_axes))
+    tree = jax.tree.map(f, param_shardings, param_specs)
+    return {"m": tree, "v": tree, "master": tree,
+            "step": NamedSharding(mesh, P())}

@@ -1,0 +1,23 @@
+import os
+import sys
+
+# smoke tests and benches must see ONE device (the dry-run sets its own
+# XLA_FLAGS before any import; never set device-count flags globally here)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+from repro.configs import base as config_base
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _register_smoke_shapes():
+    config_base.SHAPES.setdefault(
+        "smoke_dec", config_base.ShapeSpec("smoke_dec", 32, 2, "decode"))
+    yield
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

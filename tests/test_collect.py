@@ -1,0 +1,122 @@
+"""Collection pipeline: jaxpr observer, HLO parsing/cost, capture e2e."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.collect.capture import capture, capture_per_rank
+from repro.collect.hlo_text import (collective_bytes, parse_instructions,
+                                    shape_bytes)
+from repro.collect.hlo_trace import build_device_trace, module_cost
+from repro.collect.jaxpr_observer import observe
+from repro.configs import base as config_base
+from repro.core import NodeType
+from repro.models import model_zoo
+
+HLO_SAMPLE = """
+HloModule test
+
+ENTRY %main (p0: bf16[128,256]) -> bf16[128,256] {
+  %p0 = bf16[128,256]{1,0} parameter(0)
+  %ar = bf16[128,256]{1,0} all-reduce(%p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = bf16[512,256]{1,0} all-gather(%ar), replica_groups={{0,1,2,3}}, dimensions={0}
+  ROOT %out = bf16[128,256]{1,0} slice(%ag), slice={[0:128], [0:256]}
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("bf16[128,256]{1,0}") == 128 * 256 * 2
+    assert shape_bytes("f32[8]") == 32
+    assert shape_bytes("(f32[2,2], bf16[4])") == 16 + 8
+    assert shape_bytes("token[]") == 0
+
+
+def test_parse_and_collective_bytes():
+    instrs = parse_instructions(HLO_SAMPLE)
+    ops = {i.opcode for i in instrs}
+    assert {"parameter", "all-reduce", "all-gather", "slice"} <= ops
+    cb = collective_bytes(HLO_SAMPLE)
+    assert cb["all-reduce"] == 128 * 256 * 2
+    assert cb["all-gather"] == 128 * 256 * 2        # operand, not result
+    assert cb["total"] == cb["all-reduce"] + cb["all-gather"]
+
+
+def test_module_cost_scales_while_trips():
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    hlo = jax.jit(f).lower(jnp.ones((128, 128))).compile().as_text()
+    cost = module_cost(hlo)
+    expected = 2 * 128 ** 3 * 10
+    assert 0.9 * expected < cost["flops"] < 1.3 * expected
+
+
+def test_observer_exact_ssa_deps():
+    def f(a, b):
+        c = a @ b
+        d = jnp.tanh(c)
+        return d + a
+
+    et = observe(f, jnp.ones((4, 4)), jnp.ones((4, 4)))
+    assert et.is_acyclic()
+    ops = [n.attrs.get("op") for n in et.sorted_nodes()]
+    assert "dot_general" in ops and "tanh" in ops
+    tanh_node = next(n for n in et if n.attrs.get("op") == "tanh")
+    dot_node = next(n for n in et if n.attrs.get("op") == "dot_general")
+    assert dot_node.id in tanh_node.data_deps
+
+
+def test_observer_compact_loops():
+    def f(x):
+        def body(c, _):
+            return c * 2.0, None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    et = observe(f, jnp.ones((4,)))
+    scan_nodes = [n for n in et if n.attrs.get("op") == "scan"]
+    assert len(scan_nodes) == 1
+    assert scan_nodes[0].attrs["iterations"] == 7
+
+
+def test_capture_pre_and_post(rng_key):
+    cfg = config_base.get("deepseek-7b").reduced()
+    model = model_zoo.build(cfg, model_axis=1)
+    params = model.init(rng_key)
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+             "labels": jnp.ones((2, 16), jnp.int32)}
+
+    fn = lambda p, b: model.loss_fn(p, b)[0]
+    pre, rep = capture(fn, params, batch, stage="pre")
+    assert pre.metadata["stage"] == "pre"
+    assert len(pre) > 10 and pre.is_acyclic()
+
+    post, rep2 = capture(fn, params, batch, stage="post", execute=True)
+    assert post.is_acyclic()
+    assert post.metadata.get("linked")
+    assert "cost" in rep2 and rep2["cost"]["flops"] > 0
+
+
+def test_capture_per_rank():
+    def f(x):
+        return x * 2
+
+    traces, _ = capture_per_rank(f, jnp.ones((4,)), world_size=4,
+                                 stage="pre")
+    assert len(traces) == 4
+    assert [t.rank for t in traces] == [0, 1, 2, 3]
+
+
+def test_device_trace_from_hlo():
+    def f(a, b):
+        return jnp.tanh(a @ b)
+
+    hlo = jax.jit(f).lower(jnp.ones((64, 64)),
+                           jnp.ones((64, 64))).compile().as_text()
+    et = build_device_trace(hlo)
+    assert et.is_acyclic()
+    assert len(et) > 0
+    assert all(n.duration_micros >= 0 for n in et)

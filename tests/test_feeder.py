@@ -1,0 +1,80 @@
+"""Dependency-aware feeder: ordering invariants under every policy,
+windowing, elastic extension (hypothesis property tests)."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import ETFeeder, ExecutionTrace, NodeType, POLICIES
+from repro.core.serialization import save
+
+
+@st.composite
+def dag(draw):
+    n = draw(st.integers(1, 80))
+    et = ExecutionTrace()
+    for i in range(n):
+        node = et.add_node(name=f"n{i}", type=NodeType.COMP,
+                           start_time_micros=draw(st.floats(0, 100)))
+        if i:
+            for dep in draw(st.lists(st.integers(0, i - 1), max_size=3,
+                                     unique=True)):
+                node.data_deps.append(dep)
+    return et
+
+
+@given(dag(), st.sampled_from(sorted(POLICIES)), st.integers(1, 16))
+@settings(max_examples=40, deadline=None)
+def test_feeder_never_violates_dependencies(et, policy, window):
+    feeder = ETFeeder(et, window=window, policy=policy)
+    done = set()
+    count = 0
+    while feeder.has_pending():
+        node = feeder.next_ready()
+        assert node is not None, "feeder stalled on an acyclic trace"
+        for d, _ in node.all_deps():
+            assert d in done, f"{node.id} issued before dep {d}"
+        feeder.mark_completed(node.id)
+        done.add(node.id)
+        count += 1
+    assert count == len(et)
+
+
+@given(dag())
+@settings(max_examples=20, deadline=None)
+def test_feeder_deterministic_under_fixed_policy(et):
+    a = ETFeeder(et, policy="start_time").drain_order()
+    b = ETFeeder(et, policy="start_time").drain_order()
+    assert a == b
+
+
+def test_comm_priority_prefers_comm():
+    et = ExecutionTrace()
+    et.add_node(name="comp", type=NodeType.COMP)
+    et.add_node(name="comm", type=NodeType.COMM_COLL)
+    order = ETFeeder(et, policy="comm_priority").drain_order()
+    assert et.nodes[order[0]].is_comm
+
+
+def test_feeder_from_chkb_windowed(tmp_path):
+    et = ExecutionTrace()
+    for i in range(200):
+        n = et.add_node(name=f"n{i}")
+        if i >= 3:
+            n.data_deps.append(i - 3)
+    p = str(tmp_path / "t.chkb")
+    save(et, p, block_size=16)
+    feeder = ETFeeder(p, window=8)
+    order = feeder.drain_order()
+    assert len(order) == 200
+    pos = {n: i for i, n in enumerate(order)}
+    for n in et.nodes.values():
+        for d, _ in n.all_deps():
+            assert pos[d] < pos[n.id]
+
+
+def test_completion_before_issue_raises():
+    et = ExecutionTrace()
+    et.add_node(name="a")
+    feeder = ETFeeder(et)
+    with pytest.raises(ValueError):
+        feeder.mark_completed(0)

@@ -1,0 +1,41 @@
+"""InfraGraph builders + trace visualizer outputs."""
+import orjson
+
+from repro.core import generator, visualize
+from repro.core.infragraph import (InfraGraph, clos_two_tier,
+                                   fully_connected, ring, switch, tpu_pod_2d)
+from repro.core.reconstructor import reconstruct
+
+
+def test_topology_builders():
+    g = ring(8, 50e9)
+    assert g.num_npus == 8 and len(g.links) == 16
+    g = fully_connected(4, 50e9)
+    assert len(g.links) == 12
+    # per-peer bandwidth sums to the end-link budget
+    assert abs(sum(l.bandwidth for l in g.links if l.src == 0) - 50e9) < 1
+    g = switch(4, 50e9)
+    assert len(g.links) == 8 and g.link_between(0, -1) is not None
+    g = clos_two_tier(32, leaf_ports=16, nic_bw=50e9, uplink_bw=100e9)
+    assert g.num_npus == 32
+    g = tpu_pod_2d(4, 4)
+    assert g.num_npus == 16
+    # torus: every chip has 4 outgoing links (2 per ring dimension)
+    assert sum(1 for l in g.links if l.src == 0) == 4
+
+
+def test_infragraph_json_roundtrip():
+    g = ring(4, 1e9)
+    g2 = InfraGraph.from_json(g.to_json())
+    assert g2.num_npus == 4 and len(g2.links) == len(g.links)
+
+
+def test_visualizer_outputs():
+    et = generator.dp_allreduce_pattern(steps=1, layers=3, ranks=4)
+    dot = visualize.to_dot(et)
+    assert dot.startswith("digraph") and "AllReduce" in dot or "comp" in dot
+    timeline = reconstruct(et)
+    pf = orjson.loads(visualize.timeline_to_perfetto(timeline))
+    assert len(pf.get("traceEvents", [])) > 0
+    summary = visualize.summarize(et)
+    assert "nodes" in summary

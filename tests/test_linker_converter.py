@@ -1,0 +1,79 @@
+"""Linker (host+device merge) and converter (verify + canonicalize)."""
+import pytest
+
+from repro.core import ExecutionTrace, NodeType, convert, link
+from repro.core.converter import ConvertReport, verify_and_clean
+
+
+def _host():
+    et = ExecutionTrace(metadata={"side": "host"})
+    a = et.add_node(name="embed", type=NodeType.COMP,
+                    attrs={"scope": "embed", "op": "gather"})
+    b = et.add_node(name="dot1", type=NodeType.COMP,
+                    attrs={"scope": "layer/dot1", "op": "dot_general"})
+    b.data_deps.append(a.id)
+    c = et.add_node(name="psum", type=NodeType.COMM_COLL,
+                    attrs={"scope": "layer/psum", "op": "psum"})
+    c.data_deps.append(b.id)
+    return et
+
+
+def _device():
+    et = ExecutionTrace(metadata={"side": "device"})
+    d1 = et.add_node(name="dot.1", type=NodeType.COMP,
+                     attrs={"scope": "layer/dot1", "op": "dot"})
+    d2 = et.add_node(name="fusion.2", type=NodeType.COMP,
+                     attrs={"scope": "unmatched/xyz", "op": "fusion"})
+    d2.data_deps.append(d1.id)
+    ar = et.add_node(name="all-reduce.3", type=NodeType.COMM_COLL,
+                     attrs={"scope": "nomatch", "op": "all-reduce"})
+    ar.sync_deps.append(d2.id)
+    return et
+
+
+def test_link_merges_and_anchors():
+    merged, report = link(_host(), _device())
+    assert report.host_nodes == 3 and report.device_nodes == 3
+    assert report.matched == 1                      # exact scope match
+    assert report.kind_matched >= 1                 # all-reduce ~ psum
+    assert merged.is_acyclic()
+    levels = {n.attrs.get("level") for n in merged}
+    assert {"host", "device"} <= levels
+    assert report.sync_edges == 1
+
+
+def test_convert_removes_bad_edges_and_canonicalizes():
+    et = ExecutionTrace()
+    a = et.add_node(name="a")
+    b = et.add_node(name="b")
+    b.data_deps += [a.id, a.id, 999]        # dup + dangling
+    b.ctrl_deps += [a.id, b.id]             # redundant ctrl + self
+    out, report = convert(et)
+    assert report.dup_deps_removed == 1
+    assert report.dangling_deps_removed == 1
+    assert report.self_deps_removed == 1
+    assert report.redundant_ctrl_removed == 1
+    assert out.is_acyclic()
+    # canonical: ids are a topological order starting at 0
+    assert sorted(out.nodes) == list(range(len(out)))
+
+
+def test_convert_breaks_cycles():
+    et = ExecutionTrace()
+    a = et.add_node(name="a")
+    b = et.add_node(name="b")
+    a.data_deps.append(b.id)
+    b.ctrl_deps.append(a.id)        # ctrl edge is the weakest: dropped first
+    out, report = convert(et)
+    assert report.cycle_edges_broken == 1
+    assert out.is_acyclic()
+
+
+def test_convert_fixes_comm_nodes():
+    et = ExecutionTrace()
+    et.add_node(name="c", type=NodeType.COMM_COLL, comm_group=42)
+    out, report = convert(et)
+    assert report.comm_nodes_fixed >= 1
+    node = out.sorted_nodes()[0]
+    assert node.comm_group == -1            # unknown group cleared
+    assert node.comm_type != 0

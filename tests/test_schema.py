@@ -1,0 +1,105 @@
+"""Schema + serialization: structure, topological properties, roundtrips
+(including hypothesis property tests over randomized DAGs)."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (CollectiveType, ETNode, ExecutionTrace, NodeType,
+                        from_chkb_bytes, from_json_bytes, to_chkb_bytes,
+                        to_json_bytes)
+from repro.core.serialization import ChkbReader, roundtrip_equal, save, load
+
+
+# ------------------------------------------------------- strategies
+@st.composite
+def random_dag_trace(draw):
+    n = draw(st.integers(min_value=1, max_value=60))
+    et = ExecutionTrace(rank=draw(st.integers(0, 3)), world_size=4)
+    pg = et.add_process_group(tuple(range(4)), tag="model")
+    for i in range(n):
+        ntype = draw(st.sampled_from([NodeType.COMP, NodeType.COMM_COLL,
+                                      NodeType.MEM_LOAD]))
+        node = et.add_node(name=f"n{i}", type=ntype,
+                           duration_micros=draw(st.floats(0, 1e3)))
+        if ntype == NodeType.COMM_COLL:
+            node.comm_type = draw(st.sampled_from(
+                [CollectiveType.ALL_REDUCE, CollectiveType.ALL_TO_ALL]))
+            node.comm_group = pg.id
+            node.comm_bytes = draw(st.integers(0, 1 << 20))
+        # edges only to earlier nodes => acyclic by construction
+        if i:
+            for dep in draw(st.lists(st.integers(0, i - 1), max_size=3,
+                                     unique=True)):
+                kind = draw(st.sampled_from(["data_deps", "ctrl_deps",
+                                             "sync_deps"]))
+                getattr(node, kind).append(dep)
+    return et
+
+
+@given(random_dag_trace())
+@settings(max_examples=30, deadline=None)
+def test_random_dag_is_acyclic_and_orders(et):
+    order = et.topological_order()
+    assert sorted(order) == sorted(et.nodes)
+    pos = {nid: i for i, nid in enumerate(order)}
+    for n in et.nodes.values():
+        for d, _ in n.all_deps():
+            assert pos[d] < pos[n.id]
+
+
+@given(random_dag_trace())
+@settings(max_examples=30, deadline=None)
+def test_json_roundtrip(et):
+    assert roundtrip_equal(et, from_json_bytes(to_json_bytes(et)))
+
+
+@given(random_dag_trace(), st.integers(1, 16))
+@settings(max_examples=30, deadline=None)
+def test_chkb_roundtrip(et, block):
+    data = to_chkb_bytes(et, block_size=block)
+    assert roundtrip_equal(et, from_chkb_bytes(data))
+
+
+def test_chkb_windowed_reader(tmp_path):
+    et = ExecutionTrace()
+    for i in range(100):
+        n = et.add_node(name=f"n{i}", type=NodeType.COMP)
+        if i:
+            n.data_deps.append(i - 1)
+    p = str(tmp_path / "t.chkb")
+    save(et, p, block_size=8)
+    with ChkbReader(p) as r:
+        assert r.node_count == 100
+        assert r.num_blocks == 13
+        blk = r.read_block(3)
+        assert [n.id for n in blk] == list(range(24, 32))
+        assert len(list(r.iter_nodes())) == 100
+
+
+def test_cycle_detection():
+    et = ExecutionTrace()
+    a = et.add_node(name="a")
+    b = et.add_node(name="b")
+    a.data_deps.append(b.id)
+    b.data_deps.append(a.id)
+    assert not et.is_acyclic()
+    with pytest.raises(ValueError):
+        et.topological_order()
+
+
+def test_tensor_storage_alias():
+    et = ExecutionTrace()
+    t1 = et.add_tensor((4, 4), "f32")
+    t2 = et.add_tensor((16,), "f32", storage_id=t1.storage_id,
+                       storage_offset=0)
+    assert t1.storage_id == t2.storage_id       # alias: same storage
+    assert t1.size_bytes == t2.size_bytes == 64
+
+
+def test_save_load_formats(tmp_path):
+    et = ExecutionTrace(metadata={"x": 1})
+    et.add_node(name="a", type=NodeType.COMP)
+    for suffix in ("t.json", "t.json.zst", "t.chkb"):
+        p = str(tmp_path / suffix)
+        save(et, p)
+        assert roundtrip_equal(et, load(p))

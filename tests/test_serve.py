@@ -1,0 +1,79 @@
+"""Serving engine: prefill->decode vs parallel forward, MoE routing stats,
+KV-offload accounting, P/D KV-transfer trace nodes."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import base as config_base
+from repro.core import ExecutionTrace, NodeType
+from repro.models import model_zoo
+from repro.serve import Engine, ServeConfig
+
+
+def _engine(arch, rng_key, **kw):
+    cfg = config_base.get(arch).reduced()
+    if cfg.is_moe:
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    model = model_zoo.build(cfg, model_axis=1)
+    params = model.init(rng_key)
+    return Engine(model, params, ServeConfig(max_len=32, **kw)), cfg
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "mixtral-8x7b",
+                                  "xlstm-1.3b"])
+def test_prefill_matches_forward(arch, rng_key):
+    eng, cfg = _engine(arch, rng_key)
+    tokens = jax.random.randint(rng_key, (2, 8), 0, 100).astype(jnp.int32)
+    logits, state = eng.prefill(tokens)
+    full = eng.model.logits(eng.params, {"tokens": tokens})[:, -1]
+    err = jnp.max(jnp.abs(logits - full.astype(jnp.float32)))
+    rel = float(err) / (float(jnp.max(jnp.abs(full))) + 1e-6)
+    assert rel < 0.05, rel
+
+
+def test_generate_greedy_deterministic(rng_key):
+    eng, cfg = _engine("granite-8b", rng_key)
+    tokens = jnp.ones((2, 4), jnp.int32)
+    out1 = eng.generate(tokens, n_steps=5)
+    out2 = eng.generate(tokens, n_steps=5)
+    assert out1.shape == (2, 5)
+    assert bool(jnp.all(out1 == out2))
+
+
+def test_moe_routing_stats_recorded(rng_key):
+    et = ExecutionTrace()
+    eng, cfg = _engine("olmoe-1b-7b", rng_key, trace=et)
+    tokens = jnp.ones((2, 4), jnp.int32)
+    eng.generate(tokens, n_steps=3)
+    assert len(eng.stats["moe_routing"]) == 3
+    bins = eng.stats["moe_routing"][0]
+    assert len(bins) == cfg.n_experts
+    assert sum(bins) == 2 * cfg.top_k          # B tokens x top_k
+    route_nodes = [n for n in et if n.attrs.get("op") == "moe_routing"]
+    assert len(route_nodes) == 3
+
+
+def test_kv_offload_accounting(rng_key):
+    et = ExecutionTrace()
+    eng, cfg = _engine("granite-8b", rng_key, offload_kv=True, trace=et)
+    tokens = jnp.ones((2, 4), jnp.int32)
+    eng.generate(tokens, n_steps=3)
+    assert eng.stats["memcpy_dtoh"] == 3
+    assert eng.stats["memcpy_htod"] == 3
+    stores = [n for n in et if n.attrs.get("op") == "start_store_kv"]
+    loads = [n for n in et if n.attrs.get("op") == "start_load_kv"]
+    assert len(stores) == 3 and len(loads) == 3
+    assert all(n.comm_bytes > 0 for n in stores)
+
+
+def test_kv_transfer_trace_fig15(rng_key):
+    et = ExecutionTrace()
+    eng, cfg = _engine("granite-8b", rng_key, trace=et)
+    eng.prefill(jnp.ones((2, 4), jnp.int32))
+    sizes = eng.stats["kv_transfer_bytes"]
+    assert len(sizes) == 2 * cfg.n_layers        # k and v per layer
+    xfer = [n for n in et if n.attrs.get("op") == "kv_transfer"]
+    assert len(xfer) == len(sizes)
+    assert all(n.type == NodeType.COMM_SEND for n in xfer)

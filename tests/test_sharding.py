@@ -1,0 +1,56 @@
+"""Logical-axis sharding rules: divisibility guard, axis reuse, specs."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import default_rules, spec_for
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def _spec(shape, logical, rules, sizes):
+    """spec_for against a fake mesh with given axis sizes."""
+    class FakeMesh:
+        def __init__(self, sizes):
+            self.shape = sizes
+    return spec_for(shape, logical, rules, FakeMesh(sizes))
+
+
+RULES = default_rules(multi_pod=False)
+SIZES = {"data": 16, "model": 16}
+
+
+def test_divisible_dims_shard():
+    sp = _spec((256, 4096, 4096), ("batch", None, "embed"), RULES, SIZES)
+    assert sp == P(("data",))                 # embed -> None by rule
+
+
+def test_non_divisible_dims_replicate():
+    # hymba: 25 heads % 16 != 0 -> replicated, no special case needed
+    sp = _spec((2, 128, 25, 64), ("batch", None, "heads", None), RULES, SIZES)
+    assert sp == P()                          # batch 2 % 16 != 0 too
+    sp = _spec((32, 128, 32, 64), ("batch", None, "heads", None), RULES,
+               SIZES)
+    assert sp == P(("data",), None, "model")
+
+
+def test_axis_used_once():
+    # kv_seq and heads both map to "model": first dim wins, second drops
+    sp = _spec((128, 32768, 32, 128), ("batch", "kv_seq", "heads", None),
+               RULES, SIZES)
+    assert sp == P(("data",), "model")
+
+
+def test_multi_pod_batch_axes():
+    rules = default_rules(multi_pod=True)
+    sizes = {"pod": 2, "data": 16, "model": 16}
+    sp = _spec((256, 4096), ("batch", "seq"), rules, sizes)
+    assert sp == P(("pod", "data"), "model")
+
+
+def test_trailing_nones_trimmed():
+    sp = _spec((64, 64), (None, None), RULES, SIZES)
+    assert sp == P()

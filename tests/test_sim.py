@@ -1,0 +1,127 @@
+"""Simulator: topology ordering (Fig 12), bandwidth scaling (Fig 7),
+mixed-collective long tail (Figs 10/11), stragglers, replay."""
+import numpy as np
+import pytest
+
+from repro.core import generator
+from repro.core.infragraph import TPU_V5E
+from repro.sim import (Fabric, ReplayConfig, Replayer, SimConfig, Simulator,
+                       collective_accuracy_check, simulate_single_trace)
+
+
+def test_topology_ordering_fig12():
+    """switch <= ring <= fully_connected at equal end-link bandwidth."""
+    results = {}
+    for topo in ("switch", "ring", "fully_connected"):
+        et = generator.moe_mixed_collectives(iters=4, ranks=8)
+        results[topo] = simulate_single_trace(et, Fabric.build(topo, 8)
+                                              ).makespan_s
+    assert results["switch"] <= results["ring"] <= results["fully_connected"]
+
+
+def test_bandwidth_scaling_converges_fig12():
+    """Communication time stops improving as bandwidth grows (latency
+    becomes dominant) — the paper's second Fig 12 observation."""
+    times = []
+    for bw_gbps in (75, 150, 300, 600, 1200, 2400):
+        et = generator.moe_mixed_collectives(iters=2, ranks=8,
+                                             alltoall_bytes=1 << 16,
+                                             allreduce_bytes=1 << 16)
+        fab = Fabric.build("switch", 8, link_bw=bw_gbps * 1e9)
+        times.append(simulate_single_trace(et, fab).makespan_s)
+    assert times[0] > times[-1]
+    gain_early = times[0] / times[1]
+    gain_late = times[-2] / times[-1]
+    assert gain_late < gain_early       # diminishing returns
+    assert gain_late < 1.35             # converged: latency-dominated
+
+
+def test_bandwidth_ratio_fig7():
+    """4x lower bandwidth => ~4x slower All2All/AllGather; AllReduce (small
+    payloads here) degrades sub-linearly — the paper's Fig 7 observation."""
+    def run(bw):
+        et = generator.moe_mixed_collectives(iters=4, ranks=8,
+                                             alltoall_bytes=64 << 20,
+                                             allreduce_bytes=256 << 10)
+        cfgd = SimConfig(congestion=False)
+        return simulate_single_trace(et, Fabric.build("switch", 8,
+                                                      link_bw=bw), cfgd)
+    fast = run(400e9 / 8)
+    slow = run(100e9 / 8)
+    a2a_ratio = (slow.collective_time_s["All2All"]
+                 / fast.collective_time_s["All2All"])
+    ar_ratio = (slow.collective_time_s["AllReduce"]
+                / fast.collective_time_s["AllReduce"])
+    assert 3.5 < a2a_ratio <= 4.1
+    assert ar_ratio < a2a_ratio         # latency-heavier => sub-linear
+
+
+def test_mixed_collectives_long_tail_fig11():
+    """Mixing All-Reduce with All-to-All long-tails the A2A FCT
+    distribution vs isolation (the §5.3 DCQCN finding)."""
+    iso = simulate_single_trace(
+        generator.moe_mixed_collectives(iters=6, ranks=8, mode="alltoall"),
+        Fabric.build("switch", 8))
+    mixed = simulate_single_trace(
+        generator.moe_mixed_collectives(iters=6, ranks=8),
+        Fabric.build("switch", 8))
+
+    def p99_over_p50(res):
+        fcts = sorted(f.fct_s for f in res.flows if f.kind == "All2All")
+        return fcts[-1] / max(fcts[len(fcts) // 2], 1e-12)
+
+    assert p99_over_p50(mixed) > p99_over_p50(iso)
+    mixed_a2a = [f for f in mixed.flows if f.kind == "All2All"]
+    assert any(f.throttled > 1.0 for f in mixed_a2a)
+
+
+def test_straggler_slows_compute_bound_job():
+    traces = [generator.dp_allreduce_pattern(steps=2, layers=4, ranks=4,
+                                             compute_us=5000.0,
+                                             grad_bytes=1 << 16, rank=r)
+              for r in range(4)]
+    fab = Fabric.build("switch", 4)
+    base = Simulator(traces, fab, SimConfig()).run()
+    slow = Simulator(traces, fab,
+                     SimConfig(speed_factors={1: 0.4})).run()
+    assert slow.makespan_s > base.makespan_s * 1.5
+
+
+def test_multirank_rendezvous_synchronizes():
+    traces = [generator.dp_allreduce_pattern(steps=1, layers=2, ranks=2,
+                                             rank=r) for r in range(2)]
+    res = Simulator(traces, Fabric.build("switch", 2)).run()
+    assert res.makespan_s > 0
+    assert "AllReduce" in res.collective_time_s
+    # both ranks finish at the same collective-gated time
+    assert abs(res.per_rank_finish_s[0] - res.per_rank_finish_s[1]) < 1e-9
+
+
+def test_replay_modes():
+    et = generator.dp_allreduce_pattern(steps=1, layers=3, ranks=4)
+    full = Replayer(et, ReplayConfig(mode="full")).run()
+    comm = Replayer(et, ReplayConfig(mode="comm")).run()
+    comp = Replayer(et, ReplayConfig(mode="compute")).run()
+    assert full.comm_nodes == comm.comm_nodes > 0
+    assert full.compute_nodes == comp.compute_nodes > 0
+    assert comm.compute_nodes == 0 and comp.comm_nodes == 0
+    # lazy vs preallocate execute the same node set
+    lazy = Replayer(et, ReplayConfig(mode="full",
+                                     allocation="lazy")).run()
+    assert lazy.nodes_executed == full.nodes_executed
+
+
+def test_replay_subrange():
+    et = generator.compute_chain(n=10)
+    rep = Replayer(et, ReplayConfig(mode="compute",
+                                    node_range=(2, 5))).run()
+    assert rep.compute_nodes == 3
+
+
+def test_collective_accuracy_checker():
+    rows = collective_accuracy_check(sizes=(4096,), group=8)
+    by = {(r["dtype"], r["algo"]): r["rel_err_mean"] for r in rows}
+    # lower precision => larger reduction error; order-dependence visible
+    assert by[("bfloat16", "ring")] > by[("float32", "ring")]
+    assert by[("float16", "ring")] > by[("float32", "ring")]
+    assert all(r["rel_err_mean"] >= 0 for r in rows)
