@@ -1,13 +1,25 @@
-"""Benchmark harness driver: one module per paper table/figure.
+"""Benchmark harness driver: one module per paper table/figure, dispatched
+through the `repro.pipeline` stage registry (kind="benchmark").
 
   PYTHONPATH=src python -m benchmarks.run            # run everything
   PYTHONPATH=src python -m benchmarks.run fig12      # run one
+  PYTHONPATH=src python -m benchmarks.run --list     # show the registry
+
+Before any benchmark runs, a pipeline preflight streams a generated trace
+through convert -> chkb -> analyze so harness failures are separated from
+benchmark failures.
 """
 from __future__ import annotations
 
+import os
 import sys
+import tempfile
 import time
 import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.pipeline import Pipeline, available_stages, get_stage, register_stage
 
 MODULES = [
     ("table5_opcounts", "Table 5: per-rank operation counts"),
@@ -24,23 +36,54 @@ MODULES = [
 ]
 
 
+def _register_benchmarks() -> None:
+    """Each benchmark module's run() becomes a named registry stage."""
+    for name, desc in MODULES:
+        def _loader(name=name):
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            return mod.run()
+        _loader.__doc__ = desc
+        register_stage(name, kind="benchmark", overwrite=True)(_loader)
+
+
+def preflight() -> None:
+    """Generate -> convert -> chkb -> analyze through the pipeline."""
+    with tempfile.TemporaryDirectory() as tmp:
+        path = (Pipeline.from_source("generate", pattern="dp_allreduce",
+                                     steps=2, layers=4, ranks=4, window=8)
+                .then("convert")
+                .sink("chkb", os.path.join(tmp, "preflight.chkb")).run())
+        stats = Pipeline.from_source("chkb", path).sink("analyze").run()
+        assert stats["nodes"] > 0, "preflight produced an empty trace"
+    print(f"[ok]   preflight            pipeline generate->convert->chkb->"
+          f"analyze ({stats['nodes']} nodes)", flush=True)
+
+
 def main() -> int:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    _register_benchmarks()
+    args = [a for a in sys.argv[1:]]
+    if "--list" in args:
+        for name in available_stages("benchmark").get("benchmark", []):
+            print(f"  {name:20s} {get_stage('benchmark', name).__doc__}")
+        return 0
+    only = args[0] if args else None
     failures = 0
+    attempted = 0
+    preflight()
     for name, desc in MODULES:
         if only and only not in name:
             continue
+        attempted += 1
         t0 = time.time()
         try:
-            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-            mod.run()
+            get_stage("benchmark", name)()
             print(f"[ok]   {name:20s} {desc} ({time.time() - t0:.1f}s)",
                   flush=True)
         except Exception as e:
             failures += 1
             print(f"[FAIL] {name:20s} {type(e).__name__}: {e}", flush=True)
             traceback.print_exc()
-    print(f"\n{len(MODULES) - failures}/{len(MODULES)} benchmarks ok; "
+    print(f"\n{attempted - failures}/{attempted} benchmarks ok; "
           f"artifacts under artifacts/bench/")
     return 1 if failures else 0
 

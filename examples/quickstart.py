@@ -1,6 +1,15 @@
-"""Quickstart: collect -> analyze -> visualize -> simulate one Chakra ET.
+"""Quickstart: one Chakra ET through the `repro.pipeline` API.
+
+Collect -> analyze -> serialize -> visualize -> simulate, all composed from
+registered stages (run `python -m repro stages` for the full table):
 
   PYTHONPATH=src python examples/quickstart.py
+
+The same flow is available from the shell:
+
+  python -m repro capture --model granite-8b --execute -o granite.chkb
+  python -m repro analyze granite.chkb --deep
+  python -m repro sim granite.chkb --topology ring --ranks 8
 """
 import os
 import sys
@@ -10,12 +19,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 
-from repro.collect.capture import capture
 from repro.configs import base as config_base
-from repro.core import analysis, save, visualize
+from repro.core import visualize
 from repro.core.reconstructor import reconstruct
 from repro.models import model_zoo
-from repro.sim import Fabric, simulate_single_trace
+from repro.pipeline import Pipeline
 
 
 def main():
@@ -26,23 +34,26 @@ def main():
     batch = {"tokens": jnp.ones((2, 32), jnp.int32),
              "labels": jnp.ones((2, 32), jnp.int32)}
 
-    # 2. capture a post-execution Chakra ET (host jaxpr + device HLO, linked)
-    et, report = capture(lambda p, b: model.loss_fn(p, b)[0], params, batch,
-                         stage="post", execute=True)
-    print(f"captured {len(et)} nodes | {report['link']}")
+    # 2. capture a post-execution Chakra ET (host jaxpr + device HLO,
+    #    linked + converted inside the "capture" source stage)
+    pipe = Pipeline.from_source(
+        "capture", fn=lambda p, b: model.loss_fn(p, b)[0],
+        args=(params, batch), stage="post", execute=True)
+    et = pipe.sink("trace").run()
+    print(f"captured {len(et)} nodes | {pipe.reports.get('source', {}).get('link')}")
 
-    # 3. analyze: op counts, comm summary, critical path
-    print("op counts:", analysis.op_counts(et))
-    cp = analysis.critical_path(et)
-    print(f"critical path: {len(cp.node_ids)} nodes, "
-          f"{cp.length_us:.0f}us (compute {cp.compute_us:.0f}us, "
-          f"comm {cp.comm_us:.0f}us)")
+    # 3. analyze: op counts, comm summary, critical path — the "analyze" sink
+    stats = Pipeline.from_source(et).sink("analyze", deep=True).run()
+    print("op counts:", stats["op_counts"])
+    cp = stats["critical_path"]
+    print(f"critical path: {cp['nodes']} nodes, {cp['length_us']:.0f}us "
+          f"(compute {cp['compute_us']:.0f}us, comm {cp['comm_us']:.0f}us)")
 
     # 4. serialize (JSON + windowed binary) and visualize
     out = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                        "quickstart")
-    save(et, os.path.join(out, "granite.train.json"))
-    save(et, os.path.join(out, "granite.train.chkb"))
+    Pipeline.from_source(et).sink("save", os.path.join(out, "granite.train.json")).run()
+    Pipeline.from_source(et).sink("chkb", os.path.join(out, "granite.train.chkb")).run()
     with open(os.path.join(out, "granite.dot"), "w") as fh:
         fh.write(visualize.to_dot(et, max_nodes=60))
     timeline = reconstruct(et)
@@ -50,9 +61,10 @@ def main():
         fh.write(visualize.timeline_to_perfetto(timeline))
     print(f"saved traces + dot + perfetto under {os.path.abspath(out)}")
 
-    # 5. what-if: the same trace on three fabrics
+    # 5. what-if: the same trace on three fabrics via the "sim" sink
     for topo in ("switch", "ring", "fully_connected"):
-        res = simulate_single_trace(et, Fabric.build(topo, 8))
+        res = (Pipeline.from_source(et)
+               .sink("sim", topology=topo, ranks=8).run())
         print(f"  {topo:16s} simulated makespan "
               f"{res.makespan_s * 1e3:.2f} ms")
 

@@ -1,8 +1,11 @@
-"""Trace replay (paper §4.2): capture a trace, save it, reload it, and
-re-execute compute/comm/full subsets with both allocation strategies —
-plus the collective accuracy checker (§4.2.3).
+"""Trace replay (paper §4.2) through the `repro.pipeline` API: capture a
+trace, stream it to CHKB, reload it windowed, and re-execute compute/comm/full
+subsets with both allocation strategies — plus the collective accuracy
+checker (§4.2.3).
 
   PYTHONPATH=src python examples/replay_trace.py
+
+Shell equivalent: python -m repro replay trace.chkb --mode compute
 """
 import os
 import sys
@@ -12,11 +15,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 
-from repro.collect.capture import capture
 from repro.configs import base as config_base
-from repro.core import load, save
 from repro.models import model_zoo
-from repro.sim import (ReplayConfig, Replayer, collective_accuracy_check)
+from repro.pipeline import Pipeline
+from repro.sim import collective_accuracy_check
 
 
 def main():
@@ -25,18 +27,19 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     batch = {"tokens": jnp.ones((2, 32), jnp.int32),
              "labels": jnp.ones((2, 32), jnp.int32)}
-    et, _ = capture(lambda p, b: model.loss_fn(p, b)[0], params, batch,
-                    stage="post")
     out = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                        "replay")
-    path = save(et, os.path.join(out, "deepseek.train.chkb"))
-    et2 = load(path)
-    print(f"trace roundtrip: {len(et2)} nodes")
+    path = (Pipeline.from_source(
+                "capture", fn=lambda p, b: model.loss_fn(p, b)[0],
+                args=(params, batch), stage="post")
+            .sink("chkb", os.path.join(out, "deepseek.train.chkb")).run())
+    n = Pipeline.from_source("chkb", path).sink("analyze").run()["nodes"]
+    print(f"trace roundtrip: {n} nodes")
 
     for mode in ("compute", "comm", "full"):
         for alloc in ("preallocate", "lazy"):
-            rep = Replayer(et2, ReplayConfig(mode=mode,
-                                             allocation=alloc)).run()
+            rep = (Pipeline.from_source("chkb", path, window=256)
+                   .sink("replay", mode=mode, allocation=alloc).run())
             print(f"mode={mode:8s} alloc={alloc:12s} "
                   f"executed={rep.nodes_executed:4d} wall={rep.wall_s:.2f}s")
 

@@ -1,15 +1,18 @@
-"""What-if analysis (paper Fig 12): sweep topology x bandwidth for a
-Mixtral-8x7B training step and print normalized communication time.
+"""What-if analysis (paper Fig 12) through `repro.pipeline`: sweep topology x
+bandwidth for a Mixtral-8x7B training step and print normalized communication
+time.  The symbolic trace comes from the "generate" source and each cell is
+one "sim" sink run.
 
   PYTHONPATH=src python examples/whatif_simulation.py
+
+Shell equivalent: python -m repro sim trace.chkb --topology ring --ranks 8
 """
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core.generator import symbolic_transformer_step
-from repro.sim import Fabric, SimConfig, simulate_single_trace
+from repro.pipeline import Pipeline
 
 
 def main():
@@ -18,11 +21,13 @@ def main():
     for topo in ("switch", "ring", "fully_connected"):
         cells = []
         for bw in bws:
-            et = symbolic_transformer_step(
-                layers=8, d_model=4096, d_ff=14336, heads=32, seq=2048,
-                batch=8, tp=2, dp=4, moe_experts=8)
-            fab = Fabric.build(topo, 8, link_bw=bw * 1e9)
-            res = simulate_single_trace(et, fab, SimConfig(congestion=False))
+            res = (Pipeline.from_source(
+                       "generate", pattern="symbolic_transformer",
+                       layers=8, d_model=4096, d_ff=14336, heads=32,
+                       seq=2048, batch=8, tp=2, dp=4, moe_experts=8)
+                   .sink("sim", topology=topo, ranks=8, congestion=False,
+                         link_bw=bw * 1e9)
+                   .run())
             cells.append(sum(res.collective_time_s.values()))
         print(f"{topo:18s}" + "".join(f"{c * 1e3:9.2f}m" for c in cells))
     print("\nexpected: switch <= ring <= fully_connected; gains flatten "

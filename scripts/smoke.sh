@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# CLI end-to-end smoke: capture -> convert -> chkb -> feed/sim/replay/analyze
+# on a tiny generated trace.  Exercises the whole pipeline registry without
+# compiling a model, so it stays under ~30s on CPU.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+tmp="$(mktemp -d)"
+trap 'rm -rf "$tmp"' EXIT
+
+echo "== capture (generator source) =="
+python -m repro capture --generate dp_allreduce \
+  --opt steps=2 --opt layers=4 --opt ranks=4 -o "$tmp/trace.chkb" -v
+
+echo "== convert (link no-op + canonicalize, windowed) =="
+python -m repro convert "$tmp/trace.chkb" -o "$tmp/canon.chkb" --window 8 -v
+
+echo "== analyze =="
+python -m repro analyze "$tmp/canon.chkb" --deep -o "$tmp/stats.json"
+grep -q '"nodes"' "$tmp/stats.json"
+
+echo "== feed =="
+python -m repro feed "$tmp/canon.chkb" --policy comm_priority | grep -q nodes_fed
+
+echo "== sim =="
+python -m repro sim "$tmp/canon.chkb" --topology ring --ranks 4 | grep -q makespan
+
+echo "== replay (dry-run) =="
+python -m repro replay "$tmp/canon.chkb" --mode compute --limit 8
+
+echo "== stages =="
+python -m repro stages | grep -q scale_time
+
+echo "smoke: OK"

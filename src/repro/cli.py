@@ -1,0 +1,248 @@
+"""Single CLI entry point driving every tool through the stage registry.
+
+    python -m repro capture  --generate dp_allreduce -o trace.chkb
+    python -m repro capture  --model granite-8b --execute -o trace.chkb
+    python -m repro convert  trace.chkb -o canonical.chkb [--device dev.chkb]
+    python -m repro feed     canonical.chkb --policy comm_priority
+    python -m repro sim      canonical.chkb --topology ring --ranks 8
+    python -m repro replay   canonical.chkb --mode compute --limit 64
+    python -m repro analyze  canonical.chkb [--deep] [-o stats.json]
+    python -m repro stages                       # print the registry table
+
+Every subcommand builds a :class:`repro.pipeline.Pipeline`; nothing calls the
+linker/converter/feeder internals directly.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Optional
+
+from .pipeline import Pipeline, available_stages, stage_doc
+
+
+def _parse_opts(pairs: Optional[List[str]]) -> Dict[str, Any]:
+    """--opt key=value (ints/floats/bools auto-coerced)."""
+    out: Dict[str, Any] = {}
+    for pair in pairs or []:
+        if "=" not in pair:
+            raise SystemExit(f"--opt expects key=value, got {pair!r}")
+        k, v = pair.split("=", 1)
+        for cast in (int, float):
+            try:
+                out[k] = cast(v)
+                break
+            except ValueError:
+                continue
+        else:
+            out[k] = {"true": True, "false": False}.get(v.lower(), v)
+    return out
+
+
+def _emit(obj: Any, path: Optional[str]) -> None:
+    text = json.dumps(obj, indent=1, default=str)
+    if path:
+        with open(path, "w") as fh:
+            fh.write(text + "\n")
+        print(f"wrote {path}")
+    else:
+        print(text)
+
+
+def _print_reports(pipe: Pipeline, verbose: bool) -> None:
+    if verbose:
+        for label, rep in pipe.reports.items():
+            print(f"  [{label}] {rep}", file=sys.stderr)
+
+
+# ------------------------------------------------------------- subcommands
+def _cmd_capture(ns: argparse.Namespace) -> int:
+    opts = _parse_opts(ns.opt)
+    if ns.generate:
+        pipe = Pipeline.from_source("generate", pattern=ns.generate,
+                                    window=ns.window, **opts)
+    elif ns.model:
+        import jax
+        import jax.numpy as jnp
+
+        from .configs import base as config_base
+        from .models import model_zoo
+
+        cfg = config_base.get(ns.model)
+        if not ns.full_size:
+            cfg = cfg.reduced()
+        model = model_zoo.build(cfg, model_axis=1)
+        params = model.init(jax.random.PRNGKey(ns.seed))
+        batch = {"tokens": jnp.ones((2, 32), jnp.int32),
+                 "labels": jnp.ones((2, 32), jnp.int32)}
+        pipe = Pipeline.from_source(
+            "capture", fn=lambda p, b: model.loss_fn(p, b)[0],
+            args=(params, batch), stage=ns.stage, execute=ns.execute,
+            window=ns.window, **opts)
+    else:
+        raise SystemExit("capture needs --model NAME or --generate PATTERN")
+    # the capture source converts internally; only generated traces need it
+    if ns.convert and ns.generate:
+        pipe = pipe.then("convert")
+    path = pipe.sink("save", ns.output).run()
+    _print_reports(pipe, ns.verbose)
+    print(f"captured -> {path}")
+    return 0
+
+
+def _cmd_convert(ns: argparse.Namespace) -> int:
+    pipe = Pipeline.from_source("load", ns.input, window=ns.window)
+    if ns.device:
+        pipe = pipe.then("link", device=ns.device)
+    pipe = pipe.then("convert")
+    if ns.scale_time != 1.0:
+        pipe = pipe.then("scale_time", factor=ns.scale_time)
+    path = pipe.sink("save", ns.output).run()
+    _print_reports(pipe, ns.verbose)
+    print(f"converted -> {path}")
+    return 0
+
+
+def _cmd_feed(ns: argparse.Namespace) -> int:
+    stats = (Pipeline.from_source("load", ns.input, window=ns.window)
+             .sink("feed", policy=ns.policy, window=ns.window).run())
+    _emit(stats, ns.output)
+    return 0
+
+
+def _cmd_sim(ns: argparse.Namespace) -> int:
+    res = (Pipeline.from_source("load", ns.input, window=ns.window)
+           .sink("sim", topology=ns.topology, ranks=ns.ranks,
+                 congestion=not ns.no_congestion).run())
+    print(res.summary())
+    if ns.output:
+        _emit({"makespan_s": res.makespan_s,
+               "compute_busy_s": res.compute_busy_s,
+               "exposed_comm_s": res.exposed_comm_s,
+               "collective_time_s": res.collective_time_s,
+               "collective_bytes": res.collective_bytes}, ns.output)
+    return 0
+
+
+def _cmd_replay(ns: argparse.Namespace) -> int:
+    rep = (Pipeline.from_source("load", ns.input, window=ns.window)
+           .sink("replay", mode=ns.mode, limit=ns.limit).run())
+    print(f"replayed {rep.nodes_executed} nodes "
+          f"(compute={rep.compute_nodes} comm={rep.comm_nodes} "
+          f"skipped={rep.skipped}) in {rep.wall_s:.3f}s")
+    if ns.output:
+        _emit({"wall_s": rep.wall_s, "nodes_executed": rep.nodes_executed,
+               "compute_nodes": rep.compute_nodes,
+               "comm_nodes": rep.comm_nodes, "skipped": rep.skipped},
+              ns.output)
+    return 0
+
+
+def _cmd_analyze(ns: argparse.Namespace) -> int:
+    stats = (Pipeline.from_source("load", ns.input, window=ns.window)
+             .sink("analyze", deep=ns.deep).run())
+    _emit(stats, ns.output)
+    return 0
+
+
+def _cmd_stages(ns: argparse.Namespace) -> int:
+    for kind, names in available_stages().items():
+        print(f"{kind}:")
+        for n in names:
+            print(f"  {n:24s} {stage_doc(kind, n)}")
+    return 0
+
+
+# ------------------------------------------------------------------- parser
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro", description="Chakra-JAX trace pipeline")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    def common(p: argparse.ArgumentParser, needs_input: bool = True) -> None:
+        if needs_input:
+            p.add_argument("input", help="trace file (.chkb/.json/.json.zst)")
+        p.add_argument("--window", type=int, default=1024,
+                       help="streaming window size (nodes)")
+        p.add_argument("-v", "--verbose", action="store_true")
+
+    p = sub.add_parser("capture", help="collect a trace (model or generator)")
+    p.add_argument("--model", help="architecture config name")
+    p.add_argument("--generate", help="generator pattern "
+                   "(compute_chain|dp_allreduce|moe_mixed|symbolic_transformer)")
+    p.add_argument("--opt", action="append", metavar="K=V",
+                   help="extra source kwargs (repeatable)")
+    p.add_argument("--stage", default="post", choices=("pre", "post"))
+    p.add_argument("--execute", action="store_true",
+                   help="run the compiled step for measured durations")
+    p.add_argument("--full-size", action="store_true",
+                   help="do not reduce the model config")
+    p.add_argument("--no-convert", dest="convert", action="store_false",
+                   help="skip the converter pass on generated traces")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("-o", "--output", required=True)
+    common(p, needs_input=False)
+    p.set_defaults(fn=_cmd_capture)
+
+    p = sub.add_parser("convert", help="link + standardize a trace")
+    common(p)
+    p.add_argument("--device", help="device-side trace to link against")
+    p.add_argument("--scale-time", type=float, default=1.0,
+                   help="what-if duration scale factor")
+    p.add_argument("-o", "--output", required=True)
+    p.set_defaults(fn=_cmd_convert)
+
+    p = sub.add_parser("feed", help="dependency-aware feed (drain stats)")
+    common(p)
+    p.add_argument("--policy", default="fifo")
+    p.add_argument("-o", "--output")
+    p.set_defaults(fn=_cmd_feed)
+
+    p = sub.add_parser("sim", help="what-if discrete-event simulation")
+    common(p)
+    p.add_argument("--topology", default="switch")
+    p.add_argument("--ranks", type=int, default=8)
+    p.add_argument("--no-congestion", action="store_true")
+    p.add_argument("-o", "--output")
+    p.set_defaults(fn=_cmd_sim)
+
+    p = sub.add_parser("replay", help="replay the trace on this system")
+    common(p)
+    p.add_argument("--mode", default="full",
+                   choices=("compute", "comm", "full"))
+    p.add_argument("--limit", type=int,
+                   help="dry-run: replay only the first N node ids")
+    p.add_argument("-o", "--output")
+    p.set_defaults(fn=_cmd_replay)
+
+    p = sub.add_parser("analyze", help="op counts / comm summary / volumes")
+    common(p)
+    p.add_argument("--deep", action="store_true",
+                   help="also compute critical path + exposed comm")
+    p.add_argument("-o", "--output")
+    p.set_defaults(fn=_cmd_analyze)
+
+    p = sub.add_parser("stages", help="list the stage registry")
+    p.set_defaults(fn=_cmd_stages)
+
+    return ap
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ns = build_parser().parse_args(argv)
+    try:
+        return ns.fn(ns)
+    except (ValueError, KeyError, FileNotFoundError, RuntimeError) as e:
+        # expected operational errors (bad stage name, bad file, bad config):
+        # one line, no traceback
+        if isinstance(e, OSError):
+            msg = f"{e.strerror}: {e.filename}"
+        else:
+            msg = e.args[0] if e.args else e
+        print(f"error: {msg}", file=sys.stderr)
+        return 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

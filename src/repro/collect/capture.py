@@ -19,8 +19,8 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 
-from ..core.converter import convert
-from ..core.linker import link
+from ..core.converter import convert_trace
+from ..core.linker import link_traces
 from ..core.schema import ExecutionTrace
 from .cost_model import TpuCostModel
 from .hlo_trace import build_device_trace, module_cost
@@ -42,7 +42,7 @@ def capture(fn: Callable, *args, stage: str = "post",
                    max_expand=max_expand, rank=rank, world_size=world_size)
     host.metadata["stage"] = stage
     if stage == "pre":
-        out, conv_report = convert(host)
+        out, conv_report = convert_trace(host)
         report["convert"] = conv_report.summary()
         return out, report
 
@@ -66,9 +66,9 @@ def capture(fn: Callable, *args, stage: str = "post",
     else:
         device.metadata["duration_source"] = "model"
 
-    linked, link_report = link(host, device)
+    linked, link_report = link_traces(host, device)
     report["link"] = link_report.summary()
-    out, conv_report = convert(linked)
+    out, conv_report = convert_trace(linked)
     report["convert"] = conv_report.summary()
     return out, report
 

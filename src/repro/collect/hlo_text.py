@@ -138,9 +138,16 @@ def parse_instructions(hlo_text: str) -> List[HloInstr]:
         operands = []
         for part in _split_top_level(opsec):
             part = part.strip()
-            mm = _OPERAND_RE.match(part)
-            if mm:
-                operands.append(mm.group(1))
+            # typed operand ("f32[128,128]{1,0} %gte.3" or "(s32[], ...) %t"):
+            # the %-prefixed ref is the name; bare "%a" / "a" forms keep the
+            # first-token fallback
+            named = re.findall(r"%([\w.\-]+)", part)
+            if named:
+                operands.append(named[-1])
+            else:
+                mm = _OPERAND_RE.match(part)
+                if mm:
+                    operands.append(mm.group(1))
         rg = _RG_RE.search(attrs)
         opn = _OPNAME_RE.search(line)
         ctrl = _CTRL_RE.search(attrs)

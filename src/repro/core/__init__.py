@@ -1,10 +1,11 @@
 """Chakra ET core: schema, serialization, linking, conversion, feeding, analysis."""
 from .schema import (CollectiveType, DepType, ETNode, ExecutionTrace, NodeType,
                      ProcessGroup, StorageDesc, TensorDesc, dtype_size)
-from .serialization import (ChkbReader, from_chkb_bytes, from_json_bytes, load,
-                            save, to_chkb_bytes, to_json_bytes)
-from .converter import ConvertReport, convert
-from .linker import LinkReport, link
+from .serialization import (ChkbReader, ChkbWriter, from_chkb_bytes,
+                            from_json_bytes, load, save, to_chkb_bytes,
+                            to_json_bytes)
+from .converter import ConvertReport, convert, convert_trace
+from .linker import LinkReport, link, link_traces
 from .feeder import ETFeeder, POLICIES
 from .reconstructor import Timeline, reconstruct
 from . import analysis, generator, infragraph, visualize
@@ -12,9 +13,10 @@ from . import analysis, generator, infragraph, visualize
 __all__ = [
     "CollectiveType", "DepType", "ETNode", "ExecutionTrace", "NodeType",
     "ProcessGroup", "StorageDesc", "TensorDesc", "dtype_size",
-    "ChkbReader", "from_chkb_bytes", "from_json_bytes", "load", "save",
-    "to_chkb_bytes", "to_json_bytes",
-    "ConvertReport", "convert", "LinkReport", "link",
+    "ChkbReader", "ChkbWriter", "from_chkb_bytes", "from_json_bytes", "load",
+    "save", "to_chkb_bytes", "to_json_bytes",
+    "ConvertReport", "convert", "convert_trace",
+    "LinkReport", "link", "link_traces",
     "ETFeeder", "POLICIES", "Timeline", "reconstruct",
     "analysis", "generator", "infragraph", "visualize",
 ]

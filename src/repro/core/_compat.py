@@ -1,0 +1,117 @@
+"""Optional-dependency shims: fast codecs with stdlib fallbacks.
+
+The trace tooling prefers ``orjson`` (JSON) and ``zstandard`` (block
+compression) but must run in containers that ship neither, so every consumer
+goes through this module instead of importing them directly:
+
+* ``json_dumps`` / ``json_loads`` — orjson when present, else stdlib ``json``
+  (compact separators, numpy scalars/arrays coerced via ``item``/``tolist``).
+* ``compressor(codec)`` / ``decompressor(codec)`` — zstd when present, else
+  zlib.  CHKB headers record the codec that wrote them; ``.json.zst`` payloads
+  are sniffed by magic bytes, so traces written with one codec load with
+  whichever stack is available (as long as that codec's library is).
+"""
+from __future__ import annotations
+
+import json as _json
+import zlib
+from typing import Any, Optional
+
+try:
+    import orjson as _orjson
+    HAVE_ORJSON = True
+except ImportError:  # pragma: no cover - depends on environment
+    _orjson = None
+    HAVE_ORJSON = False
+
+try:
+    import zstandard as _zstd
+    HAVE_ZSTD = True
+except ImportError:  # pragma: no cover - depends on environment
+    _zstd = None
+    HAVE_ZSTD = False
+
+#: Codec used for newly written traces on this installation.
+DEFAULT_CODEC = "zstd" if HAVE_ZSTD else "zlib"
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _coerce(obj: Any) -> Any:
+    """JSON default= hook: numpy scalars/arrays and sets."""
+    if hasattr(obj, "item") and not isinstance(obj, (list, tuple, dict)):
+        try:
+            return obj.item()
+        except (TypeError, ValueError):
+            pass
+    if hasattr(obj, "tolist"):
+        return obj.tolist()
+    if isinstance(obj, (set, frozenset)):
+        return sorted(obj)
+    raise TypeError(f"not JSON serializable: {type(obj).__name__}")
+
+
+def json_dumps(obj: Any) -> bytes:
+    if _orjson is not None:
+        return _orjson.dumps(obj, default=_coerce)
+    return _json.dumps(obj, separators=(",", ":"), default=_coerce).encode()
+
+
+def json_loads(data: Any) -> Any:
+    if _orjson is not None:
+        return _orjson.loads(data)
+    if isinstance(data, (bytes, bytearray, memoryview)):
+        data = bytes(data).decode()
+    return _json.loads(data)
+
+
+class _ZlibCompressor:
+    def __init__(self, level: int = 6) -> None:
+        self.level = min(max(int(level), 1), 9)
+
+    def compress(self, data: bytes) -> bytes:
+        return zlib.compress(data, self.level)
+
+
+class _ZlibDecompressor:
+    def decompress(self, data: bytes) -> bytes:
+        return zlib.decompress(data)
+
+
+def compressor(codec: Optional[str] = None, level: int = 3):
+    """Object with ``.compress(bytes) -> bytes`` for the given codec."""
+    codec = codec or DEFAULT_CODEC
+    if codec == "zstd":
+        if not HAVE_ZSTD:
+            raise RuntimeError("trace requires the 'zstandard' package")
+        return _zstd.ZstdCompressor(level=level)
+    if codec == "zlib":
+        # zstd level 3 ~ zlib default 6 in ratio; keep zlib's default
+        return _ZlibCompressor(6 if level <= 9 else 9)
+    raise ValueError(f"unknown compression codec {codec!r}")
+
+
+def decompressor(codec: Optional[str] = None):
+    """Object with ``.decompress(bytes) -> bytes`` for the given codec."""
+    codec = codec or DEFAULT_CODEC
+    if codec == "zstd":
+        if not HAVE_ZSTD:
+            raise RuntimeError(
+                "trace was written with zstd but 'zstandard' is not installed")
+        return _zstd.ZstdDecompressor()
+    if codec == "zlib":
+        return _ZlibDecompressor()
+    raise ValueError(f"unknown compression codec {codec!r}")
+
+
+def sniff_codec(data: bytes) -> str:
+    """Identify the codec of a compressed payload by magic bytes."""
+    return "zstd" if bytes(data[:4]) == _ZSTD_MAGIC else "zlib"
+
+
+def warn_deprecated(old: str, new: str) -> None:
+    """Tag a legacy entry point superseded by the repro.pipeline API."""
+    import warnings
+
+    warnings.warn(f"{old} is deprecated; use {new}", DeprecationWarning,
+                  stacklevel=3)

@@ -19,6 +19,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Tuple
 
+from ._compat import warn_deprecated
 from .schema import CollectiveType, ETNode, ExecutionTrace, NodeType
 
 
@@ -173,7 +174,7 @@ def canonicalize(et: ExecutionTrace) -> ExecutionTrace:
     return out
 
 
-def convert(et: ExecutionTrace) -> Tuple[ExecutionTrace, ConvertReport]:
+def convert_trace(et: ExecutionTrace) -> Tuple[ExecutionTrace, ConvertReport]:
     """Full converter pass: verify + clean + canonicalize."""
     report = ConvertReport(nodes_in=len(et), edges_in=_edge_count(et))
     verify_and_clean(et, report)
@@ -182,3 +183,15 @@ def convert(et: ExecutionTrace) -> Tuple[ExecutionTrace, ConvertReport]:
     report.nodes_out = len(out)
     report.edges_out = _edge_count(out)
     return out, report
+
+
+def convert(et: ExecutionTrace) -> Tuple[ExecutionTrace, ConvertReport]:
+    """Deprecated alias for :func:`convert_trace`.
+
+    Prefer the pipeline stage: ``Pipeline.from_source(et).then("convert")`` —
+    or ``convert_trace`` for a direct call.
+    """
+    warn_deprecated("repro.core.converter.convert",
+                    "repro.pipeline Pipeline.then('convert') "
+                    "or convert_trace()")
+    return convert_trace(et)

@@ -41,10 +41,18 @@ def policy_comm_priority(_: Dict[str, int]) -> Policy:
     return lambda n: (0 if n.is_comm else 1, n.id)
 
 
+def policy_id(_: Dict[str, int]) -> Policy:
+    # lowest id among ready nodes.  On a canonical (topologically numbered)
+    # trace with instant completion this reproduces exact id order, which is
+    # what the streaming pipeline relies on for byte-identical re-encoding.
+    return lambda n: (n.id,)
+
+
 POLICIES = {
     "fifo": policy_fifo,
     "start_time": policy_start_time,
     "comm_priority": policy_comm_priority,
+    "id": policy_id,
 }
 
 
@@ -137,6 +145,60 @@ class ETFeeder:
             order.append(n.id)
             self.mark_completed(n.id)
         return order
+
+    def iter_windows(self, size: Optional[int] = None,
+                     strict: bool = True) -> Iterator[List[ETNode]]:
+        """Drain as dependency-ordered node windows (instant completion).
+
+        This is the pipeline's streaming engine: each yielded window holds at
+        most ``size`` nodes, resident memory stays O(window) even when the
+        source is a CHKB reader, and the elastic extension resolves forward
+        references that straddle window boundaries.
+
+        ``strict=False`` degrades gracefully on traces whose dependencies can
+        never resolve (self-deps, dangling parents, cycles): the unresolvable
+        remainder is flushed in stored order instead of raising, so a
+        downstream converter pass can still repair the trace.
+        """
+        size = size or self.window
+        batch: List[ETNode] = []
+        while self.has_pending():
+            n = self.next_ready()
+            if n is None:
+                if strict:
+                    raise RuntimeError(
+                        "feeder stalled: cycle or missing parent")
+                for n in self._flush_unordered():
+                    batch.append(n)
+                    if len(batch) >= size:
+                        yield batch
+                        batch = []
+                break
+            batch.append(n)
+            self.mark_completed(n.id)
+            if len(batch) >= size:
+                yield batch
+                batch = []
+        if batch:
+            yield batch
+
+    def _flush_unordered(self) -> Iterator[ETNode]:
+        """Emit every not-yet-issued node, dependency gating abandoned:
+        resident nodes in id order, then the rest in stored order."""
+        for nid in sorted(self._nodes):
+            if nid not in self._issued:
+                self._issued.add(nid)
+                self._emitted += 1
+                yield self._nodes[nid]
+        while True:
+            try:
+                n = next(self._node_iter)
+            except StopIteration:
+                return
+            self._ingested += 1
+            self._issued.add(n.id)
+            self._emitted += 1
+            yield n
 
     # ------------------------------------------------------------- internal
     def _push_ready(self, nid: int) -> None:

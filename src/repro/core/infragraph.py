@@ -12,7 +12,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-import orjson
+from ._compat import json_dumps, json_loads
 
 # TPU v5e production constants used across the repo (roofline + simulator).
 TPU_V5E = {
@@ -69,7 +69,7 @@ class InfraGraph:
         return None
 
     def to_json(self) -> bytes:
-        return orjson.dumps({
+        return json_dumps({
             "name": self.name, "attrs": self.attrs,
             "npus": [vars(n) for n in self.npus.values()],
             "links": [vars(l) for l in self.links],
@@ -77,7 +77,7 @@ class InfraGraph:
 
     @classmethod
     def from_json(cls, data: bytes) -> "InfraGraph":
-        d = orjson.loads(data)
+        d = json_loads(data)
         g = cls(name=d.get("name", "infra"), attrs=d.get("attrs", {}))
         for nd in d.get("npus", []):
             g.npus[nd["id"]] = NpuSpec(**nd)

@@ -26,6 +26,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from ._compat import warn_deprecated
 from .schema import ETNode, ExecutionTrace, NodeType
 
 
@@ -80,7 +81,8 @@ def _scope_of(node: ETNode) -> str:
     return s.strip("/")
 
 
-def link(host: ExecutionTrace, device: ExecutionTrace) -> Tuple[ExecutionTrace, LinkReport]:
+def link_traces(host: ExecutionTrace, device: ExecutionTrace
+                ) -> Tuple[ExecutionTrace, LinkReport]:
     """Merge host + device traces into a unified Chakra dependency graph."""
     report = LinkReport(host_nodes=len(host), device_nodes=len(device))
     out = ExecutionTrace(rank=device.rank or host.rank,
@@ -192,6 +194,19 @@ def link(host: ExecutionTrace, device: ExecutionTrace) -> Tuple[ExecutionTrace, 
         report.sync_edges += len(sync)
 
     return out, report
+
+
+def link(host: ExecutionTrace, device: ExecutionTrace
+         ) -> Tuple[ExecutionTrace, LinkReport]:
+    """Deprecated alias for :func:`link_traces`.
+
+    Prefer the pipeline stage: ``Pipeline.from_source(host).then("link",
+    device=device)`` — or ``link_traces`` for a direct call.
+    """
+    warn_deprecated("repro.core.linker.link",
+                    "repro.pipeline Pipeline.then('link', device=...) "
+                    "or link_traces()")
+    return link_traces(host, device)
 
 
 def _clone(n: ETNode, new_id: int) -> ETNode:

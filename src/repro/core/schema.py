@@ -328,6 +328,26 @@ class ExecutionTrace:
             "process_groups": [dataclasses.asdict(p) for p in self.process_groups.values()],
         }
 
+    def to_dict_skeleton(self) -> Dict[str, Any]:
+        """``to_dict()`` without serializing nodes (CHKB header / streaming).
+
+        Key order matches ``to_dict()`` minus ``nodes`` — the CHKB header
+        encoding relies on this being stable.
+        """
+        return {
+            "schema_version": self.schema_version,
+            "rank": self.rank,
+            "world_size": self.world_size,
+            "metadata": self.metadata,
+            "tensors": [dataclasses.asdict(t) for t in self.tensors.values()],
+            "storages": [dataclasses.asdict(s) for s in self.storages.values()],
+            "process_groups": [dataclasses.asdict(p) for p in self.process_groups.values()],
+        }
+
+    def skeleton(self) -> "ExecutionTrace":
+        """Copy with tensors/storages/groups/metadata but no nodes."""
+        return ExecutionTrace.from_dict(self.to_dict_skeleton())
+
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "ExecutionTrace":
         et = cls(rank=d.get("rank", 0), world_size=d.get("world_size", 1),
@@ -373,16 +393,21 @@ def _node_to_dict(n: ETNode) -> Dict[str, Any]:
         d["inputs"] = n.inputs
     if n.outputs:
         d["outputs"] = n.outputs
+    # Each comm_* field is emitted independently of comm_type: MEM_LOAD /
+    # MEM_STORE / DATA_LOAD nodes carry comm_bytes (and p2p-style src/dst)
+    # with comm_type INVALID, and must survive a round-trip.
     if n.comm_type != CollectiveType.INVALID:
         d["comm_type"] = int(n.comm_type)
+    if n.comm_group >= 0:
         d["comm_group"] = n.comm_group
+    if n.comm_bytes:
         d["comm_bytes"] = n.comm_bytes
-        if n.comm_tag:
-            d["comm_tag"] = n.comm_tag
-        if n.comm_src >= 0:
-            d["comm_src"] = n.comm_src
-        if n.comm_dst >= 0:
-            d["comm_dst"] = n.comm_dst
+    if n.comm_tag:
+        d["comm_tag"] = n.comm_tag
+    if n.comm_src >= 0:
+        d["comm_src"] = n.comm_src
+    if n.comm_dst >= 0:
+        d["comm_dst"] = n.comm_dst
     if n.attrs:
         d["attrs"] = n.attrs
     return d

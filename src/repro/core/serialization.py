@@ -3,7 +3,7 @@
 The paper ships Protobuf (compact) and JSON (AMD's human-readable contribution)
 encodings; downstream tools must support both.  Here:
 
-* ``.json`` / ``.json.zst``  — orjson-encoded schema dict, optionally zstd-framed.
+* ``.json`` / ``.json.zst``  — JSON-encoded schema dict, optionally compressed.
 * ``.chkb``                  — "CHaKra Binary": msgpack-encoded with a *hierarchical
   index* so nodes can be loaded in windows without reading the whole trace.  This
   implements the paper's §6.2.1 future work (lossless compression + hierarchical
@@ -13,9 +13,17 @@ CHKB layout::
 
     [8B magic "CHKB\\x00\\x03\\x00\\x00"]
     [4B header_len][header msgpack: metadata, tensors, storages, pgs,
-                    node_count, block_size, block_offsets[], compressed?]
+                    node_count, block_size, block_offsets[], compressed?, codec]
     [node block 0][node block 1] ...    # each: msgpack list of node dicts,
-                                        # individually zstd-compressed
+                                        # individually compressed
+
+Fast codecs (orjson / zstandard) are optional; ``_compat`` provides stdlib
+fallbacks and the header's ``codec`` field records which compressor wrote the
+blocks.
+
+Both the one-shot ``to_chkb_bytes`` and the streaming ``ChkbWriter`` share one
+block encoder, so a windowed pipeline writing node batches produces **byte
+identical** output to serializing the materialized trace.
 
 The feeder (core.feeder) reads CHKB blocks lazily — memory stays proportional
 to the window size, not the trace (paper §4.1 "Dependency-Aware ET Feeder").
@@ -25,12 +33,12 @@ from __future__ import annotations
 import io
 import os
 import struct
-from typing import Any, Dict, Iterator, List, Optional
+from typing import Any, Dict, Iterable, Iterator, List, Optional
 
 import msgpack
-import orjson
-import zstandard
 
+from ._compat import (DEFAULT_CODEC, compressor, decompressor, json_dumps,
+                      json_loads, sniff_codec)
 from .schema import ExecutionTrace, ETNode, _node_from_dict, _node_to_dict
 
 _MAGIC = b"CHKB\x00\x03\x00\x00"
@@ -39,36 +47,93 @@ _DEFAULT_BLOCK = 1024
 
 # --------------------------------------------------------------------- JSON
 def to_json_bytes(et: ExecutionTrace) -> bytes:
-    return orjson.dumps(et.to_dict())
+    return json_dumps(et.to_dict())
 
 
 def from_json_bytes(data: bytes) -> ExecutionTrace:
-    return ExecutionTrace.from_dict(orjson.loads(data))
+    return ExecutionTrace.from_dict(json_loads(data))
 
 
 # --------------------------------------------------------------------- CHKB
+class ChkbWriter:
+    """Streaming CHKB writer: node batches in, indexed blocks out.
+
+    Buffers at most one uncompressed block of node dicts; compressed blocks
+    are appended to an internal spool, so memory stays O(block_size +
+    compressed size).  ``getvalue()``/``write(path)`` assemble
+    magic + header + blocks.  Output is byte-identical to ``to_chkb_bytes``
+    on the materialized trace for the same node order and parameters.
+    """
+
+    def __init__(self, skeleton: ExecutionTrace,
+                 block_size: int = _DEFAULT_BLOCK, compress: bool = True,
+                 codec: Optional[str] = None) -> None:
+        self._header_base = skeleton.to_dict_skeleton()
+        self.block_size = max(1, int(block_size))
+        self.codec = (codec or DEFAULT_CODEC) if compress else None
+        self._cctx = compressor(self.codec, level=3) if compress else None
+        self._buf: List[Dict[str, Any]] = []
+        self._blocks = io.BytesIO()
+        self._block_lengths: List[int] = []
+        self._count = 0
+
+    def add_node(self, node: ETNode) -> None:
+        self._buf.append(_node_to_dict(node))
+        self._count += 1
+        if len(self._buf) >= self.block_size:
+            self._flush_block()
+
+    def add_nodes(self, nodes: Iterable[ETNode]) -> None:
+        for n in nodes:
+            self.add_node(n)
+
+    def _flush_block(self) -> None:
+        if not self._buf:
+            return
+        raw = msgpack.packb(self._buf, use_bin_type=True)
+        if self._cctx is not None:
+            raw = self._cctx.compress(raw)
+        self._blocks.write(raw)
+        self._block_lengths.append(len(raw))
+        self._buf = []
+
+    def _header_bytes(self) -> bytes:
+        header = dict(self._header_base)
+        header["node_count"] = self._count
+        header["block_size"] = self.block_size
+        header["compressed"] = self._cctx is not None
+        if self.codec:
+            header["codec"] = self.codec
+        header["block_lengths"] = self._block_lengths
+        return msgpack.packb(header, use_bin_type=True)
+
+    def getvalue(self) -> bytes:
+        self._flush_block()
+        hb = self._header_bytes()
+        out = io.BytesIO()
+        out.write(_MAGIC)
+        out.write(struct.pack("<I", len(hb)))
+        out.write(hb)
+        out.write(self._blocks.getvalue())
+        return out.getvalue()
+
+    def write(self, path: str) -> str:
+        self._flush_block()
+        hb = self._header_bytes()
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(path, "wb") as fh:
+            fh.write(_MAGIC)
+            fh.write(struct.pack("<I", len(hb)))
+            fh.write(hb)
+            fh.write(self._blocks.getvalue())
+        return path
+
+
 def to_chkb_bytes(et: ExecutionTrace, block_size: int = _DEFAULT_BLOCK,
-                  compress: bool = True) -> bytes:
-    d = et.to_dict()
-    nodes = d.pop("nodes")
-    cctx = zstandard.ZstdCompressor(level=3) if compress else None
-    blocks: List[bytes] = []
-    for i in range(0, len(nodes), block_size):
-        raw = msgpack.packb(nodes[i:i + block_size], use_bin_type=True)
-        blocks.append(cctx.compress(raw) if cctx else raw)
-    header = dict(d)
-    header["node_count"] = len(nodes)
-    header["block_size"] = block_size
-    header["compressed"] = compress
-    header["block_lengths"] = [len(b) for b in blocks]
-    hb = msgpack.packb(header, use_bin_type=True)
-    out = io.BytesIO()
-    out.write(_MAGIC)
-    out.write(struct.pack("<I", len(hb)))
-    out.write(hb)
-    for b in blocks:
-        out.write(b)
-    return out.getvalue()
+                  compress: bool = True, codec: Optional[str] = None) -> bytes:
+    w = ChkbWriter(et, block_size=block_size, compress=compress, codec=codec)
+    w.add_nodes(et.sorted_nodes())
+    return w.getvalue()
 
 
 def _read_chkb_header(data: bytes) -> tuple[Dict[str, Any], int]:
@@ -77,6 +142,13 @@ def _read_chkb_header(data: bytes) -> tuple[Dict[str, Any], int]:
     (hlen,) = struct.unpack_from("<I", data, 8)
     header = msgpack.unpackb(data[12:12 + hlen], raw=False)
     return header, 12 + hlen
+
+
+def _header_decompressor(header: Dict[str, Any]):
+    if not header.get("compressed"):
+        return None
+    # pre-codec files were always zstd
+    return decompressor(header.get("codec", "zstd"))
 
 
 def from_chkb_bytes(data: bytes) -> ExecutionTrace:
@@ -92,7 +164,7 @@ def from_chkb_bytes(data: bytes) -> ExecutionTrace:
 def iter_chkb_node_dicts(data: bytes) -> Iterator[Dict[str, Any]]:
     """Stream node dicts block-by-block (partial loading)."""
     header, off = _read_chkb_header(data)
-    dctx = zstandard.ZstdDecompressor() if header.get("compressed") else None
+    dctx = _header_decompressor(header)
     for blen in header["block_lengths"]:
         raw = data[off:off + blen]
         off += blen
@@ -122,8 +194,7 @@ class ChkbReader:
         for blen in self.header["block_lengths"]:
             offs.append(offs[-1] + blen)
         self._block_offsets = offs
-        self._dctx = (zstandard.ZstdDecompressor()
-                      if self.header.get("compressed") else None)
+        self._dctx = _header_decompressor(self.header)
 
     @property
     def node_count(self) -> int:
@@ -173,7 +244,7 @@ def save(et: ExecutionTrace, path: str, **kw: Any) -> str:
     if path.endswith(".json"):
         data = to_json_bytes(et)
     elif path.endswith(".json.zst"):
-        data = zstandard.ZstdCompressor(level=3).compress(to_json_bytes(et))
+        data = compressor(level=3).compress(to_json_bytes(et))
     elif path.endswith(".chkb"):
         data = to_chkb_bytes(et, **kw)
     else:
@@ -189,7 +260,7 @@ def load(path: str) -> ExecutionTrace:
     if path.endswith(".json"):
         return from_json_bytes(data)
     if path.endswith(".json.zst"):
-        return from_json_bytes(zstandard.ZstdDecompressor().decompress(data))
+        return from_json_bytes(decompressor(sniff_codec(data)).decompress(data))
     if path.endswith(".chkb"):
         return from_chkb_bytes(data)
     raise ValueError(f"unknown trace suffix: {path}")

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 from typing import Dict, Optional
 
-import orjson
+from ._compat import json_dumps, json_loads
 
 from .analysis import COLLECTIVE_NAMES, op_counts
 from .reconstructor import Timeline
@@ -71,7 +71,7 @@ def timeline_to_perfetto(timeline: Timeline, pid: int = 0) -> bytes:
         })
     meta = [{"name": "thread_name", "ph": "M", "pid": pid, "tid": t,
              "args": {"name": res}} for res, t in tids.items()]
-    return orjson.dumps({"traceEvents": meta + events})
+    return json_dumps({"traceEvents": meta + events})
 
 
 def trace_to_perfetto(et: ExecutionTrace, pid: Optional[int] = None) -> bytes:
@@ -86,7 +86,7 @@ def trace_to_perfetto(et: ExecutionTrace, pid: Optional[int] = None) -> bytes:
                        "tid": tid, "ts": n.start_time_micros,
                        "dur": n.duration_micros,
                        "args": {"node_id": n.id}})
-    return orjson.dumps({"traceEvents": events})
+    return json_dumps({"traceEvents": events})
 
 
 def summarize(et: ExecutionTrace) -> str:

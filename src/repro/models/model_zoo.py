@@ -173,7 +173,7 @@ def init_params(cfg: ArchConfig, key: jax.Array, model_axis: int = 16
                 ) -> Params:
     """Concrete initialization matching ``param_specs`` (smoke/examples)."""
     specs, _ = param_specs(cfg, model_axis)
-    leaves, treedef = jax.tree.flatten_with_path(specs)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(specs)
     keys = jax.random.split(key, len(leaves))
     out = []
     for (path, sds), k in zip(leaves, keys):

@@ -1,0 +1,27 @@
+"""repro.pipeline — composable Source -> Pass -> Sink trace processing.
+
+One trace representation, many interchangeable tools (the paper's §4 claim),
+expressed as a pipeline API:
+
+* :class:`Pipeline` — fluent builder over registered stages,
+* :class:`TraceStream` — windowed, dependency-ordered streaming of one trace
+  (elastic windows via the ET feeder; O(window) memory on CHKB sources),
+* :func:`register_stage` / :func:`available_stages` — string-keyed registry
+  making collectors, transforms, serializers, simulators and replayers
+  discoverable by name (``python -m repro stages`` prints the table).
+
+Importing this package registers the built-in stages.
+"""
+from .pipeline import Pipeline
+from .registry import (STAGE_KINDS, available_stages, get_stage, make_stage,
+                       register_stage, stage_doc)
+from .stages import (DEFAULT_WINDOW, Pass, Sink, Source, TracePass,
+                     TraceStream, Window, WindowPass, copy_node)
+from . import builtin  # noqa: F401  (side effect: registers built-in stages)
+
+__all__ = [
+    "Pipeline", "TraceStream", "Window",
+    "Source", "Pass", "Sink", "WindowPass", "TracePass",
+    "register_stage", "get_stage", "make_stage", "available_stages",
+    "stage_doc", "STAGE_KINDS", "DEFAULT_WINDOW", "copy_node",
+]

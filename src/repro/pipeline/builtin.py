@@ -1,0 +1,447 @@
+"""Built-in pipeline stages: the existing tool layers wired into the registry.
+
+Sources   : trace, json, chkb, load, generate, capture
+Passes    : link, convert, scale_time, filter
+Sinks     : trace, json, chkb, save, analyze, feed, sim, replay
+
+Heavy backends (jax-based capture / simulation / replay) are imported lazily
+inside the stage so ``import repro.pipeline`` stays cheap and the registry is
+inspectable without an accelerator stack.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+from ..core import analysis
+from ..core.converter import convert_trace
+from ..core.feeder import ETFeeder, POLICIES
+from ..core.linker import link_traces
+from ..core.schema import ETNode, ExecutionTrace, NodeType
+from ..core.serialization import (ChkbReader, ChkbWriter, load, save,
+                                  to_json_bytes)
+from .registry import register_stage
+from .stages import (DEFAULT_WINDOW, TracePass, TraceStream, Window,
+                     WindowPass)
+
+TraceLike = Union[ExecutionTrace, str]
+
+
+def _as_trace(obj: TraceLike) -> ExecutionTrace:
+    return load(obj) if isinstance(obj, str) else obj
+
+
+# ==================================================================== sources
+@register_stage("trace", kind="source")
+class TraceSource:
+    """In-memory ExecutionTrace."""
+
+    def __init__(self, et: ExecutionTrace, window: int = DEFAULT_WINDOW):
+        self.et = et
+        self.window = window
+
+    def open(self) -> TraceStream:
+        return TraceStream.from_trace(self.et, window=self.window)
+
+
+@register_stage("chkb", kind="source")
+class ChkbSource:
+    """Windowed CHKB file reader (hierarchical index, O(window) memory)."""
+
+    def __init__(self, path: str, window: int = DEFAULT_WINDOW):
+        self.path = path
+        self.window = window
+
+    def open(self) -> TraceStream:
+        return TraceStream.from_chkb(self.path, window=self.window)
+
+
+@register_stage("json", kind="source")
+class JsonSource:
+    """JSON / JSON.zst trace file (materialized on open)."""
+
+    def __init__(self, path: str, window: int = DEFAULT_WINDOW):
+        self.path = path
+        self.window = window
+
+    def open(self) -> TraceStream:
+        return TraceStream.from_trace(load(self.path), window=self.window)
+
+
+@register_stage("load", kind="source")
+class LoadSource:
+    """Any trace file; CHKB streams, JSON materializes (suffix dispatch)."""
+
+    def __init__(self, path: str, window: int = DEFAULT_WINDOW):
+        self.path = path
+        self.window = window
+
+    def open(self) -> TraceStream:
+        if self.path.endswith(".chkb"):
+            return TraceStream.from_chkb(self.path, window=self.window)
+        return TraceStream.from_trace(load(self.path), window=self.window)
+
+
+@register_stage("generate", kind="source")
+class GenerateSource:
+    """Synthetic workload traces (paper §3 test-case generator patterns)."""
+
+    PATTERNS = ("compute_chain", "dp_allreduce", "moe_mixed",
+                "symbolic_transformer")
+
+    def __init__(self, pattern: str = "dp_allreduce",
+                 window: int = DEFAULT_WINDOW, **kw: Any):
+        if pattern not in self.PATTERNS:
+            raise ValueError(
+                f"unknown generator pattern {pattern!r}; "
+                f"options: {list(self.PATTERNS)}")
+        self.pattern = pattern
+        self.window = window
+        self.kw = kw
+
+    def open(self) -> TraceStream:
+        from ..core import generator
+        fn = {
+            "compute_chain": generator.compute_chain,
+            "dp_allreduce": generator.dp_allreduce_pattern,
+            "moe_mixed": generator.moe_mixed_collectives,
+            "symbolic_transformer": generator.symbolic_transformer_step,
+        }[self.pattern]
+        return TraceStream.from_trace(fn(**self.kw), window=self.window)
+
+
+@register_stage("capture", kind="source")
+class CaptureSource:
+    """Chakra collector: jaxpr + HLO capture of one step function."""
+
+    def __init__(self, fn: Any, args: Sequence[Any] = (),
+                 stage: str = "post", execute: bool = False,
+                 rank: int = 0, world_size: int = 1,
+                 window: int = DEFAULT_WINDOW, **kw: Any):
+        self.fn = fn
+        self.args = tuple(args)
+        self.stage = stage
+        self.execute = execute
+        self.rank = rank
+        self.world_size = world_size
+        self.window = window
+        self.kw = kw
+        self.report: Optional[Dict[str, Any]] = None
+
+    def open(self) -> TraceStream:
+        from ..collect.capture import capture
+        et, self.report = capture(self.fn, *self.args, stage=self.stage,
+                                  execute=self.execute, rank=self.rank,
+                                  world_size=self.world_size, **self.kw)
+        return TraceStream.from_trace(et, window=self.window)
+
+
+# ===================================================================== passes
+@register_stage("link", kind="pass")
+class LinkPass(TracePass):
+    """Host<->device trace linker (paper §3.1.1); no-op without a peer."""
+
+    def __init__(self, device: Optional[TraceLike] = None,
+                 host: Optional[TraceLike] = None):
+        if device is not None and host is not None:
+            raise ValueError("pass either device= or host=, not both")
+        self.device = device
+        self.host = host
+
+    def transform_trace(self, et: ExecutionTrace) -> ExecutionTrace:
+        if self.device is None and self.host is None:
+            self.report = "link: skipped (no peer trace)"
+            return et
+        if self.device is not None:
+            out, rep = link_traces(et, _as_trace(self.device))
+        else:
+            out, rep = link_traces(_as_trace(self.host), et)
+        self.report = rep.summary()
+        return out
+
+
+@register_stage("convert", kind="pass")
+class ConvertPass(TracePass):
+    """Standardizing converter (paper §3.1.2): verify, clean, canonicalize."""
+
+    def transform_trace(self, et: ExecutionTrace) -> ExecutionTrace:
+        out, rep = convert_trace(et)
+        self.report = rep.summary()
+        return out
+
+
+_NODE_TYPE_BY_NAME = {t.name: t for t in NodeType}
+
+
+def _resolve_node_type(t: Union[NodeType, str, None]) -> Optional[NodeType]:
+    if t is None or isinstance(t, NodeType):
+        return t
+    try:
+        return _NODE_TYPE_BY_NAME[str(t).upper()]
+    except KeyError:
+        raise ValueError(f"unknown NodeType {t!r}; "
+                         f"options: {sorted(_NODE_TYPE_BY_NAME)}") from None
+
+
+@register_stage("scale_time", kind="pass")
+class ScaleTimePass(WindowPass):
+    """What-if timing transform: scale durations (optionally one NodeType).
+
+    ``factor=0.5`` models a 2x-faster resource; communication-only or
+    compute-only scaling expresses the paper's Fig-12-style speed sweeps on
+    the trace itself instead of the simulator config.
+    """
+
+    def __init__(self, factor: float, node_type: Union[NodeType, str, None] = None,
+                 scale_start: bool = True):
+        if factor <= 0:
+            raise ValueError("factor must be > 0")
+        self.factor = float(factor)
+        self.node_type = _resolve_node_type(node_type)
+        self.scale_start = scale_start
+        self._touched = 0
+
+    def begin(self, skeleton: ExecutionTrace) -> ExecutionTrace:
+        skeleton.metadata.setdefault("passes", []).append(
+            {"pass": "scale_time", "factor": self.factor,
+             "node_type": self.node_type.name if self.node_type else None})
+        return skeleton
+
+    def transform(self, nodes: Window) -> Window:
+        for n in nodes:
+            if self.node_type is None or n.type == self.node_type:
+                n.duration_micros *= self.factor
+                self._touched += 1
+            if self.scale_start:
+                n.start_time_micros *= self.factor
+        self.report = f"scale_time: x{self.factor} on {self._touched} nodes"
+        return nodes
+
+
+@register_stage("filter", kind="pass")
+class FilterPass(WindowPass):
+    """Streaming node filter with dependency splicing.
+
+    Dropped nodes are removed from the stream and their dependencies are
+    spliced into their dependents (transitively), so the surviving graph
+    stays dependency-closed — downstream feeders never see a dangling edge.
+    Windows arrive in dependency order, which is exactly what makes the
+    single forward pass sufficient.
+    """
+
+    def __init__(self, drop_types: Sequence[Union[NodeType, str]] = (),
+                 min_duration_us: float = 0.0,
+                 name_re: Optional[str] = None):
+        self.drop_types = {_resolve_node_type(t) for t in drop_types}
+        self.min_duration_us = float(min_duration_us)
+        self.name_re = re.compile(name_re) if name_re else None
+        self._spliced: Dict[int, List[int]] = {}   # dropped id -> live deps
+        self._dropped = 0
+        self._kept = 0
+
+    def _drop(self, n: ETNode) -> bool:
+        if n.type in self.drop_types:
+            return True
+        if self.min_duration_us and 0 < n.duration_micros < self.min_duration_us:
+            return True
+        if self.name_re is not None and self.name_re.search(n.name):
+            return True
+        return False
+
+    def _resolve_deps(self, deps: List[int]) -> List[int]:
+        out: List[int] = []
+        seen = set()
+        for d in deps:
+            for r in self._spliced.get(d, (d,)):
+                if r not in seen:
+                    seen.add(r)
+                    out.append(r)
+        return out
+
+    def transform(self, nodes: Window) -> Window:
+        kept: Window = []
+        for n in nodes:
+            n.ctrl_deps = self._resolve_deps(n.ctrl_deps)
+            n.data_deps = self._resolve_deps(n.data_deps)
+            n.sync_deps = self._resolve_deps(n.sync_deps)
+            if self._drop(n):
+                # a dependent of n now depends on n's (live) deps instead
+                merged = self._resolve_deps(
+                    n.ctrl_deps + n.data_deps + n.sync_deps)
+                self._spliced[n.id] = merged
+                self._dropped += 1
+            else:
+                kept.append(n)
+                self._kept += 1
+        self.report = f"filter: kept {self._kept}, dropped {self._dropped}"
+        return kept
+
+
+# ====================================================================== sinks
+@register_stage("trace", kind="sink")
+class CollectSink:
+    """Materialize the stream into an in-memory ExecutionTrace."""
+
+    def consume(self, stream: TraceStream) -> ExecutionTrace:
+        return stream.materialize()
+
+
+@register_stage("chkb", kind="sink")
+class ChkbSink:
+    """Streaming CHKB writer: windows are encoded block-by-block as they
+    arrive; output is byte-identical to serializing the materialized trace."""
+
+    def __init__(self, path: str, block_size: int = 1024,
+                 compress: bool = True, codec: Optional[str] = None):
+        self.path = path
+        self.block_size = block_size
+        self.compress = compress
+        self.codec = codec
+
+    def consume(self, stream: TraceStream) -> str:
+        writer = ChkbWriter(stream.skeleton, block_size=self.block_size,
+                            compress=self.compress, codec=self.codec)
+        for window in stream.windows():
+            writer.add_nodes(window)
+        return writer.write(self.path)
+
+
+@register_stage("json", kind="sink")
+class JsonSink:
+    """JSON trace writer (materializes; JSON has no windowed encoding)."""
+
+    def __init__(self, path: str):
+        self.path = path
+
+    def consume(self, stream: TraceStream) -> str:
+        return save(stream.materialize(), self.path)
+
+
+@register_stage("save", kind="sink")
+class SaveSink:
+    """Suffix-dispatched writer: .chkb streams, .json/.json.zst materialize."""
+
+    def __init__(self, path: str, **kw: Any):
+        self.path = path
+        self.kw = kw
+
+    def consume(self, stream: TraceStream) -> str:
+        if self.path.endswith(".chkb"):
+            return ChkbSink(self.path, **self.kw).consume(stream)
+        return save(stream.materialize(), self.path, **self.kw)
+
+
+@register_stage("analyze", kind="sink")
+class AnalyzeSink:
+    """Streaming trace analytics (op counts, comm summary, volumes).
+
+    ``deep=True`` additionally materializes for graph-global metrics
+    (critical path, exposed communication).
+    """
+
+    def __init__(self, deep: bool = False):
+        self.deep = deep
+
+    def consume(self, stream: TraceStream) -> Dict[str, Any]:
+        from collections import Counter, defaultdict
+        op_counts: Counter = Counter()
+        comm: Dict[str, Dict[str, float]] = defaultdict(
+            lambda: {"count": 0, "bytes": 0.0, "duration_us": 0.0})
+        nodes = 0
+        edges = 0
+        total_bytes = 0
+        duration_us = 0.0
+        kept: Optional[ExecutionTrace] = stream.skeleton if self.deep else None
+        for window in stream.windows():
+            for n in window:
+                nodes += 1
+                edges += (len(n.ctrl_deps) + len(n.data_deps)
+                          + len(n.sync_deps))
+                total_bytes += n.comm_bytes
+                duration_us += n.duration_micros
+                op_counts[analysis.categorize(n)] += 1
+                if n.is_comm:
+                    k = analysis.COLLECTIVE_NAMES.get(n.comm_type, "P2P")
+                    comm[k]["count"] += 1
+                    comm[k]["bytes"] += n.comm_bytes
+                    comm[k]["duration_us"] += n.duration_micros
+                if kept is not None:
+                    kept.add_node(n)
+        out: Dict[str, Any] = {
+            "nodes": nodes, "edges": edges,
+            "total_bytes": total_bytes, "sum_duration_us": duration_us,
+            "op_counts": dict(op_counts), "comm_summary": dict(comm),
+            "rank": stream.skeleton.rank,
+            "world_size": stream.skeleton.world_size,
+        }
+        if kept is not None:
+            cp = analysis.critical_path(kept)
+            out["critical_path"] = {
+                "nodes": len(cp.node_ids), "length_us": cp.length_us,
+                "compute_us": cp.compute_us, "comm_us": cp.comm_us,
+            }
+            out["exposed_comm"] = analysis.exposed_comm(kept)
+        return out
+
+
+@register_stage("feed", kind="sink")
+class FeedSink:
+    """Dependency-aware feed (paper §4.1): drain order + schedule stats."""
+
+    def __init__(self, policy: str = "fifo", window: int = DEFAULT_WINDOW):
+        if policy not in POLICIES:
+            raise ValueError(
+                f"unknown policy {policy!r}; options: {sorted(POLICIES)}")
+        self.policy = policy
+        self.window = window
+
+    def consume(self, stream: TraceStream) -> Dict[str, Any]:
+        feeder = ETFeeder(stream.materialize(), window=self.window,
+                          policy=self.policy)
+        order = feeder.drain_order()
+        return {"policy": self.policy, "window": self.window,
+                "nodes_fed": len(order),
+                "first": order[:8], "last": order[-8:]}
+
+
+@register_stage("sim", kind="sink")
+class SimSink:
+    """Discrete-event what-if simulation (ASTRA-sim role, paper §4.3.1)."""
+
+    def __init__(self, topology: str = "switch", ranks: int = 8,
+                 congestion: bool = True,
+                 extra_traces: Sequence[TraceLike] = (), **fabric_kw: Any):
+        self.topology = topology
+        self.ranks = ranks
+        self.congestion = congestion
+        self.extra_traces = list(extra_traces)
+        self.fabric_kw = fabric_kw
+
+    def consume(self, stream: TraceStream) -> Any:
+        from ..sim import Fabric, SimConfig, Simulator
+        traces = [stream.materialize()]
+        traces += [_as_trace(t) for t in self.extra_traces]
+        fabric = Fabric.build(self.topology, self.ranks, **self.fabric_kw)
+        cfg = SimConfig(congestion=self.congestion)
+        return Simulator(traces, fabric, cfg).run()
+
+
+@register_stage("replay", kind="sink")
+class ReplaySink:
+    """JAX replay of the trace's ops (paper §4.2): synthetic kernels +
+    collectives over randomized data."""
+
+    def __init__(self, mode: str = "full", limit: Optional[int] = None,
+                 mesh: Any = None, **cfg_kw: Any):
+        self.mode = mode
+        self.limit = limit
+        self.mesh = mesh
+        self.cfg_kw = cfg_kw
+
+    def consume(self, stream: TraceStream) -> Any:
+        from ..sim import ReplayConfig, Replayer
+        cfg = ReplayConfig(mode=self.mode, **self.cfg_kw)
+        if self.limit is not None:
+            cfg.node_range = (0, int(self.limit))
+        return Replayer(stream.materialize(), cfg, mesh=self.mesh).run()

@@ -1,0 +1,126 @@
+"""The Pipeline: fluent composition of registered Source -> Pass* -> Sink.
+
+    from repro.pipeline import Pipeline
+
+    out = (Pipeline.from_source("chkb", "trace.chkb", window=256)
+           .then("link", device=dev_et)
+           .then("convert")
+           .sink("chkb", "canonical.chkb")
+           .run())
+
+Stages are resolved through the registry by name (strings) or passed as
+instances; ``run()`` opens the source, threads the TraceStream through every
+pass, and returns the sink's result (the materialized trace when no sink is
+set).  Per-stage reports are collected in ``.reports``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple, Union
+
+from ..core.schema import ExecutionTrace
+from .registry import make_stage
+from .stages import DEFAULT_WINDOW, Pass, Sink, Source, TraceStream
+
+
+class Pipeline:
+    def __init__(self, source: Source, window: int = DEFAULT_WINDOW) -> None:
+        self._source = source
+        self._passes: List[Tuple[str, Pass]] = []
+        self._sink: Optional[Tuple[str, Sink]] = None
+        self.window = max(1, int(window))
+        #: stage label -> report (populated by run())
+        self.reports: Dict[str, Any] = {}
+
+    # ------------------------------------------------------------- building
+    @classmethod
+    def from_source(cls, source: Union[str, Source, ExecutionTrace],
+                    *args: Any, window: int = DEFAULT_WINDOW,
+                    **kw: Any) -> "Pipeline":
+        """Start a pipeline from a registered source name, a Source
+        instance, or an in-memory ExecutionTrace."""
+        if isinstance(source, ExecutionTrace):
+            src = make_stage("source", "trace", source, window=window, **kw)
+        elif isinstance(source, str):
+            src = make_stage("source", source, *args, window=window, **kw)
+        else:
+            src = source
+        return cls(src, window=window)
+
+    @classmethod
+    def from_file(cls, path: str, window: int = DEFAULT_WINDOW) -> "Pipeline":
+        return cls.from_source("load", path, window=window)
+
+    def then(self, p: Union[str, Pass], **kw: Any) -> "Pipeline":
+        """Append a pass (registered name or instance)."""
+        if isinstance(p, str):
+            label, stage = p, make_stage("pass", p, **kw)
+        else:
+            if kw:
+                raise ValueError("kwargs only apply to registered names")
+            label, stage = type(p).__name__, p
+        self._passes.append((self._unique(label), stage))
+        return self
+
+    def sink(self, s: Union[str, Sink], *args: Any, **kw: Any) -> "Pipeline":
+        """Set the terminal sink (registered name or instance)."""
+        if self._sink is not None:
+            raise ValueError("pipeline already has a sink")
+        if isinstance(s, str):
+            label, stage = s, make_stage("sink", s, *args, **kw)
+        else:
+            if args or kw:
+                raise ValueError("args/kwargs only apply to registered names")
+            label, stage = type(s).__name__, s
+        self._sink = (label, stage)
+        return self
+
+    def _unique(self, label: str) -> str:
+        existing = {lbl for lbl, _ in self._passes}
+        if label not in existing:
+            return label
+        i = 2
+        while f"{label}#{i}" in existing:
+            i += 1
+        return f"{label}#{i}"
+
+    # -------------------------------------------------------------- running
+    def run(self) -> Any:
+        """Execute: source -> passes -> sink.  Returns the sink result (the
+        materialized ExecutionTrace when no sink was set)."""
+        self.reports = {}
+        stream = self._source.open()
+        self._note("source", self._source)
+        for label, p in self._passes:
+            stream = p.apply(stream)
+            if not isinstance(stream, TraceStream):
+                raise TypeError(f"pass {label!r} returned "
+                                f"{type(stream).__name__}, not TraceStream")
+        if self._sink is None:
+            result: Any = stream.materialize()
+        else:
+            result = self._sink[1].consume(stream)
+        # window passes produce their reports while the sink drains the
+        # stream, so collect them after consumption
+        for label, p in self._passes:
+            self._note(label, p)
+        if self._sink is not None:
+            self._note(self._sink[0], self._sink[1])
+        return result
+
+    def materialize(self) -> ExecutionTrace:
+        """Run with no sink (or before setting one) and return the trace."""
+        if self._sink is not None:
+            raise ValueError("pipeline has a sink; use run()")
+        return self.run()
+
+    def _note(self, label: str, stage: Any) -> None:
+        rep = getattr(stage, "report", None)
+        if rep is not None:
+            self.reports[label] = rep
+
+    def __repr__(self) -> str:
+        stages = [type(self._source).__name__]
+        stages += [lbl for lbl, _ in self._passes]
+        if self._sink is not None:
+            stages.append(f"-> {self._sink[0]}")
+        return f"Pipeline({' | '.join(stages)}, window={self.window})"

@@ -1,0 +1,70 @@
+"""String-keyed stage registry.
+
+Collectors, transforms, serializers, simulators and replayers register under
+``(kind, name)`` so pipelines, the CLI, and downstream tools discover them by
+name instead of importing call sites:
+
+    @register_stage("scale_time", kind="pass")
+    class ScaleTimePass(WindowPass):
+        ...
+
+    make_stage("pass", "scale_time", factor=0.5)
+
+Core kinds are ``source`` / ``pass`` / ``sink`` (the pipeline's stage
+taxonomy); other tool families (e.g. the benchmark harness) may register
+custom kinds.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+STAGE_KINDS = ("source", "pass", "sink")
+
+_REGISTRY: Dict[Tuple[str, str], Callable[..., Any]] = {}
+
+
+def register_stage(name: str, kind: str, *, overwrite: bool = False
+                   ) -> Callable[[Callable[..., Any]], Callable[..., Any]]:
+    """Decorator registering a stage factory (class or function) by name."""
+    if not name or not isinstance(name, str):
+        raise ValueError(f"invalid stage name {name!r}")
+    kind = str(kind)
+
+    def deco(factory: Callable[..., Any]) -> Callable[..., Any]:
+        key = (kind, name)
+        if key in _REGISTRY and not overwrite:
+            raise ValueError(f"stage {kind}:{name} already registered")
+        _REGISTRY[key] = factory
+        return factory
+
+    return deco
+
+
+def get_stage(kind: str, name: str) -> Callable[..., Any]:
+    """Look up a stage factory; raises KeyError listing what exists."""
+    try:
+        return _REGISTRY[(kind, name)]
+    except KeyError:
+        options = sorted(n for k, n in _REGISTRY if k == kind)
+        raise KeyError(
+            f"unknown {kind} stage {name!r}; registered: {options}") from None
+
+
+def make_stage(kind: str, name: str, *args: Any, **kw: Any) -> Any:
+    """Instantiate a registered stage."""
+    return get_stage(kind, name)(*args, **kw)
+
+
+def available_stages(kind: Optional[str] = None) -> Dict[str, List[str]]:
+    """Registered stage names grouped by kind."""
+    out: Dict[str, List[str]] = {}
+    for (k, n) in sorted(_REGISTRY):
+        if kind is None or k == kind:
+            out.setdefault(k, []).append(n)
+    return out
+
+
+def stage_doc(kind: str, name: str) -> str:
+    """First docstring line of a registered stage (registry tables)."""
+    doc = get_stage(kind, name).__doc__ or ""
+    return doc.strip().splitlines()[0] if doc.strip() else ""

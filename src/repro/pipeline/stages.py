@@ -1,0 +1,198 @@
+"""Stage protocols and the streaming trace representation.
+
+The pipeline moves **one logical execution trace** between stages as a
+:class:`TraceStream`: a node-free skeleton (rank, metadata, tensors, storages,
+process groups) plus a lazy iterator of dependency-ordered node *windows*.
+Windows come from the feeder's elastic-window machinery (``ETFeeder.
+iter_windows`` with the ``id`` policy), so
+
+* a CHKB-backed stream keeps O(window) nodes resident, never the whole trace;
+* on a canonical (topologically id-numbered) trace the window order is exact
+  id order, which makes streaming re-encoding byte-identical to serializing
+  the materialized trace;
+* forward references that straddle a window boundary are resolved by the
+  feeder's elastic extension instead of failing.
+
+Stage taxonomy (paper §4's tool categories):
+
+* :class:`Source` — produces a TraceStream (collector, reader, generator).
+* :class:`Pass` — TraceStream -> TraceStream.  :class:`WindowPass` subclasses
+  transform node windows without materializing; :class:`TracePass` subclasses
+  materialize, transform the whole trace, and re-stream (linker, converter).
+* :class:`Sink` — consumes a TraceStream (serializer, analyzer, simulator,
+  replayer, feeder).
+"""
+from __future__ import annotations
+
+from typing import (Any, Callable, Iterable, Iterator, List, Optional,
+                    Protocol, Union, runtime_checkable)
+
+from ..core.feeder import ETFeeder
+from ..core.schema import ETNode, ExecutionTrace
+from ..core.serialization import ChkbReader
+
+DEFAULT_WINDOW = 1024
+
+Window = List[ETNode]
+
+
+def copy_node(n: ETNode) -> ETNode:
+    """Independent copy of one node (window passes must not mutate inputs:
+    an in-memory source shares node objects with the originating trace)."""
+    return ETNode(
+        id=n.id, name=n.name, type=n.type,
+        ctrl_deps=list(n.ctrl_deps), data_deps=list(n.data_deps),
+        sync_deps=list(n.sync_deps),
+        start_time_micros=n.start_time_micros,
+        duration_micros=n.duration_micros,
+        inputs=list(n.inputs), outputs=list(n.outputs),
+        comm_type=n.comm_type, comm_group=n.comm_group, comm_tag=n.comm_tag,
+        comm_bytes=n.comm_bytes, comm_src=n.comm_src, comm_dst=n.comm_dst,
+        attrs=dict(n.attrs))
+
+
+class TraceStream:
+    """One execution trace flowing through a pipeline, windowed and lazy.
+
+    ``windows`` is consumed exactly once; a stream is a single-shot view.
+    ``node_count`` is a hint (None when the upstream cannot know it, e.g.
+    after a filter pass).
+    """
+
+    def __init__(self, skeleton: ExecutionTrace,
+                 windows: Iterable[Window],
+                 window: int = DEFAULT_WINDOW,
+                 node_count: Optional[int] = None) -> None:
+        self.skeleton = skeleton
+        self.window = max(1, int(window))
+        self.node_count = node_count
+        self._windows = iter(windows)
+        self._consumed = False
+
+    # ------------------------------------------------------------- creation
+    # Both constructors stream with strict=False: a trace with unresolvable
+    # dependencies (dangling parents, self-deps, cycles) flows through in
+    # stored order so a converter pass downstream can repair it, instead of
+    # stalling the feed before the repair tool is ever reached.
+
+    @classmethod
+    def from_trace(cls, et: ExecutionTrace,
+                   window: int = DEFAULT_WINDOW) -> "TraceStream":
+        feeder = ETFeeder(et, window=window, policy="id")
+
+        def copied() -> Iterator[Window]:
+            # stream owns its nodes: never alias the caller's trace (a
+            # mutating pass — convert's in-place verify_and_clean — must not
+            # write through to the source ExecutionTrace)
+            for w in feeder.iter_windows(window, strict=False):
+                yield [copy_node(n) for n in w]
+
+        return cls(et.skeleton(), copied(), window=window,
+                   node_count=len(et))
+
+    @classmethod
+    def from_chkb(cls, path_or_reader: Union[str, ChkbReader],
+                  window: int = DEFAULT_WINDOW) -> "TraceStream":
+        reader = (ChkbReader(path_or_reader)
+                  if isinstance(path_or_reader, str) else path_or_reader)
+        feeder = ETFeeder(reader, window=window, policy="id")
+        return cls(reader.skeleton(), feeder.iter_windows(window, strict=False),
+                   window=window, node_count=reader.node_count)
+
+    # ----------------------------------------------------------- consumption
+    def windows(self) -> Iterator[Window]:
+        if self._consumed:
+            raise RuntimeError("TraceStream already consumed (single-shot)")
+        self._consumed = True
+        return self._windows
+
+    def nodes(self) -> Iterator[ETNode]:
+        for w in self.windows():
+            yield from w
+
+    def materialize(self) -> ExecutionTrace:
+        """Collapse the stream into an in-memory ExecutionTrace."""
+        et = self.skeleton
+        for n in self.nodes():
+            et.add_node(n)
+        return et
+
+    # -------------------------------------------------------------- helpers
+    def map_windows(self, fn: Callable[[Window], Window],
+                    skeleton: Optional[ExecutionTrace] = None,
+                    node_count: Optional[int] = None) -> "TraceStream":
+        """Derived stream applying ``fn`` to each window lazily."""
+        src = self.windows()
+
+        def gen() -> Iterator[Window]:
+            for w in src:
+                out = fn(w)
+                if out:
+                    yield out
+
+        return TraceStream(skeleton if skeleton is not None else self.skeleton,
+                           gen(), window=self.window, node_count=node_count)
+
+
+# ------------------------------------------------------------------ protocols
+@runtime_checkable
+class Source(Protocol):
+    """Produces a TraceStream (collector / reader / generator)."""
+
+    def open(self) -> TraceStream: ...
+
+
+@runtime_checkable
+class Pass(Protocol):
+    """Transforms a TraceStream into another TraceStream."""
+
+    def apply(self, stream: TraceStream) -> TraceStream: ...
+
+
+@runtime_checkable
+class Sink(Protocol):
+    """Consumes a TraceStream and returns the stage result."""
+
+    def consume(self, stream: TraceStream) -> Any: ...
+
+
+# ----------------------------------------------------------------- base kinds
+class WindowPass:
+    """Streaming pass: window-local transform, O(window) memory.
+
+    Subclasses override :meth:`transform` (and may override :meth:`begin` to
+    adjust the skeleton / reset state).  Streams own their nodes (the
+    TraceStream constructors copy or deserialize), so ``transform`` may
+    mutate or drop the incoming nodes freely.
+    """
+
+    #: set by subclasses for reports; Pipeline uses the registry name
+    report: Any = None
+
+    def begin(self, skeleton: ExecutionTrace) -> ExecutionTrace:
+        return skeleton
+
+    def transform(self, nodes: Window) -> Window:  # pragma: no cover
+        raise NotImplementedError
+
+    def apply(self, stream: TraceStream) -> TraceStream:
+        skeleton = self.begin(stream.skeleton)
+        return stream.map_windows(self.transform, skeleton=skeleton,
+                                  node_count=None)
+
+
+class TracePass:
+    """Whole-trace pass: materializes, transforms, re-streams.
+
+    For global transforms (canonical renumbering, cross-trace linking) that
+    cannot be expressed window-locally.
+    """
+
+    report: Any = None
+
+    def transform_trace(self, et: ExecutionTrace) -> ExecutionTrace:
+        raise NotImplementedError  # pragma: no cover
+
+    def apply(self, stream: TraceStream) -> TraceStream:
+        out = self.transform_trace(stream.materialize())
+        return TraceStream.from_trace(out, window=stream.window)

@@ -1,5 +1,5 @@
 """InfraGraph builders + trace visualizer outputs."""
-import orjson
+from repro.core._compat import json_loads
 
 from repro.core import generator, visualize
 from repro.core.infragraph import (InfraGraph, clos_two_tier,
@@ -35,7 +35,7 @@ def test_visualizer_outputs():
     dot = visualize.to_dot(et)
     assert dot.startswith("digraph") and "AllReduce" in dot or "comp" in dot
     timeline = reconstruct(et)
-    pf = orjson.loads(visualize.timeline_to_perfetto(timeline))
+    pf = json_loads(visualize.timeline_to_perfetto(timeline))
     assert len(pf.get("traceEvents", [])) > 0
     summary = visualize.summarize(et)
     assert "nodes" in summary

@@ -1,0 +1,211 @@
+"""repro.pipeline: registry, fluent chaining, windowed streaming equivalence,
+deprecation shims, and the CLI."""
+import json
+
+import pytest
+
+from repro.core import (ExecutionTrace, NodeType, convert, convert_trace,
+                        link, link_traces, load, save, to_chkb_bytes)
+from repro.core.generator import (compute_chain, dp_allreduce_pattern,
+                                  moe_mixed_collectives)
+from repro.pipeline import (Pipeline, TraceStream, WindowPass,
+                            available_stages, get_stage, make_stage,
+                            register_stage)
+
+
+def big_trace(n: int = 12000) -> ExecutionTrace:
+    """>=10k-node generated trace (acceptance criterion size)."""
+    et = dp_allreduce_pattern(steps=n // 20, layers=10, ranks=8)
+    assert len(et) >= n // 20 * 20
+    return et
+
+
+# ---------------------------------------------------------------- registry
+def test_registry_lookup_and_instantiation():
+    assert get_stage("pass", "convert") is not None
+    p = make_stage("pass", "scale_time", factor=2.0)
+    assert p.factor == 2.0
+    kinds = available_stages()
+    assert {"source", "pass", "sink"} <= set(kinds)
+    assert "capture" in kinds["source"] and "chkb" in kinds["source"]
+    assert {"link", "convert", "scale_time", "filter"} <= set(kinds["pass"])
+    assert {"chkb", "json", "analyze", "sim", "replay", "feed"} <= set(
+        kinds["sink"])
+
+
+def test_registry_unknown_stage_lists_options():
+    with pytest.raises(KeyError, match="convert"):
+        get_stage("pass", "nonexistent")
+
+
+def test_register_stage_decorator_and_duplicate_guard():
+    @register_stage("negate_time_test", kind="pass")
+    class NegatePass(WindowPass):
+        def transform(self, nodes):
+            for n in nodes:
+                n.duration_micros = -n.duration_micros
+            return nodes
+
+    out = (Pipeline.from_source(compute_chain(5), window=2)
+           .then("negate_time_test").sink("trace").run())
+    assert all(n.duration_micros == -100.0 for n in out)
+    with pytest.raises(ValueError, match="already registered"):
+        register_stage("negate_time_test", kind="pass")(NegatePass)
+
+
+# ---------------------------------------------------------------- chaining
+def test_fluent_chain_scale_convert_analyze():
+    et = moe_mixed_collectives(iters=4, ranks=8)
+    pipe = (Pipeline.from_source(et, window=4)
+            .then("scale_time", factor=0.5, node_type="COMP")
+            .then("convert")
+            .sink("analyze"))
+    stats = pipe.run()
+    assert stats["nodes"] == len(et)
+    assert stats["op_counts"]["AllReduce"] == 4
+    assert "convert" in pipe.reports and "scale_time" in pipe.reports
+    # source trace must be untouched (window passes copy nodes)
+    assert all(n.duration_micros >= 0 and
+               "passes" not in et.metadata for n in et)
+
+
+def test_pipeline_without_sink_materializes():
+    et = compute_chain(10)
+    out = Pipeline.from_source(et).run()
+    assert isinstance(out, ExecutionTrace) and len(out) == 10
+
+
+def test_link_pass_merges_host_device():
+    host = compute_chain(4)
+    device = compute_chain(3)
+    out = (Pipeline.from_source(host).then("link", device=device)
+           .then("convert").sink("trace").run())
+    assert len(out) == 7
+    assert out.metadata.get("linked") and out.metadata.get("converted")
+
+
+def test_filter_pass_splices_deps():
+    et = compute_chain(6)            # 0 <- 1 <- ... <- 5 chain
+    for n in et:
+        if n.id % 2:
+            n.name = f"drop/{n.id}"
+    out = (Pipeline.from_source(et, window=2)
+           .then("filter", name_re=r"^drop/").sink("trace").run())
+    assert sorted(out.nodes) == [0, 2, 4]
+    # deps spliced through the dropped odd nodes: 4 -> 2 -> 0
+    assert out.nodes[2].data_deps == [0]
+    assert out.nodes[4].data_deps == [2]
+    assert out.is_acyclic()
+
+
+# ------------------------------------------------- streaming equivalence
+def test_windowed_chkb_byte_identical_to_in_memory(tmp_path):
+    et = big_trace()
+    assert len(et) >= 10_000
+    src = str(tmp_path / "big.chkb")
+    save(et, src, block_size=512)
+    # in-memory path
+    expected = to_chkb_bytes(load(src))
+    # windowed streaming path: small windows, never materializes
+    out = (Pipeline.from_source("chkb", src, window=64)
+           .sink("chkb", str(tmp_path / "streamed.chkb")).run())
+    streamed = open(out, "rb").read()
+    assert streamed == expected
+
+
+def test_windowed_pass_chain_equals_in_memory(tmp_path):
+    et = big_trace()
+    src = str(tmp_path / "big.chkb")
+    save(et, src)
+    out_w = (Pipeline.from_source("chkb", src, window=32)
+             .then("scale_time", factor=0.25)
+             .sink("chkb", str(tmp_path / "w.chkb")).run())
+    out_m = (Pipeline.from_source(load(src), window=10 ** 9)
+             .then("scale_time", factor=0.25)
+             .sink("chkb", str(tmp_path / "m.chkb")).run())
+    assert open(out_w, "rb").read() == open(out_m, "rb").read()
+
+
+def test_stream_window_sizes_respected():
+    et = compute_chain(100)
+    stream = TraceStream.from_trace(et, window=16)
+    sizes = [len(w) for w in stream.windows()]
+    assert sum(sizes) == 100
+    assert all(s <= 16 for s in sizes)
+    with pytest.raises(RuntimeError, match="consumed"):
+        next(stream.windows())
+
+
+def test_analyze_sink_matches_whole_trace_analysis():
+    from repro.core import analysis
+    et = moe_mixed_collectives(iters=6, ranks=8)
+    stats = Pipeline.from_source(et, window=3).sink("analyze").run()
+    assert stats["op_counts"] == analysis.op_counts(et)
+    assert stats["total_bytes"] == et.total_bytes()
+
+
+def test_dirty_trace_repairable_through_pipeline(tmp_path):
+    # dangling dep + self-dep: the stream must not stall before the converter
+    # pass (the repair tool) gets to run — both in memory and from a file
+    et = ExecutionTrace()
+    a = et.add_node(name="a", type=NodeType.COMP)
+    b = et.add_node(name="b", type=NodeType.COMP)
+    b.data_deps.extend([a.id, 999])       # 999 never exists
+    a.ctrl_deps.append(a.id)              # self-dep
+    out = Pipeline.from_source(et, window=1).then("convert").sink("trace").run()
+    assert len(out) == 2 and out.is_acyclic()
+    assert all(999 not in n.data_deps and n.id not in n.ctrl_deps
+               for n in out)
+    p = str(tmp_path / "dirty.chkb")
+    save(et, p)
+    out2 = (Pipeline.from_source("chkb", p, window=1)
+            .then("convert").sink("trace").run())
+    assert out2.to_dict()["nodes"] == out.to_dict()["nodes"]
+
+
+def test_trace_pass_does_not_mutate_source_trace():
+    et = ExecutionTrace()
+    c = et.add_node(name="coll", type=NodeType.COMM_COLL)   # INVALID comm_type
+    d = et.add_node(name="dep", type=NodeType.COMP)
+    d.data_deps.append(c.id)
+    d.ctrl_deps.append(c.id)              # redundant ctrl dep: convert prunes
+    out = Pipeline.from_source(et).then("convert").sink("trace").run()
+    from repro.core.schema import CollectiveType
+    assert out.nodes[0].comm_type == CollectiveType.ALL_REDUCE  # repaired copy
+    assert et.nodes[c.id].comm_type == CollectiveType.INVALID   # source intact
+    assert et.nodes[d.id].ctrl_deps == [c.id]
+
+
+# ------------------------------------------------------ deprecation shims
+def test_old_entry_points_still_work_with_warning():
+    host = compute_chain(3)
+    device = compute_chain(2)
+    with pytest.warns(DeprecationWarning, match="link"):
+        merged, rep = link(host, device)
+    assert len(merged) == 5 and rep.host_nodes == 3
+    with pytest.warns(DeprecationWarning, match="convert"):
+        out, crep = convert(merged)
+    assert len(out) == 5 and crep.nodes_out == 5
+    # canonical impls match and stay silence-clean
+    merged2, _ = link_traces(compute_chain(3), compute_chain(2))
+    out2, _ = convert_trace(merged2)
+    assert out.to_dict()["nodes"] == out2.to_dict()["nodes"]
+
+
+# ------------------------------------------------------------------- CLI
+def test_cli_end_to_end(tmp_path, capsys):
+    from repro.cli import main
+    t = str(tmp_path / "t.chkb")
+    c = str(tmp_path / "c.chkb")
+    stats_p = str(tmp_path / "stats.json")
+    assert main(["capture", "--generate", "dp_allreduce", "--opt", "steps=2",
+                 "--opt", "layers=3", "--opt", "ranks=4", "-o", t]) == 0
+    assert main(["convert", t, "-o", c, "--window", "8"]) == 0
+    assert main(["analyze", c, "--deep", "-o", stats_p]) == 0
+    stats = json.load(open(stats_p))
+    assert stats["nodes"] == 14 and "critical_path" in stats
+    assert main(["feed", c, "--policy", "comm_priority"]) == 0
+    out = capsys.readouterr().out
+    assert '"nodes_fed": 14' in out
+    assert main(["stages"]) == 0
+    assert "scale_time" in capsys.readouterr().out

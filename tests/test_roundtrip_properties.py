@@ -1,0 +1,122 @@
+"""Round-trip preservation: every node field, every NodeType, both formats.
+
+Regression anchor for the `_node_to_dict` bug where comm_bytes (and p2p
+src/dst) were only serialized for communication nodes, silently zeroing
+MEM_LOAD/MEM_STORE byte counts — and total_bytes() — after a save/load.
+"""
+import dataclasses
+import random
+
+import pytest
+
+from repro.core import (CollectiveType, ETNode, ExecutionTrace, NodeType,
+                        from_chkb_bytes, from_json_bytes, to_chkb_bytes,
+                        to_json_bytes)
+from repro.core.serialization import load, roundtrip_equal, save
+
+FIELDS = [f.name for f in dataclasses.fields(ETNode)]
+
+
+def full_node(i: int, ntype: NodeType) -> ETNode:
+    """A node with EVERY field set to a non-default value."""
+    return ETNode(
+        id=i, name=f"node/{ntype.name.lower()}/{i}", type=ntype,
+        ctrl_deps=[max(0, i - 1)] if i else [],
+        data_deps=[max(0, i - 2)] if i > 1 else [],
+        sync_deps=[max(0, i - 3)] if i > 2 else [],
+        start_time_micros=10.5 * (i + 1),
+        duration_micros=3.25 * (i + 1),
+        inputs=[i * 2], outputs=[i * 2 + 1],
+        comm_type=CollectiveType.ALL_GATHER,
+        comm_group=0, comm_tag=f"tag{i}",
+        comm_bytes=1000 + i, comm_src=i, comm_dst=i + 1,
+        attrs={"op": "dot_general", "flops": 1.5e9, "nested": {"k": [1, 2]}},
+    )
+
+
+def minimal_comm_bytes_node(i: int, ntype: NodeType) -> ETNode:
+    """The regression shape: byte count WITHOUT a collective type."""
+    return ETNode(id=i, name=f"mem{i}", type=ntype, comm_bytes=4096 + i,
+                  comm_src=2, comm_dst=3)
+
+
+def build_trace(node_fn) -> ExecutionTrace:
+    et = ExecutionTrace(rank=1, world_size=4, metadata={"m": 1})
+    et.add_process_group([0, 1, 2, 3], tag="dp")
+    et.add_tensor((4, 8), "bf16")
+    for i, ntype in enumerate(NodeType):
+        et.add_node(node_fn(i, ntype))
+    return et
+
+
+def assert_nodes_equal(a: ExecutionTrace, b: ExecutionTrace) -> None:
+    assert sorted(a.nodes) == sorted(b.nodes)
+    for nid in a.nodes:
+        na, nb = a.nodes[nid], b.nodes[nid]
+        for f in FIELDS:
+            assert getattr(na, f) == getattr(nb, f), (
+                f"field {f} of node {nid} ({na.type.name}) changed: "
+                f"{getattr(na, f)!r} -> {getattr(nb, f)!r}")
+
+
+@pytest.mark.parametrize("codec", ["json", "chkb"])
+@pytest.mark.parametrize("node_fn", [full_node, minimal_comm_bytes_node])
+def test_every_field_every_nodetype_roundtrips(codec, node_fn):
+    et = build_trace(node_fn)
+    if codec == "json":
+        back = from_json_bytes(to_json_bytes(et))
+    else:
+        back = from_chkb_bytes(to_chkb_bytes(et, block_size=3))
+    assert_nodes_equal(et, back)
+    assert roundtrip_equal(et, back)
+
+
+@pytest.mark.parametrize("suffix", ["t.json", "t.json.zst", "t.chkb"])
+def test_mem_node_bytes_survive_save_load(tmp_path, suffix):
+    # the fig7 bandwidth benchmark reads total_bytes() after a save/load;
+    # MEM_LOAD/MEM_STORE counts must not be dropped
+    et = ExecutionTrace()
+    et.add_node(name="ld", type=NodeType.MEM_LOAD, comm_bytes=1 << 20)
+    et.add_node(name="st", type=NodeType.MEM_STORE, comm_bytes=1 << 19)
+    et.add_node(name="dl", type=NodeType.DATA_LOAD, comm_bytes=1 << 18)
+    total = et.total_bytes()
+    assert total == (1 << 20) + (1 << 19) + (1 << 18)
+    p = str(tmp_path / suffix)
+    save(et, p)
+    back = load(p)
+    assert back.total_bytes() == total
+    assert back.total_bytes(NodeType.MEM_LOAD) == 1 << 20
+    assert back.total_bytes(NodeType.MEM_STORE) == 1 << 19
+
+
+def test_p2p_src_dst_survive_without_comm_type():
+    et = ExecutionTrace()
+    et.add_node(name="x", type=NodeType.MEM_STORE, comm_bytes=64,
+                comm_src=1, comm_dst=2)
+    back = from_json_bytes(to_json_bytes(et))
+    n = back.nodes[0]
+    assert (n.comm_bytes, n.comm_src, n.comm_dst) == (64, 1, 2)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_random_traces_double_roundtrip_stable(seed):
+    rng = random.Random(seed)
+    et = ExecutionTrace(rank=rng.randint(0, 7), world_size=8)
+    pg = et.add_process_group(range(8), tag="ep")
+    for i in range(rng.randint(1, 120)):
+        ntype = rng.choice(list(NodeType))
+        n = et.add_node(name=f"n{i}", type=ntype,
+                        duration_micros=rng.uniform(0, 50),
+                        comm_bytes=rng.randint(0, 1 << 16))
+        if ntype in (NodeType.COMM_COLL, NodeType.COMM_SEND,
+                     NodeType.COMM_RECV):
+            n.comm_type = rng.choice(list(CollectiveType)[1:])
+            n.comm_group = pg.id
+        if i:
+            n.data_deps.append(rng.randrange(i))
+    j1 = to_json_bytes(et)
+    j2 = to_json_bytes(from_json_bytes(j1))
+    assert j1 == j2                       # serialization is a fixed point
+    c1 = to_chkb_bytes(et, block_size=7)
+    c2 = to_chkb_bytes(from_chkb_bytes(c1), block_size=7)
+    assert c1 == c2

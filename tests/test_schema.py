@@ -1,8 +1,8 @@
 """Schema + serialization: structure, topological properties, roundtrips
-(including hypothesis property tests over randomized DAGs)."""
-import hypothesis.strategies as st
+(including seeded-random property tests over randomized DAGs)."""
+import random
+
 import pytest
-from hypothesis import given, settings
 
 from repro.core import (CollectiveType, ETNode, ExecutionTrace, NodeType,
                         from_chkb_bytes, from_json_bytes, to_chkb_bytes,
@@ -10,35 +10,35 @@ from repro.core import (CollectiveType, ETNode, ExecutionTrace, NodeType,
 from repro.core.serialization import ChkbReader, roundtrip_equal, save, load
 
 
-# ------------------------------------------------------- strategies
-@st.composite
-def random_dag_trace(draw):
-    n = draw(st.integers(min_value=1, max_value=60))
-    et = ExecutionTrace(rank=draw(st.integers(0, 3)), world_size=4)
+# ------------------------------------------------------- generators
+def random_dag_trace(seed: int) -> ExecutionTrace:
+    rng = random.Random(seed)
+    n = rng.randint(1, 60)
+    et = ExecutionTrace(rank=rng.randint(0, 3), world_size=4)
     pg = et.add_process_group(tuple(range(4)), tag="model")
     for i in range(n):
-        ntype = draw(st.sampled_from([NodeType.COMP, NodeType.COMM_COLL,
-                                      NodeType.MEM_LOAD]))
+        ntype = rng.choice([NodeType.COMP, NodeType.COMM_COLL,
+                            NodeType.MEM_LOAD])
         node = et.add_node(name=f"n{i}", type=ntype,
-                           duration_micros=draw(st.floats(0, 1e3)))
+                           duration_micros=rng.uniform(0, 1e3))
         if ntype == NodeType.COMM_COLL:
-            node.comm_type = draw(st.sampled_from(
-                [CollectiveType.ALL_REDUCE, CollectiveType.ALL_TO_ALL]))
+            node.comm_type = rng.choice(
+                [CollectiveType.ALL_REDUCE, CollectiveType.ALL_TO_ALL])
             node.comm_group = pg.id
-            node.comm_bytes = draw(st.integers(0, 1 << 20))
+            node.comm_bytes = rng.randint(0, 1 << 20)
+        elif ntype == NodeType.MEM_LOAD:
+            node.comm_bytes = rng.randint(0, 1 << 20)
         # edges only to earlier nodes => acyclic by construction
         if i:
-            for dep in draw(st.lists(st.integers(0, i - 1), max_size=3,
-                                     unique=True)):
-                kind = draw(st.sampled_from(["data_deps", "ctrl_deps",
-                                             "sync_deps"]))
+            for dep in rng.sample(range(i), k=min(i, rng.randint(0, 3))):
+                kind = rng.choice(["data_deps", "ctrl_deps", "sync_deps"])
                 getattr(node, kind).append(dep)
     return et
 
 
-@given(random_dag_trace())
-@settings(max_examples=30, deadline=None)
-def test_random_dag_is_acyclic_and_orders(et):
+@pytest.mark.parametrize("seed", range(30))
+def test_random_dag_is_acyclic_and_orders(seed):
+    et = random_dag_trace(seed)
     order = et.topological_order()
     assert sorted(order) == sorted(et.nodes)
     pos = {nid: i for i, nid in enumerate(order)}
@@ -47,15 +47,16 @@ def test_random_dag_is_acyclic_and_orders(et):
             assert pos[d] < pos[n.id]
 
 
-@given(random_dag_trace())
-@settings(max_examples=30, deadline=None)
-def test_json_roundtrip(et):
+@pytest.mark.parametrize("seed", range(30))
+def test_json_roundtrip(seed):
+    et = random_dag_trace(seed)
     assert roundtrip_equal(et, from_json_bytes(to_json_bytes(et)))
 
 
-@given(random_dag_trace(), st.integers(1, 16))
-@settings(max_examples=30, deadline=None)
-def test_chkb_roundtrip(et, block):
+@pytest.mark.parametrize("seed", range(30))
+def test_chkb_roundtrip(seed):
+    et = random_dag_trace(seed)
+    block = random.Random(seed ^ 0xC0FFEE).randint(1, 16)
     data = to_chkb_bytes(et, block_size=block)
     assert roundtrip_equal(et, from_chkb_bytes(data))
 
