@@ -1,0 +1,1 @@
+"""Hot-path perf suite driver package (see benchmarks/perf/run.py)."""

@@ -1,0 +1,62 @@
+"""Perf-suite driver: runs the hot-path microbenchmarks and records the
+repo's performance trajectory in ``BENCH_perf.json`` at the repo root.
+
+  PYTHONPATH=src python -m benchmarks.perf.run                # full suite
+  PYTHONPATH=src python -m benchmarks.perf.run --smoke        # CI-sized
+  PYTHONPATH=src python -m benchmarks.perf.run --no-baseline  # skip ref engine
+  PYTHONPATH=src python -m benchmarks.perf.run perf_chkb -o /tmp/out.json
+
+Benchmarks are dispatched through the `repro.pipeline` stage registry
+(kind="benchmark"), like the paper-figure harness in benchmarks/run.py;
+``python -m repro bench`` is the equivalent CLI entry point.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+
+
+def main(argv=None) -> int:
+    import repro.perf  # registers kind="benchmark" stages
+    from repro.perf import run_suite, write_bench
+
+    ap = argparse.ArgumentParser(prog="benchmarks.perf.run",
+                                 description=__doc__.splitlines()[0])
+    ap.add_argument("names", nargs="*",
+                    help="subset: perf_feeder perf_sim perf_chkb")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced scale (CI perf-smoke job)")
+    ap.add_argument("--no-baseline", dest="baseline", action="store_false",
+                    help="skip the pre-optimization reference engine runs")
+    ap.add_argument("-o", "--output",
+                    default=os.path.join(_REPO_ROOT, "BENCH_perf.json"))
+    ns = ap.parse_args(argv)
+
+    doc = run_suite(scale="smoke" if ns.smoke else "full",
+                    baseline=ns.baseline, names=ns.names or None)
+    path = write_bench(doc, ns.output)
+    for name in ("perf_feeder", "perf_sim", "perf_chkb"):
+        if name in doc:
+            print(f"[ok] {name:12s} ({doc[name]['bench_wall_s']}s)")
+    sims = doc.get("perf_sim", {}).get("scenarios", [])
+    for row in sims:
+        if "wall_speedup" in row:
+            print(f"     sim {row['total_nodes']} nodes x {row['ranks']} "
+                  f"ranks: {row['wall_speedup']}x wall, "
+                  f"{row['events_per_sec_speedup']}x events/sec vs reference")
+    chkb = doc.get("perf_chkb", {})
+    if chkb:
+        print(f"     chkb: block decode {chkb['block_decode_speedup']}x, "
+              f"node decode {chkb['node_decode_speedup']}x, "
+              f"encode {chkb['encode_speedup']}x (v4 vs v3)")
+    print(f"wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

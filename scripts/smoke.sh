@@ -32,4 +32,8 @@ python -m repro replay "$tmp/canon.chkb" --mode compute --limit 8
 echo "== stages =="
 python -m repro stages | grep -q scale_time
 
+echo "== bench (chkb codec only, smoke scale) =="
+python -m repro bench perf_chkb --scale smoke -o "$tmp/bench.json"
+grep -q block_decode_speedup "$tmp/bench.json"
+
 echo "smoke: OK"

@@ -40,8 +40,9 @@ def _parse_opts(pairs: Optional[List[str]]) -> Dict[str, Any]:
     return out
 
 
-def _emit(obj: Any, path: Optional[str]) -> None:
-    text = json.dumps(obj, indent=1, default=str)
+def _emit(obj: Any, path: Optional[str], compact: bool = False) -> None:
+    text = json.dumps(obj, separators=(",", ":"), default=str) if compact \
+        else json.dumps(obj, indent=1, default=str)
     if path:
         with open(path, "w") as fh:
             fh.write(text + "\n")
@@ -154,6 +155,18 @@ def _cmd_stages(ns: argparse.Namespace) -> int:
     return 0
 
 
+def _cmd_bench(ns: argparse.Namespace) -> int:
+    # importing repro.perf registers the perf benchmarks (kind="benchmark");
+    # run_suite dispatches them through the registry and assembles the same
+    # BENCH_perf.json document shape as `python -m benchmarks.perf.run`
+    from .perf import run_suite
+
+    doc = run_suite(scale=ns.scale, baseline=ns.baseline,
+                    names=ns.names or None)
+    _emit(doc, ns.output, compact=ns.as_json)
+    return 0
+
+
 # ------------------------------------------------------------------- parser
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
@@ -225,6 +238,20 @@ def build_parser() -> argparse.ArgumentParser:
 
     p = sub.add_parser("stages", help="list the stage registry")
     p.set_defaults(fn=_cmd_stages)
+
+    p = sub.add_parser("bench", help="hot-path perf suite (BENCH_perf metrics)")
+    p.add_argument("names", nargs="*",
+                   help="benchmark subset (default: all registered), "
+                        "e.g. perf_feeder perf_sim perf_chkb")
+    p.add_argument("--scale", default="smoke", choices=("smoke", "full"),
+                   help="smoke = CI-sized, full = BENCH_perf.json scale")
+    p.add_argument("--no-baseline", dest="baseline", action="store_false",
+                   help="skip pre-optimization reference-engine runs")
+    p.add_argument("-o", "--output", dest="output",
+                   help="write the JSON document here instead of stdout")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="compact single-line JSON (default: pretty-printed)")
+    p.set_defaults(fn=_cmd_bench)
 
     return ap
 

@@ -1,8 +1,9 @@
 """Chakra ET core: schema, serialization, linking, conversion, feeding, analysis."""
 from .schema import (CollectiveType, DepType, ETNode, ExecutionTrace, NodeType,
                      ProcessGroup, StorageDesc, TensorDesc, dtype_size)
-from .serialization import (ChkbReader, ChkbWriter, from_chkb_bytes,
-                            from_json_bytes, load, save, to_chkb_bytes,
+from .serialization import (DEFAULT_VERSION, ChkbReader, ChkbWriter,
+                            NodeColumns, from_chkb_bytes, from_json_bytes,
+                            iter_chkb_nodes, load, save, to_chkb_bytes,
                             to_json_bytes)
 from .converter import ConvertReport, convert, convert_trace
 from .linker import LinkReport, link, link_traces
@@ -13,7 +14,8 @@ from . import analysis, generator, infragraph, visualize
 __all__ = [
     "CollectiveType", "DepType", "ETNode", "ExecutionTrace", "NodeType",
     "ProcessGroup", "StorageDesc", "TensorDesc", "dtype_size",
-    "ChkbReader", "ChkbWriter", "from_chkb_bytes", "from_json_bytes", "load",
+    "DEFAULT_VERSION", "ChkbReader", "ChkbWriter", "NodeColumns",
+    "from_chkb_bytes", "from_json_bytes", "iter_chkb_nodes", "load",
     "save", "to_chkb_bytes", "to_json_bytes",
     "ConvertReport", "convert", "convert_trace",
     "LinkReport", "link", "link_traces",

@@ -14,7 +14,8 @@ from collections import Counter, defaultdict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-from .schema import CollectiveType, ETNode, ExecutionTrace, NodeType
+from .schema import (COMM_NODE_TYPES, CollectiveType, ETNode, ExecutionTrace,
+                     NodeType)
 
 COLLECTIVE_NAMES = {
     CollectiveType.ALL_REDUCE: "AllReduce",
@@ -83,6 +84,64 @@ def comm_summary(et: ExecutionTrace) -> Dict[str, Dict[str, float]]:
         out[k]["bytes"] += n.comm_bytes
         out[k]["duration_us"] += n.duration_micros
     return dict(out)
+
+
+_COMM_NODE_TYPE_INTS = frozenset(int(t) for t in COMM_NODE_TYPES)
+
+
+def columnar_summary(path_or_reader) -> Dict[str, object]:
+    """Whole-trace numeric summary straight off v4 columnar blocks.
+
+    The column-level fast path: node/edge counts, total bytes, total
+    duration, per-NodeType counts and per-collective count/bytes/duration_us
+    are computed from typed arrays without materializing a single ETNode —
+    on production-scale traces this runs 1-2 orders of magnitude faster than
+    the node-object path (see ``BENCH_perf.json``, ``chkb.decode``).
+
+    Accepts a v4 ``.chkb`` path or an open :class:`ChkbReader`.
+    """
+    from .serialization import ChkbReader
+
+    reader = (ChkbReader(path_or_reader) if isinstance(path_or_reader, str)
+              else path_or_reader)
+    owns = isinstance(path_or_reader, str)
+    try:
+        nodes = 0
+        edges = 0
+        total_bytes = 0
+        duration_us = 0.0
+        type_counts: Counter = Counter()
+        comm: Dict[str, Dict[str, float]] = defaultdict(
+            lambda: {"count": 0, "bytes": 0.0, "duration_us": 0.0})
+        comm_types = _COMM_NODE_TYPE_INTS
+        for cols in reader.iter_column_blocks():
+            nodes += cols.count
+            edges += sum(cols.dep_counts)
+            total_bytes += sum(cols.comm_bytes)
+            duration_us += sum(cols.durations)
+            type_counts.update(cols.types)
+            if not comm_types.intersection(cols.types):
+                continue            # compute-only block: arrays did it all
+            for ty, ct, cb, du in zip(cols.types, cols.comm_types,
+                                      cols.comm_bytes, cols.durations):
+                if ty in comm_types:
+                    k = COLLECTIVE_NAMES.get(CollectiveType(ct), "P2P")
+                    row = comm[k]
+                    row["count"] += 1
+                    row["bytes"] += cb
+                    row["duration_us"] += du
+        return {
+            "nodes": nodes,
+            "edges": edges,
+            "total_bytes": total_bytes,
+            "sum_duration_us": duration_us,
+            "node_type_counts": {NodeType(t).name: c
+                                 for t, c in sorted(type_counts.items())},
+            "comm_summary": dict(comm),
+        }
+    finally:
+        if owns:
+            reader.close()
 
 
 def duration_cdf(et: ExecutionTrace, node_type: Optional[NodeType] = NodeType.COMP

@@ -12,14 +12,21 @@ Properties (all tested):
   Policies only arbitrate among *ready* nodes, so dependency invariants can
   never be violated by construction.
 * **Deterministic** under a fixed policy.
+* **O(1) hot-path bookkeeping**: ``in_flight()`` is a counter (it runs inside
+  ``_fill``'s elastic loop — the original set intersection made window refill
+  quadratic in trace size), issued/completed membership is tracked by a
+  watermark-compressed id set (O(1) and O(stragglers) memory on canonical
+  traces instead of a set that grows with the whole trace), and pending-pred
+  counters are dropped as soon as a node becomes ready.
+* **Owns its reader**: ``ETFeeder(path)`` opens a :class:`ChkbReader` and
+  closes it when the node stream drains (or on :meth:`close` / ``with``).
 """
 from __future__ import annotations
 
 import heapq
-from collections import deque
 from typing import Callable, Dict, Iterator, List, Optional, Set, Union
 
-from .schema import ETNode, ExecutionTrace
+from .schema import COMM_NODE_TYPES, ETNode, ExecutionTrace
 from .serialization import ChkbReader
 
 Policy = Callable[[ETNode], tuple]
@@ -37,8 +44,9 @@ def policy_start_time(_: Dict[str, int]) -> Policy:
 
 
 def policy_comm_priority(_: Dict[str, int]) -> Policy:
-    # communication first (frees network earlier / enables overlap), ties by id
-    return lambda n: (0 if n.is_comm else 1, n.id)
+    # communication first (frees network earlier / enables overlap), ties by
+    # id; inline type test (the is_comm property is too slow for this path)
+    return lambda n: (0 if n.type in COMM_NODE_TYPES else 1, n.id)
 
 
 def policy_id(_: Dict[str, int]) -> Policy:
@@ -56,6 +64,48 @@ POLICIES = {
 }
 
 
+class _IdSet:
+    """Monotone id-set: contiguous ``[0, watermark)`` plus sparse stragglers.
+
+    Canonical (topologically renumbered) traces issue and complete ids in
+    near-id order, so membership collapses into the watermark and the sparse
+    overflow set stays bounded by the out-of-order distance — instead of one
+    set entry per node for the life of the feed.  Arbitrary (gapped /
+    negative) id spaces degrade gracefully to plain-set behavior, never worse
+    than the original bookkeeping.
+    """
+
+    __slots__ = ("_watermark", "_sparse")
+
+    def __init__(self) -> None:
+        self._watermark = 0
+        self._sparse: Set[int] = set()
+
+    def add(self, i: int) -> bool:
+        """Insert ``i``; returns True iff it was not already a member."""
+        if i == self._watermark:
+            w = i + 1
+            sparse = self._sparse
+            while w in sparse:
+                sparse.discard(w)
+                w += 1
+            self._watermark = w
+            return True
+        if i > self._watermark or i < 0:
+            sparse = self._sparse
+            if i in sparse:
+                return False
+            sparse.add(i)
+            return True
+        return False                # 0 <= i < watermark: already a member
+
+    def __contains__(self, i: int) -> bool:
+        return 0 <= i < self._watermark or i in self._sparse
+
+    def __len__(self) -> int:
+        return self._watermark + len(self._sparse)
+
+
 class ETFeeder:
     """Windowed, dependency-aware node feeder.
 
@@ -66,15 +116,25 @@ class ETFeeder:
             node = feeder.next_ready()          # None => must complete something
             ...issue node...
             feeder.mark_completed(node.id)
+
+    A feeder constructed from a path owns the underlying :class:`ChkbReader`
+    and closes it as soon as the last node is ingested (close-on-drain); it
+    is also a context manager for early/exceptional teardown.  A reader
+    passed in by the caller stays the caller's to close.
     """
 
     def __init__(self, source: Union[ExecutionTrace, str, ChkbReader],
-                 window: int = 1024, policy: str = "fifo") -> None:
+                 window: int = 1024, policy: str = "fifo",
+                 owns_reader: Optional[bool] = None) -> None:
+        self._reader: Optional[ChkbReader] = None
+        self._owns_reader = False
         if isinstance(source, str):
             source = ChkbReader(source)
-        self._reader: Optional[ChkbReader] = None
+            self._owns_reader = True
         if isinstance(source, ChkbReader):
             self._reader = source
+            if owns_reader is not None:
+                self._owns_reader = bool(owns_reader)
             self._node_iter: Iterator[ETNode] = source.iter_nodes()
             self._total = source.node_count
         else:
@@ -90,11 +150,13 @@ class ETFeeder:
         self._nodes: Dict[int, ETNode] = {}            # resident window
         self._pending_preds: Dict[int, int] = {}       # node -> unresolved pred count
         self._dependents: Dict[int, List[int]] = {}    # pred -> [dependent ids]
-        self._completed: Set[int] = set()
-        self._issued: Set[int] = set()
+        self._completed = _IdSet()
+        self._issued = _IdSet()
+        self._in_flight = 0                            # issued, not yet completed
         self._ready: List[tuple] = []                  # heap of (key, id)
         self._ingested = 0
         self._emitted = 0
+        self._exhausted = False                        # source iterator done
         self._fill()
 
     # ------------------------------------------------------------------ api
@@ -102,17 +164,27 @@ class ETFeeder:
         return self._emitted < self._total
 
     def in_flight(self) -> int:
-        return len(self._issued) - len(self._issued & self._completed)
+        return self._in_flight
 
-    def next_ready(self) -> Optional[ETNode]:
-        """Pop the next ready node per policy, or None if nothing is ready."""
+    def has_ready(self) -> bool:
+        """True iff :meth:`next_ready` would return a node right now.
+
+        Performs the same elastic ingest as ``next_ready`` but issues
+        nothing — the simulator uses this to skip scheduling wake events
+        for ranks whose ready set cannot have changed.
+        """
         while not self._ready and self._ingested < self._total:
             if not self._fill():
                 break
-        if not self._ready:
+        return bool(self._ready)
+
+    def next_ready(self) -> Optional[ETNode]:
+        """Pop the next ready node per policy, or None if nothing is ready."""
+        if not self.has_ready():
             return None
         _, nid = heapq.heappop(self._ready)
         self._issued.add(nid)
+        self._in_flight += 1
         self._emitted += 1
         return self._nodes[nid]
 
@@ -122,18 +194,34 @@ class ETFeeder:
     def mark_completed(self, node_id: int) -> None:
         if node_id not in self._issued:
             raise ValueError(f"node {node_id} completed before being issued")
-        if node_id in self._completed:
-            return
-        self._completed.add(node_id)
+        if not self._completed.add(node_id):
+            return                  # duplicate completion: idempotent
+        self._in_flight -= 1
         for dep_id in self._dependents.pop(node_id, []):
-            self._pending_preds[dep_id] -= 1
-            if self._pending_preds[dep_id] == 0:
+            pend = self._pending_preds[dep_id] - 1
+            if pend:
+                self._pending_preds[dep_id] = pend
+            else:
+                del self._pending_preds[dep_id]
                 self._push_ready(dep_id)
-        # evict finished node to bound memory (keep id in completed set)
+        # evict finished node to bound memory (id subsumed by completed set)
         self._nodes.pop(node_id, None)
         # elastic refill
-        if len(self._nodes) < self.window:
+        if not self._exhausted and len(self._nodes) < self.window:
             self._fill()
+
+    def close(self) -> None:
+        """Release the owned CHKB reader (idempotent)."""
+        if self._owns_reader and self._reader is not None:
+            self._reader.close()
+        self._reader = None
+        self._owns_reader = False
+
+    def __enter__(self) -> "ETFeeder":
+        return self
+
+    def __exit__(self, *a: object) -> None:
+        self.close()
 
     def drain_order(self) -> List[int]:
         """Convenience: run the whole feed assuming instant completion."""
@@ -162,25 +250,31 @@ class ETFeeder:
         """
         size = size or self.window
         batch: List[ETNode] = []
-        while self.has_pending():
-            n = self.next_ready()
-            if n is None:
-                if strict:
-                    raise RuntimeError(
-                        "feeder stalled: cycle or missing parent")
-                for n in self._flush_unordered():
-                    batch.append(n)
-                    if len(batch) >= size:
-                        yield batch
-                        batch = []
-                break
-            batch.append(n)
-            self.mark_completed(n.id)
-            if len(batch) >= size:
+        try:
+            while self.has_pending():
+                n = self.next_ready()
+                if n is None:
+                    if strict:
+                        raise RuntimeError(
+                            "feeder stalled: cycle or missing parent")
+                    for n in self._flush_unordered():
+                        batch.append(n)
+                        if len(batch) >= size:
+                            yield batch
+                            batch = []
+                    break
+                batch.append(n)
+                self.mark_completed(n.id)
+                if len(batch) >= size:
+                    yield batch
+                    batch = []
+            if batch:
                 yield batch
-                batch = []
-        if batch:
-            yield batch
+        finally:
+            # a partially-consumed stream (consumer breaks / sink raises)
+            # must not strand an owned reader until GC — close() is a no-op
+            # for caller-owned readers and for already-drained sources
+            self.close()
 
     def _flush_unordered(self) -> Iterator[ETNode]:
         """Emit every not-yet-issued node, dependency gating abandoned:
@@ -188,53 +282,94 @@ class ETFeeder:
         for nid in sorted(self._nodes):
             if nid not in self._issued:
                 self._issued.add(nid)
+                self._in_flight += 1
                 self._emitted += 1
                 yield self._nodes[nid]
         while True:
             try:
                 n = next(self._node_iter)
             except StopIteration:
+                self._source_drained()
                 return
             self._ingested += 1
             self._issued.add(n.id)
+            self._in_flight += 1
             self._emitted += 1
             yield n
 
     # ------------------------------------------------------------- internal
+    def _source_drained(self) -> None:
+        """Every node has been read off the source: flag it (so refills stop
+        paying a caught StopIteration per completion) and close an owned
+        reader now instead of waiting for garbage collection."""
+        self._exhausted = True
+        if self._owns_reader:
+            self.close()
+
     def _push_ready(self, nid: int) -> None:
         heapq.heappush(self._ready, (self._policy(self._nodes[nid]), nid))
 
     def _ingest(self, n: ETNode) -> None:
-        self._nodes[n.id] = n
+        nid = n.id
+        self._nodes[nid] = n
         pend = 0
-        for dep, _ in n.all_deps():
-            if dep in self._completed:
-                continue
-            pend += 1
-            self._dependents.setdefault(dep, []).append(n.id)
-        self._pending_preds[n.id] = pend
+        completed = self._completed
+        dependents = self._dependents
+        # flattened dep walk, one inline loop per edge kind (all_deps()'s
+        # generator overhead is measurable: _ingest runs once per node
+        # inside the refill loop)
+        for dep in n.ctrl_deps:
+            if dep not in completed:
+                pend += 1
+                bucket = dependents.get(dep)
+                if bucket is None:
+                    dependents[dep] = [nid]
+                else:
+                    bucket.append(nid)
+        for dep in n.data_deps:
+            if dep not in completed:
+                pend += 1
+                bucket = dependents.get(dep)
+                if bucket is None:
+                    dependents[dep] = [nid]
+                else:
+                    bucket.append(nid)
+        for dep in n.sync_deps:
+            if dep not in completed:
+                pend += 1
+                bucket = dependents.get(dep)
+                if bucket is None:
+                    dependents[dep] = [nid]
+                else:
+                    bucket.append(nid)
         self._ingested += 1
         if pend == 0:
-            self._push_ready(n.id)
+            self._push_ready(nid)
+        else:
+            self._pending_preds[nid] = pend
 
     def _fill(self) -> bool:
         """Ingest up to `window` more nodes; extend elastically if a node's
         parent hasn't arrived yet (forward refs are resolved on arrival since
         `_dependents` is keyed by id, so plain windowing suffices; the elastic
         part is continuing past the window when nothing became ready)."""
+        if self._exhausted:
+            return False
         added = 0
         while added < self.window:
             try:
                 n = next(self._node_iter)
             except StopIteration:
+                self._source_drained()
                 return added > 0
             self._ingest(n)
             added += 1
         # elastic extension: if the whole window resolved nothing, keep reading
-        while not self._ready and self._ingested < self._total and self.in_flight() == 0:
+        while not self._ready and self._ingested < self._total and self._in_flight == 0:
             try:
                 n = next(self._node_iter)
             except StopIteration:
+                self._source_drained()
                 break
             self._ingest(n)
         return True

@@ -31,6 +31,13 @@ class NodeType(enum.IntEnum):
     DATA_LOAD = 8       # storage/data-pipeline op (MLPerf-Storage extension, §6.2.3)
 
 
+#: Node types that are communication operations (single source of truth —
+#: the feeder's comm-priority policy, the simulator, and the columnar
+#: analytics all key off this set).
+COMM_NODE_TYPES = frozenset((NodeType.COMM_COLL, NodeType.COMM_SEND,
+                             NodeType.COMM_RECV))
+
+
 class CollectiveType(enum.IntEnum):
     """Communication primitive (paper Table 2), plus TPU-native permute."""
 
@@ -155,7 +162,7 @@ class ETNode:
 
     @property
     def is_comm(self) -> bool:
-        return self.type in (NodeType.COMM_COLL, NodeType.COMM_SEND, NodeType.COMM_RECV)
+        return self.type in COMM_NODE_TYPES
 
     @property
     def is_compute(self) -> bool:

@@ -11,19 +11,31 @@ encodings; downstream tools must support both.  Here:
 
 CHKB layout::
 
-    [8B magic "CHKB\\x00\\x03\\x00\\x00"]
+    [8B magic "CHKB\\x00" + version byte (3|4) + "\\x00\\x00"]
     [4B header_len][header msgpack: metadata, tensors, storages, pgs,
-                    node_count, block_size, block_offsets[], compressed?, codec]
-    [node block 0][node block 1] ...    # each: msgpack list of node dicts,
-                                        # individually compressed
+                    node_count, block_size, block_lengths[], compressed?, codec]
+    [node block 0][node block 1] ...    # individually compressed
+
+Block encodings (the version byte selects one):
+
+* **v3** — msgpack list of per-node dicts (row layout).  The original
+  encoding; preserved byte-for-byte so traces written before v4 existed keep
+  loading and re-encoding identically.
+* **v4** — columnar (struct-of-arrays): the fixed numeric fields (id, type,
+  times, comm fields, flattened dep/tensor lists) are packed as little-endian
+  typed arrays, with names as one string list and comm_tag/attrs stored
+  sparsely.  Decoding is a handful of C-speed ``array.frombytes`` calls plus
+  direct ``ETNode`` construction — no per-node dict allocation, no per-field
+  ``.get`` — which is what buys the >=5x block decode throughput the perf
+  suite tracks (``BENCH_perf.json``).
 
 Fast codecs (orjson / zstandard) are optional; ``_compat`` provides stdlib
 fallbacks and the header's ``codec`` field records which compressor wrote the
 blocks.
 
 Both the one-shot ``to_chkb_bytes`` and the streaming ``ChkbWriter`` share one
-block encoder, so a windowed pipeline writing node batches produces **byte
-identical** output to serializing the materialized trace.
+block encoder per version, so a windowed pipeline writing node batches
+produces **byte identical** output to serializing the materialized trace.
 
 The feeder (core.feeder) reads CHKB blocks lazily — memory stays proportional
 to the window size, not the trace (paper §4.1 "Dependency-Aware ET Feeder").
@@ -33,16 +45,29 @@ from __future__ import annotations
 import io
 import os
 import struct
-from typing import Any, Dict, Iterable, Iterator, List, Optional
+import sys
+from array import array
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Sequence
 
 import msgpack
 
 from ._compat import (DEFAULT_CODEC, compressor, decompressor, json_dumps,
                       json_loads, sniff_codec)
-from .schema import ExecutionTrace, ETNode, _node_from_dict, _node_to_dict
+from .schema import (CollectiveType, ETNode, ExecutionTrace, NodeType,
+                     _node_from_dict, _node_to_dict)
 
-_MAGIC = b"CHKB\x00\x03\x00\x00"
+_MAGIC_PREFIX = b"CHKB\x00"
+_MAGIC_V3 = b"CHKB\x00\x03\x00\x00"
+_MAGIC_V4 = b"CHKB\x00\x04\x00\x00"
+_MAGIC = _MAGIC_V3          # legacy alias (pre-v4 code imported this name)
+_VERSIONS = (3, 4)
+DEFAULT_VERSION = 4
 _DEFAULT_BLOCK = 1024
+
+_BIG_ENDIAN = sys.byteorder == "big"
+# enum-by-value tables: IntEnum.__call__ is far too slow for the decode loop
+_NODE_TYPE_OF = {int(t): t for t in NodeType}
+_COLL_TYPE_OF = {int(t): t for t in CollectiveType}
 
 
 # --------------------------------------------------------------------- JSON
@@ -54,31 +79,220 @@ def from_json_bytes(data: bytes) -> ExecutionTrace:
     return ExecutionTrace.from_dict(json_loads(data))
 
 
+# ------------------------------------------------------------- CHKB blocks
+def _pack_column(typecode: str, values: Sequence, field: str = "") -> bytes:
+    """Typed array -> little-endian bytes (v4 columns are always LE).
+
+    Integer columns tolerate whole-number floats (v3/JSON tooling emits
+    e.g. ``comm_bytes: 100.0``); a genuinely fractional value is a schema
+    violation reported with field context instead of a bare TypeError.
+    """
+    try:
+        a = array(typecode, values)
+    except TypeError:
+        coerced = []
+        for v in values:
+            i = int(v)
+            if i != v:
+                raise ValueError(
+                    f"CHKB v4: integer field {field or typecode!r} has "
+                    f"non-integral value {v!r}") from None
+            coerced.append(i)
+        a = array(typecode, coerced)
+    if _BIG_ENDIAN:
+        a.byteswap()
+    return a.tobytes()
+
+
+def _unpack_column(typecode: str, data: bytes) -> list:
+    a = array(typecode)
+    a.frombytes(data)
+    if _BIG_ENDIAN:
+        a.byteswap()
+    return a.tolist()
+
+
+def _encode_block_v3(nodes: Sequence[ETNode]) -> bytes:
+    return msgpack.packb([_node_to_dict(n) for n in nodes], use_bin_type=True)
+
+
+def _decode_block_v3(raw: bytes) -> List[ETNode]:
+    return [_node_from_dict(nd) for nd in msgpack.unpackb(raw, raw=False)]
+
+
+class NodeColumns:
+    """Decoded v4 block: struct-of-arrays over the block's nodes.
+
+    The numeric columns (``ids``, ``types``, ``starts``, ``durations``,
+    ``comm_*``, flattened dep/tensor lists) decode with a handful of C-speed
+    ``array.frombytes`` calls — no per-node Python objects — so column-level
+    consumers (analytics, indexing, filtering) scan blocks at memory
+    bandwidth instead of paying ~µs/node object materialization.  Variable
+    strings stay packed: ``names`` inflates its sub-blob on first access and
+    ``to_nodes()`` materializes full :class:`ETNode` objects on demand.
+    """
+
+    __slots__ = ("count", "ids", "types", "starts", "durations",
+                 "comm_types", "comm_groups", "comm_bytes", "comm_srcs",
+                 "comm_dsts", "dep_counts", "dep_flat", "io_counts",
+                 "io_flat", "tag_idx", "tag_vals", "attr_idx", "attr_vals",
+                 "_name_blob", "_names")
+
+    def __init__(self, col: Dict[str, Any]) -> None:
+        self.count: int = col["n"]
+        self.ids = _unpack_column("q", col["id"])
+        self.types = _unpack_column("b", col["ty"])
+        self.starts = _unpack_column("d", col["st"])
+        self.durations = _unpack_column("d", col["du"])
+        self.comm_types = _unpack_column("b", col["ct"])
+        self.comm_groups = _unpack_column("q", col["cg"])
+        self.comm_bytes = _unpack_column("q", col["cb"])
+        self.comm_srcs = _unpack_column("q", col["cs"])
+        self.comm_dsts = _unpack_column("q", col["cd"])
+        self.dep_counts = _unpack_column("q", col["dc"])  # 3/node: c, d, s
+        self.dep_flat = _unpack_column("q", col["dv"])
+        self.io_counts = _unpack_column("q", col["ic"])   # 2/node: in, out
+        self.io_flat = _unpack_column("q", col["iv"])
+        self.tag_idx = _unpack_column("q", col["tgi"])
+        self.tag_vals: List[str] = col["tgv"]
+        self.attr_idx = _unpack_column("q", col["ati"])
+        self.attr_vals: List[Dict[str, Any]] = col["atv"]
+        self._name_blob: Optional[bytes] = col["nm"]
+        self._names: Optional[List[str]] = None
+
+    def __len__(self) -> int:
+        return self.count
+
+    @property
+    def names(self) -> List[str]:
+        """Node names (string column; inflated lazily from its sub-blob)."""
+        if self._names is None:
+            self._names = msgpack.unpackb(self._name_blob, raw=False)
+            self._name_blob = None
+        return self._names
+
+    def to_nodes(self) -> List[ETNode]:
+        """Materialize the block as full ETNode objects.
+
+        This is the compatibility path; its throughput is bounded by object
+        construction (17-field dataclass per node), which is exactly the cost
+        column-level consumers avoid.
+        """
+        from itertools import islice
+        n = self.count
+        types = list(map(_NODE_TYPE_OF.__getitem__, self.types))
+        ctypes = list(map(_COLL_TYPE_OF.__getitem__, self.comm_types))
+        dep_it = iter(self.dep_flat)
+        deps = [list(islice(dep_it, c)) for c in self.dep_counts]
+        io_it = iter(self.io_flat)
+        ios = [list(islice(io_it, c)) for c in self.io_counts]
+        tags = [""] * n
+        for i, s in zip(self.tag_idx, self.tag_vals):
+            tags[i] = s
+        attrs: List[Dict[str, Any]] = [{} for _ in range(n)]
+        for i, a in zip(self.attr_idx, self.attr_vals):
+            attrs[i] = a
+        return list(map(ETNode, self.ids, self.names, types,
+                        deps[0::3], deps[1::3], deps[2::3],
+                        self.starts, self.durations, ios[0::2], ios[1::2],
+                        ctypes, self.comm_groups, tags, self.comm_bytes,
+                        self.comm_srcs, self.comm_dsts, attrs))
+
+
+def _encode_block_v4(nodes: Sequence[ETNode]) -> bytes:
+    """Struct-of-arrays block: one typed little-endian column per fixed
+    numeric field, variable-length lists flattened with per-node counts,
+    names in a nested msgpack sub-blob (so column decoding never touches
+    them), comm_tag/attrs sparse as (index[], value[]) pairs."""
+    dep_counts = [c for n in nodes
+                  for c in (len(n.ctrl_deps), len(n.data_deps),
+                            len(n.sync_deps))]   # 3 per node: ctrl, data, sync
+    dep_flat = [d for n in nodes
+                for lst in (n.ctrl_deps, n.data_deps, n.sync_deps)
+                for d in lst]
+    io_counts = [c for n in nodes
+                 for c in (len(n.inputs), len(n.outputs))]  # 2 per node
+    io_flat = [d for n in nodes for lst in (n.inputs, n.outputs) for d in lst]
+    tag_idx = [i for i, n in enumerate(nodes) if n.comm_tag]
+    tag_vals = [nodes[i].comm_tag for i in tag_idx]
+    attr_idx = [i for i, n in enumerate(nodes) if n.attrs]
+    attr_vals = [nodes[i].attrs for i in attr_idx]
+    col = {
+        "n": len(nodes),
+        "id": _pack_column("q", [n.id for n in nodes], "id"),
+        "ty": _pack_column("b", [n.type for n in nodes], "type"),
+        "st": _pack_column("d", [n.start_time_micros for n in nodes]),
+        "du": _pack_column("d", [n.duration_micros for n in nodes]),
+        "ct": _pack_column("b", [n.comm_type for n in nodes], "comm_type"),
+        "cg": _pack_column("q", [n.comm_group for n in nodes], "comm_group"),
+        "cb": _pack_column("q", [n.comm_bytes for n in nodes], "comm_bytes"),
+        "cs": _pack_column("q", [n.comm_src for n in nodes], "comm_src"),
+        "cd": _pack_column("q", [n.comm_dst for n in nodes], "comm_dst"),
+        "nm": msgpack.packb([n.name for n in nodes], use_bin_type=True),
+        "dc": _pack_column("q", dep_counts),
+        "dv": _pack_column("q", dep_flat, "deps"),
+        "ic": _pack_column("q", io_counts),
+        "iv": _pack_column("q", io_flat, "inputs/outputs"),
+        "tgi": _pack_column("q", tag_idx),
+        "tgv": tag_vals,
+        "ati": _pack_column("q", attr_idx),
+        "atv": attr_vals,
+    }
+    return msgpack.packb(col, use_bin_type=True)
+
+
+def _decode_block_v4_columns(raw: bytes) -> NodeColumns:
+    return NodeColumns(msgpack.unpackb(raw, raw=False))
+
+
+def _decode_block_v4(raw: bytes) -> List[ETNode]:
+    return _decode_block_v4_columns(raw).to_nodes()
+
+
+_BLOCK_ENCODERS = {3: _encode_block_v3, 4: _encode_block_v4}
+_BLOCK_DECODERS = {3: _decode_block_v3, 4: _decode_block_v4}
+
+
+def _check_version(version: Optional[int]) -> int:
+    v = DEFAULT_VERSION if version is None else int(version)
+    if v not in _VERSIONS:
+        raise ValueError(f"unsupported CHKB version {v}; options: {_VERSIONS}")
+    return v
+
+
+def _magic_for(version: int) -> bytes:
+    return _MAGIC_V3 if version == 3 else _MAGIC_V4
+
+
 # --------------------------------------------------------------------- CHKB
 class ChkbWriter:
     """Streaming CHKB writer: node batches in, indexed blocks out.
 
-    Buffers at most one uncompressed block of node dicts; compressed blocks
-    are appended to an internal spool, so memory stays O(block_size +
-    compressed size).  ``getvalue()``/``write(path)`` assemble
-    magic + header + blocks.  Output is byte-identical to ``to_chkb_bytes``
-    on the materialized trace for the same node order and parameters.
+    Buffers at most one uncompressed block of nodes; compressed blocks are
+    appended to an internal spool, so memory stays O(block_size + compressed
+    size).  ``getvalue()``/``write(path)`` assemble magic + header + blocks.
+    Output is byte-identical to ``to_chkb_bytes`` on the materialized trace
+    for the same node order and parameters — for **both** versions; in
+    particular ``version=3`` keeps emitting the pre-v4 format bit-for-bit.
     """
 
     def __init__(self, skeleton: ExecutionTrace,
                  block_size: int = _DEFAULT_BLOCK, compress: bool = True,
-                 codec: Optional[str] = None) -> None:
+                 codec: Optional[str] = None,
+                 version: Optional[int] = None) -> None:
         self._header_base = skeleton.to_dict_skeleton()
         self.block_size = max(1, int(block_size))
+        self.version = _check_version(version)
+        self._encode_block = _BLOCK_ENCODERS[self.version]
         self.codec = (codec or DEFAULT_CODEC) if compress else None
         self._cctx = compressor(self.codec, level=3) if compress else None
-        self._buf: List[Dict[str, Any]] = []
+        self._buf: List[ETNode] = []
         self._blocks = io.BytesIO()
         self._block_lengths: List[int] = []
         self._count = 0
 
     def add_node(self, node: ETNode) -> None:
-        self._buf.append(_node_to_dict(node))
+        self._buf.append(node)
         self._count += 1
         if len(self._buf) >= self.block_size:
             self._flush_block()
@@ -90,7 +304,7 @@ class ChkbWriter:
     def _flush_block(self) -> None:
         if not self._buf:
             return
-        raw = msgpack.packb(self._buf, use_bin_type=True)
+        raw = self._encode_block(self._buf)
         if self._cctx is not None:
             raw = self._cctx.compress(raw)
         self._blocks.write(raw)
@@ -111,7 +325,7 @@ class ChkbWriter:
         self._flush_block()
         hb = self._header_bytes()
         out = io.BytesIO()
-        out.write(_MAGIC)
+        out.write(_magic_for(self.version))
         out.write(struct.pack("<I", len(hb)))
         out.write(hb)
         out.write(self._blocks.getvalue())
@@ -122,7 +336,7 @@ class ChkbWriter:
         hb = self._header_bytes()
         os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
         with open(path, "wb") as fh:
-            fh.write(_MAGIC)
+            fh.write(_magic_for(self.version))
             fh.write(struct.pack("<I", len(hb)))
             fh.write(hb)
             fh.write(self._blocks.getvalue())
@@ -130,18 +344,30 @@ class ChkbWriter:
 
 
 def to_chkb_bytes(et: ExecutionTrace, block_size: int = _DEFAULT_BLOCK,
-                  compress: bool = True, codec: Optional[str] = None) -> bytes:
-    w = ChkbWriter(et, block_size=block_size, compress=compress, codec=codec)
+                  compress: bool = True, codec: Optional[str] = None,
+                  version: Optional[int] = None) -> bytes:
+    w = ChkbWriter(et, block_size=block_size, compress=compress, codec=codec,
+                   version=version)
     w.add_nodes(et.sorted_nodes())
     return w.getvalue()
 
 
-def _read_chkb_header(data: bytes) -> tuple[Dict[str, Any], int]:
-    if data[:8] != _MAGIC:
+def _parse_magic(head: bytes) -> int:
+    """Magic bytes -> format version (the byte after the CHKB tag)."""
+    if len(head) < 8 or head[:5] != _MAGIC_PREFIX or head[6:8] != b"\x00\x00":
         raise ValueError("not a CHKB trace (bad magic)")
+    version = head[5]
+    if version not in _VERSIONS:
+        raise ValueError(f"unsupported CHKB version {version}; "
+                         f"this reader handles {_VERSIONS}")
+    return version
+
+
+def _read_chkb_header(data: bytes) -> tuple[Dict[str, Any], int, int]:
+    version = _parse_magic(data[:8])
     (hlen,) = struct.unpack_from("<I", data, 8)
     header = msgpack.unpackb(data[12:12 + hlen], raw=False)
-    return header, 12 + hlen
+    return header, 12 + hlen, version
 
 
 def _header_decompressor(header: Dict[str, Any]):
@@ -152,32 +378,47 @@ def _header_decompressor(header: Dict[str, Any]):
 
 
 def from_chkb_bytes(data: bytes) -> ExecutionTrace:
-    header, off = _read_chkb_header(data)
-    nodes: List[Dict[str, Any]] = []
-    for nd in iter_chkb_node_dicts(data):
-        nodes.append(nd)
+    header, off, version = _read_chkb_header(data)
     d = dict(header)
-    d["nodes"] = nodes
-    return ExecutionTrace.from_dict(d)
-
-
-def iter_chkb_node_dicts(data: bytes) -> Iterator[Dict[str, Any]]:
-    """Stream node dicts block-by-block (partial loading)."""
-    header, off = _read_chkb_header(data)
+    d["nodes"] = []
+    et = ExecutionTrace.from_dict(d)
     dctx = _header_decompressor(header)
+    decode = _BLOCK_DECODERS[version]
     for blen in header["block_lengths"]:
         raw = data[off:off + blen]
         off += blen
         if dctx:
             raw = dctx.decompress(raw)
-        for nd in msgpack.unpackb(raw, raw=False):
-            yield nd
+        for node in decode(raw):
+            et.add_node(node)
+    return et
+
+
+def iter_chkb_nodes(data: bytes) -> Iterator[ETNode]:
+    """Stream nodes block-by-block (partial loading), either version."""
+    header, off, version = _read_chkb_header(data)
+    dctx = _header_decompressor(header)
+    decode = _BLOCK_DECODERS[version]
+    for blen in header["block_lengths"]:
+        raw = data[off:off + blen]
+        off += blen
+        if dctx:
+            raw = dctx.decompress(raw)
+        yield from decode(raw)
+
+
+def iter_chkb_node_dicts(data: bytes) -> Iterator[Dict[str, Any]]:
+    """Stream node dicts block-by-block (compat shim over iter_chkb_nodes)."""
+    for node in iter_chkb_nodes(data):
+        yield _node_to_dict(node)
 
 
 class ChkbReader:
     """Random-access windowed reader over a CHKB file (hierarchical index).
 
-    Only the header is resident; node blocks are read + decompressed on demand.
+    Only the header is resident; node blocks are read + decompressed on
+    demand.  Handles v3 (row) and v4 (columnar) block encodings — the magic
+    byte selects the decoder.
     """
 
     def __init__(self, path: str) -> None:
@@ -185,8 +426,8 @@ class ChkbReader:
         self._fh = open(path, "rb")
         self._fh.seek(0)
         head = self._fh.read(12)
-        if head[:8] != _MAGIC:
-            raise ValueError("not a CHKB trace")
+        self.version = _parse_magic(head[:8])
+        self._decode_block = _BLOCK_DECODERS[self.version]
         (hlen,) = struct.unpack("<I", head[8:12])
         self.header: Dict[str, Any] = msgpack.unpackb(self._fh.read(hlen), raw=False)
         self._data_start = 12 + hlen
@@ -208,20 +449,43 @@ class ChkbReader:
     def num_blocks(self) -> int:
         return len(self.header["block_lengths"])
 
+    @property
+    def closed(self) -> bool:
+        return self._fh.closed
+
     def skeleton(self) -> ExecutionTrace:
         """Trace with metadata/tensors/storages/pgs but no nodes."""
         d = dict(self.header)
         d["nodes"] = []
         return ExecutionTrace.from_dict(d)
 
-    def read_block(self, idx: int) -> List[ETNode]:
+    def _read_raw_block(self, idx: int) -> bytes:
         if not 0 <= idx < self.num_blocks:
             raise IndexError(idx)
         self._fh.seek(self._block_offsets[idx])
         raw = self._fh.read(self.header["block_lengths"][idx])
         if self._dctx:
             raw = self._dctx.decompress(raw)
-        return [_node_from_dict(nd) for nd in msgpack.unpackb(raw, raw=False)]
+        return raw
+
+    def read_block(self, idx: int) -> List[ETNode]:
+        return self._decode_block(self._read_raw_block(idx))
+
+    def read_block_columns(self, idx: int) -> NodeColumns:
+        """Decode one block to its struct-of-arrays form (v4 files only).
+
+        Skips ETNode materialization entirely — the fast path for
+        column-level consumers like :func:`repro.core.analysis.columnar_summary`.
+        """
+        if self.version != 4:
+            raise ValueError(
+                f"columnar access needs a v4 CHKB file; {self.path!r} is "
+                f"v{self.version} (rewrite it with ChkbWriter(version=4))")
+        return _decode_block_v4_columns(self._read_raw_block(idx))
+
+    def iter_column_blocks(self) -> Iterator[NodeColumns]:
+        for b in range(self.num_blocks):
+            yield self.read_block_columns(b)
 
     def iter_nodes(self) -> Iterator[ETNode]:
         for b in range(self.num_blocks):

@@ -1,0 +1,287 @@
+"""Hot-path microbenchmark suite: the repo's performance trajectory.
+
+Three benchmarks, registered in the stage registry under kind="benchmark"
+(:mod:`repro.perf` registers them on import) and dispatched by both
+``python -m repro bench`` and ``python -m benchmarks.perf.run``:
+
+* ``perf_feeder`` — dependency-aware drain throughput (nodes/sec) across
+  trace sizes and window sizes; exercises the O(1) ``in_flight`` counter and
+  bounded bookkeeping inside the elastic-refill loop.
+* ``perf_sim``    — simulator events/sec on the mixed AR×A2A scenario
+  (paper §5.3) across trace sizes and rank counts, optionally against the
+  frozen pre-optimization engine (``repro.sim.ReferenceSimulator``) so the
+  speedup columns are measured, not asserted.
+* ``perf_chkb``   — CHKB encode / decode throughput (MB/s and nodes/s),
+  v3 row blocks vs v4 columnar blocks, including the column-level decode
+  path (``NodeColumns`` — no ETNode materialization) and the real columnar
+  consumer (:func:`repro.core.analysis.columnar_summary`).
+
+Results aggregate into a JSON document written to ``BENCH_perf.json`` at the
+repo root (see :func:`run_suite` / :func:`write_bench`).  Wall-clock numbers
+are machine-dependent; the ``*_speedup`` ratios are the stable signal.
+"""
+from __future__ import annotations
+
+import json
+import platform
+import sys
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from ..core import generator
+from ..core.feeder import ETFeeder
+from ..core.schema import ExecutionTrace
+from ..core.serialization import (_decode_block_v3, _decode_block_v4,
+                                  _decode_block_v4_columns, _encode_block_v3,
+                                  _encode_block_v4)
+
+SCALES = ("smoke", "full")
+
+#: per-scale knobs: (feeder trace sizes, sim (nodes_per_rank, ranks) grid,
+#: sim baseline subset, chkb trace size)
+_SCALE = {
+    "smoke": {
+        "feeder_nodes": [10_000],
+        "sim_grid": [(1_000, 4), (1_000, 8)],
+        "sim_baseline": [(1_000, 8)],
+        "chkb_nodes": 10_000,
+        "chkb_repeat": 3,
+    },
+    "full": {
+        "feeder_nodes": [10_000, 100_000],
+        "sim_grid": [(1_000, 4), (1_000, 8), (1_000, 16),
+                     (10_000, 4), (10_000, 8), (10_000, 16),
+                     (100_000, 8)],
+        "sim_baseline": [(1_000, 8), (10_000, 8), (100_000, 8)],
+        "chkb_nodes": 50_000,
+        "chkb_repeat": 5,
+    },
+}
+
+_SIM_MAX_EVENTS = 200_000_000
+
+
+def _cfg(scale: str) -> Dict[str, Any]:
+    if scale not in _SCALE:
+        raise ValueError(f"unknown scale {scale!r}; options: {SCALES}")
+    return _SCALE[scale]
+
+
+def _mixed_trace(nodes: int, ranks: int, rank: int = 0) -> ExecutionTrace:
+    """§5.3 mixed AR×A2A MoE trace sized to ~``nodes`` nodes."""
+    per_iter = 5                       # moe_mixed emits ~5 nodes per iteration
+    iters = max(1, nodes // per_iter)
+    return generator.moe_mixed_collectives(iters=iters, ranks=ranks,
+                                           rank=rank, jitter=True)
+
+
+def _chain_heavy_trace(nodes: int) -> ExecutionTrace:
+    """Single-rank DP-style trace (deep chains + fan-in) for feeder drains."""
+    layers = 8
+    steps = max(1, nodes // (2 * layers + 1))
+    return generator.dp_allreduce_pattern(steps=steps, layers=layers, ranks=8)
+
+
+# ------------------------------------------------------------------- feeder
+def perf_feeder(scale: str = "full", **_: Any) -> Dict[str, Any]:
+    """Feeder drain throughput (nodes/sec) across trace and window sizes."""
+    rows: List[Dict[str, Any]] = []
+    for nodes in _cfg(scale)["feeder_nodes"]:
+        et = _chain_heavy_trace(nodes)
+        for window in (64, 1024):
+            feeder = ETFeeder(et, window=window, policy="fifo")
+            t0 = time.perf_counter()
+            order = feeder.drain_order()
+            dt = time.perf_counter() - t0
+            rows.append({
+                "nodes": len(order),
+                "window": window,
+                "wall_s": round(dt, 6),
+                "nodes_per_sec": round(len(order) / dt, 1),
+            })
+    return {"drain": rows}
+
+
+# ---------------------------------------------------------------- simulator
+def _run_sim(engine_cls, traces, ranks: int) -> Dict[str, Any]:
+    from ..sim import Fabric
+    fabric = Fabric.build("switch", ranks)
+    t0 = time.perf_counter()
+    res = engine_cls(traces, fabric).run(max_events=_SIM_MAX_EVENTS)
+    dt = time.perf_counter() - t0
+    return {
+        "wall_s": round(dt, 4),
+        "events": res.events,
+        "events_per_sec": round(res.events / dt, 1),
+        "makespan_s": res.makespan_s,
+        "flows": len(res.flows),
+    }
+
+
+def perf_sim(scale: str = "full", baseline: bool = True,
+             **_: Any) -> Dict[str, Any]:
+    """Simulator throughput on mixed AR×A2A scenarios; optional reference
+    (pre-optimization) baseline for measured speedups."""
+    from ..sim import ReferenceSimulator, Simulator
+    cfg = _cfg(scale)
+    baseline_grid = set(cfg["sim_baseline"]) if baseline else set()
+    rows: List[Dict[str, Any]] = []
+    for nodes_per_rank, ranks in cfg["sim_grid"]:
+        traces = [_mixed_trace(nodes_per_rank, ranks, rank=r)
+                  for r in range(ranks)]
+        total = sum(len(t) for t in traces)
+        row: Dict[str, Any] = {
+            "scenario": "mixed_ar_a2a",
+            "nodes_per_rank": nodes_per_rank,
+            "ranks": ranks,
+            "total_nodes": total,
+            "engine": _run_sim(Simulator, traces, ranks),
+        }
+        if (nodes_per_rank, ranks) in baseline_grid:
+            ref = _run_sim(ReferenceSimulator, traces, ranks)
+            row["baseline"] = ref
+            row["wall_speedup"] = round(
+                ref["wall_s"] / row["engine"]["wall_s"], 2)
+            row["events_per_sec_speedup"] = round(
+                row["engine"]["events_per_sec"] / ref["events_per_sec"], 2)
+        rows.append(row)
+    return {"scenarios": rows}
+
+
+# --------------------------------------------------------------------- chkb
+def _time_it(fn, *args, repeat: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn(*args)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def perf_chkb(scale: str = "full", **_: Any) -> Dict[str, Any]:
+    """CHKB v3 vs v4 block encode/decode throughput (MB/s, nodes/s)."""
+    cfg = _cfg(scale)
+    repeat = cfg["chkb_repeat"]
+    et = _chain_heavy_trace(cfg["chkb_nodes"])
+    nodes = et.sorted_nodes()
+    n = len(nodes)
+    b3 = _encode_block_v3(nodes)
+    b4 = _encode_block_v4(nodes)
+
+    def row(label: str, seconds: float, payload: int) -> Dict[str, Any]:
+        return {"path": label, "wall_s": round(seconds, 5),
+                "mb_per_sec": round(payload / seconds / 1e6, 2),
+                "nodes_per_sec": round(n / seconds, 1)}
+
+    enc3 = _time_it(_encode_block_v3, nodes, repeat=repeat)
+    enc4 = _time_it(_encode_block_v4, nodes, repeat=repeat)
+    dec3 = _time_it(_decode_block_v3, b3, repeat=repeat)
+    dec4_nodes = _time_it(_decode_block_v4, b4, repeat=repeat)
+    dec4_cols = _time_it(_decode_block_v4_columns, b4, repeat=repeat)
+
+    # end-to-end file paths (compressed, default codec) + the columnar
+    # consumer vs the SAME numeric summary over materialized nodes of the
+    # SAME v4 file — isolating columns-vs-objects, not codec or workload
+    import os
+    import tempfile
+    from ..core.analysis import columnar_summary
+    from ..core.serialization import ChkbReader, load, save
+
+    def node_summary(path: str) -> None:
+        """columnar_summary's numeric workload via full node objects."""
+        with ChkbReader(path) as r:
+            edges = total_bytes = 0
+            duration = 0.0
+            for node in r.iter_nodes():
+                edges += (len(node.ctrl_deps) + len(node.data_deps)
+                          + len(node.sync_deps))
+                total_bytes += node.comm_bytes
+                duration += node.duration_micros
+
+    with tempfile.TemporaryDirectory() as tmp:
+        p3 = os.path.join(tmp, "t3.chkb")
+        p4 = os.path.join(tmp, "t4.chkb")
+        save(et, p3, version=3)
+        save(et, p4, version=4)
+        size3 = os.path.getsize(p3)
+        size4 = os.path.getsize(p4)
+        load3 = _time_it(load, p3, repeat=repeat)
+        load4 = _time_it(load, p4, repeat=repeat)
+        summary_cols = _time_it(columnar_summary, p4, repeat=repeat)
+        summary_nodes = _time_it(node_summary, p4, repeat=repeat)
+
+    def frow(label: str, seconds: float, file_bytes: int) -> Dict[str, Any]:
+        return {"path": label, "wall_s": round(seconds, 5),
+                "file_mb_per_sec": round(file_bytes / seconds / 1e6, 2),
+                "nodes_per_sec": round(n / seconds, 1)}
+
+    return {
+        "block_nodes": n,
+        "block_bytes": {"v3": len(b3), "v4": len(b4)},
+        "file_bytes": {"v3": size3, "v4": size4},
+        "encode": [row("v3_rows", enc3, len(b3)),
+                   row("v4_columnar", enc4, len(b4))],
+        "decode": [row("v3_rows_to_nodes", dec3, len(b3)),
+                   row("v4_columnar_to_nodes", dec4_nodes, len(b4)),
+                   row("v4_columnar_to_columns", dec4_cols, len(b4))],
+        "file": [frow("load_v3", load3, size3),
+                 frow("load_v4", load4, size4),
+                 frow("columnar_summary_v4", summary_cols, size4),
+                 frow("node_summary_v4", summary_nodes, size4)],
+        "encode_speedup": round(enc3 / enc4, 2),
+        # headline: block decode to the format's usable in-memory structure.
+        # v4's structure IS the columns (NodeColumns) — object
+        # materialization is optional and measured separately above.
+        "block_decode_speedup": round(dec3 / dec4_cols, 2),
+        "node_decode_speedup": round(dec3 / dec4_nodes, 2),
+        # same file, same numeric summary: columns vs node objects
+        "columnar_summary_speedup": round(summary_nodes / summary_cols, 2),
+    }
+
+
+# ------------------------------------------------------------------- driver
+BENCHMARKS = {
+    "perf_feeder": perf_feeder,
+    "perf_sim": perf_sim,
+    "perf_chkb": perf_chkb,
+}
+
+
+def run_suite(scale: str = "full", baseline: bool = True,
+              names: Optional[Sequence[str]] = None) -> Dict[str, Any]:
+    """Run the (subset of the) perf suite; returns the BENCH document.
+
+    Benchmarks are resolved through the stage registry (kind="benchmark"),
+    the same dispatch path as ``python -m repro bench`` and the paper-figure
+    harness, so both entry points produce an identically-shaped document.
+    """
+    from ..pipeline.registry import get_stage
+
+    _cfg(scale)  # validate early
+    selected = list(names) if names else list(BENCHMARKS)
+    for name in selected:
+        if name not in BENCHMARKS:
+            raise ValueError(f"unknown perf benchmark {name!r}; "
+                             f"options: {sorted(BENCHMARKS)}")
+    doc: Dict[str, Any] = {
+        "schema": "repro-bench-perf/v1",
+        "created_unix": int(time.time()),
+        "scale": scale,
+        "host": {
+            "python": sys.version.split()[0],
+            "platform": platform.platform(),
+        },
+    }
+    for name in selected:
+        fn = get_stage("benchmark", name)
+        t0 = time.perf_counter()
+        doc[name] = fn(scale=scale, baseline=baseline)
+        doc[name]["bench_wall_s"] = round(time.perf_counter() - t0, 2)
+    return doc
+
+
+def write_bench(doc: Dict[str, Any], path: str = "BENCH_perf.json") -> str:
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=False)
+        fh.write("\n")
+    return path

@@ -290,18 +290,24 @@ class CollectSink:
 @register_stage("chkb", kind="sink")
 class ChkbSink:
     """Streaming CHKB writer: windows are encoded block-by-block as they
-    arrive; output is byte-identical to serializing the materialized trace."""
+    arrive; output is byte-identical to serializing the materialized trace.
+
+    ``version=3`` emits the pre-columnar row encoding bit-for-bit;
+    ``version=4`` (default) emits columnar blocks."""
 
     def __init__(self, path: str, block_size: int = 1024,
-                 compress: bool = True, codec: Optional[str] = None):
+                 compress: bool = True, codec: Optional[str] = None,
+                 version: Optional[int] = None):
         self.path = path
         self.block_size = block_size
         self.compress = compress
         self.codec = codec
+        self.version = version
 
     def consume(self, stream: TraceStream) -> str:
         writer = ChkbWriter(stream.skeleton, block_size=self.block_size,
-                            compress=self.compress, codec=self.codec)
+                            compress=self.compress, codec=self.codec,
+                            version=self.version)
         for window in stream.windows():
             writer.add_nodes(window)
         return writer.write(self.path)

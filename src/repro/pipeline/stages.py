@@ -93,9 +93,12 @@ class TraceStream:
     @classmethod
     def from_chkb(cls, path_or_reader: Union[str, ChkbReader],
                   window: int = DEFAULT_WINDOW) -> "TraceStream":
-        reader = (ChkbReader(path_or_reader)
-                  if isinstance(path_or_reader, str) else path_or_reader)
-        feeder = ETFeeder(reader, window=window, policy="id")
+        owns = isinstance(path_or_reader, str)
+        reader = ChkbReader(path_or_reader) if owns else path_or_reader
+        # a reader we opened is owned by the feeder: closed when the stream
+        # drains (or the feeder is closed); a caller's reader stays theirs
+        feeder = ETFeeder(reader, window=window, policy="id",
+                          owns_reader=owns)
         return cls(reader.skeleton(), feeder.iter_windows(window, strict=False),
                    window=window, node_count=reader.node_count)
 

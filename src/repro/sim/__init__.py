@@ -1,10 +1,12 @@
 """What-if simulation + replay: topology models, event engine, JAX replay."""
 from .collectives import CollectiveModel, busbw_factor
 from .engine import SimConfig, SimResult, Simulator, simulate_single_trace
+from .reference import ReferenceSimulator
 from .replay import (ReplayConfig, Replayer, ReplayReport,
                      collective_accuracy_check)
 from .topology import Fabric
 
 __all__ = ["CollectiveModel", "busbw_factor", "SimConfig", "SimResult",
-           "Simulator", "simulate_single_trace", "ReplayConfig", "Replayer",
-           "ReplayReport", "collective_accuracy_check", "Fabric"]
+           "Simulator", "simulate_single_trace", "ReferenceSimulator",
+           "ReplayConfig", "Replayer", "ReplayReport",
+           "collective_accuracy_check", "Fabric"]

@@ -13,18 +13,26 @@ Consumes per-rank Chakra ETs through the dependency-aware feeder and models:
     member rank has reached it; early arrivals keep issuing independent
     compute — compute/comm overlap falls out of the dependency structure).
 
+Hot path (production-scale traces, ROADMAP "as fast as the hardware
+allows"): congestion state lives in a heap-pruned :class:`_FlowIndex` —
+O(log F) per event with memory bounded by *concurrent* flows, replacing the
+original linear scan over a never-pruned flow list (kept verbatim in
+``reference.py``); and a rank is only re-woken when its feeder's ready set
+actually changed, so collective completions no longer fan out into per-member
+no-op polling events.
+
 Outputs: per-rank makespan, per-collective time totals (Fig 7), flow
 records with start/end (Figs 10/11 CDFs), link-utilization samples (Fig 13).
 """
 from __future__ import annotations
 
 import heapq
-import math
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from ..core.feeder import ETFeeder
-from ..core.schema import CollectiveType, ETNode, ExecutionTrace, NodeType
+from ..core.schema import (COMM_NODE_TYPES, CollectiveType, ETNode,
+                           ExecutionTrace)
 from .collectives import CollectiveModel
 from .topology import Fabric
 
@@ -72,6 +80,7 @@ class SimResult:
     compute_busy_s: float
     exposed_comm_s: float
     link_util_timeline: List[Tuple[float, float]]
+    events: int = 0                 # engine events processed (perf metric)
 
     def summary(self) -> str:
         coll = ", ".join(f"{k}={v * 1e3:.2f}ms"
@@ -79,6 +88,49 @@ class SimResult:
         return (f"makespan={self.makespan_s * 1e3:.2f}ms "
                 f"compute={self.compute_busy_s * 1e3:.2f}ms "
                 f"exposed_comm={self.exposed_comm_s * 1e3:.2f}ms [{coll}]")
+
+
+class _FlowIndex:
+    """Heap-pruned index of flows currently occupying the fabric.
+
+    Maintains a running concurrent-flow count and a fat-flow (AllReduce)
+    counter so congestion queries are O(1) after an amortized-O(log F)
+    prune, where F is the number of *concurrent* flows — the original
+    engine scanned every flow ever launched on each query and never freed
+    them.  Queries must be non-decreasing in time (event-heap order
+    guarantees this): a pruned flow (end <= t) can never count again
+    because later queries only move forward.
+    """
+
+    __slots__ = ("_heap", "_count", "_fat")
+
+    def __init__(self) -> None:
+        self._heap: List[Tuple[float, int, int]] = []  # (end, nflows, fat)
+        self._count = 0
+        self._fat = 0
+
+    def add(self, end_s: float, nflows: int, fat: bool) -> None:
+        heapq.heappush(self._heap, (end_s, nflows, 1 if fat else 0))
+        self._count += nflows
+        self._fat += 1 if fat else 0
+
+    def _prune(self, t: float) -> None:
+        h = self._heap
+        while h and h[0][0] <= t:
+            _, nf, fat = heapq.heappop(h)
+            self._count -= nf
+            self._fat -= fat
+
+    def flows_at(self, t: float) -> int:
+        self._prune(t)
+        return self._count
+
+    def fat_at(self, t: float) -> bool:
+        self._prune(t)
+        return self._fat > 0
+
+    def __len__(self) -> int:
+        return len(self._heap)
 
 
 class Simulator:
@@ -100,11 +152,19 @@ class Simulator:
         coll_bytes: Dict[str, float] = {}
         flows: List[FlowRecord] = []
         util: List[Tuple[float, float]] = []
-        active_flows: List[Tuple[float, int, str]] = []   # (end, flows, kind)
+        findex = _FlowIndex()
 
         # rendezvous state: key -> {rank: (node_id, arrive_time)}
         pending: Dict[Tuple, Dict[int, Tuple[int, float]]] = {}
-        occurrence: Dict[Tuple[int, Tuple], int] = {}
+        # (rank, group, type, tag) -> (base_id, group_size) cache.  base_id
+        # interns the full (comm_type, ranks, tag) base so matching stays
+        # content-based (identical member sets rendezvous even under
+        # different group ids) without rebuilding + rehashing the ranks
+        # tuple on every comm node; occurrence counts stay keyed by
+        # (rank, base_id) = (rank, base content), as in the reference.
+        streams: Dict[Tuple[int, int, int, str], Tuple[int, int]] = {}
+        base_ids: Dict[Tuple, int] = {}
+        occurrence: Dict[Tuple[int, int], int] = {}
 
         # event heap: (time, seq, kind, payload)
         #   kind 0 = wake rank (payload=rank): try to issue ready nodes
@@ -114,18 +174,37 @@ class Simulator:
         heapq.heapify(heap)
         events = 0
         seq = n_ranks
-
-        def flows_at(t: float) -> int:
-            return sum(c for end, c, _ in active_flows if end > t)
-
-        def fat_at(t: float) -> bool:
-            return any(end > t and k == "AllReduce"
-                       for end, _, k in active_flows)
+        # Wake elimination, count-preserving: the reference engine schedules
+        # one wake per completion / comm-issue and each wake pops at its push
+        # timestamp, so a wake skipped while the rank has nothing ready is a
+        # no-op UNLESS a later same-timestamp event makes nodes ready first.
+        # We therefore bank skipped wakes as per-rank credits at the current
+        # timestamp and flush them the moment readiness appears, so the rank
+        # gets exactly as many same-instant issue opportunities as the
+        # reference granted — idle ranks are simply never polled.
+        wake_suppressed = [0] * n_ranks
+        wake_stamp = [-1.0] * n_ranks
 
         def push(t: float, kind: int, payload) -> None:
             nonlocal seq
             seq += 1
             heapq.heappush(heap, (t, seq, kind, payload))
+
+        def wake(t: float, rank: int) -> None:
+            f = feeders[rank]
+            if not f.has_pending():
+                return              # drained: reference wake is a no-op
+            if wake_stamp[rank] != t:
+                # credits from older timestamps correspond to reference
+                # wakes that already popped (as no-ops) at their own time
+                wake_stamp[rank] = t
+                wake_suppressed[rank] = 0
+            if f.has_ready():
+                for _ in range(wake_suppressed[rank] + 1):
+                    push(t, 0, rank)
+                wake_suppressed[rank] = 0
+            else:
+                wake_suppressed[rank] += 1
 
         def launch_collective(members: Dict[int, Tuple[int, float]],
                               node: ETNode, group: int) -> None:
@@ -134,13 +213,13 @@ class Simulator:
             independent work; dependents release at the completion event."""
             start = max(at for _, at in members.values())
             dur, throttle, kindname = self._comm_time(node, group, start,
-                                                      flows_at, fat_at)
+                                                      findex)
             end = start + dur
             coll_time[kindname] = coll_time.get(kindname, 0.0) + dur
             coll_bytes[kindname] = (coll_bytes.get(kindname, 0.0)
                                     + float(node.comm_bytes))
             nf = cfg.collective_model.flow_count(node.comm_type, group)
-            active_flows.append((end, nf, kindname))
+            findex.add(end, nf, kindname == "AllReduce")
             flows.append(FlowRecord(kindname, start, end,
                                     float(node.comm_bytes), group, throttle))
             for r, (nid, _) in members.items():
@@ -153,7 +232,7 @@ class Simulator:
             if kind == 1:
                 r, nid = payload
                 feeders[r].mark_completed(nid)
-                push(t, 0, r)
+                wake(t, r)
                 continue
             rank = payload
             feeder = feeders[rank]
@@ -164,26 +243,34 @@ class Simulator:
                 # blocked on an in-flight op; re-woken by its completion
                 continue
 
-            if node.is_comm and n_ranks > 1:
-                pg = self.traces[rank].process_groups.get(node.comm_group)
-                ranks = tuple(r for r in (pg.ranks if pg and pg.ranks
-                                          else range(n_ranks))
-                              if r < n_ranks)
-                base = (int(node.comm_type), ranks, node.comm_tag or "")
-                occ = occurrence.get((rank, base), 0)
-                occurrence[(rank, base)] = occ + 1
-                key = (*base, occ)
+            if node.type in COMM_NODE_TYPES and n_ranks > 1:
+                skey = (rank, node.comm_group, int(node.comm_type),
+                        node.comm_tag or "")
+                stream = streams.get(skey)
+                if stream is None:
+                    pg = self.traces[rank].process_groups.get(node.comm_group)
+                    ranks = tuple(r for r in (pg.ranks if pg and pg.ranks
+                                              else range(n_ranks))
+                                  if r < n_ranks)
+                    base = (skey[2], ranks, skey[3])
+                    bid = base_ids.setdefault(base, len(base_ids))
+                    stream = streams[skey] = (bid, len(ranks))
+                bid, group_size = stream
+                okey = (rank, bid)
+                occ = occurrence.get(okey, 0)
+                occurrence[okey] = occ + 1
+                key = (bid, occ)
                 pend = pending.setdefault(key, {})
                 pend[rank] = (node.id, t)
-                if len(pend) == len(ranks):
-                    launch_collective(pend, node, len(ranks))
+                if len(pend) == group_size:
+                    launch_collective(pend, node, group_size)
                     del pending[key]
-                push(t, 0, rank)     # keep issuing independent work
-            elif node.is_comm:
+                wake(t, rank)        # keep issuing independent work
+            elif node.type in COMM_NODE_TYPES:
                 pg = self.traces[rank].process_groups.get(node.comm_group)
                 group = pg.size if pg and pg.size else 2
                 launch_collective({rank: (node.id, t)}, node, group)
-                push(t, 0, rank)     # async: the rank is not blocked
+                wake(t, rank)        # async: the rank is not blocked
             else:
                 dur = node.duration_micros * 1e-6
                 dur /= cfg.speed_factors.get(rank, 1.0)
@@ -194,7 +281,7 @@ class Simulator:
 
             if events % 64 == 0:
                 cap = max(self.fabric.capacity_flows, 1)
-                util.append((t, min(flows_at(t) / cap, 1.0)))
+                util.append((t, min(findex.flows_at(t) / cap, 1.0)))
 
         makespan = max(rank_time) if rank_time else 0.0
         total_comm = sum(coll_time.values())
@@ -209,10 +296,11 @@ class Simulator:
             compute_busy_s=per_rank_compute,
             exposed_comm_s=min(exposed, total_comm),
             link_util_timeline=util,
+            events=events,
         )
 
     def _comm_time(self, node: ETNode, group: int, t: float,
-                   flows_at, fat_at) -> Tuple[float, float, str]:
+                   findex: _FlowIndex) -> Tuple[float, float, str]:
         cfg = self.cfg
         kindname = COLL_NAME.get(node.comm_type, "Comm")
         base = cfg.collective_model.time_s(
@@ -225,12 +313,12 @@ class Simulator:
             # bandwidth sharing with flows ALREADY on the fabric (a
             # collective's own flows are priced by its alpha-beta model);
             # capped: ECMP/multipath keeps the worst case bounded
-            others = flows_at(t)
+            others = findex.flows_at(t)
             throttle = min(1.0 + others / max(self.fabric.capacity_flows, 1),
                            4.0)
             # DCQCN-flavored: CNP rate cuts hit the many small flows of an
             # all-to-all much harder while fat all-reduce flows are active
-            if node.comm_type == CollectiveType.ALL_TO_ALL and fat_at(t):
+            if node.comm_type == CollectiveType.ALL_TO_ALL and findex.fat_at(t):
                 throttle *= cfg.dcqcn_small_flow_penalty
             elif (node.comm_type == CollectiveType.ALL_REDUCE
                     and others > self.fabric.capacity_flows):

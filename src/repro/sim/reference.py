@@ -1,0 +1,173 @@
+"""Pre-optimization reference simulator (frozen copy of the original engine).
+
+This is the linear-scan engine that shipped before the O(log F) hot-path
+overhaul in ``engine.py``: ``flows_at``/``fat_at`` scan a never-pruned
+``active_flows`` list (O(F) per event) and every completion wakes its rank
+whether or not the feeder's ready set changed.
+
+It is kept verbatim for two purposes and must not be "improved":
+
+* **equivalence testing** — ``tests/test_sim_equivalence.py`` asserts the
+  optimized engine reproduces this engine's makespan / collective times /
+  flow records within 1e-9 on seeded traces;
+* **perf baselining** — ``repro.perf`` measures the pre-PR events/sec
+  against it so speedups in ``BENCH_perf.json`` are honest.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from ..core.feeder import ETFeeder
+from ..core.schema import CollectiveType, ETNode, ExecutionTrace
+from .engine import COLL_NAME, FlowRecord, SimConfig, SimResult
+from .topology import Fabric
+
+
+class ReferenceSimulator:
+    """Discrete-event simulation, original O(F)-per-event implementation."""
+
+    def __init__(self, traces: Sequence[ExecutionTrace], fabric: Fabric,
+                 cfg: Optional[SimConfig] = None) -> None:
+        self.traces = list(traces)
+        self.fabric = fabric
+        self.cfg = cfg or SimConfig()
+
+    def run(self, max_events: int = 2_000_000) -> SimResult:
+        cfg = self.cfg
+        n_ranks = len(self.traces)
+        feeders = [ETFeeder(t, policy="comm_priority") for t in self.traces]
+        rank_time = [0.0] * n_ranks
+        compute_busy = 0.0
+        coll_time: Dict[str, float] = {}
+        coll_bytes: Dict[str, float] = {}
+        flows: List[FlowRecord] = []
+        util: List[Tuple[float, float]] = []
+        active_flows: List[Tuple[float, int, str]] = []   # (end, flows, kind)
+
+        # rendezvous state: key -> {rank: (node_id, arrive_time)}
+        pending: Dict[Tuple, Dict[int, Tuple[int, float]]] = {}
+        occurrence: Dict[Tuple[int, Tuple], int] = {}
+
+        # event heap: (time, seq, kind, payload)
+        #   kind 0 = wake rank (payload=rank): try to issue ready nodes
+        #   kind 1 = completion (payload=(rank, node_id)): release deps
+        heap: List[Tuple[float, int, int, Any]] = [
+            (0.0, r, 0, r) for r in range(n_ranks)]
+        heapq.heapify(heap)
+        events = 0
+        seq = n_ranks
+
+        def flows_at(t: float) -> int:
+            return sum(c for end, c, _ in active_flows if end > t)
+
+        def fat_at(t: float) -> bool:
+            return any(end > t and k == "AllReduce"
+                       for end, _, k in active_flows)
+
+        def push(t: float, kind: int, payload) -> None:
+            nonlocal seq
+            seq += 1
+            heapq.heappush(heap, (t, seq, kind, payload))
+
+        def launch_collective(members: Dict[int, Tuple[int, float]],
+                              node: ETNode, group: int) -> None:
+            start = max(at for _, at in members.values())
+            dur, throttle, kindname = self._comm_time(node, group, start,
+                                                      flows_at, fat_at)
+            end = start + dur
+            coll_time[kindname] = coll_time.get(kindname, 0.0) + dur
+            coll_bytes[kindname] = (coll_bytes.get(kindname, 0.0)
+                                    + float(node.comm_bytes))
+            nf = cfg.collective_model.flow_count(node.comm_type, group)
+            active_flows.append((end, nf, kindname))
+            flows.append(FlowRecord(kindname, start, end,
+                                    float(node.comm_bytes), group, throttle))
+            for r, (nid, _) in members.items():
+                rank_time[r] = max(rank_time[r], end)
+                push(end, 1, (r, nid))
+
+        while heap and events < max_events:
+            t, _, kind, payload = heapq.heappop(heap)
+            events += 1
+            if kind == 1:
+                r, nid = payload
+                feeders[r].mark_completed(nid)
+                push(t, 0, r)
+                continue
+            rank = payload
+            feeder = feeders[rank]
+            if not feeder.has_pending():
+                continue
+            node = feeder.next_ready()
+            if node is None:
+                continue
+
+            if node.is_comm and n_ranks > 1:
+                pg = self.traces[rank].process_groups.get(node.comm_group)
+                ranks = tuple(r for r in (pg.ranks if pg and pg.ranks
+                                          else range(n_ranks))
+                              if r < n_ranks)
+                base = (int(node.comm_type), ranks, node.comm_tag or "")
+                occ = occurrence.get((rank, base), 0)
+                occurrence[(rank, base)] = occ + 1
+                key = (*base, occ)
+                pend = pending.setdefault(key, {})
+                pend[rank] = (node.id, t)
+                if len(pend) == len(ranks):
+                    launch_collective(pend, node, len(ranks))
+                    del pending[key]
+                push(t, 0, rank)
+            elif node.is_comm:
+                pg = self.traces[rank].process_groups.get(node.comm_group)
+                group = pg.size if pg and pg.size else 2
+                launch_collective({rank: (node.id, t)}, node, group)
+                push(t, 0, rank)
+            else:
+                dur = node.duration_micros * 1e-6
+                dur /= cfg.speed_factors.get(rank, 1.0)
+                end = t + dur
+                compute_busy += dur
+                rank_time[rank] = max(rank_time[rank], end)
+                push(end, 1, (rank, node.id))
+
+            if events % 64 == 0:
+                cap = max(self.fabric.capacity_flows, 1)
+                util.append((t, min(flows_at(t) / cap, 1.0)))
+
+        makespan = max(rank_time) if rank_time else 0.0
+        total_comm = sum(coll_time.values())
+        per_rank_compute = compute_busy / max(n_ranks, 1)
+        exposed = max(0.0, makespan - per_rank_compute)
+        return SimResult(
+            makespan_s=makespan,
+            per_rank_finish_s=rank_time,
+            collective_time_s=coll_time,
+            collective_bytes=coll_bytes,
+            flows=flows,
+            compute_busy_s=per_rank_compute,
+            exposed_comm_s=min(exposed, total_comm),
+            link_util_timeline=util,
+            events=events,
+        )
+
+    def _comm_time(self, node: ETNode, group: int, t: float,
+                   flows_at, fat_at) -> Tuple[float, float, str]:
+        cfg = self.cfg
+        kindname = COLL_NAME.get(node.comm_type, "Comm")
+        base = cfg.collective_model.time_s(
+            node.comm_type, float(node.comm_bytes), group,
+            self.fabric.link_bw, self.fabric.latency_s)
+        if node.comm_type == CollectiveType.ALL_TO_ALL:
+            base *= self.fabric.a2a_hop_factor
+        throttle = 1.0
+        if cfg.congestion:
+            others = flows_at(t)
+            throttle = min(1.0 + others / max(self.fabric.capacity_flows, 1),
+                           4.0)
+            if node.comm_type == CollectiveType.ALL_TO_ALL and fat_at(t):
+                throttle *= cfg.dcqcn_small_flow_penalty
+            elif (node.comm_type == CollectiveType.ALL_REDUCE
+                    and others > self.fabric.capacity_flows):
+                throttle *= 1.5
+        return base * throttle, throttle, kindname

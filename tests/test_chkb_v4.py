@@ -1,0 +1,206 @@
+"""CHKB v4 columnar blocks: round-trip, v3 interop, byte-compat guarantees.
+
+The back-compat anchors:
+* ``tests/data/golden_v3.chkb`` was written by the v3 (row-block) encoder
+  with ``compress=False`` — it must keep loading, and re-encoding it with
+  ``version=3`` must reproduce the file byte-for-byte (the streaming-byte-
+  identity guarantee from the pipeline PR is pinned to v3 forever).
+* ``ChkbWriter(version=...)`` streaming output must equal the one-shot
+  ``to_chkb_bytes`` for BOTH versions.
+"""
+import dataclasses
+import hashlib
+import os
+
+import pytest
+
+from repro.core import (CollectiveType, ETNode, ExecutionTrace, NodeType,
+                        from_chkb_bytes, to_chkb_bytes)
+from repro.core.serialization import (ChkbReader, ChkbWriter, NodeColumns,
+                                      iter_chkb_nodes, load, roundtrip_equal,
+                                      save)
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data", "golden_v3.chkb")
+GOLDEN_SHA = "6e058b397ce74efc5a49fc1322f06670cb94cc7f4fe95e8ac4bfd76d2eaa5915"
+
+FIELDS = [f.name for f in dataclasses.fields(ETNode)]
+
+
+def rich_trace() -> ExecutionTrace:
+    et = ExecutionTrace(rank=1, world_size=4, metadata={"m": 1})
+    pg = et.add_process_group([0, 1, 2, 3], tag="dp")
+    for i, ntype in enumerate(list(NodeType) * 3):
+        n = et.add_node(
+            name=f"node/{ntype.name}/{i}", type=ntype,
+            start_time_micros=1.5 * i, duration_micros=0.25 * i,
+            comm_type=CollectiveType((i % 8) + 1) if i % 2 else
+            CollectiveType.INVALID,
+            comm_group=pg.id if i % 3 else -1,
+            comm_bytes=1 << (i % 24), comm_src=i % 5 - 1, comm_dst=i % 7 - 1,
+            comm_tag=f"tag{i}" if i % 4 == 0 else "",
+            inputs=[i, i + 1] if i % 3 == 0 else [],
+            outputs=[i * 2] if i % 5 == 0 else [],
+            attrs={"op": "dot", "k": [i, {"x": 1}]} if i % 6 == 0 else {},
+        )
+        if i:
+            n.ctrl_deps.append(i - 1)
+        if i > 2:
+            n.data_deps.extend([i - 2, i - 3])
+        if i > 4:
+            n.sync_deps.append(i - 5)
+    return et
+
+
+def assert_nodes_equal(a: ExecutionTrace, b: ExecutionTrace) -> None:
+    assert sorted(a.nodes) == sorted(b.nodes)
+    for nid in a.nodes:
+        for f in FIELDS:
+            assert getattr(a.nodes[nid], f) == getattr(b.nodes[nid], f), (
+                f"field {f} of node {nid} changed")
+
+
+@pytest.mark.parametrize("version", [3, 4])
+@pytest.mark.parametrize("compress", [True, False])
+def test_roundtrip_both_versions(version, compress):
+    et = rich_trace()
+    back = from_chkb_bytes(to_chkb_bytes(et, block_size=5, version=version,
+                                         compress=compress))
+    assert_nodes_equal(et, back)
+
+
+def test_v3_v4_cross_version_equal():
+    et = rich_trace()
+    a = from_chkb_bytes(to_chkb_bytes(et, version=3, block_size=7))
+    b = from_chkb_bytes(to_chkb_bytes(et, version=4, block_size=7))
+    assert roundtrip_equal(a, b)
+    assert_nodes_equal(a, b)
+
+
+@pytest.mark.parametrize("version", [3, 4])
+def test_streaming_writer_matches_oneshot(version):
+    et = rich_trace()
+    w = ChkbWriter(et.skeleton(), block_size=4, version=version)
+    # stream in several ragged batches
+    nodes = et.sorted_nodes()
+    w.add_nodes(nodes[:3])
+    w.add_nodes(nodes[3:10])
+    w.add_nodes(nodes[10:])
+    assert w.getvalue() == to_chkb_bytes(et, block_size=4, version=version)
+
+
+def test_golden_v3_file_loads_and_reencodes_byte_identically():
+    with open(GOLDEN, "rb") as fh:
+        data = fh.read()
+    # the committed fixture itself is what the pre-v4 writer produced
+    assert hashlib.sha256(data).hexdigest() == GOLDEN_SHA
+    et = from_chkb_bytes(data)
+    assert len(et) == 161
+    assert et.rank == 2 and et.world_size == 8
+    # v3 re-encode reproduces the pre-v4 writer's bytes exactly
+    assert to_chkb_bytes(et, block_size=32, compress=False, version=3) == data
+
+
+def test_golden_v3_reader_and_feeder(tmp_path):
+    from repro.core.feeder import ETFeeder
+    r = ChkbReader(GOLDEN)
+    assert r.version == 3
+    assert r.node_count == 161
+    order = ETFeeder(GOLDEN, window=16).drain_order()
+    assert len(order) == 161
+
+
+def test_version_switch_default_and_magic(tmp_path):
+    et = rich_trace()
+    p3 = str(tmp_path / "a3.chkb")
+    p4 = str(tmp_path / "a4.chkb")
+    save(et, p3, version=3)
+    save(et, p4)                      # default is the columnar encoding
+    with open(p3, "rb") as fh:
+        assert fh.read(8) == b"CHKB\x00\x03\x00\x00"
+    with open(p4, "rb") as fh:
+        assert fh.read(8) == b"CHKB\x00\x04\x00\x00"
+    assert ChkbReader(p3).version == 3
+    assert ChkbReader(p4).version == 4
+    assert roundtrip_equal(load(p3), load(p4))
+
+
+def test_unknown_version_rejected():
+    et = rich_trace()
+    with pytest.raises(ValueError):
+        to_chkb_bytes(et, version=9)
+    data = bytearray(to_chkb_bytes(et, version=4))
+    data[5] = 9
+    with pytest.raises(ValueError):
+        from_chkb_bytes(bytes(data))
+
+
+def test_v4_tolerates_whole_float_int_fields():
+    # JSON/v3 tooling emits e.g. comm_bytes: 100.0; v4 must accept it
+    et = ExecutionTrace()
+    et.add_node(ETNode(id=0, name="m", type=NodeType.MEM_LOAD,
+                       comm_bytes=100.0, comm_src=1.0, comm_dst=2.0))
+    back = from_chkb_bytes(to_chkb_bytes(et, version=4))
+    assert back.nodes[0].comm_bytes == 100
+    # a genuinely fractional value is a schema violation named by field
+    et2 = ExecutionTrace()
+    et2.add_node(ETNode(id=0, name="m", comm_bytes=100.5))
+    with pytest.raises(ValueError, match="comm_bytes"):
+        to_chkb_bytes(et2, version=4)
+
+
+def test_iter_chkb_nodes_both_versions():
+    et = rich_trace()
+    for version in (3, 4):
+        data = to_chkb_bytes(et, block_size=6, version=version)
+        ids = [n.id for n in iter_chkb_nodes(data)]
+        assert ids == sorted(et.nodes)
+
+
+def test_node_columns_access(tmp_path):
+    et = rich_trace()
+    p = str(tmp_path / "c.chkb")
+    save(et, p, version=4, block_size=8)
+    with ChkbReader(p) as r:
+        cols = r.read_block_columns(0)
+        assert isinstance(cols, NodeColumns)
+        assert len(cols) == 8
+        nodes = et.sorted_nodes()[:8]
+        assert cols.ids == [n.id for n in nodes]
+        assert cols.comm_bytes == [n.comm_bytes for n in nodes]
+        assert cols.durations == [float(n.duration_micros) for n in nodes]
+        assert cols.names == [n.name for n in nodes]
+        # lazy materialization round-trips every field
+        for got, want in zip(cols.to_nodes(), nodes):
+            for f in FIELDS:
+                assert getattr(got, f) == getattr(want, f)
+        assert sum(c.count for c in r.iter_column_blocks()) == r.node_count
+
+    # columnar access on a v3 file is a clear error
+    p3 = str(tmp_path / "c3.chkb")
+    save(et, p3, version=3)
+    with ChkbReader(p3) as r3:
+        with pytest.raises(ValueError):
+            r3.read_block_columns(0)
+
+
+def test_columnar_summary_matches_materialized(tmp_path):
+    from collections import Counter
+
+    from repro.core import generator
+    from repro.core.analysis import columnar_summary
+
+    et = generator.moe_mixed_collectives(iters=40, ranks=8)
+    p = str(tmp_path / "m.chkb")
+    save(et, p, version=4, block_size=64)
+    got = columnar_summary(p)
+    assert got["nodes"] == len(et)
+    assert got["total_bytes"] == et.total_bytes()
+    assert got["edges"] == sum(
+        len(n.ctrl_deps) + len(n.data_deps) + len(n.sync_deps) for n in et)
+    want_types = Counter(int(n.type) for n in et)
+    assert got["node_type_counts"] == {
+        NodeType(t).name: c for t, c in sorted(want_types.items())}
+    ar = got["comm_summary"]["AllReduce"]
+    assert ar["count"] == sum(
+        1 for n in et.comm_nodes()
+        if n.comm_type == CollectiveType.ALL_REDUCE)

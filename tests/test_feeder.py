@@ -92,3 +92,140 @@ def test_completion_before_issue_raises():
     feeder = ETFeeder(et)
     with pytest.raises(ValueError):
         feeder.mark_completed(0)
+
+
+# ------------------------------------------------- hot-path bookkeeping
+def build_100k_trace() -> ExecutionTrace:
+    """100k-node layered DAG: chains, fan-in, fan-out, long-range deps."""
+    et = ExecutionTrace()
+    n = 100_000
+    for i in range(n):
+        node = et.add_node(name=f"n{i}", type=NodeType.COMP)
+        if i:
+            node.data_deps.append(i - 1)
+        if i >= 64 and i % 16 == 0:
+            node.ctrl_deps.append(i - 64)       # long-range fan-in
+        if i >= 1000 and i % 997 == 0:
+            node.sync_deps.append(i - 1000)     # window-straddling dep
+    return et
+
+
+def test_feeder_dependency_invariants_100k_nodes():
+    """Production-scale drain: every dep satisfied, every node fed once,
+    and the O(1) bookkeeping keeps this fast enough to run in the suite."""
+    et = build_100k_trace()
+    feeder = ETFeeder(et, window=1024, policy="fifo")
+    seen = set()
+    emitted = 0
+    while feeder.has_pending():
+        node = feeder.next_ready()
+        assert node is not None, "stalled on an acyclic 100k trace"
+        assert node.id not in seen, "node fed twice"
+        for d, _ in node.all_deps():
+            assert d in seen, f"{node.id} issued before dep {d}"
+        seen.add(node.id)
+        emitted += 1
+        feeder.mark_completed(node.id)
+    assert emitted == len(et) == 100_000
+    # bounded bookkeeping on a canonical feed: watermark absorbs everything
+    assert len(feeder._completed._sparse) == 0
+    assert len(feeder._nodes) <= 3 * feeder.window
+
+
+def test_in_flight_counter_matches_set_semantics():
+    rng = random.Random(7)
+    et = random_dag(3)
+    feeder = ETFeeder(et, window=4, policy="fifo")
+    issued, completed = set(), set()
+    while feeder.has_pending() or issued - completed:
+        # randomly interleave issues and completions
+        if feeder.has_pending() and (not issued - completed
+                                     or rng.random() < 0.6):
+            n = feeder.next_ready()
+            if n is None:
+                nid = rng.choice(sorted(issued - completed))
+                feeder.mark_completed(nid)
+                completed.add(nid)
+                continue
+            issued.add(n.id)
+        else:
+            nid = rng.choice(sorted(issued - completed))
+            feeder.mark_completed(nid)
+            completed.add(nid)
+        assert feeder.in_flight() == len(issued - completed)
+    assert feeder.in_flight() == 0
+
+
+def test_has_ready_agrees_with_next_ready():
+    et = random_dag(11)
+    feeder = ETFeeder(et, window=3, policy="fifo")
+    while feeder.has_pending():
+        ready = feeder.has_ready()
+        node = feeder.next_ready()
+        assert (node is not None) == ready
+        if node is None:
+            break
+        feeder.mark_completed(node.id)
+
+
+def test_feeder_owns_and_closes_reader(tmp_path):
+    from repro.core.serialization import ChkbReader
+
+    et = ExecutionTrace()
+    for i in range(100):
+        n = et.add_node(name=f"n{i}")
+        if i:
+            n.data_deps.append(i - 1)
+    p = str(tmp_path / "own.chkb")
+    save(et, p, block_size=16)
+
+    # path-constructed feeder owns the reader: closed on drain
+    feeder = ETFeeder(p, window=8)
+    reader = feeder._reader
+    assert not reader.closed
+    feeder.drain_order()
+    assert reader.closed
+
+    # close() / context manager close early
+    with ETFeeder(p, window=8) as f2:
+        r2 = f2._reader
+        f2.next_ready()
+    assert r2.closed
+
+    # caller-provided reader is NOT closed by the feeder
+    r3 = ChkbReader(p)
+    ETFeeder(r3).drain_order()
+    assert not r3.closed
+    r3.close()
+
+    # partially-consumed window stream (consumer breaks early): the
+    # generator teardown must still release the owned reader
+    f4 = ETFeeder(p, window=8)
+    r4 = f4._reader
+    gen = f4.iter_windows(8)
+    next(gen)
+    assert not r4.closed
+    gen.close()
+    assert r4.closed
+
+
+def test_idset_watermark_and_stragglers():
+    from repro.core.feeder import _IdSet
+
+    s = _IdSet()
+    assert 0 not in s and len(s) == 0
+    for i in (0, 1, 2):
+        s.add(i)
+    assert s._watermark == 3 and not s._sparse
+    s.add(10)                       # straggler
+    assert 10 in s and 3 not in s and len(s) == 4
+    for i in (4, 5, 6, 7, 8, 9):
+        s.add(i)
+    assert 3 not in s
+    s.add(3)                        # plugs the gap; watermark sweeps sparse
+    assert s._watermark == 11 and not s._sparse
+    assert len(s) == 11
+    s.add(5)                        # re-add below watermark: no-op
+    assert len(s) == 11
+    s.add(-4)                       # negative ids stay sparse, still correct
+    assert -4 in s and -1 not in s

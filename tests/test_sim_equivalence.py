@@ -1,0 +1,174 @@
+"""Optimized engine vs frozen pre-optimization reference: result equivalence.
+
+The O(log F) flow index and wake-event elimination are pure performance
+changes — on every seeded scenario the optimized engine must reproduce the
+reference engine's makespan, per-rank finish times, per-collective totals
+and flow records within 1e-9 (they are in fact bit-identical: the flow
+index prunes exactly the flows the linear scan skipped, and eliminated
+wake events were no-ops by construction).
+"""
+import random
+
+import pytest
+
+from repro.core import ExecutionTrace, NodeType, CollectiveType, generator
+from repro.sim import Fabric, ReferenceSimulator, SimConfig, Simulator
+
+TOL = 1e-9
+
+
+def random_comm_trace(seed: int, ranks: int) -> ExecutionTrace:
+    """Random DAG mixing compute and collectives (uniform + jittered times,
+    so equal-timestamp completion races are exercised)."""
+    rng = random.Random(seed)
+    et = ExecutionTrace(rank=0, world_size=ranks)
+    pg = et.add_process_group(range(ranks), tag="g")
+    n = rng.randint(20, 120)
+    for i in range(n):
+        if rng.random() < 0.35:
+            node = et.add_node(
+                name=f"c{i}", type=NodeType.COMM_COLL,
+                comm_type=rng.choice((CollectiveType.ALL_REDUCE,
+                                      CollectiveType.ALL_TO_ALL,
+                                      CollectiveType.ALL_GATHER)),
+                comm_group=pg.id, comm_bytes=rng.randint(1, 1 << 22))
+        else:
+            # round durations on purpose: equal completion timestamps are
+            # the interesting ordering corner
+            node = et.add_node(name=f"k{i}", type=NodeType.COMP,
+                               duration_micros=rng.choice((0.0, 50.0, 100.0,
+                                                           100.0, 237.5)))
+        for dep in rng.sample(range(i), k=min(i, rng.randint(0, 2))):
+            node.data_deps.append(dep)
+    return et
+
+
+def assert_equivalent(traces, fabric, cfg=None):
+    ref = ReferenceSimulator(traces, fabric, cfg).run()
+    new = Simulator(traces, fabric, cfg).run()
+    assert abs(ref.makespan_s - new.makespan_s) <= TOL
+    assert len(ref.per_rank_finish_s) == len(new.per_rank_finish_s)
+    for a, b in zip(ref.per_rank_finish_s, new.per_rank_finish_s):
+        assert abs(a - b) <= TOL
+    assert set(ref.collective_time_s) == set(new.collective_time_s)
+    for k, v in ref.collective_time_s.items():
+        assert abs(v - new.collective_time_s[k]) <= TOL, k
+    assert ref.collective_bytes == new.collective_bytes
+    assert len(ref.flows) == len(new.flows)
+    for fa, fb in zip(ref.flows, new.flows):
+        assert fa.kind == fb.kind
+        assert abs(fa.start_s - fb.start_s) <= TOL
+        assert abs(fa.end_s - fb.end_s) <= TOL
+        assert abs(fa.throttled - fb.throttled) <= TOL
+    assert abs(ref.compute_busy_s - new.compute_busy_s) <= TOL
+    assert abs(ref.exposed_comm_s - new.exposed_comm_s) <= TOL
+    return ref, new
+
+
+@pytest.mark.parametrize("mode", ["mixed", "alltoall", "allreduce"])
+def test_moe_multirank_equivalence(mode):
+    traces = [generator.moe_mixed_collectives(iters=6, ranks=8, mode=mode,
+                                              rank=r) for r in range(8)]
+    assert_equivalent(traces, Fabric.build("switch", 8))
+
+
+@pytest.mark.parametrize("topo", ["switch", "ring", "fully_connected"])
+def test_dp_allreduce_equivalence_topologies(topo):
+    # uniform compute durations: every rank completes at identical
+    # timestamps, the densest same-time event collision pattern
+    traces = [generator.dp_allreduce_pattern(steps=3, layers=6, ranks=4,
+                                             rank=r) for r in range(4)]
+    assert_equivalent(traces, Fabric.build(topo, 4))
+
+
+def test_straggler_and_no_congestion_equivalence():
+    traces = [generator.dp_allreduce_pattern(steps=2, layers=4, ranks=4,
+                                             rank=r) for r in range(4)]
+    fab = Fabric.build("switch", 4)
+    assert_equivalent(traces, fab, SimConfig(speed_factors={1: 0.4, 3: 2.0}))
+    assert_equivalent(traces, fab, SimConfig(congestion=False))
+
+
+def test_single_trace_equivalence():
+    et = generator.moe_mixed_collectives(iters=10, ranks=8)
+    assert_equivalent([et], Fabric.build("switch", 8))
+    assert_equivalent([generator.compute_chain(n=64)], Fabric.build("ring", 2))
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_random_comm_traces_equivalence(seed):
+    ranks = random.Random(seed).choice((2, 4, 8))
+    traces = [random_comm_trace(seed * 31 + r, ranks) for r in range(ranks)]
+    # per-rank traces differ structurally -> rendezvous occurrences only
+    # match per (type, group, tag) stream; that is exactly what the engine
+    # keys on, and both engines must agree on the resulting schedule
+    assert_equivalent(traces, Fabric.build("switch", ranks))
+
+
+def test_same_instant_completions_keep_concurrent_issues():
+    """Two collectives completing at the same instant must grant the rank
+    two same-instant issue opportunities, exactly like the reference —
+    naive wake dedup would serialize the dependent computes (2x makespan)."""
+    et = ExecutionTrace(rank=0, world_size=2)
+    pg = et.add_process_group([0], tag="solo")
+    ar1 = et.add_node(name="ar1", type=NodeType.COMM_COLL,
+                      comm_type=CollectiveType.ALL_REDUCE,
+                      comm_group=pg.id, comm_bytes=1 << 20)
+    ar2 = et.add_node(name="ar2", type=NodeType.COMM_COLL,
+                      comm_type=CollectiveType.ALL_REDUCE,
+                      comm_group=pg.id, comm_bytes=1 << 20)
+    for ar in (ar1, ar2):
+        c = et.add_node(name=f"c_{ar.name}", type=NodeType.COMP,
+                        duration_micros=100.0)
+        c.data_deps.append(ar.id)
+    # congestion off => identical flow durations => same-instant completions
+    ref, new = assert_equivalent([et], Fabric.build("switch", 2),
+                                 SimConfig(congestion=False))
+    assert new.flows[0].end_s == new.flows[1].end_s  # the tie really happened
+    assert_equivalent([et], Fabric.build("switch", 2))
+
+
+def test_deferred_readiness_same_instant():
+    """First same-instant completion readies nothing, the second readies
+    two nodes at once: the banked wake credit must flush so both issue at
+    that instant, as the reference's two wakes would."""
+    et = ExecutionTrace(rank=0, world_size=2)
+    pg = et.add_process_group([0], tag="solo")
+    ar1 = et.add_node(name="ar1", type=NodeType.COMM_COLL,
+                      comm_type=CollectiveType.ALL_REDUCE,
+                      comm_group=pg.id, comm_bytes=1 << 20)
+    ar2 = et.add_node(name="ar2", type=NodeType.COMM_COLL,
+                      comm_type=CollectiveType.ALL_REDUCE,
+                      comm_group=pg.id, comm_bytes=1 << 20)
+    for i in range(2):
+        c = et.add_node(name=f"c{i}", type=NodeType.COMP,
+                        duration_micros=100.0)
+        c.data_deps.extend([ar1.id, ar2.id])   # ready only after BOTH
+    assert_equivalent([et], Fabric.build("switch", 2),
+                      SimConfig(congestion=False))
+    assert_equivalent([et], Fabric.build("switch", 2))
+
+
+def test_new_engine_processes_fewer_events():
+    """The wake-elimination must actually eliminate events (and never add)."""
+    traces = [generator.moe_mixed_collectives(iters=20, ranks=8, rank=r)
+              for r in range(8)]
+    fab = Fabric.build("switch", 8)
+    ref = ReferenceSimulator(traces, fab).run()
+    new = Simulator(traces, fab).run()
+    assert new.events < ref.events
+
+
+def test_flow_index_memory_bounded():
+    """active-flow state must not grow with trace length (satellite fix:
+    the reference keeps every flow ever launched, even with congestion off)."""
+    from repro.sim.engine import _FlowIndex
+    idx = _FlowIndex()
+    t = 0.0
+    for i in range(10_000):
+        idx.add(t + 1.0, 2, i % 5 == 0)
+        t += 0.5
+        idx.flows_at(t)
+        assert len(idx) <= 4
+    assert idx.flows_at(t + 10.0) == 0
+    assert not idx.fat_at(t + 10.0)
