@@ -28,7 +28,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="benchmarks.perf.run",
                                  description=__doc__.splitlines()[0])
     ap.add_argument("names", nargs="*",
-                    help="subset: perf_feeder perf_sim perf_chkb")
+                    help="subset: perf_feeder perf_sim perf_chkb perf_synth")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced scale (CI perf-smoke job)")
     ap.add_argument("--no-baseline", dest="baseline", action="store_false",
@@ -40,7 +40,7 @@ def main(argv=None) -> int:
     doc = run_suite(scale="smoke" if ns.smoke else "full",
                     baseline=ns.baseline, names=ns.names or None)
     path = write_bench(doc, ns.output)
-    for name in ("perf_feeder", "perf_sim", "perf_chkb"):
+    for name in ("perf_feeder", "perf_sim", "perf_chkb", "perf_synth"):
         if name in doc:
             print(f"[ok] {name:12s} ({doc[name]['bench_wall_s']}s)")
     sims = doc.get("perf_sim", {}).get("scenarios", [])
@@ -54,6 +54,12 @@ def main(argv=None) -> int:
         print(f"     chkb: block decode {chkb['block_decode_speedup']}x, "
               f"node decode {chkb['node_decode_speedup']}x, "
               f"encode {chkb['encode_speedup']}x (v4 vs v3)")
+    synth = doc.get("perf_synth", {})
+    if synth:
+        gen = synth["generate"]
+        print(f"     synth: {gen['total_nodes']} nodes x "
+              f"{gen['ranks_written']} ranks at {gen['nodes_per_sec']:.0f} "
+              f"nodes/sec (peak {synth['bounded_memory']['peak_mb']}MB)")
     print(f"wrote {path}")
     return 0
 

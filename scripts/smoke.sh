@@ -29,8 +29,23 @@ python -m repro sim "$tmp/canon.chkb" --topology ring --ranks 4 | grep -q makesp
 echo "== replay (dry-run) =="
 python -m repro replay "$tmp/canon.chkb" --mode compute --limit 8
 
+echo "== synth (profile -> synthesize 4 ranks -> simulate) =="
+python -m repro profile "$tmp/canon.chkb" -o "$tmp/profile.json"
+grep -q category_mix "$tmp/profile.json"
+python -m repro synth -p "$tmp/profile.json" -o "$tmp/synth" --ranks 4 \
+  --steps 4 --sim --manifest "$tmp/synth_manifest.json" | grep -q makespan
+python -c "
+import json, sys
+man = json.load(open('$tmp/synth_manifest.json'))
+assert man['total_nodes'] > 0 and len(man['paths']) == 4, man
+"
+python -m repro synth --list > "$tmp/scenarios.txt"
+grep -q moe-mixed "$tmp/scenarios.txt"
+
 echo "== stages =="
-python -m repro stages | grep -q scale_time
+python -m repro stages > "$tmp/stages.txt"
+grep -q scale_time "$tmp/stages.txt"
+grep -q synth.generate "$tmp/stages.txt"
 
 echo "== bench (chkb codec only, smoke scale) =="
 python -m repro bench perf_chkb --scale smoke -o "$tmp/bench.json"

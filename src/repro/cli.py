@@ -7,6 +7,9 @@
     python -m repro sim      canonical.chkb --topology ring --ranks 8
     python -m repro replay   canonical.chkb --mode compute --limit 64
     python -m repro analyze  canonical.chkb [--deep] [-o stats.json]
+    python -m repro profile  rank*.chkb -o profile.json [--obfuscate]
+    python -m repro synth    --profile profile.json -o out/ --ranks 32 --sim
+    python -m repro synth    --scenario moe-mixed -o out/ --ranks 8
     python -m repro stages                       # print the registry table
 
 Every subcommand builds a :class:`repro.pipeline.Pipeline`; nothing calls the
@@ -147,6 +150,75 @@ def _cmd_analyze(ns: argparse.Namespace) -> int:
     return 0
 
 
+def _cmd_profile(ns: argparse.Namespace) -> int:
+    # one shared builder across all inputs -> one profile for the whole
+    # job, finished exactly once
+    from .core.serialization import load
+    from .synth import ProfileBuilder
+
+    builder = ProfileBuilder()
+    for path in ns.inputs:
+        if path.endswith(".chkb"):
+            # CHKB files ride the columnar fast path (v4: statistics come
+            # straight off typed arrays, no ETNode materialization)
+            builder.add_chkb(path)
+        else:
+            builder.add_trace(load(path))   # JSON materializes regardless
+    profile = builder.finish(obfuscate=ns.obfuscate)
+    profile.save(ns.output)
+    print(f"profiled {len(ns.inputs)} trace(s) -> {ns.output}")
+    print(profile.summary())
+    return 0
+
+
+def _parse_stragglers(pairs: Optional[List[str]]) -> Dict[int, float]:
+    out: Dict[int, float] = {}
+    for pair in pairs or []:
+        if "=" not in pair:
+            raise SystemExit(f"--straggler expects RANK=FACTOR, got {pair!r}")
+        r, f = pair.split("=", 1)
+        out[int(r)] = float(f)
+    return out
+
+
+def _cmd_synth(ns: argparse.Namespace) -> int:
+    from .synth import WorkloadProfile, catalog, get_scenario, synthesize
+    from .synth.scenarios import resolve_knobs
+
+    if ns.list_scenarios:
+        for name, desc in catalog():
+            print(f"  {name:20s} {desc}")
+        return 0
+    if (ns.profile is None) == (ns.scenario is None):
+        raise SystemExit("synth needs exactly one of --profile or --scenario")
+    if ns.scenario:
+        sc = get_scenario(ns.scenario)
+        profile = sc.profile()
+        defaults = sc.knobs
+    else:
+        profile = WorkloadProfile.load(ns.profile)
+        defaults = {}
+    steps, stragglers, jitter, rest = resolve_knobs(
+        defaults, steps=ns.steps, jitter=ns.jitter,
+        stragglers=_parse_stragglers(ns.straggler))
+    man = synthesize(profile, ns.output, world_size=ns.ranks, steps=steps,
+                     ops_per_step=ns.ops_per_step, seed=ns.seed,
+                     scale_duration=ns.scale_duration,
+                     scale_comm_bytes=ns.scale_comm_bytes,
+                     stragglers=stragglers, jitter=jitter, **rest)
+    print(f"synthesized {man['total_nodes']} nodes across "
+          f"{len(man['paths'])} rank(s) (world={man['world_size']}) "
+          f"-> {man['out_dir']}")
+    if ns.manifest:
+        _emit(man, ns.manifest)
+    if ns.sim:
+        res = (Pipeline.from_source("load", man["paths"][0], window=ns.window)
+               .sink("sim", topology=ns.topology, ranks=len(man["paths"]),
+                     extra_traces=man["paths"][1:]).run())
+        print(res.summary())
+    return 0
+
+
 def _cmd_stages(ns: argparse.Namespace) -> int:
     for kind, names in available_stages().items():
         print(f"{kind}:")
@@ -236,13 +308,51 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("-o", "--output")
     p.set_defaults(fn=_cmd_analyze)
 
+    p = sub.add_parser("profile",
+                       help="fit a statistical WorkloadProfile from trace(s)")
+    p.add_argument("inputs", nargs="+",
+                   help="per-rank trace files (.chkb rides the columnar path)")
+    p.add_argument("--obfuscate", action="store_true",
+                   help="hash op names (shareable profile; structure kept)")
+    p.add_argument("-o", "--output", required=True)
+    p.add_argument("--window", type=int, default=1024)
+    p.add_argument("-v", "--verbose", action="store_true")
+    p.set_defaults(fn=_cmd_profile)
+
+    p = sub.add_parser("synth",
+                       help="synthesize a coherent multi-rank workload")
+    p.add_argument("-p", "--profile", help="WorkloadProfile JSON path")
+    p.add_argument("--scenario", help="named scenario (see --list)")
+    p.add_argument("--list", dest="list_scenarios", action="store_true",
+                   help="print the scenario catalog and exit")
+    p.add_argument("-o", "--output", default="synth_out",
+                   help="output directory (one rankNNNNN.chkb per rank)")
+    p.add_argument("--ranks", type=int, default=8,
+                   help="synthetic world size (scale-up knob)")
+    p.add_argument("--steps", type=int, default=None)
+    p.add_argument("--ops-per-step", type=int, default=None,
+                   help="nodes per step (default: match profile scale)")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--scale-duration", type=float, default=1.0)
+    p.add_argument("--scale-comm-bytes", type=float, default=1.0)
+    p.add_argument("--jitter", type=float, default=None,
+                   help="relative seeded compute-duration jitter")
+    p.add_argument("--straggler", action="append", metavar="RANK=FACTOR",
+                   help="slow one rank's compute by FACTOR (repeatable)")
+    p.add_argument("--sim", action="store_true",
+                   help="simulate the synthesized ranks and print a summary")
+    p.add_argument("--topology", default="switch")
+    p.add_argument("--manifest", help="write the synthesis manifest JSON here")
+    p.add_argument("--window", type=int, default=1024)
+    p.set_defaults(fn=_cmd_synth)
+
     p = sub.add_parser("stages", help="list the stage registry")
     p.set_defaults(fn=_cmd_stages)
 
     p = sub.add_parser("bench", help="hot-path perf suite (BENCH_perf metrics)")
     p.add_argument("names", nargs="*",
                    help="benchmark subset (default: all registered), "
-                        "e.g. perf_feeder perf_sim perf_chkb")
+                        "e.g. perf_feeder perf_sim perf_chkb perf_synth")
     p.add_argument("--scale", default="smoke", choices=("smoke", "full"),
                    help="smoke = CI-sized, full = BENCH_perf.json scale")
     p.add_argument("--no-baseline", dest="baseline", action="store_false",

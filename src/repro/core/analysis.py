@@ -40,23 +40,29 @@ _ELEMWISE_OPS = {
 }
 
 
-def categorize(node: ETNode) -> str:
-    """Map a node onto Table 5's categories."""
-    if node.type in (NodeType.COMM_COLL, NodeType.COMM_SEND, NodeType.COMM_RECV):
-        return COLLECTIVE_NAMES.get(node.comm_type, "P2P")
-    if node.type in (NodeType.MEM_LOAD, NodeType.MEM_STORE):
+def categorize_fields(node_type: NodeType, comm_type: CollectiveType,
+                      name: str, attrs: Dict) -> str:
+    """Table-5 category from raw node fields.
+
+    The field-level form exists so columnar consumers (``repro.synth``
+    profiling over :class:`NodeColumns`) classify without materializing
+    ETNodes; :func:`categorize` is the node-object wrapper.
+    """
+    if node_type in COMM_NODE_TYPES:
+        return COLLECTIVE_NAMES.get(comm_type, "P2P")
+    if node_type in (NodeType.MEM_LOAD, NodeType.MEM_STORE):
         return "Mem"
-    if node.type == NodeType.DATA_LOAD:
+    if node_type == NodeType.DATA_LOAD:
         return "DataLoad"
-    if node.type != NodeType.COMP:
+    if node_type != NodeType.COMP:
         return "Others"
-    op = node.attrs.get("op", node.name.rsplit("/", 1)[-1]).lower()
-    scope = node.name.lower()
+    op = attrs.get("op", name.rsplit("/", 1)[-1]).lower()
+    scope = name.lower()
     # Table 5 counts the attention core separately; projections are GEMMs.
     leaf = scope.rsplit("/", 1)[-1]
     attn_core = ("softmax_qk" in scope or "attn_core" in scope
                  or "flash" in leaf or "attention" in op or "softmax" in op
-                 or node.attrs.get("attn_core", False))
+                 or attrs.get("attn_core", False))
     if attn_core and (op in _GEMM_OPS or "softmax" in op or "attention" in op):
         return "Attn"
     if op in _GEMM_OPS:
@@ -64,6 +70,11 @@ def categorize(node: ETNode) -> str:
     if op in _ELEMWISE_OPS:
         return "ElemWise"
     return "Others"
+
+
+def categorize(node: ETNode) -> str:
+    """Map a node onto Table 5's categories."""
+    return categorize_fields(node.type, node.comm_type, node.name, node.attrs)
 
 
 def op_counts(et: ExecutionTrace) -> Dict[str, int]:
@@ -215,8 +226,19 @@ class CriticalPath:
 
 
 def critical_path(et: ExecutionTrace) -> CriticalPath:
-    """Longest path by duration through the dependency DAG."""
-    order = et.topological_order()
+    """Longest path by duration through the dependency DAG.
+
+    Zero-duration nodes are fine (they contribute length 0 and can still sit
+    on the path).  A trace with a dependency cycle has no longest path; it is
+    rejected with a clear ``ValueError`` instead of recursing or hanging —
+    repair such traces with the ``convert`` pass first.
+    """
+    try:
+        order = et.topological_order()
+    except ValueError as e:
+        raise ValueError(
+            f"critical_path requires an acyclic trace: {e}; run the "
+            f"'convert' pass to repair the trace first") from None
     dist: Dict[int, float] = {}
     pred: Dict[int, Optional[int]] = {}
     for nid in order:
@@ -247,11 +269,21 @@ def critical_path(et: ExecutionTrace) -> CriticalPath:
 
 
 def exposed_comm(et: ExecutionTrace) -> Dict[str, float]:
-    """Measured-timeline compute/comm/exposed/idle split (needs timestamps)."""
+    """Measured-timeline compute/comm/exposed/idle split (needs timestamps).
+
+    Purely interval-based: dependency edges (even cyclic ones) are ignored,
+    zero-duration and non-finite-timestamp nodes contribute nothing, so this
+    never hangs or returns NaN on adversarial graphs.
+    """
+    def _ok(n: ETNode) -> bool:
+        return (n.duration_micros > 0
+                and math.isfinite(n.start_time_micros)
+                and math.isfinite(n.duration_micros))
+
     comp = [(n.start_time_micros, n.end_time_micros)
-            for n in et if n.type == NodeType.COMP and n.duration_micros > 0]
+            for n in et if n.type == NodeType.COMP and _ok(n)]
     comm = [(n.start_time_micros, n.end_time_micros)
-            for n in et.comm_nodes() if n.duration_micros > 0]
+            for n in et.comm_nodes() if _ok(n)]
     from .reconstructor import _subtract, _union_len
     total = max((e for _, e in comp + comm), default=0.0)
     return {

@@ -10,7 +10,8 @@ Pre-execution-style traces created directly from workload descriptions:
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+import inspect
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from .schema import (CollectiveType, ETNode, ExecutionTrace, NodeType)
 
@@ -117,6 +118,73 @@ def moe_mixed_collectives(
     return et
 
 
+PATTERNS: Dict[str, Callable[..., ExecutionTrace]] = {}
+
+
+def _comm_signature(et: ExecutionTrace) -> List[Tuple[int, Tuple[int, ...],
+                                                      str, int]]:
+    """Rank-invariant rendezvous content of a trace's comm nodes, in trace
+    order: (comm_type, member ranks, tag, payload bytes) per collective."""
+    sig = []
+    for n in et.sorted_nodes():
+        if not n.is_comm:
+            continue
+        pg = et.process_groups.get(n.comm_group)
+        ranks = tuple(pg.ranks) if pg is not None else ()
+        sig.append((int(n.comm_type), ranks, n.comm_tag, int(n.comm_bytes)))
+    return sig
+
+
+def generate_ranks(pattern: Union[str, Callable[..., ExecutionTrace]],
+                   ranks: int, **kw: Any) -> List[ExecutionTrace]:
+    """Rank-coherent multi-rank generation of a single-rank pattern.
+
+    The single-rank generators above (``dp_allreduce_pattern``,
+    ``moe_mixed_collectives``, …) emit one rank with nothing *guaranteeing*
+    that regenerating the other ranks yields matching rendezvous content.
+    This wrapper generates all ``ranks`` traces (passing ``rank=r`` — and
+    ``ranks=ranks`` where the pattern takes a world size) and then verifies
+    the guarantee: every rank's collective sequence must agree on
+    (comm_type, member ranks, tag, bytes) so the simulator matches every
+    collective with zero orphans.  A rank-divergent pattern is rejected with
+    ``ValueError`` instead of deadlocking a downstream simulation.
+
+    Also the building block ``repro.synth`` scenarios use to fit profiles
+    from the canonical patterns.
+    """
+    if isinstance(pattern, str):
+        try:
+            fn = PATTERNS[pattern]
+        except KeyError:
+            raise ValueError(f"unknown generator pattern {pattern!r}; "
+                             f"options: {sorted(PATTERNS)}") from None
+    else:
+        fn = pattern
+    if ranks <= 0:
+        raise ValueError(f"ranks must be positive, got {ranks}")
+    params = inspect.signature(fn).parameters
+    traces: List[ExecutionTrace] = []
+    for r in range(ranks):
+        call_kw = dict(kw)
+        if "ranks" in params:
+            call_kw.setdefault("ranks", ranks)
+        if "rank" in params:
+            call_kw["rank"] = r
+        et = fn(**call_kw)
+        if "rank" not in params:
+            et.rank = r
+        et.world_size = max(et.world_size, ranks)
+        traces.append(et)
+    base = _comm_signature(traces[0])
+    for et in traces[1:]:
+        if _comm_signature(et) != base:
+            raise ValueError(
+                f"pattern {getattr(fn, '__name__', fn)!r} is not "
+                f"rank-coherent: rank {et.rank}'s collective sequence "
+                f"differs from rank 0's (rendezvous would orphan)")
+    return traces
+
+
 def symbolic_transformer_step(
     layers: int, d_model: int, d_ff: int, heads: int, seq: int, batch: int,
     tp: int = 1, dp: int = 1, dtype_bytes: int = 2, rank: int = 0,
@@ -200,3 +268,11 @@ def symbolic_transformer_step(
         coll("params/all_gather", CollectiveType.ALL_GATHER,
              param_bytes, dp_group)
     return et
+
+
+PATTERNS.update({
+    "compute_chain": compute_chain,
+    "dp_allreduce": dp_allreduce_pattern,
+    "moe_mixed": moe_mixed_collectives,
+    "symbolic_transformer": symbolic_transformer_step,
+})

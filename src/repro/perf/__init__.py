@@ -1,7 +1,7 @@
 """Performance benchmark suite (kind="benchmark" registry stages).
 
 Importing this package registers ``perf_feeder`` / ``perf_sim`` /
-``perf_chkb`` in the pipeline stage registry so the CLI (``python -m repro
+``perf_chkb`` / ``perf_synth`` in the pipeline stage registry so the CLI (``python -m repro
 bench``) and the ``benchmarks/perf`` driver dispatch them by name, the same
 way ``benchmarks/run.py`` dispatches the paper-figure benchmarks.
 """
@@ -9,10 +9,10 @@ from __future__ import annotations
 
 from ..pipeline.registry import register_stage
 from .suite import (BENCHMARKS, SCALES, perf_chkb, perf_feeder, perf_sim,
-                    run_suite, write_bench)
+                    perf_synth, run_suite, write_bench)
 
 for _name, _fn in BENCHMARKS.items():
     register_stage(_name, kind="benchmark", overwrite=True)(_fn)
 
 __all__ = ["BENCHMARKS", "SCALES", "perf_feeder", "perf_sim", "perf_chkb",
-           "run_suite", "write_bench"]
+           "perf_synth", "run_suite", "write_bench"]

@@ -15,6 +15,11 @@ Three benchmarks, registered in the stage registry under kind="benchmark"
   v3 row blocks vs v4 columnar blocks, including the column-level decode
   path (``NodeColumns`` — no ETNode materialization) and the real columnar
   consumer (:func:`repro.core.analysis.columnar_summary`).
+* ``perf_synth``  — statistical-synthesis throughput (``repro.synth``):
+  profile-fit rate over the columnar path, streaming multi-rank generation
+  into CHKB v4 (the ≥100k nodes/sec floor; full scale synthesizes a ≥1M-node
+  8-rank workload), and a tracemalloc bounded-memory probe showing the
+  generator never materializes per-rank node lists.
 
 Results aggregate into a JSON document written to ``BENCH_perf.json`` at the
 repo root (see :func:`run_suite` / :func:`write_bench`).  Wall-clock numbers
@@ -46,6 +51,9 @@ _SCALE = {
         "sim_baseline": [(1_000, 8)],
         "chkb_nodes": 10_000,
         "chkb_repeat": 3,
+        # world x (steps * ops/step) = 2 x 10k = 20k nodes
+        "synth": {"world": 2, "steps": 50, "ops_per_step": 200,
+                  "profile_nodes": 10_000},
     },
     "full": {
         "feeder_nodes": [10_000, 100_000],
@@ -55,6 +63,9 @@ _SCALE = {
         "sim_baseline": [(1_000, 8), (10_000, 8), (100_000, 8)],
         "chkb_nodes": 50_000,
         "chkb_repeat": 5,
+        # world x (steps * ops/step) = 8 x 131072 = 1,048,576 nodes (>=1M)
+        "synth": {"world": 8, "steps": 512, "ops_per_step": 256,
+                  "profile_nodes": 50_000},
     },
 }
 
@@ -239,11 +250,77 @@ def perf_chkb(scale: str = "full", **_: Any) -> Dict[str, Any]:
     }
 
 
+# -------------------------------------------------------------------- synth
+def perf_synth(scale: str = "full", **_: Any) -> Dict[str, Any]:
+    """repro.synth throughput: profile fit, streaming generation, memory.
+
+    ``generate.nodes_per_sec`` is the headline (sustained nodes/sec into
+    CHKB v4 across all ranks, file writes included; the subsystem's floor is
+    100k/s).  ``bounded_memory.peak_mb`` is the tracemalloc peak of a
+    single-rank synthesis — it stays O(block), orders of magnitude below the
+    materialized trace, because the generator streams through ``ChkbWriter``
+    and never holds a node list.
+    """
+    import os
+    import tempfile
+    import tracemalloc
+
+    from ..core.serialization import save
+    from ..synth import profile_chkb, synthesize, synthesize_rank
+
+    cfg = _cfg(scale)["synth"]
+    # source workload: mixed AR x A2A, profiled off a v4 file so the fit
+    # rides the columnar path exactly as production profiling would
+    src = _mixed_trace(cfg["profile_nodes"], 8)
+    with tempfile.TemporaryDirectory() as tmp:
+        src_path = os.path.join(tmp, "src.chkb")
+        save(src, src_path, version=4)
+        t0 = time.perf_counter()
+        profile = profile_chkb([src_path])
+        fit_s = time.perf_counter() - t0
+
+        out_dir = os.path.join(tmp, "synth")
+        t0 = time.perf_counter()
+        man = synthesize(profile, out_dir, world_size=cfg["world"],
+                         steps=cfg["steps"], ops_per_step=cfg["ops_per_step"])
+        gen_s = time.perf_counter() - t0
+
+        tracemalloc.start()
+        synthesize_rank(profile, os.path.join(tmp, "probe.chkb"), rank=0,
+                        world_size=cfg["world"], steps=cfg["steps"] // 4,
+                        ops_per_step=cfg["ops_per_step"],
+                        seed=1)
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+
+    return {
+        "profile": {
+            "source_nodes": len(src),
+            "wall_s": round(fit_s, 4),
+            "nodes_per_sec": round(len(src) / fit_s, 1),
+            "fingerprint": profile.fingerprint(),
+        },
+        "generate": {
+            "world_size": man["world_size"],
+            "ranks_written": len(man["paths"]),
+            "total_nodes": man["total_nodes"],
+            "bytes_written": man["bytes_written"],
+            "wall_s": round(gen_s, 4),
+            "nodes_per_sec": round(man["total_nodes"] / gen_s, 1),
+        },
+        "bounded_memory": {
+            "nodes": cfg["steps"] // 4 * cfg["ops_per_step"],
+            "peak_mb": round(peak / 1e6, 2),
+        },
+    }
+
+
 # ------------------------------------------------------------------- driver
 BENCHMARKS = {
     "perf_feeder": perf_feeder,
     "perf_sim": perf_sim,
     "perf_chkb": perf_chkb,
+    "perf_synth": perf_synth,
 }
 
 

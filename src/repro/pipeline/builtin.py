@@ -85,30 +85,26 @@ class LoadSource:
 
 @register_stage("generate", kind="source")
 class GenerateSource:
-    """Synthetic workload traces (paper §3 test-case generator patterns)."""
+    """Synthetic workload traces (paper §3 test-case generator patterns).
 
-    PATTERNS = ("compute_chain", "dp_allreduce", "moe_mixed",
-                "symbolic_transformer")
+    Pattern names resolve through :data:`repro.core.generator.PATTERNS` —
+    the single registry ``generate_ranks`` and this source share."""
 
     def __init__(self, pattern: str = "dp_allreduce",
                  window: int = DEFAULT_WINDOW, **kw: Any):
-        if pattern not in self.PATTERNS:
+        from ..core.generator import PATTERNS
+        if pattern not in PATTERNS:
             raise ValueError(
                 f"unknown generator pattern {pattern!r}; "
-                f"options: {list(self.PATTERNS)}")
+                f"options: {sorted(PATTERNS)}")
         self.pattern = pattern
         self.window = window
         self.kw = kw
 
     def open(self) -> TraceStream:
-        from ..core import generator
-        fn = {
-            "compute_chain": generator.compute_chain,
-            "dp_allreduce": generator.dp_allreduce_pattern,
-            "moe_mixed": generator.moe_mixed_collectives,
-            "symbolic_transformer": generator.symbolic_transformer_step,
-        }[self.pattern]
-        return TraceStream.from_trace(fn(**self.kw), window=self.window)
+        from ..core.generator import PATTERNS
+        return TraceStream.from_trace(PATTERNS[self.pattern](**self.kw),
+                                      window=self.window)
 
 
 @register_stage("capture", kind="source")
@@ -451,3 +447,9 @@ class ReplaySink:
         if self.limit is not None:
             cfg.node_range = (0, int(self.limit))
         return Replayer(stream.materialize(), cfg, mesh=self.mesh).run()
+
+
+# ===================================================== synth subsystem
+# imported last so `import repro.pipeline` also registers the synth.*
+# stages (the synth package is import-light: no jax, core+pipeline only)
+from ..synth import stages as _synth_stages  # noqa: E402, F401

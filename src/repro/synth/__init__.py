@@ -1,0 +1,35 @@
+"""repro.synth — statistical trace synthesis (paper §3 "generation").
+
+Closes the collect→profile→synthesize→simulate loop:
+
+* :mod:`profile`   — fit a compact :class:`WorkloadProfile` from real ETs
+  (CHKB v4 columnar fast path; obfuscatable; canonical-JSON round-trip),
+* :mod:`sampler`   — explicit-state seeded samplers (SplitMix64 streams,
+  inverse-CDF histogram draws; no global RNG anywhere),
+* :mod:`generate`  — streaming, rank-coherent multi-rank synthesis straight
+  into CHKB v4 in bounded memory, with scale knobs (``world_size``,
+  ``steps``, ``scale_duration``, ``scale_comm_bytes``, stragglers/jitter),
+* :mod:`scenarios` — named catalog (dp-dense, moe-mixed, pp-bubble,
+  serve-decode-burst, straggler-jitter),
+* :mod:`stages`    — ``synth.profile`` (sink/pass) and ``synth.generate``
+  (source) registry entries; ``python -m repro profile|synth`` are the CLI
+  verbs.
+
+Importing this package registers the stages.
+"""
+from .profile import (COMM_CATEGORIES, PROFILE_SCHEMA, ProfileBuilder,
+                      WorkloadProfile, profile_chkb, profile_traces)
+from .sampler import Dist, SplitMix64, ValueAccumulator, derive_seed
+from .generate import (default_ops_per_step, iter_rank_nodes, plan_node_count,
+                       rank_skeleton, synthesize, synthesize_rank)
+from .scenarios import SCENARIOS, Scenario, catalog, get_scenario
+from . import stages  # noqa: F401  (side effect: registers synth.* stages)
+
+__all__ = [
+    "COMM_CATEGORIES", "PROFILE_SCHEMA", "ProfileBuilder", "WorkloadProfile",
+    "profile_chkb", "profile_traces",
+    "Dist", "SplitMix64", "ValueAccumulator", "derive_seed",
+    "default_ops_per_step", "iter_rank_nodes", "plan_node_count",
+    "rank_skeleton", "synthesize", "synthesize_rank",
+    "SCENARIOS", "Scenario", "catalog", "get_scenario",
+]

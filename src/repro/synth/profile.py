@@ -1,0 +1,372 @@
+"""Statistical workload profiles fitted from Chakra execution traces.
+
+A :class:`WorkloadProfile` is the compact, serializable, shareable stand-in
+for a real workload (paper §3 "generation"; Mystique's fit-then-synthesize
+recipe): enough distributional structure to synthesize traces whose summary
+statistics match the source, small enough to mail around, and optionally
+obfuscated (hashed op names, preserved structure) so production traces never
+leave the building.
+
+Captured per profile:
+
+* **category mix** — Table-5 op categories (GeMM/Attn/ElemWise/Mem/…/per-
+  collective) over all profiled ranks,
+* **duration distributions** per category and **comm-size distributions**
+  per collective type (:class:`repro.synth.sampler.Dist` — exact value
+  histograms with a binned fallback),
+* **dependency fan-in / fan-out distributions** and compute↔comm
+  **interleaving ratios**,
+* **per-rank symmetry fingerprints** (is the job SPMD-symmetric?),
+* **name pools** — the most common (name-template, op) pairs per category,
+  used to emit realistic-looking node names (or hashes when obfuscated).
+
+Profiling CHKB v4 files rides the columnar fast path
+(:meth:`ChkbReader.read_block_columns` / ``iter_column_blocks``): category
+counts, histograms and fan statistics come straight off typed arrays — no
+ETNode is ever materialized.  v3 files and in-memory traces fall back to the
+node path with identical accumulation semantics.
+
+Everything serializes to canonical JSON (sorted keys, no timestamps), so the
+same trace always yields byte-identical profile bytes — the determinism
+anchor for the synthesis pipeline.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+from collections import Counter, defaultdict
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from ..core.analysis import COLLECTIVE_NAMES, categorize_fields
+from ..core.schema import ETNode, ExecutionTrace
+from ..core.serialization import ChkbReader
+from .sampler import Dist, ValueAccumulator
+
+PROFILE_SCHEMA = "repro-synth-profile/v1"
+
+#: categories that are collective communication (comm-size dists are keyed
+#: by these; name pools are not kept for them)
+COMM_CATEGORIES = frozenset(COLLECTIVE_NAMES.values())
+
+_NUM_RE = re.compile(r"\d+")
+_POOL_TOP = 8           # name-pool entries kept per category
+_EMPTY_ATTRS: Dict[str, Any] = {}
+
+
+def _template(name: str) -> str:
+    """Leaf name with digit runs collapsed to ``*`` (the re-numbering slot)."""
+    return _NUM_RE.sub("*", name.rsplit("/", 1)[-1]) if name else "op"
+
+
+def _canonical_json(d: Dict[str, Any]) -> bytes:
+    return (json.dumps(d, sort_keys=True, separators=(",", ":"))
+            + "\n").encode("utf-8")
+
+
+def _hash12(payload: bytes) -> str:
+    return hashlib.blake2b(payload, digest_size=6).hexdigest()
+
+
+class WorkloadProfile:
+    """Parsed profile: distributions + mix + structure metadata.
+
+    Thin, immutable-by-convention wrapper over the canonical dict; the dict
+    is the storage format, the parsed :class:`Dist` objects are the sampling
+    interface.
+    """
+
+    def __init__(self, d: Dict[str, Any]) -> None:
+        if d.get("schema") != PROFILE_SCHEMA:
+            raise ValueError(
+                f"not a synth profile (schema={d.get('schema')!r}; "
+                f"expected {PROFILE_SCHEMA!r})")
+        self._d = d
+        self.world_size: int = int(d.get("world_size", 1))
+        self.nodes_per_rank: float = float(d.get("nodes_per_rank", 0.0))
+        self.category_mix: Dict[str, int] = {
+            k: int(v) for k, v in d.get("category_mix", {}).items()}
+        self.duration_us: Dict[str, Dist] = {
+            k: Dist.from_dict(v) for k, v in d.get("duration_us", {}).items()}
+        self.comm_bytes: Dict[str, Dist] = {
+            k: Dist.from_dict(v) for k, v in d.get("comm_bytes", {}).items()}
+        self.fan_in: Dist = Dist.from_dict(d.get("fan_in", {}))
+        self.fan_out: Dist = Dist.from_dict(d.get("fan_out", {}))
+        self.interleave: Dict[str, float] = dict(d.get("interleave", {}))
+        self.name_pools: Dict[str, List[Tuple[str, str]]] = {
+            cat: [(str(t), str(op)) for t, op in entries]
+            for cat, entries in d.get("name_pools", {}).items()}
+        self.rank_fingerprints: Dict[str, str] = dict(
+            d.get("rank_fingerprints", {}))
+        self.symmetric: bool = bool(d.get("symmetric", True))
+        self.obfuscated: bool = bool(d.get("obfuscated", False))
+
+    # ------------------------------------------------------------- serial
+    def to_dict(self) -> Dict[str, Any]:
+        return self._d
+
+    def to_json_bytes(self) -> bytes:
+        """Canonical (byte-stable) JSON encoding."""
+        return _canonical_json(self._d)
+
+    @classmethod
+    def from_json_bytes(cls, data: bytes) -> "WorkloadProfile":
+        return cls(json.loads(data.decode("utf-8")))
+
+    def save(self, path: str) -> str:
+        with open(path, "wb") as fh:
+            fh.write(self.to_json_bytes())
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "WorkloadProfile":
+        with open(path, "rb") as fh:
+            return cls.from_json_bytes(fh.read())
+
+    def fingerprint(self) -> str:
+        """12-hex-digit hash of the profile's statistical content.
+
+        The ``source`` block (file names, provenance) is excluded: the same
+        trace bytes must fingerprint identically wherever the file lived —
+        the fingerprint is stamped into every synthesized rank's metadata,
+        so provenance leaking in here would break synthesized-CHKB byte
+        determinism across machines.
+        """
+        content = {k: v for k, v in self._d.items() if k != "source"}
+        return _hash12(_canonical_json(content))
+
+    # -------------------------------------------------------- obfuscation
+    def obfuscated_copy(self) -> "WorkloadProfile":
+        """Shareable copy: name templates replaced by content hashes.
+
+        Structure (mix, distributions, fan-in/out, symmetry) is preserved —
+        that is the whole point — but op *names* that could leak model
+        architecture are reduced to opaque ``x<hash>*`` tokens.  The generic
+        primitive kind (``op`` attr: dot_general/add/…) is kept: it is what
+        the Table-5 categorization and downstream replayers key off, and it
+        carries no workload identity.
+        """
+        d = json.loads(self.to_json_bytes().decode("utf-8"))
+        pools = {}
+        for cat, entries in d.get("name_pools", {}).items():
+            pools[cat] = [
+                ["x" + _hash12(t.encode("utf-8")) + "*", op]
+                for t, op in entries]
+        d["name_pools"] = pools
+        d["source"] = {"files": [], "nodes": d.get("source", {}).get("nodes", 0)}
+        d["obfuscated"] = True
+        return WorkloadProfile(d)
+
+    # ----------------------------------------------------------- helpers
+    def comm_fraction(self) -> float:
+        total = sum(self.category_mix.values())
+        comm = sum(v for k, v in self.category_mix.items()
+                   if k in COMM_CATEGORIES)
+        return comm / total if total else 0.0
+
+    def summary(self) -> str:
+        mix = ", ".join(f"{k}={v}" for k, v in sorted(self.category_mix.items()))
+        return (f"profile[{self.fingerprint()}] world={self.world_size} "
+                f"nodes/rank={self.nodes_per_rank:.0f} "
+                f"comm={self.comm_fraction():.1%} sym={self.symmetric} [{mix}]")
+
+
+class ProfileBuilder:
+    """Streaming accumulator: feed ranks (columns, nodes, or files), then
+    :meth:`finish` into a :class:`WorkloadProfile`.
+
+    One builder can absorb many ranks/files (the CLI profiles a whole trace
+    directory into one profile).  Memory is bounded: value histograms cap
+    their support (:class:`ValueAccumulator`), name pools cap their counter,
+    and the only per-node state is the current rank's fan-out counter.
+    """
+
+    def __init__(self) -> None:
+        self._cat_counts: Counter = Counter()
+        self._dur: Dict[str, ValueAccumulator] = defaultdict(ValueAccumulator)
+        self._cbytes: Dict[str, ValueAccumulator] = defaultdict(ValueAccumulator)
+        self._fan_in: Counter = Counter()
+        self._fan_out: Counter = Counter()
+        self._trans: Counter = Counter()            # (prev_is_comm, is_comm)
+        self._pools: Dict[str, Counter] = defaultdict(Counter)
+        self._rank_fp: Dict[str, str] = {}
+        self._world = 1
+        self._files: List[str] = []
+        self._total_nodes = 0
+        self._rank_count = 0
+        # current-rank state
+        self._cur_rank: Optional[int] = None
+        self._cur_nodes = 0
+        self._cur_comm_bytes = 0
+        self._cur_cats: Counter = Counter()
+        self._cur_fanout: Counter = Counter()
+        self._cur_prev_comm: Optional[bool] = None
+
+    # -------------------------------------------------------- rank bounds
+    def begin_rank(self, rank: int, world_size: int = 1) -> None:
+        if self._cur_rank is not None:
+            self.end_rank()
+        self._cur_rank = int(rank)
+        self._world = max(self._world, int(world_size))
+        self._cur_nodes = 0
+        self._cur_comm_bytes = 0
+        self._cur_cats = Counter()
+        self._cur_fanout = Counter()
+        self._cur_prev_comm = None
+
+    def end_rank(self) -> None:
+        if self._cur_rank is None:
+            return
+        # fan-out distribution: reference counts per producer + the nodes
+        # nothing ever referenced
+        referenced = len(self._cur_fanout)
+        self._fan_out[0] += max(0, self._cur_nodes - referenced)
+        for cnt in self._cur_fanout.values():
+            self._fan_out[cnt] += 1
+        fp = _hash12(_canonical_json({
+            "nodes": self._cur_nodes,
+            "cats": sorted(self._cur_cats.items()),
+            "comm_bytes": self._cur_comm_bytes,
+        }))
+        self._rank_fp[str(self._cur_rank)] = fp
+        self._rank_count += 1
+        self._cur_rank = None
+
+    # -------------------------------------------------------- accumulate
+    def _add(self, node_type: int, comm_type: int, name: str,
+             attrs: Dict[str, Any], duration_us: float, comm_bytes: int,
+             fan_in: int) -> None:
+        cat = categorize_fields(node_type, comm_type, name, attrs)
+        self._cat_counts[cat] += 1
+        self._cur_cats[cat] += 1
+        self._cur_nodes += 1
+        self._total_nodes += 1
+        self._dur[cat].add(duration_us)
+        self._fan_in[fan_in] += 1
+        is_comm = cat in COMM_CATEGORIES
+        if is_comm:
+            self._cbytes[cat].add(comm_bytes)
+            self._cur_comm_bytes += comm_bytes
+        else:
+            pool = self._pools[cat]
+            key = (_template(name), str(attrs.get("op", "")))
+            if key in pool or len(pool) < 512:
+                pool[key] += 1
+        if self._cur_prev_comm is not None:
+            self._trans[(self._cur_prev_comm, is_comm)] += 1
+        self._cur_prev_comm = is_comm
+
+    def add_node(self, n: ETNode) -> None:
+        self._add(n.type, n.comm_type, n.name, n.attrs, n.duration_micros,
+                  n.comm_bytes,
+                  len(n.ctrl_deps) + len(n.data_deps) + len(n.sync_deps))
+        self._cur_fanout.update(n.ctrl_deps)
+        self._cur_fanout.update(n.data_deps)
+        self._cur_fanout.update(n.sync_deps)
+
+    def add_nodes(self, nodes: Iterable[ETNode]) -> None:
+        for n in nodes:
+            self.add_node(n)
+
+    def add_columns(self, cols) -> None:
+        """Accumulate one CHKB v4 :class:`NodeColumns` block — typed arrays
+        in, statistics out, zero ETNode objects."""
+        attr_map = dict(zip(cols.attr_idx, cols.attr_vals))
+        names = cols.names
+        types = cols.types
+        ctypes = cols.comm_types
+        durs = cols.durations
+        cb = cols.comm_bytes
+        dc = cols.dep_counts
+        add = self._add
+        for i in range(cols.count):
+            j = 3 * i
+            add(types[i], ctypes[i], names[i],
+                attr_map.get(i, _EMPTY_ATTRS), durs[i], cb[i],
+                dc[j] + dc[j + 1] + dc[j + 2])
+        self._cur_fanout.update(cols.dep_flat)
+
+    # ------------------------------------------------------- whole sources
+    def add_trace(self, et: ExecutionTrace) -> "ProfileBuilder":
+        self.begin_rank(et.rank, et.world_size)
+        self.add_nodes(et.sorted_nodes())
+        self.end_rank()
+        return self
+
+    def add_chkb(self, path: str) -> "ProfileBuilder":
+        """Profile one per-rank CHKB file; v4 rides the columnar fast path."""
+        with ChkbReader(path) as r:
+            self.begin_rank(r.header.get("rank", 0),
+                            r.header.get("world_size", 1))
+            if r.version == 4:
+                for cols in r.iter_column_blocks():
+                    self.add_columns(cols)
+            else:
+                self.add_nodes(r.iter_nodes())
+            self.end_rank()
+        self._files.append(path)
+        return self
+
+    # ------------------------------------------------------------- finish
+    def finish(self, obfuscate: bool = False) -> WorkloadProfile:
+        self.end_rank()
+        comp_out = self._trans[(False, True)] + self._trans[(False, False)]
+        comm_out = self._trans[(True, True)] + self._trans[(True, False)]
+        total = sum(self._cat_counts.values())
+        comm_total = sum(v for k, v in self._cat_counts.items()
+                         if k in COMM_CATEGORIES)
+        pools: Dict[str, List[List[str]]] = {}
+        for cat, counter in sorted(self._pools.items()):
+            top = sorted(counter.items(), key=lambda kv: (-kv[1], kv[0]))
+            pools[cat] = [[t, op] for (t, op), _ in top[:_POOL_TOP]]
+        fps = dict(sorted(self._rank_fp.items()))
+        d: Dict[str, Any] = {
+            "schema": PROFILE_SCHEMA,
+            "world_size": self._world,
+            "nodes_per_rank": (self._total_nodes / self._rank_count
+                               if self._rank_count else 0.0),
+            "category_mix": dict(sorted(self._cat_counts.items())),
+            "duration_us": {cat: acc.dist().to_dict()
+                            for cat, acc in sorted(self._dur.items())},
+            "comm_bytes": {cat: acc.dist().to_dict()
+                           for cat, acc in sorted(self._cbytes.items())},
+            "fan_in": Dist.from_counter(self._fan_in).to_dict(),
+            "fan_out": Dist.from_counter(self._fan_out).to_dict(),
+            "interleave": {
+                "comm_fraction": comm_total / total if total else 0.0,
+                "comp_to_comm": (self._trans[(False, True)] / comp_out
+                                 if comp_out else 0.0),
+                "comm_to_comm": (self._trans[(True, True)] / comm_out
+                                 if comm_out else 0.0),
+            },
+            "name_pools": pools,
+            "rank_fingerprints": fps,
+            "symmetric": len(set(fps.values())) <= 1,
+            "obfuscated": False,
+            # basenames only: profiling the same files from another
+            # directory must yield byte-identical profile JSON
+            "source": {"files": [os.path.basename(p) for p in self._files],
+                       "nodes": self._total_nodes},
+        }
+        profile = WorkloadProfile(d)
+        return profile.obfuscated_copy() if obfuscate else profile
+
+
+# ------------------------------------------------------------ conveniences
+def profile_chkb(paths: Sequence[str], obfuscate: bool = False
+                 ) -> WorkloadProfile:
+    """Fit one profile across per-rank CHKB files (columnar fast path)."""
+    b = ProfileBuilder()
+    for p in paths:
+        b.add_chkb(p)
+    return b.finish(obfuscate=obfuscate)
+
+
+def profile_traces(traces: Sequence[ExecutionTrace],
+                   obfuscate: bool = False) -> WorkloadProfile:
+    """Fit one profile across in-memory per-rank traces."""
+    b = ProfileBuilder()
+    for et in traces:
+        b.add_trace(et)
+    return b.finish(obfuscate=obfuscate)

@@ -1,0 +1,223 @@
+"""Seeded deterministic samplers for trace synthesis.
+
+Everything here is explicit-state: a :class:`SplitMix64` generator per stream,
+derived from ``(seed, *tokens)`` key material, so
+
+* no global RNG is ever touched (the profile-determinism invariant:
+  same ET + same seed => byte-identical synthesized CHKB),
+* independent streams can be re-derived anywhere — every rank re-derives the
+  *same* ``(seed, "comm", step)`` stream so collective sizes/durations agree
+  across ranks without any cross-rank communication at generation time,
+* results are platform-stable (pure 64-bit integer arithmetic; no
+  ``random``-module Mersenne state, no hash randomization).
+
+:class:`Dist` is the serializable distribution unit the profiles are built
+from: an exact value histogram while the support is small (generated and
+production traces overwhelmingly reuse a handful of sizes/durations), falling
+back to a binned histogram that preserves per-bin means, so sampled totals
+converge to the profiled totals.  Sampling is inverse-CDF over the counts.
+"""
+from __future__ import annotations
+
+import bisect
+import hashlib
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+_MASK64 = (1 << 64) - 1
+
+#: value-histogram support cap: beyond this many distinct values new samples
+#: are rounded to 3 significant digits (bounded memory, still deterministic)
+MAX_EXACT_VALUES = 4096
+#: at most this many distinct values serialize as an exact discrete dist
+MAX_DISCRETE = 64
+#: bin count for the binned fallback
+DEFAULT_BINS = 32
+
+
+def derive_seed(seed: int, *tokens: Any) -> int:
+    """Stable 64-bit stream seed from ``(seed, *tokens)``.
+
+    Uses blake2b over the reprs (ints/strs only — reprs are stable), so the
+    same key material yields the same stream on every platform and run.
+    """
+    material = "\x1f".join([repr(int(seed))] + [repr(t) for t in tokens])
+    h = hashlib.blake2b(material.encode("utf-8"), digest_size=8)
+    return int.from_bytes(h.digest(), "little")
+
+
+class SplitMix64:
+    """SplitMix64 PRNG: tiny, fast, explicit-state, platform-stable."""
+
+    __slots__ = ("_state",)
+
+    def __init__(self, seed: int) -> None:
+        self._state = seed & _MASK64
+
+    def next_u64(self) -> int:
+        self._state = (self._state + 0x9E3779B97F4A7C15) & _MASK64
+        z = self._state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK64
+        return z ^ (z >> 31)
+
+    def uniform(self) -> float:
+        """U[0, 1) with 53 bits of precision."""
+        return (self.next_u64() >> 11) * (2.0 ** -53)
+
+    def randint(self, n: int) -> int:
+        """Uniform int in [0, n).  Modulo bias is < 2^-40 for any n the
+        generator ever sees (lookback windows, pool sizes)."""
+        return self.next_u64() % n if n > 0 else 0
+
+
+def round_sig(v: float, digits: int = 3) -> float:
+    """Round to ``digits`` significant digits (support-capping collapse)."""
+    return float(f"{float(v):.{digits}g}")
+
+
+class Dist:
+    """Serializable 1-D distribution with inverse-CDF sampling.
+
+    Two storage kinds (selected at build time, recorded in the JSON):
+
+    * ``discrete`` — exact (value, count) pairs; sampling returns the value.
+    * ``binned``   — histogram bins carrying per-bin mean values; sampling
+      returns the bin mean, so the expected sample mean equals the profiled
+      mean exactly (totals-fidelity matters more than in-bin texture).
+    * ``empty``    — no observations; samples are 0.0.
+    """
+
+    __slots__ = ("kind", "values", "counts", "_cum", "_total", "_mean",
+                 "_single")
+
+    def __init__(self, kind: str, values: Sequence[float],
+                 counts: Sequence[int]) -> None:
+        if kind not in ("discrete", "binned", "empty"):
+            raise ValueError(f"unknown Dist kind {kind!r}")
+        self.kind = kind
+        self.values = [float(v) for v in values]
+        self.counts = [int(c) for c in counts]
+        if len(self.values) != len(self.counts):
+            raise ValueError("Dist values/counts length mismatch")
+        cum: List[int] = []
+        run = 0
+        for c in self.counts:
+            run += c
+            cum.append(run)
+        self._cum = cum
+        self._total = run
+        self._mean = (sum(v * c for v, c in zip(self.values, self.counts))
+                      / run if run else 0.0)
+        # single-support fast path (real profiles are dominated by
+        # constant-valued dists: fixed gradient sizes, fixed kernel costs)
+        self._single = self.values[0] if len(self.values) == 1 else None
+
+    # ------------------------------------------------------------ building
+    @classmethod
+    def empty(cls) -> "Dist":
+        return cls("empty", [], [])
+
+    @classmethod
+    def from_counter(cls, counter: Dict[float, int],
+                     max_discrete: int = MAX_DISCRETE,
+                     bins: int = DEFAULT_BINS) -> "Dist":
+        """Build from a value->count map (sorted; deterministic)."""
+        items = sorted((float(v), int(c)) for v, c in counter.items() if c > 0)
+        if not items:
+            return cls.empty()
+        if len(items) <= max_discrete:
+            return cls("discrete", [v for v, _ in items],
+                       [c for _, c in items])
+        # binned fallback: equal-count (quantile) bins preserve tails better
+        # than equal-width for the long-tailed durations traces exhibit
+        total = sum(c for _, c in items)
+        per_bin = max(1, total // bins)
+        bin_vals: List[float] = []
+        bin_counts: List[int] = []
+        acc_c = 0
+        acc_vc = 0.0
+        for v, c in items:
+            acc_c += c
+            acc_vc += v * c
+            if acc_c >= per_bin and len(bin_vals) < bins - 1:
+                bin_vals.append(acc_vc / acc_c)
+                bin_counts.append(acc_c)
+                acc_c = 0
+                acc_vc = 0.0
+        if acc_c:
+            bin_vals.append(acc_vc / acc_c)
+            bin_counts.append(acc_c)
+        return cls("binned", bin_vals, bin_counts)
+
+    # ---------------------------------------------------------- (de)serial
+    def to_dict(self) -> Dict[str, Any]:
+        if self.kind == "empty":
+            return {"kind": "empty"}
+        return {"kind": self.kind, "values": self.values,
+                "counts": self.counts}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Dist":
+        if d.get("kind", "empty") == "empty":
+            return cls.empty()
+        return cls(d["kind"], d.get("values", []), d.get("counts", []))
+
+    # ------------------------------------------------------------ sampling
+    def sample(self, rng: SplitMix64) -> float:
+        """Inverse-CDF draw.  Every call consumes exactly one ``next_u64``
+        (even when empty or single-valued), so parallel streams stay aligned
+        by construction."""
+        u = rng.next_u64()
+        if self._single is not None:
+            return self._single
+        if not self._total:
+            return 0.0
+        idx = bisect.bisect_right(self._cum, u % self._total)
+        return self.values[idx]
+
+    def mean(self) -> float:
+        return self._mean
+
+    def total(self) -> int:
+        return self._total
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"Dist({self.kind}, n={self._total}, "
+                f"support={len(self.values)}, mean={self._mean:.4g})")
+
+
+class ValueAccumulator:
+    """Bounded-memory value histogram feeding :class:`Dist.from_counter`.
+
+    Counts exact values until :data:`MAX_EXACT_VALUES` distinct are seen,
+    then collapses new arrivals to 3 significant digits — deterministic
+    (depends only on the value sequence), bounded, and lossless for the
+    common case of few distinct values.
+    """
+
+    __slots__ = ("_counts", "_capped", "n", "total")
+
+    def __init__(self) -> None:
+        self._counts: Dict[float, int] = {}
+        self._capped = False
+        self.n = 0
+        self.total = 0.0
+
+    def add(self, value: float, count: int = 1) -> None:
+        v = float(value)
+        self.n += count
+        self.total += v * count
+        if self._capped and v not in self._counts:
+            v = round_sig(v)
+        c = self._counts
+        c[v] = c.get(v, 0) + count
+        if not self._capped and len(c) > MAX_EXACT_VALUES:
+            self._capped = True
+            folded: Dict[float, int] = {}
+            for val, cnt in c.items():
+                r = round_sig(val)
+                folded[r] = folded.get(r, 0) + cnt
+            self._counts = folded
+
+    def dist(self) -> Dist:
+        return Dist.from_counter(self._counts)

@@ -1,0 +1,206 @@
+"""Named scenario catalog: profiles + knobs for the paper's workload space.
+
+A :class:`Scenario` bundles a profile factory (fitted on canonical multi-rank
+pattern traces via :func:`repro.core.generator.generate_ranks`, or on
+hand-built microbenchmark traces) with default synthesis knobs, so coverage
+runs can sweep the case-study space by name:
+
+* ``dp-dense``           — data-parallel training: deep compute chains with
+  per-layer gradient AllReduce (Table 5 / §5.1 flavor).
+* ``moe-mixed``          — §5.3 HIL workload: interleaved AllReduce and
+  All-to-All at opposite communication extremes.
+* ``pp-bubble``          — pipeline parallelism: microbatch compute chained
+  through point-to-point boundary exchanges; bubbles emerge from the chain.
+* ``serve-decode-burst`` — LLM serving: swarms of tiny decode steps with
+  small per-token collectives, punctuated by long prefill bursts
+  (bimodal durations).
+* ``straggler-jitter``   — dp-dense plus fault injection knobs: one slow
+  rank (``stragglers``) and seeded compute jitter.
+
+``scenario.profile()`` re-fits the profile from scratch — deterministic, no
+RNG involved — so the catalog needs no checked-in fixture files.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Tuple
+
+from ..core.generator import generate_ranks
+from ..core.schema import CollectiveType, ExecutionTrace, NodeType
+from .profile import WorkloadProfile, profile_traces
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """A named, reproducible synthesis starting point."""
+
+    name: str
+    description: str
+    factory: Callable[[], WorkloadProfile]
+    knobs: Dict[str, Any] = field(default_factory=dict)
+
+    def profile(self) -> WorkloadProfile:
+        return self.factory()
+
+
+# ------------------------------------------------- hand-built microbenches
+def _pp_bubble_rank(stages: int = 4, microbatches: int = 12,
+                    compute_us: float = 300.0, act_bytes: int = 4 << 20,
+                    rank: int = 0) -> ExecutionTrace:
+    """Pipeline-parallel microbatch chain: fwd compute + boundary P2P.
+
+    Every rank emits the same boundary-exchange sequence (rank-coherent by
+    construction); the bubble is what the simulator's chaining produces."""
+    et = ExecutionTrace(rank=rank, world_size=stages,
+                        metadata={"generator": "pp_bubble"})
+    pg = et.add_process_group(list(range(stages)), tag="pp")
+    prev = None
+    last_p2p = None
+    for m in range(microbatches):
+        c = et.add_node(name=f"mb{m}/fwd_stage", type=NodeType.COMP,
+                        duration_micros=compute_us,
+                        attrs={"op": "dot_general"})
+        if prev is not None:
+            c.data_deps.append(prev)
+        p2p = et.add_node(name=f"mb{m}/boundary_p2p",
+                          type=NodeType.COMM_COLL,
+                          comm_type=CollectiveType.POINT_TO_POINT,
+                          comm_group=pg.id, comm_bytes=act_bytes)
+        p2p.data_deps.append(c.id)
+        if last_p2p is not None:
+            p2p.sync_deps.append(last_p2p)
+        last_p2p = p2p.id
+        prev = c.id
+    opt = et.add_node(name="flush/optimizer", type=NodeType.COMP,
+                      duration_micros=compute_us * 2,
+                      attrs={"op": "elemwise_update"})
+    opt.data_deps.extend([prev, last_p2p])
+    return et
+
+
+def _serve_decode_rank(tokens: int = 64, burst_every: int = 16,
+                       decode_us: float = 40.0, prefill_us: float = 1500.0,
+                       kv_bytes: int = 256 << 10, ranks: int = 4,
+                       rank: int = 0) -> ExecutionTrace:
+    """LLM serving decode loop: tiny per-token steps + small collectives,
+    with a long prefill burst every ``burst_every`` tokens (bimodal)."""
+    et = ExecutionTrace(rank=rank, world_size=ranks,
+                        metadata={"generator": "serve_decode"})
+    pg = et.add_process_group(list(range(ranks)), tag="tp")
+    prev = None
+    last_ag = None
+    for t in range(tokens):
+        burst = (t % burst_every == 0)
+        dur = prefill_us if burst else decode_us
+        c = et.add_node(name=f"tok{t}/{'prefill' if burst else 'decode'}_attn",
+                        type=NodeType.COMP, duration_micros=dur,
+                        attrs={"op": "dot_general", "attn_core": True})
+        if prev is not None:
+            c.data_deps.append(prev)
+        mlp = et.add_node(name=f"tok{t}/decode_mlp", type=NodeType.COMP,
+                          duration_micros=decode_us,
+                          attrs={"op": "dot_general"})
+        mlp.data_deps.append(c.id)
+        ag = et.add_node(name=f"tok{t}/logits_allgather",
+                         type=NodeType.COMM_COLL,
+                         comm_type=CollectiveType.ALL_GATHER,
+                         comm_group=pg.id, comm_bytes=kv_bytes)
+        ag.data_deps.append(mlp.id)
+        if last_ag is not None:
+            ag.sync_deps.append(last_ag)
+        last_ag = ag.id
+        prev = mlp.id
+    return et
+
+
+# ----------------------------------------------------------------- catalog
+def _dp_dense_profile() -> WorkloadProfile:
+    return profile_traces(generate_ranks("dp_allreduce", ranks=8,
+                                         steps=4, layers=8))
+
+
+def _moe_mixed_profile() -> WorkloadProfile:
+    return profile_traces(generate_ranks("moe_mixed", ranks=8, iters=8))
+
+
+def _pp_bubble_profile() -> WorkloadProfile:
+    return profile_traces(generate_ranks(_pp_bubble_rank, ranks=4))
+
+
+def _serve_decode_profile() -> WorkloadProfile:
+    return profile_traces(generate_ranks(_serve_decode_rank, ranks=4))
+
+
+SCENARIOS: Dict[str, Scenario] = {s.name: s for s in (
+    Scenario(
+        name="dp-dense",
+        description="data-parallel training: compute chains + per-layer "
+                    "gradient AllReduce",
+        factory=_dp_dense_profile,
+        knobs={"steps": 16},
+    ),
+    Scenario(
+        name="moe-mixed",
+        description="MoE iteration mixing AllReduce and All-to-All "
+                    "(paper §5.3 HIL workload)",
+        factory=_moe_mixed_profile,
+        knobs={"steps": 16},
+    ),
+    Scenario(
+        name="pp-bubble",
+        description="pipeline-parallel microbatches chained through "
+                    "boundary P2P exchanges",
+        factory=_pp_bubble_profile,
+        knobs={"steps": 12},
+    ),
+    Scenario(
+        name="serve-decode-burst",
+        description="LLM serving: tiny decode steps + small collectives, "
+                    "long prefill bursts (bimodal)",
+        factory=_serve_decode_profile,
+        knobs={"steps": 32},
+    ),
+    Scenario(
+        name="straggler-jitter",
+        description="dp-dense with fault injection: rank 0 runs 1.8x slow, "
+                    "±15% seeded compute jitter",
+        factory=_dp_dense_profile,
+        knobs={"steps": 16, "stragglers": {0: 1.8}, "jitter": 0.3},
+    ),
+)}
+
+
+def resolve_knobs(knobs: Dict[str, Any], steps: Any = None,
+                  jitter: Any = None,
+                  stragglers: Any = None
+                  ) -> Tuple[int, Dict[int, float], float, Dict[str, Any]]:
+    """Merge scenario default knobs with explicit overrides.
+
+    The single knob-resolution rule shared by the CLI and the
+    ``synth.generate`` stage: explicit values win, scenario defaults fill
+    the gaps, and whatever remains is returned for the caller to forward
+    (or reject).  Returns ``(steps, stragglers, jitter, rest)``.
+    """
+    rest = dict(knobs)
+    out_steps = int(steps if steps is not None else rest.pop("steps", 16))
+    rest.pop("steps", None)
+    out_stragglers: Dict[int, float] = dict(rest.pop("stragglers", {}) or {})
+    if stragglers:
+        out_stragglers.update(stragglers)
+    out_jitter = float(jitter if jitter is not None
+                       else rest.pop("jitter", 0.0))
+    rest.pop("jitter", None)
+    return out_steps, out_stragglers, out_jitter, rest
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise ValueError(f"unknown scenario {name!r}; "
+                         f"options: {sorted(SCENARIOS)}") from None
+
+
+def catalog() -> List[Tuple[str, str]]:
+    """(name, description) rows for CLI/README tables."""
+    return [(s.name, s.description) for s in SCENARIOS.values()]

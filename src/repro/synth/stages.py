@@ -1,0 +1,153 @@
+"""Pipeline-registry wiring for the synthesis subsystem.
+
+* ``synth.profile`` (sink)  — consume a stream into a :class:`WorkloadProfile`
+  (optionally written as canonical JSON).
+* ``synth.profile`` (pass)  — profile the stream *as it flows*, forwarding
+  windows unchanged; the profile lands in ``.profile`` / ``.report`` and on
+  disk when ``path`` is given.  Lets one pipeline both archive a trace and
+  fit its profile in a single streaming pass.
+* ``synth.generate`` (source) — open one synthesized rank as a
+  :class:`TraceStream`, generated lazily window-by-window (never
+  materialized), from a profile object/path or a named scenario.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterator, List, Optional, Union
+
+from ..core.schema import ETNode, ExecutionTrace
+from ..pipeline.registry import register_stage
+from ..pipeline.stages import DEFAULT_WINDOW, TraceStream, Window
+from .generate import (default_ops_per_step, iter_rank_nodes, plan_node_count,
+                       rank_skeleton)
+from .profile import ProfileBuilder, WorkloadProfile
+from .scenarios import get_scenario, resolve_knobs
+
+ProfileLike = Union[WorkloadProfile, str]
+
+
+def resolve_profile(profile: Optional[ProfileLike],
+                    scenario: Optional[str]) -> WorkloadProfile:
+    """One of ``profile`` (object or JSON path) / ``scenario`` (name)."""
+    if (profile is None) == (scenario is None):
+        raise ValueError("pass exactly one of profile= or scenario=")
+    if scenario is not None:
+        return get_scenario(scenario).profile()
+    if isinstance(profile, str):
+        return WorkloadProfile.load(profile)
+    return profile
+
+
+@register_stage("synth.profile", kind="sink")
+class ProfileSink:
+    """Fit a WorkloadProfile from the stream (streaming accumulation).
+
+    ``builder=`` lets several pipelines share one accumulator (the CLI fits
+    a single profile across a directory of per-rank files); the sink then
+    returns the running builder's snapshot profile.
+    """
+
+    def __init__(self, path: Optional[str] = None, obfuscate: bool = False,
+                 builder: Optional[ProfileBuilder] = None):
+        self.path = path
+        self.obfuscate = obfuscate
+        self.builder = builder if builder is not None else ProfileBuilder()
+
+    def consume(self, stream: TraceStream) -> WorkloadProfile:
+        sk = stream.skeleton
+        self.builder.begin_rank(sk.rank, sk.world_size)
+        for window in stream.windows():
+            self.builder.add_nodes(window)
+        self.builder.end_rank()
+        profile = self.builder.finish(obfuscate=self.obfuscate)
+        if self.path:
+            profile.save(self.path)
+        return profile
+
+
+@register_stage("synth.profile", kind="pass")
+class ProfilePass:
+    """Profile the stream in flight; windows pass through untouched."""
+
+    def __init__(self, path: Optional[str] = None, obfuscate: bool = False):
+        self.path = path
+        self.obfuscate = obfuscate
+        self.profile: Optional[WorkloadProfile] = None
+        self.report: Any = None
+
+    def apply(self, stream: TraceStream) -> TraceStream:
+        builder = ProfileBuilder()
+        sk = stream.skeleton
+        builder.begin_rank(sk.rank, sk.world_size)
+        src = stream.windows()
+
+        def gen() -> Iterator[Window]:
+            for window in src:
+                builder.add_nodes(window)
+                yield window
+            builder.end_rank()
+            self.profile = builder.finish(obfuscate=self.obfuscate)
+            if self.path:
+                self.profile.save(self.path)
+            self.report = self.profile.summary()
+
+        return TraceStream(sk, gen(), window=stream.window,
+                           node_count=stream.node_count)
+
+
+@register_stage("synth.generate", kind="source")
+class SynthGenerateSource:
+    """Streaming synthetic-rank source: profile/scenario -> TraceStream."""
+
+    def __init__(self, profile: Optional[ProfileLike] = None,
+                 scenario: Optional[str] = None, rank: int = 0,
+                 world_size: int = 8, steps: Optional[int] = None,
+                 ops_per_step: Optional[int] = None, seed: int = 0,
+                 scale_duration: float = 1.0, scale_comm_bytes: float = 1.0,
+                 straggler: Optional[float] = None,
+                 jitter: Optional[float] = None,
+                 window: int = DEFAULT_WINDOW):
+        self.profile = resolve_profile(profile, scenario)
+        # explicit arguments win; scenario knobs fill the gaps (one shared
+        # resolution rule: scenarios.resolve_knobs, same as the CLI)
+        defaults = get_scenario(scenario).knobs if scenario is not None else {}
+        steps, stragglers, jitter, rest = resolve_knobs(
+            defaults, steps=steps, jitter=jitter)
+        if rest:
+            raise ValueError(f"unknown scenario knobs: {sorted(rest)}")
+        if straggler is None:
+            straggler = float(stragglers.get(rank, 1.0))
+        self.rank = int(rank)
+        self.world_size = int(world_size)
+        self.steps = int(steps)
+        self.ops_per_step = (int(ops_per_step) if ops_per_step is not None
+                             else default_ops_per_step(self.profile, self.steps))
+        self.seed = int(seed)
+        self.scale_duration = float(scale_duration)
+        self.scale_comm_bytes = float(scale_comm_bytes)
+        self.straggler = float(straggler)
+        self.jitter = float(jitter)
+        self.window = max(1, int(window))
+
+    def open(self) -> TraceStream:
+        skeleton = rank_skeleton(self.profile, self.rank, self.world_size,
+                                 self.seed)
+        nodes = iter_rank_nodes(
+            self.profile, rank=self.rank,
+            steps=self.steps, ops_per_step=self.ops_per_step, seed=self.seed,
+            scale_duration=self.scale_duration,
+            scale_comm_bytes=self.scale_comm_bytes,
+            straggler=self.straggler, jitter=self.jitter)
+
+        def windows() -> Iterator[Window]:
+            batch: List[ETNode] = []
+            for n in nodes:
+                batch.append(n)
+                if len(batch) >= self.window:
+                    yield batch
+                    batch = []
+            if batch:
+                yield batch
+
+        count = plan_node_count(self.profile, self.steps, self.ops_per_step)
+        return TraceStream(skeleton, windows(), window=self.window,
+                           node_count=count)

@@ -1,0 +1,106 @@
+"""Adversarial-graph robustness for the analysis layer.
+
+critical_path must reject cyclic traces with a clear ValueError (instead of
+recursing or hanging) and handle zero-duration nodes; exposed_comm is
+interval-based and must stay finite on cycles, zero durations, and non-finite
+timestamps.
+"""
+import math
+
+import pytest
+
+from repro.core.analysis import critical_path, exposed_comm
+from repro.core.schema import CollectiveType, ExecutionTrace, NodeType
+
+
+def _cycle_trace():
+    et = ExecutionTrace()
+    a = et.add_node(name="a", type=NodeType.COMP, duration_micros=10.0)
+    b = et.add_node(name="b", type=NodeType.COMP, duration_micros=10.0)
+    a.data_deps.append(b.id)
+    b.data_deps.append(a.id)
+    return et
+
+
+def _self_dep_trace():
+    et = ExecutionTrace()
+    a = et.add_node(name="a", type=NodeType.COMP, duration_micros=1.0)
+    a.ctrl_deps.append(a.id)
+    return et
+
+
+def test_critical_path_rejects_cycle_with_clear_error():
+    with pytest.raises(ValueError, match="acyclic"):
+        critical_path(_cycle_trace())
+
+
+def test_critical_path_rejects_self_dependency():
+    with pytest.raises(ValueError, match="acyclic"):
+        critical_path(_self_dep_trace())
+
+
+def test_critical_path_error_mentions_repair_path():
+    with pytest.raises(ValueError, match="convert"):
+        critical_path(_cycle_trace())
+
+
+def test_critical_path_zero_duration_nodes():
+    et = ExecutionTrace()
+    prev = None
+    for i in range(5):
+        n = et.add_node(name=f"z{i}", type=NodeType.COMP,
+                        duration_micros=0.0)
+        if prev is not None:
+            n.data_deps.append(prev)
+        prev = n.id
+    cp = critical_path(et)
+    assert cp.length_us == 0.0
+    assert cp.node_ids  # a path still exists, it just has zero length
+
+
+def test_critical_path_mixed_zero_and_positive():
+    et = ExecutionTrace()
+    a = et.add_node(name="a", type=NodeType.COMP, duration_micros=0.0)
+    b = et.add_node(name="b", type=NodeType.COMP, duration_micros=7.0)
+    b.data_deps.append(a.id)
+    c = et.add_node(name="c", type=NodeType.COMP, duration_micros=0.0)
+    c.data_deps.append(b.id)
+    cp = critical_path(et)
+    assert cp.length_us == pytest.approx(7.0)
+    assert b.id in cp.node_ids
+    assert cp.compute_us == pytest.approx(7.0)
+
+
+def test_exposed_comm_survives_cycles():
+    # interval-based: dependency edges (even cyclic) are irrelevant
+    et = _cycle_trace()
+    et.nodes[0].start_time_micros = 0.0
+    et.nodes[1].start_time_micros = 5.0
+    out = exposed_comm(et)
+    assert out["makespan_us"] == pytest.approx(15.0)
+    assert all(math.isfinite(v) for v in out.values())
+
+
+def test_exposed_comm_zero_duration_and_nonfinite():
+    et = ExecutionTrace()
+    et.add_node(name="z", type=NodeType.COMP, duration_micros=0.0)
+    n = et.add_node(name="nan", type=NodeType.COMP,
+                    start_time_micros=float("nan"), duration_micros=5.0)
+    assert n.id == 1
+    inf = et.add_node(name="inf", type=NodeType.COMM_COLL,
+                      comm_type=CollectiveType.ALL_REDUCE,
+                      start_time_micros=float("inf"), duration_micros=5.0)
+    assert inf.id == 2
+    ok = et.add_node(name="ok", type=NodeType.COMP,
+                     start_time_micros=1.0, duration_micros=2.0)
+    assert ok.id == 3
+    out = exposed_comm(et)
+    assert out["compute_us"] == pytest.approx(2.0)
+    assert out["comm_us"] == 0.0
+    assert all(math.isfinite(v) for v in out.values())
+
+
+def test_exposed_comm_empty_trace():
+    out = exposed_comm(ExecutionTrace())
+    assert out["makespan_us"] == 0.0
+    assert all(math.isfinite(v) for v in out.values())

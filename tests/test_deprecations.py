@@ -1,0 +1,49 @@
+"""Deprecation hygiene: the PR-1 shims must keep warning, and the canonical
+replacements must exist where the docs point."""
+import warnings
+
+import pytest
+
+import repro.core as core
+from repro.core.generator import compute_chain
+
+
+def _tiny():
+    return compute_chain(n=3)
+
+
+def test_core_exports_convert_shim_warns():
+    with pytest.warns(DeprecationWarning, match="convert_trace"):
+        out, report = core.convert(_tiny())
+    assert len(out) == 3
+
+
+def test_core_exports_link_shim_warns():
+    host = _tiny()
+    dev = _tiny()
+    with pytest.warns(DeprecationWarning, match="link_traces"):
+        core.link(host, dev)
+
+
+def test_canonical_entry_points_exist_and_do_not_warn():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        out, _ = core.convert_trace(_tiny())
+        core.link_traces(_tiny(), _tiny())
+    assert len(out) == 3
+
+
+def test_shims_are_the_linker_converter_functions():
+    # core/__init__ re-exports the shims, not copies — one warning site
+    from repro.core.converter import convert as conv_fn
+    from repro.core.linker import link as link_fn
+    assert core.convert is conv_fn
+    assert core.link is link_fn
+
+
+def test_readme_points_at_canonical_names():
+    import os
+    readme = os.path.join(os.path.dirname(__file__), "..", "README.md")
+    text = open(readme, encoding="utf-8").read()
+    assert "link_traces" in text
+    assert "convert_trace" in text

@@ -1,0 +1,381 @@
+"""repro.synth: profile fidelity, determinism, rank coherence, streaming.
+
+The closed-loop acceptance test lives here: real ET -> WorkloadProfile ->
+synthesize 8 coherent ranks streamed through CHKB v4 -> simulate -> summary
+statistics within 10% of the source profile.
+"""
+import json
+import os
+import tracemalloc
+
+import pytest
+
+from repro.core import analysis
+from repro.core.generator import (dp_allreduce_pattern, generate_ranks,
+                                  moe_mixed_collectives)
+from repro.core.schema import CollectiveType, ExecutionTrace, NodeType
+from repro.core.serialization import ChkbReader, load, save
+from repro.pipeline import Pipeline, available_stages
+from repro.sim import Fabric, Simulator
+from repro.synth import (SCENARIOS, Dist, ProfileBuilder, SplitMix64,
+                         WorkloadProfile, derive_seed, get_scenario,
+                         iter_rank_nodes, profile_chkb, profile_traces,
+                         synthesize, synthesize_rank)
+from repro.synth.profile import COMM_CATEGORIES
+
+
+def _dp_traces(ranks=8):
+    return generate_ranks("dp_allreduce", ranks=ranks, steps=4, layers=8)
+
+
+def _moe_traces(ranks=8, iters=24):
+    return generate_ranks("moe_mixed", ranks=ranks, iters=iters)
+
+
+# ------------------------------------------------------------------ sampler
+def test_splitmix_deterministic_and_stream_independent():
+    a = SplitMix64(derive_seed(7, "comm", 3))
+    b = SplitMix64(derive_seed(7, "comm", 3))
+    c = SplitMix64(derive_seed(7, "comm", 4))
+    seq_a = [a.next_u64() for _ in range(8)]
+    seq_b = [b.next_u64() for _ in range(8)]
+    seq_c = [c.next_u64() for _ in range(8)]
+    assert seq_a == seq_b
+    assert seq_a != seq_c
+    assert all(0.0 <= SplitMix64(i).uniform() < 1.0 for i in range(100))
+
+
+def test_dist_discrete_roundtrip_and_mean():
+    d = Dist.from_counter({64.0: 3, 128.0: 1})
+    assert d.kind == "discrete"
+    assert d.mean() == pytest.approx(80.0)
+    d2 = Dist.from_dict(d.to_dict())
+    rng = SplitMix64(1)
+    samples = [d2.sample(rng) for _ in range(400)]
+    assert set(samples) == {64.0, 128.0}
+    # inverse-CDF over counts: ~3:1 ratio
+    assert 0.6 < samples.count(64.0) / len(samples) < 0.9
+
+
+def test_dist_binned_preserves_mean():
+    counter = {float(i): 1 for i in range(1000)}     # >64 distinct -> binned
+    d = Dist.from_counter(counter)
+    assert d.kind == "binned"
+    assert d.mean() == pytest.approx(499.5)
+    rng = SplitMix64(9)
+    est = sum(d.sample(rng) for _ in range(4000)) / 4000
+    assert est == pytest.approx(499.5, rel=0.05)
+
+
+# ------------------------------------------------------------------ profile
+def test_profile_columnar_equals_node_path(tmp_path):
+    et = moe_mixed_collectives(iters=30, ranks=8)
+    p4 = str(tmp_path / "t4.chkb")
+    save(et, p4, version=4)
+    via_columns = profile_chkb([p4])
+    via_nodes = profile_traces([et])
+    a = json.loads(via_columns.to_json_bytes())
+    b = json.loads(via_nodes.to_json_bytes())
+    a["source"] = b["source"] = None          # file list differs, rest must not
+    assert a == b
+
+
+def test_profile_json_roundtrip_and_fingerprint(tmp_path):
+    prof = profile_traces(_dp_traces())
+    path = str(tmp_path / "p.json")
+    prof.save(path)
+    back = WorkloadProfile.load(path)
+    assert back.to_json_bytes() == prof.to_json_bytes()
+    assert back.fingerprint() == prof.fingerprint()
+    assert back.symmetric
+    assert set(back.rank_fingerprints) == {str(r) for r in range(8)}
+
+
+def test_profile_determinism_byte_identical():
+    a = profile_traces(_dp_traces()).to_json_bytes()
+    b = profile_traces(_dp_traces()).to_json_bytes()
+    assert a == b
+
+
+def test_profile_fingerprint_location_independent(tmp_path):
+    """Same trace bytes, different directory -> identical profile bytes,
+    fingerprint, and synthesized CHKB (provenance must not leak into the
+    determinism guarantee)."""
+    et = dp_allreduce_pattern(steps=2, layers=4, ranks=4)
+    profs = []
+    for sub in ("a", "b"):
+        d = tmp_path / sub
+        d.mkdir()
+        save(et, str(d / "t.chkb"), version=4)
+        profs.append(profile_chkb([str(d / "t.chkb")]))
+    pa, pb = profs
+    assert pa.fingerprint() == pb.fingerprint()
+    assert pa.to_json_bytes() == pb.to_json_bytes()
+    ma = synthesize(pa, str(tmp_path / "sa"), world_size=2, steps=2,
+                    ops_per_step=8, seed=0)
+    mb = synthesize(pb, str(tmp_path / "sb"), world_size=2, steps=2,
+                    ops_per_step=8, seed=0)
+    for fa, fb in zip(ma["paths"], mb["paths"]):
+        assert open(fa, "rb").read() == open(fb, "rb").read()
+
+
+def test_profile_obfuscation_preserves_structure():
+    prof = profile_traces(_dp_traces())
+    obf = prof.obfuscated_copy()
+    assert obf.obfuscated
+    assert obf.category_mix == prof.category_mix
+    assert obf.fan_in.to_dict() == prof.fan_in.to_dict()
+    for cat in prof.name_pools:
+        originals = {t for t, _ in prof.name_pools[cat]}
+        hashed = {t for t, _ in obf.name_pools[cat]}
+        assert not originals & hashed          # no source name survives
+        assert all(t.startswith("x") and t.endswith("*") for t in hashed)
+    assert obf.to_dict()["source"]["files"] == []
+
+
+def test_profile_asymmetric_ranks_detected():
+    t0 = dp_allreduce_pattern(steps=2, layers=4, ranks=2, rank=0)
+    t1 = dp_allreduce_pattern(steps=4, layers=4, ranks=2, rank=1)
+    prof = profile_traces([t0, t1])
+    assert not prof.symmetric
+
+
+# ---------------------------------------------------------------- generator
+def test_generate_ranks_coherent_and_zero_orphans():
+    traces = _moe_traces(ranks=8, iters=10)
+    res = Simulator(traces, Fabric.build("switch", 8)).run()
+    comm_per_rank = [len(t.comm_nodes()) for t in traces]
+    assert len(set(comm_per_rank)) == 1
+    # zero orphans: every collective across every rank matched into a flow
+    assert len(res.flows) == comm_per_rank[0]
+    assert res.makespan_s > 0
+
+
+def test_generate_ranks_rejects_divergent_pattern():
+    def divergent(rank=0, ranks=4):
+        et = ExecutionTrace(rank=rank, world_size=ranks)
+        pg = et.add_process_group(list(range(ranks)), tag="x")
+        et.add_node(name="ar", type=NodeType.COMM_COLL,
+                    comm_type=CollectiveType.ALL_REDUCE, comm_group=pg.id,
+                    comm_bytes=1024 * (rank + 1))       # rank-dependent!
+        return et
+
+    with pytest.raises(ValueError, match="rank-coherent"):
+        generate_ranks(divergent, ranks=4)
+
+
+def test_generate_ranks_no_rank_param_pattern():
+    traces = generate_ranks("compute_chain", ranks=3, n=5)
+    assert [t.rank for t in traces] == [0, 1, 2]
+    assert all(t.world_size == 3 for t in traces)
+
+
+# ---------------------------------------------------------------- synthesis
+def test_synth_nodes_are_canonical_dag():
+    prof = profile_traces(_dp_traces())
+    last = -1
+    for node in iter_rank_nodes(prof, rank=0, steps=4,
+                                ops_per_step=32, seed=5):
+        assert node.id == last + 1
+        last = node.id
+        for dep, _ in node.all_deps():
+            assert dep < node.id           # only backwards edges: acyclic
+    assert last >= 0
+
+
+def test_synth_deterministic_byte_identical(tmp_path):
+    prof = profile_traces(_dp_traces())
+    kw = dict(world_size=4, steps=6, ops_per_step=24, seed=11)
+    m1 = synthesize(prof, str(tmp_path / "a"), **kw)
+    m2 = synthesize(prof, str(tmp_path / "b"), **kw)
+    for pa, pb in zip(m1["paths"], m2["paths"]):
+        with open(pa, "rb") as fa, open(pb, "rb") as fb:
+            assert fa.read() == fb.read()
+    m3 = synthesize(prof, str(tmp_path / "c"), world_size=4, steps=6,
+                    ops_per_step=24, seed=12)
+    with open(m1["paths"][0], "rb") as fa, open(m3["paths"][0], "rb") as fb:
+        assert fa.read() != fb.read()      # the seed actually matters
+
+
+def test_synth_multirank_rendezvous_zero_orphans(tmp_path):
+    prof = profile_traces(_moe_traces())
+    man = synthesize(prof, str(tmp_path / "s"), world_size=8, steps=6,
+                     ops_per_step=32, seed=2,
+                     stragglers={1: 2.0}, jitter=0.25)
+    traces = [load(p) for p in man["paths"]]
+    comm_counts = [len(t.comm_nodes()) for t in traces]
+    assert len(set(comm_counts)) == 1
+    res = Simulator(traces, Fabric.build("switch", 8)).run()
+    assert len(res.flows) == comm_counts[0]   # every collective matched
+    assert res.makespan_s > 0
+
+
+def test_synth_scale_knobs(tmp_path):
+    prof = profile_traces(_dp_traces())
+    base = synthesize(prof, str(tmp_path / "base"), world_size=2, steps=4,
+                      ops_per_step=32, seed=3)
+    scaled = synthesize(prof, str(tmp_path / "scaled"), world_size=2, steps=4,
+                        ops_per_step=32, seed=3, scale_comm_bytes=2.0,
+                        scale_duration=3.0)
+    sb = analysis.columnar_summary(base["paths"][0])
+    ss = analysis.columnar_summary(scaled["paths"][0])
+    assert ss["total_bytes"] == pytest.approx(2 * sb["total_bytes"])
+    assert ss["sum_duration_us"] == pytest.approx(3 * sb["sum_duration_us"])
+    # world_size scale-up: the process group covers the synthetic world
+    big = synthesize(prof, str(tmp_path / "big"), world_size=64, steps=2,
+                     ops_per_step=16, seed=3, ranks=[0, 63])
+    t = load(big["paths"][1])
+    assert t.rank == 63 and t.world_size == 64
+    assert len(t.process_groups[0].ranks) == 64
+
+
+def test_synth_bounded_memory_streaming(tmp_path):
+    """A 100k-node rank streams through ChkbWriter without ever holding the
+    node list: tracemalloc peak stays far below the materialized size."""
+    prof = profile_traces(_dp_traces())
+    path = str(tmp_path / "big.chkb")
+    tracemalloc.start()
+    row = synthesize_rank(prof, path, rank=0, world_size=8,
+                          steps=250, ops_per_step=400, seed=1)
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    assert row["nodes"] == 100_000
+    with ChkbReader(path) as r:
+        assert r.node_count == 100_000
+        assert r.version == 4
+    # materializing 100k ETNodes costs >40MB; the stream stays O(block)
+    assert peak < 24 * 1024 * 1024
+
+
+# ------------------------------------------------------------- closed loop
+def test_closed_loop_fidelity_within_10pct(tmp_path):
+    """ISSUE acceptance: profile a source ET set, synthesize >=8 coherent
+    ranks via streamed CHKB v4, simulate them, and match the source profile's
+    category mix and per-collective comm bytes within 10%."""
+    source = _moe_traces(ranks=8, iters=40)
+    prof = profile_traces(source)
+    steps = 10
+    ops = max(4, round(prof.nodes_per_rank / steps))
+    man = synthesize(prof, str(tmp_path / "loop"), world_size=8, steps=steps,
+                     ops_per_step=ops, seed=0)
+    assert len(man["paths"]) == 8
+
+    # --- category mix within 10% (fractions of the whole)
+    src_mix = prof.category_mix
+    src_total = sum(src_mix.values())
+    synth_counts = {}
+    synth_total = 0
+    for p in man["paths"]:
+        t = load(p)
+        for cat, cnt in analysis.op_counts(t).items():
+            synth_counts[cat] = synth_counts.get(cat, 0) + cnt
+            synth_total += cnt
+    for cat, cnt in src_mix.items():
+        src_frac = cnt / src_total
+        syn_frac = synth_counts.get(cat, 0) / synth_total
+        assert syn_frac == pytest.approx(src_frac, abs=0.1 * max(src_frac, 0.05)), cat
+
+    # --- per-collective comm bytes per node within 10% (columnar summary)
+    src_comm = {}
+    for t in source:
+        for k, row in analysis.comm_summary(t).items():
+            agg = src_comm.setdefault(k, {"count": 0, "bytes": 0.0})
+            agg["count"] += row["count"]
+            agg["bytes"] += row["bytes"]
+    syn_comm = {}
+    for p in man["paths"]:
+        for k, row in analysis.columnar_summary(p)["comm_summary"].items():
+            agg = syn_comm.setdefault(k, {"count": 0, "bytes": 0.0})
+            agg["count"] += row["count"]
+            agg["bytes"] += row["bytes"]
+    assert set(syn_comm) == set(src_comm)
+    for k in src_comm:
+        src_mean = src_comm[k]["bytes"] / src_comm[k]["count"]
+        syn_mean = syn_comm[k]["bytes"] / syn_comm[k]["count"]
+        assert syn_mean == pytest.approx(src_mean, rel=0.1), k
+
+    # --- and the synthesized fleet actually simulates, with zero orphans
+    traces = [load(p) for p in man["paths"]]
+    res = Simulator(traces, Fabric.build("switch", 8)).run()
+    assert len(res.flows) == len(traces[0].comm_nodes())
+    assert res.makespan_s > 0
+
+
+# ---------------------------------------------------------------- scenarios
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_scenario_profiles_synthesize_and_simulate(name, tmp_path):
+    sc = get_scenario(name)
+    prof = sc.profile()
+    assert prof.fingerprint() == sc.profile().fingerprint()  # deterministic
+    knobs = dict(sc.knobs)
+    steps = min(int(knobs.pop("steps", 6)), 6)
+    man = synthesize(prof, str(tmp_path / name), world_size=4, steps=steps,
+                     ops_per_step=16, seed=1, **knobs)
+    traces = [load(p) for p in man["paths"]]
+    res = Simulator(traces, Fabric.build("switch", 4)).run()
+    assert len(res.flows) == len(traces[0].comm_nodes())
+
+
+def test_unknown_scenario_raises():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        get_scenario("nope")
+
+
+# ----------------------------------------------------------- registry / CLI
+def test_synth_stages_registered():
+    stages = available_stages()
+    assert "synth.generate" in stages["source"]
+    assert "synth.profile" in stages["sink"]
+    assert "synth.profile" in stages["pass"]
+
+
+def test_pipeline_synth_generate_source_streams(tmp_path):
+    out = str(tmp_path / "gen.chkb")
+    prof_path = str(tmp_path / "p.json")
+    profile_traces(_dp_traces()).save(prof_path)
+    path = (Pipeline.from_source("synth.generate", profile=prof_path,
+                                 rank=0, world_size=4, steps=4,
+                                 ops_per_step=16, seed=0, window=32)
+            .sink("chkb", out).run())
+    summary = analysis.columnar_summary(path)
+    assert summary["nodes"] == 64
+    assert summary["comm_summary"]          # collectives made it through
+
+
+def test_pipeline_synth_profile_pass_and_sink(tmp_path):
+    prof_path = str(tmp_path / "streamed.json")
+    et = dp_allreduce_pattern(steps=2, layers=4, ranks=4)
+    pipe = (Pipeline.from_source("trace", et)
+            .then("synth.profile", path=prof_path)
+            .sink("analyze"))
+    stats = pipe.run()
+    assert stats["nodes"] == len(et)
+    streamed = WorkloadProfile.load(prof_path)
+    direct = profile_traces([et])
+    assert streamed.category_mix == direct.category_mix
+
+    sink_prof = (Pipeline.from_source("trace", et)
+                 .sink("synth.profile").run())
+    assert sink_prof.category_mix == direct.category_mix
+
+
+def test_profile_builder_multiple_files_one_profile(tmp_path):
+    paths = []
+    for t in _dp_traces(ranks=4)[:4]:
+        p = str(tmp_path / f"r{t.rank}.chkb")
+        save(t, p, version=4)
+        paths.append(p)
+    b = ProfileBuilder()
+    for p in paths:
+        b.add_chkb(p)
+    prof = b.finish()
+    assert len(prof.rank_fingerprints) == 4
+    assert prof.symmetric
+    # basenames only: provenance must not leak directory structure
+    assert prof.to_dict()["source"]["files"] == [os.path.basename(p)
+                                                 for p in paths]
+
+
+def test_comm_categories_constant():
+    assert "AllReduce" in COMM_CATEGORIES
+    assert "GeMM" not in COMM_CATEGORIES
