@@ -40,7 +40,8 @@ def main(argv=None) -> int:
     doc = run_suite(scale="smoke" if ns.smoke else "full",
                     baseline=ns.baseline, names=ns.names or None)
     path = write_bench(doc, ns.output)
-    for name in ("perf_feeder", "perf_sim", "perf_chkb", "perf_synth"):
+    for name in ("perf_feeder", "perf_sim", "perf_netmodel", "perf_chkb",
+                 "perf_synth"):
         if name in doc:
             print(f"[ok] {name:12s} ({doc[name]['bench_wall_s']}s)")
     sims = doc.get("perf_sim", {}).get("scenarios", [])
@@ -49,6 +50,10 @@ def main(argv=None) -> int:
             print(f"     sim {row['total_nodes']} nodes x {row['ranks']} "
                   f"ranks: {row['wall_speedup']}x wall, "
                   f"{row['events_per_sec_speedup']}x events/sec vs reference")
+    for row in doc.get("perf_netmodel", {}).get("scenarios", []):
+        print(f"     netmodel {row['total_nodes']} nodes x {row['ranks']} "
+              f"ranks: link fidelity {row['wall_ratio']}x analytic wall "
+              f"({row['time_cache']['hits']} cache hits)")
     chkb = doc.get("perf_chkb", {})
     if chkb:
         print(f"     chkb: block decode {chkb['block_decode_speedup']}x, "

@@ -1,0 +1,58 @@
+"""Fig-12-style co-design sweep on the link-fidelity network model: the
+best topology depends on the workload's collective mix.
+
+An allreduce-heavy DP workload favors a ring (few fat neighbor flows, every
+link busy), while an a2a-heavy MoE dispatch workload favors switch/clos
+fabrics (point-to-point delivery instead of multi-hop ring forwarding).
+With `--fidelity link` this re-ranking *emerges* from routing the phase
+flows over each `InfraGraph` — no per-topology constants are involved.
+
+  PYTHONPATH=src python examples/topology_sweep.py
+
+Shell equivalent for one cell:
+  python -m repro sim trace.chkb --topology ring --ranks 8 --fidelity link
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.pipeline import Pipeline
+
+RANKS = 8
+TOPOLOGIES = ("ring", "switch", "clos", "fully_connected", "tpu_pod")
+WORKLOADS = {
+    "allreduce-heavy (DP grads)": dict(pattern="moe_mixed", mode="allreduce"),
+    "a2a-heavy (MoE dispatch)": dict(pattern="moe_mixed", mode="alltoall"),
+}
+
+
+def sweep(fidelity: str):
+    print(f"\n== fidelity={fidelity} ==")
+    print(f"{'workload':28s}" + "".join(f"{t:>17s}" for t in TOPOLOGIES)
+          + "   best")
+    for label, gen_kw in WORKLOADS.items():
+        times = {}
+        for topo in TOPOLOGIES:
+            res = (Pipeline.from_source("generate", iters=4, ranks=RANKS,
+                                        **gen_kw)
+                   .sink("sim", topology=topo, ranks=RANKS, fidelity=fidelity)
+                   .run())
+            times[topo] = res.makespan_s
+        best = min(times, key=times.get)
+        print(f"{label:28s}"
+              + "".join(f"{times[t] * 1e3:15.2f}ms" for t in TOPOLOGIES)
+              + f"   {best}")
+
+
+def main():
+    for fidelity in ("analytic", "link"):
+        sweep(fidelity)
+    print("\nlink mode: ring wins the allreduce-heavy column while the "
+          "point-to-point fabrics (switch/clos/fully-connected) beat it on "
+          "the a2a-heavy column — the paper's Fig-12 co-design re-ranking, "
+          "emergent from routed per-link sharing.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+#!/usr/bin/env python
+"""CI perf gate: fail when the hot paths regress vs the committed baseline.
+
+Runs ``python -m repro bench perf_feeder perf_sim`` (fresh numbers, no
+reference-engine baseline pass) and compares events/sec / nodes/sec against
+the committed ``BENCH_perf.json``.  Any row more than ``--threshold``
+(default 20%) below its baseline counterpart fails the gate; only rows
+present in both documents are compared, so a ``--scale smoke`` run gates
+against the matching subset of the full-scale baseline.
+
+  PYTHONPATH=src python scripts/perf_gate.py --scale smoke
+  PYTHONPATH=src python scripts/perf_gate.py --threshold 0.3 --baseline BENCH_perf.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(_REPO_ROOT, "src"))
+
+GATED = ("perf_feeder", "perf_sim")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="perf_gate",
+                                 description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline",
+                    default=os.path.join(_REPO_ROOT, "BENCH_perf.json"),
+                    help="committed baseline document")
+    ap.add_argument("--threshold", type=float,
+                    default=float(os.environ.get("PERF_GATE_THRESHOLD", 0.2)),
+                    help="max allowed fractional regression (default 0.2)")
+    ap.add_argument("--scale", default="smoke", choices=("smoke", "full"))
+    ap.add_argument("--current", help="pre-computed bench JSON to gate "
+                    "instead of running `python -m repro bench`")
+    ns = ap.parse_args(argv)
+
+    with open(ns.baseline) as fh:
+        baseline = json.load(fh)
+
+    if ns.current:
+        with open(ns.current) as fh:
+            current = json.load(fh)
+    else:
+        with tempfile.TemporaryDirectory() as tmp:
+            out = os.path.join(tmp, "bench.json")
+            env = dict(os.environ)
+            env["PYTHONPATH"] = (os.path.join(_REPO_ROOT, "src")
+                                 + os.pathsep + env.get("PYTHONPATH", ""))
+            subprocess.run(
+                [sys.executable, "-m", "repro", "bench", *GATED,
+                 "--scale", ns.scale, "--no-baseline", "-o", out],
+                check=True, env=env, cwd=_REPO_ROOT)
+            with open(out) as fh:
+                current = json.load(fh)
+
+    from repro.perf import gate_regressions
+    failures, report = gate_regressions(current, baseline, ns.threshold)
+    for line in report:
+        marker = "FAIL" if line in failures else " ok "
+        print(f"[{marker}] {line}")
+    if not report:
+        # an empty intersection means the gate is silently disabled (grid or
+        # baseline drift) — that must be loud, not green
+        print("perf gate: no comparable rows between current run and "
+              f"baseline {ns.baseline}; regenerate the baseline "
+              "(python -m benchmarks.perf.run) or fix the grid",
+              file=sys.stderr)
+        return 1
+    if failures:
+        print(f"perf gate: {len(failures)} row(s) regressed more than "
+              f"{ns.threshold:.0%} vs {ns.baseline}", file=sys.stderr)
+        return 1
+    print(f"perf gate: OK ({len(report)} rows within {ns.threshold:.0%} "
+          "of baseline)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

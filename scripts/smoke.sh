@@ -23,8 +23,12 @@ grep -q '"nodes"' "$tmp/stats.json"
 echo "== feed =="
 python -m repro feed "$tmp/canon.chkb" --policy comm_priority | grep -q nodes_fed
 
-echo "== sim =="
+echo "== sim (analytic + link fidelity) =="
 python -m repro sim "$tmp/canon.chkb" --topology ring --ranks 4 | grep -q makespan
+python -m repro sim "$tmp/canon.chkb" --topology ring --ranks 4 \
+  --fidelity link -o "$tmp/sim_link.json" > "$tmp/sim_link.out"
+grep -q makespan "$tmp/sim_link.out"
+grep -q link_stats "$tmp/sim_link.json"
 
 echo "== replay (dry-run) =="
 python -m repro replay "$tmp/canon.chkb" --mode compute --limit 8

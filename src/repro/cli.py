@@ -118,14 +118,22 @@ def _cmd_feed(ns: argparse.Namespace) -> int:
 def _cmd_sim(ns: argparse.Namespace) -> int:
     res = (Pipeline.from_source("load", ns.input, window=ns.window)
            .sink("sim", topology=ns.topology, ranks=ns.ranks,
-                 congestion=not ns.no_congestion).run())
+                 congestion=not ns.no_congestion,
+                 fidelity=ns.fidelity).run())
     print(res.summary())
+    if ns.verbose and res.link_stats:
+        print(f"  [link] {json.dumps(res.link_stats, default=str)}",
+              file=sys.stderr)
     if ns.output:
-        _emit({"makespan_s": res.makespan_s,
+        doc = {"makespan_s": res.makespan_s,
                "compute_busy_s": res.compute_busy_s,
                "exposed_comm_s": res.exposed_comm_s,
                "collective_time_s": res.collective_time_s,
-               "collective_bytes": res.collective_bytes}, ns.output)
+               "collective_bytes": res.collective_bytes,
+               "fidelity": ns.fidelity}
+        if res.link_stats:
+            doc["link_stats"] = res.link_stats
+        _emit(doc, ns.output)
     return 0
 
 
@@ -214,6 +222,7 @@ def _cmd_synth(ns: argparse.Namespace) -> int:
     if ns.sim:
         res = (Pipeline.from_source("load", man["paths"][0], window=ns.window)
                .sink("sim", topology=ns.topology, ranks=len(man["paths"]),
+                     fidelity=ns.fidelity,
                      extra_traces=man["paths"][1:]).run())
         print(res.summary())
     return 0
@@ -288,6 +297,10 @@ def build_parser() -> argparse.ArgumentParser:
     common(p)
     p.add_argument("--topology", default="switch")
     p.add_argument("--ranks", type=int, default=8)
+    p.add_argument("--fidelity", default="analytic",
+                   choices=("analytic", "link"),
+                   help="network model: closed-form alpha-beta (analytic) "
+                        "or per-link routed flows (link)")
     p.add_argument("--no-congestion", action="store_true")
     p.add_argument("-o", "--output")
     p.set_defaults(fn=_cmd_sim)
@@ -342,6 +355,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--sim", action="store_true",
                    help="simulate the synthesized ranks and print a summary")
     p.add_argument("--topology", default="switch")
+    p.add_argument("--fidelity", default="analytic",
+                   choices=("analytic", "link"),
+                   help="network model for --sim (analytic | link)")
     p.add_argument("--manifest", help="write the synthesis manifest JSON here")
     p.add_argument("--window", type=int, default=1024)
     p.set_defaults(fn=_cmd_synth)

@@ -9,8 +9,9 @@ infrastructure-aware performance projection and topology comparison (Fig 12).
 """
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
 
 from ._compat import json_dumps, json_loads
 
@@ -57,9 +58,12 @@ class InfraGraph:
         return len(self.npus)
 
     def adjacency(self) -> Dict[int, List[Link]]:
+        """Outgoing links per node — includes non-NPU nodes (switches,
+        leaves, spines use negative ids) so routing can traverse them."""
         adj: Dict[int, List[Link]] = {i: [] for i in self.npus}
         for l in self.links:
-            adj[l.src].append(l)
+            adj.setdefault(l.src, []).append(l)
+            adj.setdefault(l.dst, [])
         return adj
 
     def link_between(self, a: int, b: int) -> Optional[Link]:
@@ -67,6 +71,23 @@ class InfraGraph:
             if l.src == a and l.dst == b:
                 return l
         return None
+
+    def routing(self) -> "RoutingTable":
+        """Shortest-path routing table over this graph, cached per fabric.
+
+        The table is computed lazily (per source NPU, on first use) and
+        memoized on the graph instance; mutating ``links`` afterwards —
+        including in-place bandwidth/latency edits for degraded-link
+        what-ifs — invalidates the cache on the next call.
+        """
+        sig = hash(tuple((l.src, l.dst, l.bandwidth, l.latency_s)
+                         for l in self.links))
+        cached = getattr(self, "_routing_cache", None)
+        if cached is not None and cached[0] == sig:
+            return cached[1]
+        table = RoutingTable(self)
+        self._routing_cache = (sig, table)
+        return table
 
     def to_json(self) -> bytes:
         return json_dumps({
@@ -84,6 +105,116 @@ class InfraGraph:
         for ld in d.get("links", []):
             g.links.append(Link(**ld))
         return g
+
+
+class RoutingTable:
+    """Precomputed shortest-path routes between NPUs (paper §6.2.2).
+
+    Paths minimize (total latency, hop count) via Dijkstra over the directed
+    link set and are expressed as tuples of *link indices* into
+    ``graph.links``, so per-link bandwidth/latency lookups are O(1) array
+    reads.  Per-source runs happen lazily on first demand and are memoized —
+    a 256-chip torus only ever pays for the sources it actually routes from.
+    """
+
+    def __init__(self, graph: InfraGraph) -> None:
+        self.graph = graph
+        self.link_bw: Tuple[float, ...] = tuple(
+            l.bandwidth for l in graph.links)
+        self.link_latency: Tuple[float, ...] = tuple(
+            l.latency_s for l in graph.links)
+        self._adj: Dict[int, List[Tuple[int, Link]]] = {}
+        for idx, l in enumerate(graph.links):
+            self._adj.setdefault(l.src, []).append((idx, l))
+        self._paths: Dict[int, Dict[int, Tuple[int, ...]]] = {}
+
+    def _dijkstra(self, src: int) -> Dict[int, Tuple[int, ...]]:
+        dist: Dict[int, Tuple[float, int]] = {src: (0.0, 0)}
+        prev: Dict[int, Tuple[int, int]] = {}       # node -> (prev node, link)
+        pq: List[Tuple[float, int, int]] = [(0.0, 0, src)]
+        while pq:
+            d, hops, u = heapq.heappop(pq)
+            if (d, hops) > dist.get(u, (float("inf"), 0)):
+                continue
+            for idx, l in self._adj.get(u, ()):
+                nd, nh = d + l.latency_s, hops + 1
+                if (nd, nh) < dist.get(l.dst, (float("inf"), 1 << 30)):
+                    dist[l.dst] = (nd, nh)
+                    prev[l.dst] = (u, idx)
+                    heapq.heappush(pq, (nd, nh, l.dst))
+        paths: Dict[int, Tuple[int, ...]] = {}
+        for dst in self.graph.npus:
+            if dst == src or dst not in dist:
+                continue
+            hops: List[int] = []
+            node = dst
+            while node != src:
+                node, idx = prev[node]
+                hops.append(idx)
+            paths[dst] = tuple(reversed(hops))
+        return paths
+
+    def path(self, src: int, dst: int) -> Tuple[int, ...]:
+        """Link-index route src -> dst; empty tuple when src == dst."""
+        if src == dst:
+            return ()
+        by_dst = self._paths.get(src)
+        if by_dst is None:
+            by_dst = self._paths[src] = self._dijkstra(src)
+        try:
+            return by_dst[dst]
+        except KeyError:
+            raise ValueError(
+                f"no route {src}->{dst} in graph {self.graph.name!r}") from None
+
+    def path_latency(self, path: Iterable[int]) -> float:
+        return sum(self.link_latency[i] for i in path)
+
+    def min_transfer_time(self, src: int, dst: int, nbytes: float) -> float:
+        """Store-and-forward lower bound of the routed path: every hop is
+        traversed at full link bandwidth with no contention."""
+        path = self.path(src, dst)
+        return sum(self.link_latency[i] + nbytes / self.link_bw[i]
+                   for i in path)
+
+
+class LinkLoad:
+    """Per-link byte accumulator: the graph-level utilization view (Fig 13).
+
+    ``add(path, nbytes)`` charges every link on a routed path;
+    ``utilization(makespan)`` converts to busy fractions given the observed
+    wall time, so the busiest links (clos uplinks, torus crossings) surface
+    without any topology-specific code.
+    """
+
+    def __init__(self, routes: RoutingTable) -> None:
+        self.routes = routes
+        self.bytes_by_link: Dict[int, float] = {}
+
+    def add(self, path: Iterable[int], nbytes: float) -> None:
+        if nbytes <= 0:
+            return
+        for idx in path:
+            self.bytes_by_link[idx] = self.bytes_by_link.get(idx, 0.0) + nbytes
+
+    def utilization(self, wall_s: float) -> Dict[int, float]:
+        if wall_s <= 0:
+            return {i: 0.0 for i in self.bytes_by_link}
+        return {i: b / self.routes.link_bw[i] / wall_s
+                for i, b in self.bytes_by_link.items()}
+
+    def top(self, k: int = 8, wall_s: float = 0.0) -> List[Dict[str, float]]:
+        util = self.utilization(wall_s) if wall_s > 0 else {}
+        rows = []
+        for idx, b in sorted(self.bytes_by_link.items(),
+                             key=lambda kv: -kv[1])[:k]:
+            link = self.routes.graph.links[idx]
+            row = {"src": link.src, "dst": link.dst, "name": link.name,
+                   "bytes": b}
+            if util:
+                row["busy_frac"] = round(util[idx], 4)
+            rows.append(row)
+        return rows
 
 
 def _mk_npus(n: int, **kw) -> Dict[int, NpuSpec]:

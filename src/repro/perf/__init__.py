@@ -1,18 +1,23 @@
 """Performance benchmark suite (kind="benchmark" registry stages).
 
 Importing this package registers ``perf_feeder`` / ``perf_sim`` /
-``perf_chkb`` / ``perf_synth`` in the pipeline stage registry so the CLI (``python -m repro
-bench``) and the ``benchmarks/perf`` driver dispatch them by name, the same
-way ``benchmarks/run.py`` dispatches the paper-figure benchmarks.
+``perf_netmodel`` / ``perf_chkb`` / ``perf_synth`` in the pipeline stage
+registry so the CLI (``python -m repro bench``) and the ``benchmarks/perf``
+driver dispatch them by name, the same way ``benchmarks/run.py`` dispatches
+the paper-figure benchmarks.  ``gate_regressions`` backs the CI perf gate
+(``scripts/perf_gate.py``): fresh numbers vs the committed
+``BENCH_perf.json`` baseline.
 """
 from __future__ import annotations
 
 from ..pipeline.registry import register_stage
-from .suite import (BENCHMARKS, SCALES, perf_chkb, perf_feeder, perf_sim,
-                    perf_synth, run_suite, write_bench)
+from .suite import (BENCHMARKS, SCALES, gate_regressions, perf_chkb,
+                    perf_feeder, perf_netmodel, perf_sim, perf_synth,
+                    run_suite, write_bench)
 
 for _name, _fn in BENCHMARKS.items():
     register_stage(_name, kind="benchmark", overwrite=True)(_fn)
 
-__all__ = ["BENCHMARKS", "SCALES", "perf_feeder", "perf_sim", "perf_chkb",
-           "perf_synth", "run_suite", "write_bench"]
+__all__ = ["BENCHMARKS", "SCALES", "gate_regressions", "perf_feeder",
+           "perf_sim", "perf_netmodel", "perf_chkb", "perf_synth",
+           "run_suite", "write_bench"]

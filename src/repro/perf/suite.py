@@ -15,6 +15,10 @@ Three benchmarks, registered in the stage registry under kind="benchmark"
   v3 row blocks vs v4 columnar blocks, including the column-level decode
   path (``NodeColumns`` — no ETNode materialization) and the real columnar
   consumer (:func:`repro.core.analysis.columnar_summary`).
+* ``perf_netmodel`` — link-fidelity network model vs analytic: simulator
+  wall time in both modes on the same mixed workload (the routed mode must
+  stay within 2x of analytic at 100k-node x 8-rank scale), routing-table
+  build rate, and the model's memoization hit rate.
 * ``perf_synth``  — statistical-synthesis throughput (``repro.synth``):
   profile-fit rate over the columnar path, streaming multi-rank generation
   into CHKB v4 (the ≥100k nodes/sec floor; full scale synthesizes a ≥1M-node
@@ -51,6 +55,8 @@ _SCALE = {
         "sim_baseline": [(1_000, 8)],
         "chkb_nodes": 10_000,
         "chkb_repeat": 3,
+        "netmodel_grid": [(1_000, 8)],
+        "netmodel_route_n": 64,
         # world x (steps * ops/step) = 2 x 10k = 20k nodes
         "synth": {"world": 2, "steps": 50, "ops_per_step": 200,
                   "profile_nodes": 10_000},
@@ -63,6 +69,8 @@ _SCALE = {
         "sim_baseline": [(1_000, 8), (10_000, 8), (100_000, 8)],
         "chkb_nodes": 50_000,
         "chkb_repeat": 5,
+        "netmodel_grid": [(10_000, 8), (100_000, 8)],
+        "netmodel_route_n": 256,
         # world x (steps * ops/step) = 8 x 131072 = 1,048,576 nodes (>=1M)
         "synth": {"world": 8, "steps": 512, "ops_per_step": 256,
                   "profile_nodes": 50_000},
@@ -157,6 +165,59 @@ def perf_sim(scale: str = "full", baseline: bool = True,
                 row["engine"]["events_per_sec"] / ref["events_per_sec"], 2)
         rows.append(row)
     return {"scenarios": rows}
+
+
+# ---------------------------------------------------------------- netmodel
+def perf_netmodel(scale: str = "full", **_: Any) -> Dict[str, Any]:
+    """Link-fidelity network model vs analytic: wall-time ratio, routing
+    precompute rate, memoization effectiveness.
+
+    The acceptance floor for the routed mode is ``wall_ratio <= 2.0`` on the
+    largest grid entry (100k nodes x 8 ranks at full scale): memoized phase
+    specs + per-payload time caching keep the graph work off the hot path.
+    """
+    from ..sim import Fabric, Simulator
+
+    rows: List[Dict[str, Any]] = []
+    for nodes_per_rank, ranks in _cfg(scale)["netmodel_grid"]:
+        traces = [_mixed_trace(nodes_per_rank, ranks, rank=r)
+                  for r in range(ranks)]
+        total = sum(len(t) for t in traces)
+        row: Dict[str, Any] = {"scenario": "mixed_ar_a2a",
+                               "nodes_per_rank": nodes_per_rank,
+                               "ranks": ranks, "total_nodes": total}
+        for mode in ("analytic", "link"):
+            fabric = Fabric.build("switch", ranks, mode=mode)
+            t0 = time.perf_counter()
+            res = Simulator(traces, fabric).run(max_events=_SIM_MAX_EVENTS)
+            dt = time.perf_counter() - t0
+            row[mode] = {"wall_s": round(dt, 4),
+                         "events_per_sec": round(res.events / dt, 1),
+                         "makespan_s": res.makespan_s}
+            if res.link_stats:
+                row["time_cache"] = res.link_stats["time_cache"]
+        row["wall_ratio"] = round(row["link"]["wall_s"]
+                                  / row["analytic"]["wall_s"], 3)
+        rows.append(row)
+
+    # routing-table precompute: all-pairs paths on the big torus
+    from ..core.infragraph import tpu_pod_2d
+    n = _cfg(scale)["netmodel_route_n"]
+    d = int(n ** 0.5)
+    g = tpu_pod_2d(d, n // d)
+    t0 = time.perf_counter()
+    routes = g.routing()
+    pairs = 0
+    for src in g.npus:
+        for dst in g.npus:
+            if src != dst:
+                routes.path(src, dst)
+                pairs += 1
+    dt = time.perf_counter() - t0
+    return {"scenarios": rows,
+            "routing": {"graph": g.name, "npus": g.num_npus,
+                        "pairs": pairs, "wall_s": round(dt, 4),
+                        "pairs_per_sec": round(pairs / dt, 1)}}
 
 
 # --------------------------------------------------------------------- chkb
@@ -319,6 +380,7 @@ def perf_synth(scale: str = "full", **_: Any) -> Dict[str, Any]:
 BENCHMARKS = {
     "perf_feeder": perf_feeder,
     "perf_sim": perf_sim,
+    "perf_netmodel": perf_netmodel,
     "perf_chkb": perf_chkb,
     "perf_synth": perf_synth,
 }
@@ -362,3 +424,47 @@ def write_bench(doc: Dict[str, Any], path: str = "BENCH_perf.json") -> str:
         json.dump(doc, fh, indent=1, sort_keys=False)
         fh.write("\n")
     return path
+
+
+# ---------------------------------------------------------------- perf gate
+def gate_regressions(current: Dict[str, Any], baseline: Dict[str, Any],
+                     threshold: float = 0.2) -> Tuple[List[str], List[str]]:
+    """Compare a fresh bench document against the committed baseline.
+
+    Only rows present in BOTH documents are compared (a smoke-scale run
+    gates against the matching subset of the full-scale baseline).  A row
+    regresses when its events/sec (sim) or nodes/sec (feeder) falls more
+    than ``threshold`` below the baseline.  Returns (failures, report
+    lines); an empty failure list means the gate passes.
+    """
+    failures: List[str] = []
+    report: List[str] = []
+
+    def check(label: str, cur: float, base: float) -> None:
+        if base <= 0:
+            return
+        ratio = cur / base
+        line = (f"{label}: {cur:,.0f} vs baseline {base:,.0f} "
+                f"({ratio:.2f}x)")
+        report.append(line)
+        if ratio < 1.0 - threshold:
+            failures.append(line)
+
+    base_feeder = {(r["nodes"], r["window"]): r for r in
+                   baseline.get("perf_feeder", {}).get("drain", [])}
+    for r in current.get("perf_feeder", {}).get("drain", []):
+        b = base_feeder.get((r["nodes"], r["window"]))
+        if b:
+            check(f"perf_feeder nodes={r['nodes']} window={r['window']} "
+                  f"nodes/sec", r["nodes_per_sec"], b["nodes_per_sec"])
+
+    base_sim = {(r["scenario"], r["nodes_per_rank"], r["ranks"]): r for r in
+                baseline.get("perf_sim", {}).get("scenarios", [])}
+    for r in current.get("perf_sim", {}).get("scenarios", []):
+        b = base_sim.get((r["scenario"], r["nodes_per_rank"], r["ranks"]))
+        if b:
+            check(f"perf_sim {r['scenario']} {r['nodes_per_rank']}x"
+                  f"{r['ranks']} events/sec",
+                  r["engine"]["events_per_sec"],
+                  b["engine"]["events_per_sec"])
+    return failures, report

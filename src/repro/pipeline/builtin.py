@@ -409,14 +409,20 @@ class FeedSink:
 
 @register_stage("sim", kind="sink")
 class SimSink:
-    """Discrete-event what-if simulation (ASTRA-sim role, paper §4.3.1)."""
+    """Discrete-event what-if simulation (ASTRA-sim role, paper §4.3.1).
+
+    ``fidelity`` selects the network model: ``"analytic"`` (closed-form
+    alpha-beta, the default) or ``"link"`` (phase flows routed over the
+    InfraGraph with max-min fair sharing — topology effects are emergent).
+    """
 
     def __init__(self, topology: str = "switch", ranks: int = 8,
-                 congestion: bool = True,
+                 congestion: bool = True, fidelity: str = "analytic",
                  extra_traces: Sequence[TraceLike] = (), **fabric_kw: Any):
         self.topology = topology
         self.ranks = ranks
         self.congestion = congestion
+        self.fidelity = fidelity
         self.extra_traces = list(extra_traces)
         self.fabric_kw = fabric_kw
 
@@ -424,7 +430,8 @@ class SimSink:
         from ..sim import Fabric, SimConfig, Simulator
         traces = [stream.materialize()]
         traces += [_as_trace(t) for t in self.extra_traces]
-        fabric = Fabric.build(self.topology, self.ranks, **self.fabric_kw)
+        fabric = Fabric.build(self.topology, self.ranks, mode=self.fidelity,
+                              **self.fabric_kw)
         cfg = SimConfig(congestion=self.congestion)
         return Simulator(traces, fabric, cfg).run()
 
@@ -432,21 +439,33 @@ class SimSink:
 @register_stage("replay", kind="sink")
 class ReplaySink:
     """JAX replay of the trace's ops (paper §4.2): synthetic kernels +
-    collectives over randomized data."""
+    collectives over randomized data.
+
+    ``topology``/``fidelity`` additionally price every replayed collective
+    through that fabric's network model, filling ``model_time_s`` on each
+    kernel report (measured-vs-modeled validation)."""
 
     def __init__(self, mode: str = "full", limit: Optional[int] = None,
-                 mesh: Any = None, **cfg_kw: Any):
+                 mesh: Any = None, topology: Optional[str] = None,
+                 fidelity: str = "analytic", **cfg_kw: Any):
         self.mode = mode
         self.limit = limit
         self.mesh = mesh
+        self.topology = topology
+        self.fidelity = fidelity
         self.cfg_kw = cfg_kw
 
     def consume(self, stream: TraceStream) -> Any:
-        from ..sim import ReplayConfig, Replayer
+        from ..sim import Fabric, ReplayConfig, Replayer
         cfg = ReplayConfig(mode=self.mode, **self.cfg_kw)
         if self.limit is not None:
             cfg.node_range = (0, int(self.limit))
-        return Replayer(stream.materialize(), cfg, mesh=self.mesh).run()
+        et = stream.materialize()
+        fabric = None
+        if self.topology is not None:
+            fabric = Fabric.build(self.topology, max(et.world_size, 2),
+                                  mode=self.fidelity)
+        return Replayer(et, cfg, mesh=self.mesh, fabric=fabric).run()
 
 
 # ===================================================== synth subsystem

@@ -1,12 +1,18 @@
 """What-if simulation + replay: topology models, event engine, JAX replay."""
-from .collectives import CollectiveModel, busbw_factor
+from .collectives import (CollectiveModel, Phase, PhaseFlow, busbw_factor,
+                          decompose)
 from .engine import SimConfig, SimResult, Simulator, simulate_single_trace
+from .netmodel import (FIDELITIES, AnalyticModel, LinkModel, NetworkModel,
+                       build_network_model, max_min_fair_rates)
 from .reference import ReferenceSimulator
 from .replay import (ReplayConfig, Replayer, ReplayReport,
                      collective_accuracy_check)
-from .topology import Fabric
+from .topology import TOPOLOGIES, Fabric
 
-__all__ = ["CollectiveModel", "busbw_factor", "SimConfig", "SimResult",
-           "Simulator", "simulate_single_trace", "ReferenceSimulator",
-           "ReplayConfig", "Replayer", "ReplayReport",
-           "collective_accuracy_check", "Fabric"]
+__all__ = ["CollectiveModel", "Phase", "PhaseFlow", "busbw_factor",
+           "decompose", "SimConfig", "SimResult", "Simulator",
+           "simulate_single_trace", "FIDELITIES", "AnalyticModel",
+           "LinkModel", "NetworkModel", "build_network_model",
+           "max_min_fair_rates", "ReferenceSimulator", "ReplayConfig",
+           "Replayer", "ReplayReport", "collective_accuracy_check",
+           "TOPOLOGIES", "Fabric"]

@@ -42,9 +42,11 @@ class CollectiveModel:
             return ((n - 1) / n) * payload_bytes / link_bw \
                 + (n - 1) * latency_s
         if kind == CollectiveType.ALL_TO_ALL:
-            # each rank exchanges payload/n with each of n-1 peers
+            # each rank exchanges payload/n with each of n-1 peers; setup
+            # latency is charged per peer, consistent with ring/tree
+            # charging per step (a flat latency_s under-charged big groups)
             per_peer = payload_bytes / n
-            return ((n - 1) * per_peer) / link_bw + latency_s
+            return ((n - 1) * per_peer) / link_bw + (n - 1) * latency_s
         if kind == CollectiveType.BROADCAST:
             return payload_bytes / link_bw + math.ceil(math.log2(n)) * latency_s
         if kind == CollectiveType.COLLECTIVE_PERMUTE:
@@ -67,6 +69,98 @@ class CollectiveModel:
         if kind in (CollectiveType.ALL_GATHER, CollectiveType.REDUCE_SCATTER):
             return group
         return max(group - 1, 1)
+
+
+# ------------------------------------------------ phase decomposition
+# "Towards a Standardized Representation for Deep Learning Collective
+# Algorithms" (PAPERS.md): a collective is a schedule of send/recv *phases*,
+# not an opaque cost.  Each phase is a set of concurrent point-to-point
+# flows between logical group ranks; phases execute sequentially.  The
+# link-fidelity network model (sim.netmodel) routes these flows over the
+# InfraGraph, so congestion and hop dilution emerge from the topology.
+
+@dataclass(frozen=True)
+class PhaseFlow:
+    """One logical send inside a phase.
+
+    ``src``/``dst`` index into the collective's member-rank tuple (not NPU
+    ids — the network model maps them); ``frac`` is the fraction of the
+    collective's payload carried by this flow (0 for pure sync traffic).
+    """
+    src: int
+    dst: int
+    frac: float
+
+
+@dataclass(frozen=True)
+class Phase:
+    """Concurrent flows; ``repeat`` collapses identical back-to-back steps
+    (e.g. the 2(n-1) structurally-identical steps of a ring all-reduce)."""
+    flows: Tuple[PhaseFlow, ...]
+    repeat: int = 1
+
+
+def _ring_phase(n: int, frac: float) -> Phase:
+    return Phase(tuple(PhaseFlow(i, (i + 1) % n, frac) for i in range(n)))
+
+
+def _halving_doubling(n: int) -> List[Phase]:
+    """Recursive-halving reduce-scatter + recursive-doubling all-gather.
+    Ranks >= the power-of-two cutoff simply skip steps (standard fallback)."""
+    steps = max(1, math.ceil(math.log2(n)))
+    rs: List[Phase] = []
+    for s in range(steps):
+        flows = []
+        for i in range(n):
+            j = i ^ (1 << s)
+            if j < n and j != i:
+                flows.append(PhaseFlow(i, j, 1.0 / (1 << (s + 1))))
+        if flows:
+            rs.append(Phase(tuple(flows)))
+    return rs + list(reversed(rs))      # all-gather mirrors reduce-scatter
+
+
+def decompose(kind: CollectiveType, group: int,
+              algorithm: str = "ring") -> Tuple[Phase, ...]:
+    """Decompose a collective over ``group`` ranks into algorithm phases.
+
+    The flow structure matches the alpha-beta models in :meth:`
+    CollectiveModel.time_s`: on an ideal one-hop fabric the routed phase
+    times reduce to the same closed forms; on a real graph the same phases
+    price in hops, sharing, and oversubscription.
+    """
+    n = group
+    if n <= 1:
+        return ()
+    if kind == CollectiveType.ALL_REDUCE:
+        if algorithm == "tree":
+            return tuple(_halving_doubling(n))
+        return (Phase(_ring_phase(n, 1.0 / n).flows, repeat=2 * (n - 1)),)
+    if kind in (CollectiveType.ALL_GATHER, CollectiveType.REDUCE_SCATTER):
+        return (Phase(_ring_phase(n, 1.0 / n).flows, repeat=n - 1),)
+    if kind == CollectiveType.ALL_TO_ALL:
+        return (Phase(tuple(PhaseFlow(i, j, 1.0 / n)
+                            for i in range(n) for j in range(n) if i != j)),)
+    if kind == CollectiveType.BROADCAST:
+        phases = []
+        for s in range(math.ceil(math.log2(n))):
+            flows = tuple(PhaseFlow(i, i + (1 << s), 1.0)
+                          for i in range(1 << s) if i + (1 << s) < n)
+            if flows:
+                phases.append(Phase(flows))
+        return tuple(phases)
+    if kind == CollectiveType.COLLECTIVE_PERMUTE:
+        return (_ring_phase(n, 1.0),)
+    if kind == CollectiveType.POINT_TO_POINT:
+        return (Phase((PhaseFlow(0, min(1, n - 1), 1.0),)),)
+    if kind == CollectiveType.BARRIER:
+        # dissemination barrier: log2(n) rounds of zero-payload signals,
+        # run twice (arrive + release) to match the 2*log2(n) latency model
+        return tuple(
+            Phase(tuple(PhaseFlow(i, (i + (1 << s)) % n, 0.0)
+                        for i in range(n)), repeat=2)
+            for s in range(math.ceil(math.log2(n))))
+    return (Phase((PhaseFlow(0, min(1, n - 1), 1.0),)),)
 
 
 def busbw_factor(kind: CollectiveType, group: int) -> float:

@@ -21,8 +21,18 @@ original linear scan over a never-pruned flow list (kept verbatim in
 actually changed, so collective completions no longer fan out into per-member
 no-op polling events.
 
+Communication pricing is pluggable (``fabric.mode``, see
+:mod:`repro.sim.netmodel`): ``analytic`` keeps the original closed-form
+alpha-beta path bit-identical to the reference engine; ``link`` routes each
+collective's phase flows over the InfraGraph with max-min fair sharing, so
+topology effects are emergent rather than hand-tuned.  The cross-collective
+congestion throttle below applies in both modes — it models interference
+*between* concurrently-active collectives, which the per-collective network
+model does not see.
+
 Outputs: per-rank makespan, per-collective time totals (Fig 7), flow
-records with start/end (Figs 10/11 CDFs), link-utilization samples (Fig 13).
+records with start/end (Figs 10/11 CDFs), link-utilization samples (Fig 13),
+and in link mode per-link byte/busy accounting (``SimResult.link_stats``).
 """
 from __future__ import annotations
 
@@ -81,6 +91,7 @@ class SimResult:
     exposed_comm_s: float
     link_util_timeline: List[Tuple[float, float]]
     events: int = 0                 # engine events processed (perf metric)
+    link_stats: Optional[Dict[str, Any]] = None   # link-fidelity mode only
 
     def summary(self) -> str:
         coll = ", ".join(f"{k}={v * 1e3:.2f}ms"
@@ -141,6 +152,7 @@ class Simulator:
         self.traces = list(traces)
         self.fabric = fabric
         self.cfg = cfg or SimConfig()
+        self._net = fabric.network_model(self.cfg.collective_model)
 
     def run(self, max_events: int = 2_000_000) -> SimResult:
         cfg = self.cfg
@@ -156,13 +168,14 @@ class Simulator:
 
         # rendezvous state: key -> {rank: (node_id, arrive_time)}
         pending: Dict[Tuple, Dict[int, Tuple[int, float]]] = {}
-        # (rank, group, type, tag) -> (base_id, group_size) cache.  base_id
+        # (rank, group, type, tag) -> (base_id, member ranks) cache.  base_id
         # interns the full (comm_type, ranks, tag) base so matching stays
         # content-based (identical member sets rendezvous even under
         # different group ids) without rebuilding + rehashing the ranks
         # tuple on every comm node; occurrence counts stay keyed by
         # (rank, base_id) = (rank, base content), as in the reference.
-        streams: Dict[Tuple[int, int, int, str], Tuple[int, int]] = {}
+        streams: Dict[Tuple[int, int, int, str],
+                      Tuple[int, Tuple[int, ...]]] = {}
         base_ids: Dict[Tuple, int] = {}
         occurrence: Dict[Tuple[int, int], int] = {}
 
@@ -207,13 +220,14 @@ class Simulator:
                 wake_suppressed[rank] += 1
 
         def launch_collective(members: Dict[int, Tuple[int, float]],
-                              node: ETNode, group: int) -> None:
+                              node: ETNode, group: int,
+                              ranks: Optional[Tuple[int, ...]] = None) -> None:
             """All members arrived: collectives are ASYNC — they occupy the
             fabric for [start, end] but member ranks keep issuing
             independent work; dependents release at the completion event."""
             start = max(at for _, at in members.values())
             dur, throttle, kindname = self._comm_time(node, group, start,
-                                                      findex)
+                                                      findex, ranks)
             end = start + dur
             coll_time[kindname] = coll_time.get(kindname, 0.0) + dur
             coll_bytes[kindname] = (coll_bytes.get(kindname, 0.0)
@@ -254,22 +268,24 @@ class Simulator:
                                   if r < n_ranks)
                     base = (skey[2], ranks, skey[3])
                     bid = base_ids.setdefault(base, len(base_ids))
-                    stream = streams[skey] = (bid, len(ranks))
-                bid, group_size = stream
+                    stream = streams[skey] = (bid, ranks)
+                bid, members_ranks = stream
                 okey = (rank, bid)
                 occ = occurrence.get(okey, 0)
                 occurrence[okey] = occ + 1
                 key = (bid, occ)
                 pend = pending.setdefault(key, {})
                 pend[rank] = (node.id, t)
-                if len(pend) == group_size:
-                    launch_collective(pend, node, group_size)
+                if len(pend) == len(members_ranks):
+                    launch_collective(pend, node, len(members_ranks),
+                                      members_ranks)
                     del pending[key]
                 wake(t, rank)        # keep issuing independent work
             elif node.type in COMM_NODE_TYPES:
                 pg = self.traces[rank].process_groups.get(node.comm_group)
                 group = pg.size if pg and pg.size else 2
-                launch_collective({rank: (node.id, t)}, node, group)
+                members = tuple(pg.ranks) if pg and pg.ranks else None
+                launch_collective({rank: (node.id, t)}, node, group, members)
                 wake(t, rank)        # async: the rank is not blocked
             else:
                 dur = node.duration_micros * 1e-6
@@ -297,17 +313,17 @@ class Simulator:
             exposed_comm_s=min(exposed, total_comm),
             link_util_timeline=util,
             events=events,
+            link_stats=self._net.stats(wall_s=makespan),
         )
 
     def _comm_time(self, node: ETNode, group: int, t: float,
-                   findex: _FlowIndex) -> Tuple[float, float, str]:
+                   findex: _FlowIndex,
+                   ranks: Optional[Tuple[int, ...]] = None
+                   ) -> Tuple[float, float, str]:
         cfg = self.cfg
         kindname = COLL_NAME.get(node.comm_type, "Comm")
-        base = cfg.collective_model.time_s(
-            node.comm_type, float(node.comm_bytes), group,
-            self.fabric.link_bw, self.fabric.latency_s)
-        if node.comm_type == CollectiveType.ALL_TO_ALL:
-            base *= self.fabric.a2a_hop_factor
+        base = self._net.collective_time(node.comm_type,
+                                         float(node.comm_bytes), group, ranks)
         throttle = 1.0
         if cfg.congestion:
             # bandwidth sharing with flows ALREADY on the fabric (a

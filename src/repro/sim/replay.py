@@ -10,6 +10,11 @@ Modes: ``compute`` / ``comm`` / ``full`` (paper §4.2.2); tensor allocation
 ``preallocate`` vs ``lazy``; sub-range replay via ``node_range``.  The
 collective accuracy checker (§4.2.3) compares reduction outputs across
 dtypes/algorithms and reports relative error.
+
+Passing a :class:`~repro.sim.topology.Fabric` prices every replayed
+collective through the fabric's network model (analytic or link fidelity)
+alongside the measured wall time — the measured-vs-modeled validation loop
+the paper closes between its replayer and simulator (§4.2/§4.3).
 """
 from __future__ import annotations
 
@@ -52,6 +57,7 @@ class KernelReport:
     size_bytes: int
     group: int
     duration_s: float
+    model_time_s: float = 0.0     # network-model prediction (fabric given)
 
     @property
     def busbw(self) -> float:
@@ -83,6 +89,15 @@ class ReplayReport:
     def top_kernels(self, n: int = 10) -> List[KernelReport]:
         return sorted(self.kernels, key=lambda k: -k.size_bytes)[:n]
 
+    def model_comparison(self) -> Dict[str, float]:
+        """Measured vs network-model predicted comm time (needs a fabric)."""
+        comm = [k for k in self.kernels if k.kind != "compute"]
+        measured = sum(k.duration_s for k in comm)
+        modeled = sum(k.model_time_s for k in comm)
+        return {"comm_kernels": len(comm),
+                "measured_s": measured, "modeled_s": modeled,
+                "ratio": measured / modeled if modeled > 0 else 0.0}
+
 
 def _compute_kernel(flops: float, dtype) -> Tuple[Callable, Tuple]:
     """Synthetic GEMM sized to ~`flops` (randomized data, real compute)."""
@@ -97,10 +112,11 @@ def _compute_kernel(flops: float, dtype) -> Tuple[Callable, Tuple]:
 
 class Replayer:
     def __init__(self, trace: ExecutionTrace, cfg: Optional[ReplayConfig] = None,
-                 mesh=None) -> None:
+                 mesh=None, fabric=None) -> None:
         self.trace = trace
         self.cfg = cfg or ReplayConfig()
         self.mesh = mesh
+        self._net = fabric.network_model() if fabric is not None else None
         self._comm_fns: Dict[str, Callable] = {}
         if mesh is not None:
             axis = list(mesh.axis_names)[0]
@@ -149,8 +165,15 @@ class Replayer:
                     out = buf * 2.0
                 jax.block_until_ready(out)
                 dt = time.perf_counter() - t0
+                model_t = 0.0
+                if self._net is not None:
+                    ranks = tuple(pg.ranks) if pg and pg.ranks else None
+                    model_t = self._net.collective_time(
+                        node.comm_type, float(node.comm_bytes),
+                        group, ranks)
                 kernels.append(KernelReport(node.name, fn_name or "p2p",
-                                            int(node.comm_bytes), group, dt))
+                                            int(node.comm_bytes), group, dt,
+                                            model_time_s=model_t))
                 if not pre:
                     buffers.pop(node.id, None)
                 n_comm += 1

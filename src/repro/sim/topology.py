@@ -1,19 +1,43 @@
-"""Simulator-facing topology wrapper over core.infragraph.
+"""Simulator-facing topology facade over core.infragraph.
 
-Supplies the two numbers the collective models need — effective per-flow
-link bandwidth and hop latency — plus a fabric capacity used by the
-congestion model (how many concurrent full-rate flows the fabric absorbs
-before flows start sharing).
+:class:`Fabric` is a thin selector between the two network-model
+fidelities (see :mod:`repro.sim.netmodel`):
+
+* ``mode="analytic"`` (default) — collectives are priced by closed-form
+  alpha-beta models over the scalar ``link_bw`` / ``latency_s`` /
+  ``capacity_flows`` summary below, exactly as the frozen reference engine
+  does (bit-identical).
+* ``mode="link"``     — collectives decompose into phase flows routed over
+  the carried :class:`~repro.core.infragraph.InfraGraph`; the scalar
+  summary fields become irrelevant to pricing (congestion and hop dilution
+  emerge from per-link sharing) but remain for the engine's cross-collective
+  congestion heuristic and utilization normalization.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
-from typing import Dict, Optional
 
 from ..core.infragraph import (InfraGraph, TPU_V5E, clos_two_tier,
                                fully_connected, ring, switch, tpu_pod_2d)
 
 TOPOLOGIES = ("switch", "ring", "fully_connected", "clos", "tpu_pod")
+FIDELITIES = ("analytic", "link")
+
+
+def _torus_dims(n: int) -> "tuple[int, int]":
+    """Most-square (data, model) factorization of ``n`` with both dims >= 2.
+
+    A 2D torus needs two real axes; prime or sub-4 rank counts cannot form
+    one, and silently simulating some other pod size would mis-price every
+    collective (the old builder always priced the default 256-chip pod).
+    """
+    for d in range(math.isqrt(n), 1, -1):
+        if n % d == 0:
+            return d, n // d
+    raise ValueError(
+        f"tpu_pod needs a rank count factorable as data*model with both "
+        f"dims >= 2 (got n={n}); pick a composite n >= 4 or another topology")
 
 
 @dataclass
@@ -24,23 +48,30 @@ class Fabric:
     latency_s: float
     capacity_flows: int              # concurrent full-rate flows absorbed
     a2a_hop_factor: float = 1.0      # mean hop dilution for mesh traffic
+    mode: str = "analytic"           # active fidelity: analytic | link
 
     @classmethod
     def build(cls, name: str, n: int, link_bw: float = TPU_V5E["ici_link_bw"],
-              latency_s: float = TPU_V5E["ici_latency_s"]) -> "Fabric":
+              latency_s: float = TPU_V5E["ici_latency_s"],
+              mode: str = "analytic") -> "Fabric":
+        if mode not in FIDELITIES:
+            raise ValueError(
+                f"unknown fidelity {mode!r}; options: {FIDELITIES}")
         if name == "ring":
-            # all-to-all traffic crosses ~n/4 hops on average, sharing the
-            # intermediate ring links (switch/FC deliver point-to-point
-            # directly) — this is what separates ring from switch in Fig 12
+            # analytic mode: all-to-all traffic crosses ~n/4 hops on average,
+            # sharing the intermediate ring links (switch/FC deliver
+            # point-to-point directly) — this hand-tuned factor is what
+            # separates ring from switch in Fig 12.  In link mode the same
+            # separation *emerges* from routed multi-hop flows instead.
             g = ring(n, link_bw, latency_s)
             return cls(name, g, link_bw, latency_s, capacity_flows=n,
-                       a2a_hop_factor=max(n / 4.0, 1.0))
+                       a2a_hop_factor=max(n / 4.0, 1.0), mode=mode)
         elif name == "fully_connected":
             # per-NPU egress split across n-1 peers; most links idle under
             # ring-style collectives => poor utilization (paper Fig 12)
             g = fully_connected(n, link_bw, latency_s)
             return cls(name, g, link_bw / max(n - 1, 1), latency_s,
-                       capacity_flows=n * (n - 1))
+                       capacity_flows=n * (n - 1), mode=mode)
         elif name == "switch":
             g = switch(n, link_bw, latency_s)
             cap = n                       # full bisection through the switch
@@ -49,8 +80,15 @@ class Fabric:
                               uplink_bw=2 * link_bw, latency_s=latency_s)
             cap = n
         elif name == "tpu_pod":
-            g = tpu_pod_2d()
+            data, model = _torus_dims(n)
+            g = tpu_pod_2d(data, model, ici_bw=link_bw, latency_s=latency_s)
             cap = 2 * n                   # 2D torus: two rings per chip
         else:
             raise KeyError(f"unknown topology {name!r}; have {TOPOLOGIES}")
-        return cls(name, g, link_bw, latency_s, capacity_flows=cap)
+        return cls(name, g, link_bw, latency_s, capacity_flows=cap, mode=mode)
+
+    def network_model(self, collective_model=None):
+        """The active :class:`repro.sim.netmodel.NetworkModel` for this
+        fabric's ``mode`` (imported lazily to avoid a module cycle)."""
+        from .netmodel import build_network_model
+        return build_network_model(self, collective_model)

@@ -1,0 +1,371 @@
+"""Two-fidelity network model: phase decomposition, InfraGraph routing,
+max-min fair sharing, Fig-12 emergent topology ordering, and the
+tpu_pod / all-to-all-latency satellite fixes."""
+import math
+
+import pytest
+
+from repro.core import generator
+from repro.core.infragraph import TPU_V5E, LinkLoad, tpu_pod_2d
+from repro.core.schema import CollectiveType
+from repro.sim import (CollectiveModel, Fabric, LinkModel, SimConfig,
+                       Simulator, build_network_model, decompose,
+                       max_min_fair_rates, simulate_single_trace)
+from repro.sim.topology import TOPOLOGIES, _torus_dims
+
+GROUP = 8
+PAYLOAD = 4 << 20
+KINDS = [k for k in CollectiveType if k != CollectiveType.INVALID]
+
+
+def _fabric(topo: str, mode: str, n: int = GROUP) -> Fabric:
+    return Fabric.build(topo, n, mode=mode)
+
+
+# ------------------------------------------------- decomposition invariants
+@pytest.mark.parametrize("kind", KINDS)
+def test_decompose_conserves_alpha_beta_volume(kind):
+    """Per-rank bytes sent by the phase schedule match the alpha-beta
+    model's bandwidth term (the two fidelities price the same traffic)."""
+    phases = decompose(kind, GROUP)
+    sent = [0.0] * GROUP
+    for ph in phases:
+        for f in ph.flows:
+            sent[f.src] += f.frac * ph.repeat
+    n = GROUP
+    expected = {
+        CollectiveType.ALL_REDUCE: 2 * (n - 1) / n,
+        CollectiveType.ALL_GATHER: (n - 1) / n,
+        CollectiveType.REDUCE_SCATTER: (n - 1) / n,
+        CollectiveType.ALL_TO_ALL: (n - 1) / n,
+        CollectiveType.COLLECTIVE_PERMUTE: 1.0,
+        CollectiveType.BARRIER: 0.0,
+    }
+    if kind in expected:
+        assert max(sent) == pytest.approx(expected[kind], rel=1e-9)
+    if kind == CollectiveType.BROADCAST:
+        # binomial tree: every rank receives the payload exactly once
+        recv = [0.0] * GROUP
+        for ph in phases:
+            for f in ph.flows:
+                recv[f.dst] += f.frac * ph.repeat
+        assert all(r == pytest.approx(1.0) for r in recv[1:])
+
+
+def test_decompose_trivial_group():
+    for kind in KINDS:
+        assert decompose(kind, 1) == ()
+
+
+# --------------------------------------------- all TOPOLOGIES x collectives
+@pytest.mark.parametrize("topo", TOPOLOGIES)
+@pytest.mark.parametrize("mode", ("analytic", "link"))
+def test_zero_time_at_trivial_group(topo, mode):
+    net = _fabric(topo, mode).network_model(CollectiveModel())
+    for kind in KINDS:
+        assert net.collective_time(kind, float(PAYLOAD), 1) == 0.0
+        assert net.collective_time(kind, float(PAYLOAD), 0) == 0.0
+
+
+@pytest.mark.parametrize("topo", TOPOLOGIES)
+@pytest.mark.parametrize("mode", ("analytic", "link"))
+def test_monotone_in_payload(topo, mode):
+    net = _fabric(topo, mode).network_model(CollectiveModel())
+    for kind in KINDS:
+        times = [net.collective_time(kind, float(p), GROUP)
+                 for p in (1 << 10, 1 << 16, 1 << 22, 1 << 26)]
+        assert all(t >= 0.0 for t in times), kind
+        assert all(b >= a for a, b in zip(times, times[1:])), kind
+        if kind != CollectiveType.BARRIER:        # barrier is latency-only
+            assert times[-1] > times[0], kind
+
+
+@pytest.mark.parametrize("topo", TOPOLOGIES)
+def test_link_time_at_least_store_and_forward_bound(topo):
+    """Routed completion can never beat the store-and-forward lower bound
+    of its own routed paths (full link bandwidth, zero contention)."""
+    net = _fabric(topo, "link").network_model(CollectiveModel())
+    assert isinstance(net, LinkModel)
+    for kind in KINDS:
+        t = net.collective_time(kind, float(PAYLOAD), GROUP)
+        lb = net.lower_bound(kind, float(PAYLOAD), GROUP)
+        assert t >= lb * (1 - 1e-12), (kind, t, lb)
+        if kind != CollectiveType.BARRIER:
+            assert lb > 0.0, kind
+
+
+# ------------------------------------------------------------ routing layer
+@pytest.mark.parametrize("topo", TOPOLOGIES)
+def test_routing_paths_are_contiguous(topo):
+    g = _fabric(topo, "link").graph
+    routes = g.routing()
+    assert g.routing() is routes          # cached per fabric
+    for src in list(g.npus)[:4]:
+        for dst in list(g.npus)[:4]:
+            path = routes.path(src, dst)
+            if src == dst:
+                assert path == ()
+                continue
+            at = src
+            for idx in path:
+                link = g.links[idx]
+                assert link.src == at
+                at = link.dst
+            assert at == dst
+
+
+def test_ring_routing_takes_shortest_arc():
+    g = Fabric.build("ring", 8, mode="link").graph
+    routes = g.routing()
+    assert len(routes.path(0, 1)) == 1
+    assert len(routes.path(0, 4)) == 4
+    assert len(routes.path(0, 7)) == 1    # wraps the short way
+
+
+def test_link_load_accounting():
+    g = Fabric.build("ring", 4, mode="link").graph
+    routes = g.routing()
+    load = LinkLoad(routes)
+    load.add(routes.path(0, 2), 100e9)
+    load.add(routes.path(0, 1), 50e9)
+    first_hop = routes.path(0, 1)[0]
+    assert load.bytes_by_link[first_hop] == 150e9
+    top = load.top(1, wall_s=10.0)
+    assert top[0]["bytes"] == 150e9 and top[0]["busy_frac"] > 0
+
+
+def test_max_min_fair_sharing_water_fills():
+    # two flows share link 0 (bw 10); flow B also crosses link 1 (bw 4):
+    # B is bottlenecked at 4, A picks up the slack (6) — not an equal split
+    rates = max_min_fair_rates([(0,), (0, 1)], [10.0, 4.0])
+    assert rates[1] == pytest.approx(4.0)
+    assert rates[0] == pytest.approx(6.0)
+    # saturated equal split
+    rates = max_min_fair_rates([(0,), (0,), (0,)], [9.0])
+    assert rates == pytest.approx([3.0, 3.0, 3.0])
+
+
+# ------------------------------------------------- emergent Fig-12 ordering
+def _makespan(topo: str, mode: str, workload: str) -> float:
+    et = generator.moe_mixed_collectives(iters=4, ranks=GROUP, mode=workload)
+    return simulate_single_trace(et, _fabric(topo, mode)).makespan_s
+
+
+def test_fig12_link_mode_allreduce_ring_beats_fully_connected():
+    assert (_makespan("ring", "link", "allreduce")
+            < _makespan("fully_connected", "link", "allreduce"))
+
+
+def test_fig12_link_mode_a2a_switch_and_clos_beat_ring():
+    ring_t = _makespan("ring", "link", "alltoall")
+    assert _makespan("switch", "link", "alltoall") < ring_t
+    assert _makespan("clos", "link", "alltoall") < ring_t
+
+
+def test_fig12_link_mode_reranks_by_workload():
+    """The paper's co-design point: the best topology depends on the
+    workload's collective mix — no single fabric wins both."""
+    def rank_order(workload):
+        times = {t: _makespan(t, "link", workload)
+                 for t in ("ring", "switch", "fully_connected")}
+        return sorted(times, key=times.get)
+
+    assert rank_order("allreduce") != rank_order("alltoall")
+    assert rank_order("allreduce")[-1] == "fully_connected"
+
+
+def test_link_mode_emergent_hop_dilution_without_fudge_factor():
+    """Ring's a2a penalty must emerge from routed multi-hop flows: the
+    link-mode gap vs switch exists even though a2a_hop_factor never enters
+    the link path."""
+    net = _fabric("ring", "link").network_model(CollectiveModel())
+    switch_net = _fabric("switch", "link").network_model(CollectiveModel())
+    ring_t = net.collective_time(CollectiveType.ALL_TO_ALL, 1e8, GROUP)
+    switch_t = switch_net.collective_time(CollectiveType.ALL_TO_ALL, 1e8,
+                                          GROUP)
+    assert ring_t > switch_t
+
+
+def test_link_stats_surface_busiest_links():
+    traces = [generator.moe_mixed_collectives(iters=3, ranks=4, rank=r)
+              for r in range(4)]
+    res = Simulator(traces, _fabric("clos", "link", 4)).run()
+    assert res.link_stats is not None
+    assert res.link_stats["mode"] == "link"
+    assert res.link_stats["links_touched"] > 0
+    assert res.link_stats["time_cache"]["hits"] > 0
+    assert len(res.link_stats["top_links"]) > 0
+    # analytic mode reports none
+    res_a = Simulator(traces, _fabric("clos", "analytic", 4)).run()
+    assert res_a.link_stats is None
+
+
+# ----------------------------------------------------------- satellite fixes
+def test_tpu_pod_sized_from_rank_count():
+    for n, dims in ((4, (2, 2)), (8, (2, 4)), (16, (4, 4)), (256, (16, 16))):
+        assert _torus_dims(n) == dims
+        fab = Fabric.build("tpu_pod", n)
+        assert fab.graph.num_npus == n
+    # the old behavior priced a 256-chip pod for ANY n
+    assert Fabric.build("tpu_pod", 8).graph.num_npus == 8
+
+
+@pytest.mark.parametrize("n", (1, 2, 3, 7, 13))
+def test_tpu_pod_rejects_non_factorable_counts(n):
+    with pytest.raises(ValueError, match="factorable"):
+        Fabric.build("tpu_pod", n)
+
+
+def test_a2a_latency_charged_per_peer():
+    """ALL_TO_ALL setup latency scales with group size, like ring/tree
+    charge per step — a flat latency_s under-charged large groups."""
+    m = CollectiveModel()
+    lat = 1e-6
+    # tiny payload isolates the latency term
+    t8 = m.time_s(CollectiveType.ALL_TO_ALL, 8.0, 8, 1e12, lat)
+    t32 = m.time_s(CollectiveType.ALL_TO_ALL, 8.0, 32, 1e12, lat)
+    assert t8 == pytest.approx(7 * lat, rel=1e-3)
+    assert t32 == pytest.approx(31 * lat, rel=1e-3)
+
+
+def test_bandwidth_term_unchanged_by_latency_fix():
+    m = CollectiveModel()
+    n, bw = 8, 50e9
+    payload = 64 << 20
+    t = m.time_s(CollectiveType.ALL_TO_ALL, float(payload), n, bw, 0.0)
+    assert t == pytest.approx((n - 1) * payload / n / bw)
+
+
+# ------------------------------------------------------------ wiring layers
+def test_fabric_rejects_unknown_fidelity():
+    with pytest.raises(ValueError, match="fidelity"):
+        Fabric.build("switch", 8, mode="quantum")
+    fab = Fabric.build("switch", 8)
+    fab.mode = "quantum"
+    with pytest.raises(ValueError, match="fidelity"):
+        build_network_model(fab)
+
+
+def test_sim_sink_fidelity_knob(tmp_path):
+    from repro.core.serialization import save
+    from repro.pipeline import Pipeline
+    et = generator.moe_mixed_collectives(iters=3, ranks=4)
+    p = str(tmp_path / "t.chkb")
+    save(et, p)
+    res_link = (Pipeline.from_source("load", p)
+                .sink("sim", topology="ring", ranks=4, fidelity="link").run())
+    res_ana = (Pipeline.from_source("load", p)
+               .sink("sim", topology="ring", ranks=4).run())
+    assert res_link.link_stats is not None
+    assert res_ana.link_stats is None
+    assert res_link.makespan_s > 0 and res_ana.makespan_s > 0
+
+
+def test_cli_sim_fidelity(tmp_path, capsys):
+    from repro.cli import main
+    from repro.core.serialization import save
+    et = generator.dp_allreduce_pattern(steps=1, layers=2, ranks=4)
+    p = str(tmp_path / "t.chkb")
+    out = str(tmp_path / "res.json")
+    save(et, p)
+    assert main(["sim", p, "--topology", "ring", "--ranks", "4",
+                 "--fidelity", "link", "-o", out]) == 0
+    import json
+    doc = json.loads(open(out).read())
+    assert doc["fidelity"] == "link"
+    assert doc["link_stats"]["links_touched"] > 0
+
+
+def test_replay_model_comparison():
+    from repro.sim import ReplayConfig, Replayer
+    et = generator.dp_allreduce_pattern(steps=1, layers=2, ranks=4)
+    rep = Replayer(et, ReplayConfig(mode="comm"),
+                   fabric=Fabric.build("switch", 4, mode="link")).run()
+    cmp = rep.model_comparison()
+    assert cmp["comm_kernels"] == rep.comm_nodes > 0
+    assert cmp["modeled_s"] > 0
+    assert all(k.model_time_s > 0 for k in rep.kernels
+               if k.kind != "compute")
+
+
+def test_routing_cache_invalidates_on_inplace_link_edit():
+    g = Fabric.build("ring", 4, mode="link").graph
+    r1 = g.routing()
+    assert g.routing() is r1
+    g.links[0].bandwidth /= 2          # degraded-link what-if
+    r2 = g.routing()
+    assert r2 is not r1
+    assert r2.link_bw[0] == pytest.approx(r1.link_bw[0] / 2)
+
+
+def test_lower_bound_guard_mirrors_collective_time():
+    net = _fabric("ring", "link").network_model(CollectiveModel())
+    for kind in KINDS:
+        t = net.collective_time(kind, 0.0, GROUP)
+        lb = net.lower_bound(kind, 0.0, GROUP)
+        assert t >= lb, kind           # invariant holds at payload 0 too
+        if kind != CollectiveType.BARRIER:
+            assert lb == 0.0
+
+
+def test_link_stats_report_busy_fractions():
+    traces = [generator.moe_mixed_collectives(iters=3, ranks=4, rank=r)
+              for r in range(4)]
+    res = Simulator(traces, _fabric("ring", "link", 4)).run()
+    assert all("busy_frac" in row for row in res.link_stats["top_links"])
+    assert max(row["busy_frac"] for row in res.link_stats["top_links"]) > 0
+
+
+def test_single_trace_threads_process_group_ranks():
+    """Single-trace simulation must route over the process group's actual
+    member NPUs, not a contiguous 0..group-1 default: (0,2,4,6) on an
+    8-ring forms a symmetric 2-hop ring over all 8 links, while (0,1,2,3)
+    has a 3-hop wrap-around flow over 6 links — different links, different
+    time.  (Before the fix both priced identically as 0..3.)"""
+    from repro.core.schema import ExecutionTrace, NodeType
+
+    def trace_with(ranks):
+        et = ExecutionTrace(rank=0, world_size=8)
+        pg = et.add_process_group(list(ranks), tag="sparse")
+        et.add_node(name="ar", type=NodeType.COMM_COLL,
+                    comm_type=CollectiveType.ALL_REDUCE,
+                    comm_group=pg.id, comm_bytes=1 << 24)
+        return et
+
+    cfg = SimConfig(congestion=False)
+    sparse = simulate_single_trace(trace_with((0, 2, 4, 6)),
+                                   _fabric("ring", "link"), cfg)
+    dense = simulate_single_trace(trace_with((0, 1, 2, 3)),
+                                  _fabric("ring", "link"), cfg)
+    assert sparse.makespan_s != dense.makespan_s
+    assert sparse.link_stats["links_touched"] == 8    # every ring link
+    assert dense.link_stats["links_touched"] == 6     # 0..3 arc + wrap-back
+
+
+# -------------------------------------------------------------- perf gate
+def test_gate_regressions_flags_only_large_drops():
+    from repro.perf import gate_regressions
+    mk = lambda feeder_nps, sim_eps: {
+        "perf_feeder": {"drain": [
+            {"nodes": 10_000, "window": 64, "nodes_per_sec": feeder_nps}]},
+        "perf_sim": {"scenarios": [
+            {"scenario": "mixed_ar_a2a", "nodes_per_rank": 1000, "ranks": 8,
+             "engine": {"events_per_sec": sim_eps}}]},
+    }
+    base = mk(100_000.0, 200_000.0)
+    ok, report = gate_regressions(mk(90_000.0, 170_000.0), base, 0.2)
+    assert ok == [] and len(report) == 2
+    failures, _ = gate_regressions(mk(70_000.0, 200_000.0), base, 0.2)
+    assert len(failures) == 1 and "perf_feeder" in failures[0]
+    # rows missing from the baseline are skipped, not failed
+    failures, report = gate_regressions(mk(1.0, 1.0), {}, 0.2)
+    assert failures == [] and report == []
+
+
+def test_perf_netmodel_smoke_within_budget():
+    from repro.perf import perf_netmodel
+    doc = perf_netmodel(scale="smoke")
+    row = doc["scenarios"][0]
+    assert row["analytic"]["wall_s"] > 0 and row["link"]["wall_s"] > 0
+    assert row["wall_ratio"] <= 2.0       # acceptance: link within 2x
+    assert doc["routing"]["pairs"] == 64 * 63
