@@ -41,7 +41,7 @@ def main(argv=None) -> int:
                     baseline=ns.baseline, names=ns.names or None)
     path = write_bench(doc, ns.output)
     for name in ("perf_feeder", "perf_sim", "perf_netmodel", "perf_chkb",
-                 "perf_synth"):
+                 "perf_synth", "perf_explore"):
         if name in doc:
             print(f"[ok] {name:12s} ({doc[name]['bench_wall_s']}s)")
     sims = doc.get("perf_sim", {}).get("scenarios", [])
@@ -65,6 +65,12 @@ def main(argv=None) -> int:
         print(f"     synth: {gen['total_nodes']} nodes x "
               f"{gen['ranks_written']} ranks at {gen['nodes_per_sec']:.0f} "
               f"nodes/sec (peak {synth['bounded_memory']['peak_mb']}MB)")
+    explore = doc.get("perf_explore", {})
+    if explore:
+        sw = explore["sweep"]
+        print(f"     explore: expand {explore['expand']['configs_per_sec']:.0f} "
+              f"configs/sec; {sw['configs']}-config sweep cached replay "
+              f"{sw['cache_speedup']}x cold ({sw['cached_executed']} re-sims)")
     print(f"wrote {path}")
     return 0
 

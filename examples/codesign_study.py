@@ -1,0 +1,64 @@
+"""Fig-12 co-design study as a declarative `repro.explore` sweep.
+
+Replaces the old hand-rolled for-loop (`examples/topology_sweep.py`): the
+whole study — two workloads at opposite communication extremes, five
+topologies, both network-model fidelities — is one :class:`ExperimentSpec`,
+executed process-parallel with a content-addressed run cache (re-running
+this script is near-instant: zero simulations on the second pass) and
+reduced to a ranked report.
+
+  PYTHONPATH=src python examples/codesign_study.py
+
+Shell equivalent:
+  python -m repro explore codesign_study.json --jobs 4 --report report.md
+"""
+import json
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.explore import (ExperimentSpec, build_report, render_markdown,
+                           run_sweep)
+
+SPEC = {
+    "name": "fig12-codesign",
+    "workloads": [
+        {"pattern": "moe_mixed", "name": "allreduce-heavy (DP grads)",
+         "args": {"mode": "allreduce", "iters": 4, "ranks": 8}},
+        {"pattern": "moe_mixed", "name": "a2a-heavy (MoE dispatch)",
+         "args": {"mode": "alltoall", "iters": 4, "ranks": 8}},
+    ],
+    "axes": {
+        "topology": ["ring", "switch", "clos", "fully_connected", "tpu_pod"],
+        "world_size": [8],
+        "fidelity": ["analytic", "link"],
+    },
+}
+
+
+def main():
+    spec = ExperimentSpec.from_dict(SPEC)
+    print(f"spec {spec.name}: {spec.grid_size()} configs "
+          f"(hash {spec.spec_hash()[:12]})")
+    cache = os.path.join(tempfile.gettempdir(), "repro_codesign_cache")
+    res = run_sweep(spec, jobs=4, cache_dir=cache)
+    print(res.summary())
+    doc = build_report(res)
+    print(render_markdown(doc))
+    print("link mode: ring wins the allreduce-heavy workload while the "
+          "point-to-point fabrics (switch/clos/fully-connected) beat it on "
+          "the a2a-heavy one — the paper's Fig-12 co-design re-ranking, "
+          "emergent from routed per-link sharing.  Re-run this script: the "
+          f"cache at {cache} replays it without a single simulation.")
+    # the spec is plain data: write it next to the report for the CLI
+    out = os.path.join(tempfile.gettempdir(), "codesign_study.json")
+    with open(out, "w") as fh:
+        json.dump(SPEC, fh, indent=1)
+    print(f"\nspec written to {out} — try: "
+          f"python -m repro explore {out} --jobs 4 --report report.md")
+
+
+if __name__ == "__main__":
+    main()

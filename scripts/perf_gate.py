@@ -1,12 +1,14 @@
 #!/usr/bin/env python
 """CI perf gate: fail when the hot paths regress vs the committed baseline.
 
-Runs ``python -m repro bench perf_feeder perf_sim`` (fresh numbers, no
-reference-engine baseline pass) and compares events/sec / nodes/sec against
-the committed ``BENCH_perf.json``.  Any row more than ``--threshold``
-(default 20%) below its baseline counterpart fails the gate; only rows
-present in both documents are compared, so a ``--scale smoke`` run gates
-against the matching subset of the full-scale baseline.
+Runs ``python -m repro bench perf_feeder perf_sim perf_explore`` (fresh
+numbers, no reference-engine baseline pass, results via the ``--json``
+sidecar — stdout is never parsed) and compares events/sec / nodes/sec /
+configs/sec against the committed ``BENCH_perf.json``.  Any row more than
+``--threshold`` (default 20%, or ``$PERF_GATE_THRESHOLD``) below its
+baseline counterpart fails the gate; only rows present in both documents
+are compared, so a ``--scale smoke`` run gates against the matching subset
+of the full-scale baseline.
 
   PYTHONPATH=src python scripts/perf_gate.py --scale smoke
   PYTHONPATH=src python scripts/perf_gate.py --threshold 0.3 --baseline BENCH_perf.json
@@ -23,7 +25,7 @@ import tempfile
 _REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(_REPO_ROOT, "src"))
 
-GATED = ("perf_feeder", "perf_sim")
+GATED = ("perf_feeder", "perf_sim", "perf_explore")
 
 
 def main(argv=None) -> int:
@@ -52,9 +54,10 @@ def main(argv=None) -> int:
             env = dict(os.environ)
             env["PYTHONPATH"] = (os.path.join(_REPO_ROOT, "src")
                                  + os.pathsep + env.get("PYTHONPATH", ""))
+            # --json: the machine-readable sidecar (never parse stdout)
             subprocess.run(
                 [sys.executable, "-m", "repro", "bench", *GATED,
-                 "--scale", ns.scale, "--no-baseline", "-o", out],
+                 "--scale", ns.scale, "--no-baseline", "--json", out],
                 check=True, env=env, cwd=_REPO_ROOT)
             with open(out) as fh:
                 current = json.load(fh)

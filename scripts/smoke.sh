@@ -46,13 +46,30 @@ assert man['total_nodes'] > 0 and len(man['paths']) == 4, man
 python -m repro synth --list > "$tmp/scenarios.txt"
 grep -q moe-mixed "$tmp/scenarios.txt"
 
+echo "== explore (3-config sweep; replay must be fully cached) =="
+cat > "$tmp/study.json" <<'SPEC'
+{"name": "smoke-study",
+ "workloads": [{"pattern": "moe_mixed", "args": {"mode": "mixed", "iters": 2}}],
+ "axes": {"topology": ["ring", "switch", "clos"], "world_size": [4],
+          "fidelity": ["link"]}}
+SPEC
+python -m repro explore "$tmp/study.json" --dry-run > "$tmp/grid.json"
+grep -q '"total":3' "$tmp/grid.json"
+python -m repro explore "$tmp/study.json" --jobs 2 --cache-dir "$tmp/cache" \
+  --report "$tmp/report.md" --json "$tmp/report.json" > "$tmp/explore1.out"
+grep -q "3 simulated" "$tmp/explore1.out"
+grep -q "Pareto" "$tmp/report.md"
+python -m repro explore "$tmp/study.json" --jobs 2 --cache-dir "$tmp/cache" \
+  > "$tmp/explore2.out"
+grep -q "0 simulated, 3 cached" "$tmp/explore2.out"
+
 echo "== stages =="
 python -m repro stages > "$tmp/stages.txt"
 grep -q scale_time "$tmp/stages.txt"
 grep -q synth.generate "$tmp/stages.txt"
 
-echo "== bench (chkb codec only, smoke scale) =="
-python -m repro bench perf_chkb --scale smoke -o "$tmp/bench.json"
+echo "== bench (chkb codec only, smoke scale; --json sidecar) =="
+python -m repro bench perf_chkb --scale smoke --json "$tmp/bench.json"
 grep -q block_decode_speedup "$tmp/bench.json"
 
 echo "smoke: OK"

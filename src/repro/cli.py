@@ -10,6 +10,8 @@
     python -m repro profile  rank*.chkb -o profile.json [--obfuscate]
     python -m repro synth    --profile profile.json -o out/ --ranks 32 --sim
     python -m repro synth    --scenario moe-mixed -o out/ --ranks 8
+    python -m repro explore  study.json --jobs 8 --report report.md
+    python -m repro bench    perf_feeder --scale smoke --json bench.json
     python -m repro stages                       # print the registry table
 
 Every subcommand builds a :class:`repro.pipeline.Pipeline`; nothing calls the
@@ -19,6 +21,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 from typing import Any, Dict, List, Optional
 
@@ -152,6 +155,15 @@ def _cmd_replay(ns: argparse.Namespace) -> int:
 
 
 def _cmd_analyze(ns: argparse.Namespace) -> int:
+    if not ns.deep and ns.input.endswith(".chkb"):
+        # CHKB v4: whole-file columnar fast path — same document, no ETNode
+        # materialization (v3 and --deep fall through to the node path)
+        from .core.analysis import columnar_analyze
+        from .core.serialization import ChkbReader
+        with ChkbReader(ns.input) as reader:
+            if reader.version == 4:
+                _emit(columnar_analyze(reader), ns.output)
+                return 0
     stats = (Pipeline.from_source("load", ns.input, window=ns.window)
              .sink("analyze", deep=ns.deep).run())
     _emit(stats, ns.output)
@@ -229,6 +241,7 @@ def _cmd_synth(ns: argparse.Namespace) -> int:
 
 
 def _cmd_stages(ns: argparse.Namespace) -> int:
+    from . import perf as _perf  # noqa: F401 — registers kind="benchmark"
     for kind, names in available_stages().items():
         print(f"{kind}:")
         for n in names:
@@ -244,7 +257,60 @@ def _cmd_bench(ns: argparse.Namespace) -> int:
 
     doc = run_suite(scale=ns.scale, baseline=ns.baseline,
                     names=ns.names or None)
-    _emit(doc, ns.output, compact=ns.as_json)
+    if ns.json_path:
+        # machine-readable sidecar: the perf gate and sweep tooling read
+        # this instead of reparsing stdout
+        _emit(doc, ns.json_path, compact=True)
+    if ns.output or not ns.json_path:
+        _emit(doc, ns.output)
+    return 0
+
+
+def _cmd_explore(ns: argparse.Namespace) -> int:
+    from .explore import (as_spec, build_report, render_markdown,
+                          report_json_bytes, run_sweep, save_markdown,
+                          save_report_json)
+
+    spec = as_spec(ns.spec)
+    if ns.seed is not None:
+        # an explicit --seed redraws a random sample (even one whose seed
+        # is pinned in the spec), it doesn't just re-stamp the run hashes
+        spec.seed = ns.seed
+        if spec.sample.get("mode") == "random":
+            spec.sample["seed"] = ns.seed
+    if ns.sample is not None:
+        sample_seed = (ns.seed if ns.seed is not None
+                       else spec.sample.get("seed", spec.seed))
+        spec.sample = {"mode": "random", "n": ns.sample, "seed": sample_seed}
+    spec.validate()   # re-check the overrides (file digests are memoized)
+    if ns.dry_run:
+        sys.stdout.buffer.write(spec.expansion_json() + b"\n")
+        return 0
+    jobs = ns.jobs if ns.jobs > 0 else (os.cpu_count() or 1)
+    res = run_sweep(spec, jobs=jobs, cache_dir=ns.cache_dir)
+    print(res.summary())
+    if ns.results:
+        print(f"results -> {res.save_results(ns.results)}")
+    doc = build_report(res)
+    for name, w in doc["workloads"].items():
+        best = w["best"]
+        if best:
+            print(f"  {name}: best {best['topology']}x{best['world_size']}"
+                  f"@{best['fidelity']} makespan="
+                  f"{best['makespan_s'] * 1e3:.3f}ms "
+                  f"(pareto {len(w['pareto'])}/{w['runs']})")
+    if ns.report:
+        print(f"report -> {save_markdown(doc, ns.report)}")
+    if ns.json_out:
+        print(f"report json -> {save_report_json(doc, ns.json_out)}")
+    if not ns.report and not ns.json_out and ns.verbose:
+        sys.stdout.write(render_markdown(doc))
+    if res.failed:
+        # failures are isolated per run but must not look green to CI:
+        # the report lists them, the exit code flags them
+        print(f"explore: {res.failed}/{len(res.rows)} run(s) failed",
+              file=sys.stderr)
+        return 1
     return 0
 
 
@@ -374,10 +440,33 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--no-baseline", dest="baseline", action="store_false",
                    help="skip pre-optimization reference-engine runs")
     p.add_argument("-o", "--output", dest="output",
-                   help="write the JSON document here instead of stdout")
-    p.add_argument("--json", action="store_true", dest="as_json",
-                   help="compact single-line JSON (default: pretty-printed)")
+                   help="write the pretty-printed document here")
+    p.add_argument("--json", dest="json_path", metavar="PATH",
+                   help="also write compact single-line JSON here (the "
+                        "perf gate and sweep tooling read this file)")
     p.set_defaults(fn=_cmd_bench)
+
+    p = sub.add_parser("explore",
+                       help="declarative co-design sweep (spec -> report)")
+    p.add_argument("spec", help="ExperimentSpec JSON path")
+    p.add_argument("--jobs", type=int, default=0,
+                   help="parallel worker processes (0 = cpu count)")
+    p.add_argument("--cache-dir", default=".explore_cache",
+                   help="content-addressed run cache (re-runs are free)")
+    p.add_argument("--sample", type=int, default=None,
+                   help="seeded random sample of N grid points "
+                        "(overrides the spec's sampling)")
+    p.add_argument("--seed", type=int, default=None,
+                   help="override the spec's seed")
+    p.add_argument("--dry-run", action="store_true",
+                   help="print the expanded grid (canonical JSON) and exit")
+    p.add_argument("--report", help="write the markdown report here")
+    p.add_argument("--json", dest="json_out", metavar="PATH",
+                   help="write the canonical report JSON here")
+    p.add_argument("--results", help="write the columnar results store here")
+    p.add_argument("-v", "--verbose", action="store_true",
+                   help="print the markdown report to stdout")
+    p.set_defaults(fn=_cmd_explore)
 
     return ap
 

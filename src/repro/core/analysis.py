@@ -155,6 +155,69 @@ def columnar_summary(path_or_reader) -> Dict[str, object]:
             reader.close()
 
 
+_EMPTY_ATTRS: Dict = {}
+
+
+def columnar_analyze(path_or_reader) -> Dict[str, object]:
+    """The ``analyze`` sink's document straight off v4 columnar blocks.
+
+    Produces the exact dict the streaming node-object path
+    (``pipeline.builtin.AnalyzeSink``, shallow mode) produces — same keys,
+    same insertion order, same float accumulation order, so the CLI's JSON
+    output is byte-identical — without materializing a single ETNode.
+    Unlike :func:`columnar_summary` this includes Table-5 ``op_counts``,
+    which needs the name column and sparse attrs (still no node objects).
+
+    Accepts a v4 ``.chkb`` path or an open :class:`ChkbReader`.
+    """
+    from .serialization import _COLL_TYPE_OF, _NODE_TYPE_OF, ChkbReader
+
+    reader = (ChkbReader(path_or_reader) if isinstance(path_or_reader, str)
+              else path_or_reader)
+    owns = isinstance(path_or_reader, str)
+    try:
+        sk = reader.skeleton()
+        nodes = 0
+        edges = 0
+        total_bytes = 0
+        duration_us = 0.0
+        op_counts: Counter = Counter()
+        comm: Dict[str, Dict[str, float]] = defaultdict(
+            lambda: {"count": 0, "bytes": 0.0, "duration_us": 0.0})
+        comm_type_ints = _COMM_NODE_TYPE_INTS
+        for cols in reader.iter_column_blocks():
+            nodes += cols.count
+            edges += sum(cols.dep_counts)
+            names = cols.names
+            attrs: Dict[int, Dict] = dict(zip(cols.attr_idx, cols.attr_vals))
+            for i, (ty, ct, cb, du) in enumerate(
+                    zip(cols.types, cols.comm_types, cols.comm_bytes,
+                        cols.durations)):
+                # per-node accumulation (not per-column sums): float adds in
+                # node order, matching the sink's arithmetic bit-for-bit
+                total_bytes += cb
+                duration_us += du
+                op_counts[categorize_fields(
+                    _NODE_TYPE_OF[ty], _COLL_TYPE_OF[ct], names[i],
+                    attrs.get(i, _EMPTY_ATTRS))] += 1
+                if ty in comm_type_ints:
+                    k = COLLECTIVE_NAMES.get(_COLL_TYPE_OF[ct], "P2P")
+                    row = comm[k]
+                    row["count"] += 1
+                    row["bytes"] += cb
+                    row["duration_us"] += du
+        return {
+            "nodes": nodes, "edges": edges,
+            "total_bytes": total_bytes, "sum_duration_us": duration_us,
+            "op_counts": dict(op_counts), "comm_summary": dict(comm),
+            "rank": sk.rank,
+            "world_size": sk.world_size,
+        }
+    finally:
+        if owns:
+            reader.close()
+
+
 def duration_cdf(et: ExecutionTrace, node_type: Optional[NodeType] = NodeType.COMP
                  ) -> List[Tuple[float, float]]:
     """(duration_us, cumulative_fraction) points — Fig 9a."""

@@ -32,7 +32,12 @@ def to_dot(et: ExecutionTrace, max_nodes: int = 500,
            annotate: bool = True) -> str:
     lines = ["digraph chakra_et {", "  rankdir=TB;",
              "  node [shape=box, style=filled];"]
-    nodes = et.sorted_nodes()[:max_nodes]
+    # deterministic truncation: the first max_nodes nodes by ascending id
+    # (never insertion/dict order), with the elision made visible instead
+    # of silently dropping the tail
+    all_nodes = et.sorted_nodes()
+    nodes = all_nodes[:max_nodes]
+    elided = len(all_nodes) - len(nodes)
     keep = {n.id for n in nodes}
     for n in nodes:
         label = n.name or f"node{n.id}"
@@ -53,6 +58,11 @@ def to_dot(et: ExecutionTrace, max_nodes: int = 500,
         for d in n.sync_deps:
             if d in keep:
                 lines.append(f"  n{d} -> n{n.id} [style=dotted, color=red];")
+    if elided:
+        lines.append(
+            f'  elided [label="{elided} nodes elided '
+            f'(showing first {len(nodes)} of {len(all_nodes)} by id)", '
+            f'shape=plaintext, style=dashed];')
     lines.append("}")
     return "\n".join(lines)
 

@@ -1,0 +1,37 @@
+"""repro.explore — declarative co-design sweep engine (paper §5 / Fig 12).
+
+Chakra's co-design promise operationalized: describe a design space once
+(:class:`ExperimentSpec` — workloads x topology/bandwidth/scale/fidelity/
+synth-knob axes), run it process-parallel with a content-addressed run
+cache (:func:`run_sweep` — re-runs and incremental spec edits are
+near-instant, failures are isolated per run), and get ranked answers back
+(:func:`build_report` — per-workload rankings, cost/makespan Pareto
+frontiers, per-axis sensitivity).
+
+* :mod:`spec`   — ExperimentSpec / RunConfig, grid + seeded random
+  expansion, canonical content hashes,
+* :mod:`runner` — process-parallel executor, on-disk RunCache, columnar
+  results store,
+* :mod:`report` — rankings, Pareto frontiers, sensitivity deltas,
+  markdown/JSON rendering,
+* :mod:`stages` — ``explore.run`` / ``explore.report`` registry entries;
+  ``python -m repro explore SPEC`` is the CLI verb.
+
+Importing this package registers the stages.
+"""
+from .spec import (AXIS_ORDER, CACHE_SCHEMA, ExperimentSpec, GRID_SCHEMA,
+                   RunConfig, SPEC_SCHEMA, as_spec, canonical_json)
+from .runner import (RESULTS_SCHEMA, RunCache, SweepResult, build_workload,
+                     execute_run, run_sweep)
+from .report import (REPORT_SCHEMA, build_report, render_markdown,
+                     report_json_bytes, save_markdown, save_report_json)
+from . import stages  # noqa: F401  (side effect: registers explore.* stages)
+
+__all__ = [
+    "AXIS_ORDER", "CACHE_SCHEMA", "GRID_SCHEMA", "SPEC_SCHEMA",
+    "RESULTS_SCHEMA", "REPORT_SCHEMA",
+    "ExperimentSpec", "RunConfig", "as_spec", "canonical_json",
+    "RunCache", "SweepResult", "build_workload", "execute_run", "run_sweep",
+    "build_report", "render_markdown", "report_json_bytes",
+    "save_markdown", "save_report_json",
+]

@@ -1,0 +1,206 @@
+"""Ranked co-design reports: who wins, at what cost, and what matters.
+
+Reduces a :class:`~repro.explore.runner.SweepResult` to a deterministic
+document:
+
+* **ranking** — per workload, every successful config sorted by makespan
+  (ties broken by cost, then content hash), reproducing the paper's Fig-12
+  topology re-ranking as data: the allreduce-heavy ranking leads with ring
+  while the a2a-heavy ranking leads with the point-to-point fabrics.
+* **pareto** — the cost/performance frontier per workload, with the cost
+  proxy = chip count x per-link bandwidth: a config is on the frontier iff
+  no other config is both cheaper and faster.
+* **sensitivity** — per swept axis, the spread between the best achievable
+  makespan at each axis value: a large delta means that axis is a
+  first-order co-design decision for this workload, a near-zero delta means
+  the axis doesn't matter in the swept range.
+
+``report_json_bytes`` is canonical (sorted keys, fixed float shortening),
+so identical spec + seed ⇒ byte-identical report JSON — the regression
+anchor the determinism tests pin.  Wall-clock and cache provenance fields
+never enter the document.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, List, Optional
+
+from .runner import SweepResult
+from .spec import AXIS_ORDER, canonical_json
+
+REPORT_SCHEMA = "repro-explore-report/v1"
+
+#: axes that can explain a result delta (everything swept except workload)
+_SENSITIVITY_AXES = AXIS_ORDER
+
+
+def _f(x: Optional[float]) -> Optional[float]:
+    """Float shortening for report readability; deterministic."""
+    if x is None:
+        return None
+    return float(f"{float(x):.6g}")
+
+
+def _entry(row: Dict[str, Any]) -> Dict[str, Any]:
+    """One compact ranking entry (no wall-clock, no cache provenance)."""
+    return {
+        "hash": row["hash"][:12],
+        "topology": row["topology"],
+        "world_size": row["world_size"],
+        "link_bw": _f(row["link_bw"]),
+        "latency_s": _f(row["latency_s"]),
+        "fidelity": row["fidelity"],
+        "steps": row["steps"],
+        "scale_comm_bytes": _f(row["scale_comm_bytes"]),
+        "jitter": _f(row["jitter"]),
+        "makespan_s": _f(row["makespan_s"]),
+        "exposed_comm_s": _f(row["exposed_comm_s"]),
+        "comm_time_total_s": _f(row["comm_time_total_s"]),
+        "busiest_link_frac": _f(row["busiest_link_frac"]),
+        "cost": _f(row["cost"]),
+    }
+
+
+def _pareto(entries: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """Non-dominated subset on (cost asc, makespan asc)."""
+    by_cost = sorted(entries,
+                     key=lambda e: (e["cost"], e["makespan_s"], e["hash"]))
+    frontier: List[Dict[str, Any]] = []
+    best = float("inf")
+    for e in by_cost:
+        if e["makespan_s"] < best:
+            frontier.append(e)
+            best = e["makespan_s"]
+    return frontier
+
+
+def _axis_of(row: Dict[str, Any], axis: str) -> Any:
+    if axis in ("stragglers", "ops_per_step", "scale_duration"):
+        return canonical_json(row["config"].get(axis)).decode()
+    return row.get(axis)
+
+
+def _sensitivity(rows: List[Dict[str, Any]]) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for axis in _SENSITIVITY_AXES:
+        groups: Dict[str, List[float]] = {}
+        for row in rows:
+            groups.setdefault(str(_axis_of(row, axis)),
+                              []).append(row["makespan_s"])
+        if len(groups) < 2:
+            continue                # axis not swept (or collapsed): skip
+        best = {v: _f(min(ms)) for v, ms in sorted(groups.items())}
+        lo, hi = min(best.values()), max(best.values())
+        out[axis] = {
+            "best_makespan_s": best,
+            "delta_pct": _f(100.0 * (hi - lo) / lo) if lo > 0 else None,
+        }
+    return out
+
+
+def build_report(result: SweepResult) -> Dict[str, Any]:
+    """The deterministic report document for one sweep."""
+    per_workload: Dict[str, Dict[str, Any]] = {}
+    by_workload: Dict[str, List[Dict[str, Any]]] = {}
+    for row in result.ok_rows:
+        by_workload.setdefault(row["workload"], []).append(row)
+    for name in sorted(by_workload):
+        rows = by_workload[name]
+        ranking = sorted((_entry(r) for r in rows),
+                         key=lambda e: (e["makespan_s"], e["cost"],
+                                        e["hash"]))
+        per_workload[name] = {
+            "runs": len(rows),
+            "ranking": ranking,
+            "best": ranking[0] if ranking else None,
+            "pareto": _pareto(ranking),
+            "sensitivity": _sensitivity(rows),
+        }
+    failures = [{"hash": r["hash"][:12], "workload": r["workload"],
+                 "topology": r["topology"], "world_size": r["world_size"],
+                 "error": r["error"]}
+                for r in result.rows if not r["ok"]]
+    return {
+        "schema": REPORT_SCHEMA,
+        "spec": {"name": result.spec_name, "hash": result.spec_hash},
+        "runs": {"total": len(result.rows), "ok": len(result.ok_rows),
+                 "failed": result.failed},
+        "workloads": per_workload,
+        "failures": failures,
+    }
+
+
+def report_json_bytes(doc: Dict[str, Any]) -> bytes:
+    """Canonical report bytes (the byte-identity determinism contract)."""
+    return canonical_json(doc) + b"\n"
+
+
+def save_report_json(doc: Dict[str, Any], path: str) -> str:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "wb") as fh:
+        fh.write(report_json_bytes(doc))
+    return path
+
+
+# ---------------------------------------------------------------- markdown
+def _ms(x: Optional[float]) -> str:
+    return "-" if x is None else f"{x * 1e3:.3f}"
+
+
+def _row_md(e: Dict[str, Any], mark: str = "") -> str:
+    return (f"| {e['topology']}{mark} | {e['world_size']} "
+            f"| {e['link_bw'] / 1e9:.1f} | {e['fidelity']} "
+            f"| {_ms(e['makespan_s'])} | {_ms(e['exposed_comm_s'])} "
+            f"| {e['cost'] / 1e9:.0f} |")
+
+
+def render_markdown(doc: Dict[str, Any], top: int = 10) -> str:
+    """Human-readable report: per-workload ranking tables + sensitivity."""
+    lines = [f"# Co-design sweep report: {doc['spec']['name']}", ""]
+    runs = doc["runs"]
+    lines.append(f"{runs['total']} configs ({runs['ok']} ok, "
+                 f"{runs['failed']} failed) · spec "
+                 f"`{doc['spec']['hash'][:12]}`")
+    for name, w in doc["workloads"].items():
+        lines += ["", f"## {name}", ""]
+        if not w["ranking"]:
+            lines.append("*(no successful runs)*")
+            continue
+        best = w["best"]
+        lines.append(f"**Best:** `{best['topology']}` x{best['world_size']} "
+                     f"@ {best['fidelity']} — "
+                     f"makespan {_ms(best['makespan_s'])} ms")
+        lines += ["", "| topology | chips | link GB/s | fidelity "
+                  "| makespan ms | exposed comm ms | cost GB/s |",
+                  "|---|---|---|---|---|---|---|"]
+        pareto = {e["hash"] for e in w["pareto"]}
+        for e in w["ranking"][:top]:
+            lines.append(_row_md(e, " *" if e["hash"] in pareto else ""))
+        if len(w["ranking"]) > top:
+            lines.append(f"| … {len(w['ranking']) - top} more | | | | | | |")
+        lines.append("")
+        lines.append("`*` = on the cost/makespan Pareto frontier "
+                     f"({len(w['pareto'])} of {w['runs']})")
+        if w["sensitivity"]:
+            lines += ["", "| axis | best-case spread | values |",
+                      "|---|---|---|"]
+            for axis, s in w["sensitivity"].items():
+                spread = ("-" if s["delta_pct"] is None
+                          else f"{s['delta_pct']:.1f}%")
+                vals = ", ".join(f"{v}={_ms(m)}ms"
+                                 for v, m in s["best_makespan_s"].items())
+                lines.append(f"| {axis} | {spread} | {vals} |")
+    if doc["failures"]:
+        lines += ["", "## Failures", ""]
+        for f in doc["failures"]:
+            lines.append(f"- `{f['hash']}` {f['workload']}/{f['topology']}"
+                         f"x{f['world_size']}: {f['error']}")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def save_markdown(doc: Dict[str, Any], path: str, top: int = 10) -> str:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as fh:
+        fh.write(render_markdown(doc, top=top))
+    return path

@@ -1,0 +1,326 @@
+"""Process-parallel sweep executor with a content-addressed run cache.
+
+One :class:`RunConfig` = one *run*: build (synthesize / generate / load) the
+workload, build the :class:`~repro.sim.topology.Fabric`, simulate, and
+reduce the :class:`~repro.sim.engine.SimResult` to a flat result row
+(makespan, exposed comm, per-link busy fractions, …).  Runs are pure
+functions of their config, so rows are cached on disk keyed by the config's
+content hash — a repeated sweep, or an incrementally edited spec, re-executes
+only the configs whose hashes are new, and ``SweepResult.executed == 0``
+certifies a fully-cached replay.
+
+Execution is process-parallel (``jobs > 1`` fans misses out over a
+``concurrent.futures.ProcessPoolExecutor``); a run that raises is isolated
+into an ``ok=False`` row with the error message instead of killing the
+sweep.  Rows come back in expansion order regardless of completion order,
+so downstream documents stay deterministic.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+from .spec import CACHE_SCHEMA, ExperimentSpec, RunConfig, as_spec
+
+RESULTS_SCHEMA = "repro-explore-results/v1"
+
+#: flat columns persisted per run (the results store is struct-of-arrays,
+#: like a CHKB v4 block: one list per field, parallel across runs)
+RESULT_COLUMNS = (
+    "hash", "workload", "topology", "world_size", "link_bw", "latency_s",
+    "fidelity", "steps", "scale_comm_bytes", "jitter", "ok", "cached",
+    "makespan_s", "compute_busy_s", "exposed_comm_s", "comm_time_total_s",
+    "comm_bytes_total", "events", "total_nodes", "ranks_simulated", "cost",
+    "busiest_link_frac", "error",
+)
+
+
+# ----------------------------------------------------------------- workload
+def _pattern_kwargs(fn, args: Dict[str, Any], world_size: int
+                    ) -> Dict[str, Any]:
+    import inspect
+    kw = dict(args)
+    params = inspect.signature(fn).parameters
+    if "ranks" in params and "ranks" not in kw:
+        kw["ranks"] = world_size
+    return kw
+
+
+def build_workload(cfg: RunConfig) -> List[Any]:
+    """Materialize the config's traces (imports stay inside the worker)."""
+    w = cfg.workload_dict()
+    if "pattern" in w:
+        from ..core.generator import PATTERNS
+        try:
+            fn = PATTERNS[w["pattern"]]
+        except KeyError:
+            raise ValueError(
+                f"unknown generator pattern {w['pattern']!r}; "
+                f"options: {sorted(PATTERNS)}") from None
+        # single-trace what-if (Fig-12 sweep shape): one rank's trace priced
+        # for the full world_size group by the simulator's group pricing
+        return [fn(**_pattern_kwargs(fn, w.get("args", {}), cfg.world_size))]
+    if "scenario" in w:
+        from ..synth import get_scenario, iter_rank_nodes, rank_skeleton
+        from ..synth.scenarios import resolve_knobs
+        sc = get_scenario(w["scenario"])
+        profile = sc.profile()
+        # a None axis value means "scenario decides"; an explicit value —
+        # including 0.0 jitter or {} stragglers — replaces the scenario
+        # default outright (resolve_knobs merges, which cannot express
+        # "explicitly none")
+        steps, stragglers, jitter, rest = resolve_knobs(
+            sc.knobs, steps=cfg.steps, jitter=cfg.jitter)
+        if cfg.stragglers is not None:
+            stragglers = {int(r): f for r, f in cfg.stragglers}
+        traces = []
+        for r in range(cfg.world_size):
+            et = rank_skeleton(profile, r, cfg.world_size, cfg.seed)
+            for n in iter_rank_nodes(
+                    profile, rank=r, steps=steps,
+                    ops_per_step=cfg.ops_per_step, seed=cfg.seed,
+                    scale_duration=cfg.scale_duration,
+                    scale_comm_bytes=cfg.scale_comm_bytes,
+                    straggler=float(stragglers.get(r, 1.0)), jitter=jitter):
+                et.add_node(n)
+            traces.append(et)
+        return traces
+    from ..core.serialization import load
+    return [load(p) for p in w["chkb"]]
+
+
+# ---------------------------------------------------------------- execution
+def execute_run(cfg: RunConfig) -> Dict[str, Any]:
+    """Run one design point and reduce it to a flat result row (no cache)."""
+    from ..sim import Fabric, SimConfig, Simulator
+    t0 = time.perf_counter()
+    traces = build_workload(cfg)
+    w = cfg.workload_dict()
+    # chkb workloads carry their own rank count (spec.py's contract: "the
+    # rank count comes from the file list") — the fabric and the cost
+    # proxy must be sized to it, not to the world_size axis default
+    world = len(traces) if "chkb" in w else cfg.world_size
+    fabric = Fabric.build(cfg.topology, world,
+                          link_bw=cfg.link_bw, latency_s=cfg.latency_s,
+                          mode=cfg.fidelity)
+    sim_cfg = SimConfig()
+    if cfg.stragglers and "scenario" not in w:
+        # synth injects stragglers into the traces; pattern/chkb workloads
+        # model them in the engine (factor > 1 = slower => speed < 1)
+        sim_cfg.speed_factors = {int(r): 1.0 / f for r, f in cfg.stragglers}
+    res = Simulator(traces, fabric, sim_cfg).run()
+    row: Dict[str, Any] = {
+        "schema": CACHE_SCHEMA,
+        "hash": cfg.run_hash,
+        "config": cfg.to_dict(),
+        "workload": cfg.workload_name,
+        "topology": cfg.topology,
+        "world_size": world,
+        "link_bw": cfg.link_bw,
+        "latency_s": cfg.latency_s,
+        "fidelity": cfg.fidelity,
+        "steps": cfg.steps,
+        "scale_comm_bytes": cfg.scale_comm_bytes,
+        "jitter": cfg.jitter,
+        "ok": True,
+        "cached": False,
+        "error": None,
+        "makespan_s": res.makespan_s,
+        "compute_busy_s": res.compute_busy_s,
+        "exposed_comm_s": res.exposed_comm_s,
+        "collective_time_s": res.collective_time_s,
+        "collective_bytes": res.collective_bytes,
+        "comm_time_total_s": sum(res.collective_time_s.values()),
+        "comm_bytes_total": sum(res.collective_bytes.values()),
+        "events": res.events,
+        "total_nodes": sum(len(t) for t in traces),
+        "ranks_simulated": len(traces),
+        "cost": world * cfg.link_bw,
+        "busiest_link_frac": 0.0,
+        "top_links": [],
+        "wall_s": round(time.perf_counter() - t0, 4),
+    }
+    if res.link_stats:
+        top = [{"name": l["name"], "bytes": l["bytes"],
+                "busy_frac": l.get("busy_frac", 0.0)}
+               for l in res.link_stats.get("top_links", [])]
+        row["top_links"] = top
+        # max busy fraction, not the top-bytes link's: with heterogeneous
+        # bandwidths (clos uplinks = 2x nic) the most-loaded link by bytes
+        # is not necessarily the most congested one
+        row["busiest_link_frac"] = max(
+            (l["busy_frac"] for l in top), default=0.0)
+    return row
+
+
+def _error_row(cfg: RunConfig, err: BaseException) -> Dict[str, Any]:
+    # .get: this row is the isolation backstop — it must be constructible
+    # even for a malformed workload entry (e.g. unvalidated, no "name")
+    name = cfg.workload_dict().get("name", "?")
+    return {
+        "schema": CACHE_SCHEMA, "hash": cfg.run_hash,
+        "config": cfg.to_dict(), "workload": name,
+        "topology": cfg.topology, "world_size": cfg.world_size,
+        "link_bw": cfg.link_bw, "latency_s": cfg.latency_s,
+        "fidelity": cfg.fidelity, "steps": cfg.steps,
+        "scale_comm_bytes": cfg.scale_comm_bytes, "jitter": cfg.jitter,
+        "ok": False, "cached": False,
+        "error": f"{type(err).__name__}: {err}",
+        "makespan_s": None, "compute_busy_s": None, "exposed_comm_s": None,
+        "collective_time_s": {}, "collective_bytes": {},
+        "comm_time_total_s": None, "comm_bytes_total": None,
+        "events": 0, "total_nodes": 0, "ranks_simulated": 0,
+        "cost": cfg.cost, "busiest_link_frac": None, "top_links": [],
+        "wall_s": 0.0,
+    }
+
+
+def _worker(cfg_dict: Dict[str, Any]) -> Dict[str, Any]:
+    """Pool entry point: rebuild the config, never raise."""
+    cfg = RunConfig.from_dict(cfg_dict)
+    try:
+        return execute_run(cfg)
+    except Exception as e:          # noqa: BLE001 — isolation is the point
+        return _error_row(cfg, e)
+
+
+# -------------------------------------------------------------------- cache
+class RunCache:
+    """Content-addressed on-disk row store: ``<dir>/<h[:2]>/<h>.json``."""
+
+    def __init__(self, root: str) -> None:
+        self.root = root
+
+    def path(self, run_hash: str) -> str:
+        return os.path.join(self.root, run_hash[:2], run_hash + ".json")
+
+    def get(self, run_hash: str) -> Optional[Dict[str, Any]]:
+        try:
+            with open(self.path(run_hash)) as fh:
+                row = json.load(fh)
+        except (OSError, ValueError):
+            return None
+        if row.get("schema") != CACHE_SCHEMA or row.get("hash") != run_hash:
+            return None             # stale schema or corrupted entry
+        row["cached"] = True
+        return row
+
+    def put(self, row: Dict[str, Any]) -> None:
+        path = self.path(row["hash"])
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as fh:
+                json.dump(row, fh, sort_keys=True)
+            os.replace(tmp, path)   # atomic: concurrent sweeps never see half
+        except BaseException:
+            os.unlink(tmp)
+            raise
+
+
+# -------------------------------------------------------------------- sweep
+@dataclass
+class SweepResult:
+    """Every run's row (expansion order) plus sweep-level accounting."""
+
+    spec_name: str
+    spec_hash: str
+    rows: List[Dict[str, Any]] = field(default_factory=list)
+    executed: int = 0               # simulations actually run this sweep
+    cached: int = 0                 # rows served from the cache
+    failed: int = 0
+    jobs: int = 1
+    wall_s: float = 0.0
+
+    @property
+    def ok_rows(self) -> List[Dict[str, Any]]:
+        return [r for r in self.rows if r["ok"]]
+
+    def summary(self) -> str:
+        return (f"sweep {self.spec_name}: {len(self.rows)} configs, "
+                f"{self.executed} simulated, {self.cached} cached, "
+                f"{self.failed} failed ({self.jobs} jobs, "
+                f"{self.wall_s:.2f}s)")
+
+    def results_doc(self) -> Dict[str, Any]:
+        """Columnar (struct-of-arrays) results store document."""
+        columns: Dict[str, List[Any]] = {c: [] for c in RESULT_COLUMNS}
+        for row in self.rows:
+            for c in RESULT_COLUMNS:
+                columns[c].append(row.get(c))
+        return {"schema": RESULTS_SCHEMA, "spec_name": self.spec_name,
+                "spec_hash": self.spec_hash, "count": len(self.rows),
+                "columns": columns}
+
+    def save_results(self, path: str) -> str:
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(path, "w") as fh:
+            json.dump(self.results_doc(), fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        return path
+
+
+def run_sweep(spec: Any, jobs: int = 1, cache_dir: Optional[str] = None,
+              configs: Optional[Sequence[RunConfig]] = None,
+              progress: Optional[Any] = None) -> SweepResult:
+    """Expand (unless ``configs`` is given) and execute the sweep.
+
+    Cache hits are resolved in the parent before any worker spawns, so a
+    fully-cached sweep performs zero simulations and never pays pool
+    startup.  Misses run serially for ``jobs <= 1``, else on a process
+    pool; ``progress`` (a callable taking one row) streams completion.
+    """
+    spec = as_spec(spec)
+    t0 = time.perf_counter()
+    cfgs = list(configs) if configs is not None else spec.expand()
+    cache = RunCache(cache_dir) if cache_dir else None
+    rows: Dict[int, Dict[str, Any]] = {}
+    misses: List[int] = []
+    for i, cfg in enumerate(cfgs):
+        hit = cache.get(cfg.run_hash) if cache else None
+        if hit is not None:
+            rows[i] = hit
+            if progress:
+                progress(hit)
+        else:
+            misses.append(i)
+
+    def finish(i: int, row: Dict[str, Any]) -> None:
+        rows[i] = row
+        if cache and row["ok"]:
+            cache.put(row)
+        if progress:
+            progress(row)
+
+    if misses and jobs > 1:
+        import multiprocessing
+        from concurrent.futures import ProcessPoolExecutor, as_completed
+        # spawn, not fork: the parent often has jax (multithreaded) loaded
+        # — forking a multithreaded process can deadlock the workers.
+        # Workers rebuild configs from plain dicts and import lazily, so a
+        # fresh interpreter is all they need.
+        ctx = multiprocessing.get_context("spawn")
+        with ProcessPoolExecutor(max_workers=min(jobs, len(misses)),
+                                 mp_context=ctx) as pool:
+            futs = {pool.submit(_worker, cfgs[i].to_dict()): i
+                    for i in misses}
+            # completion order: every finished row is cached (and streamed
+            # to `progress`) immediately, never held behind a slower run
+            for fut in as_completed(futs):
+                finish(futs[fut], fut.result())
+    else:
+        for i in misses:
+            finish(i, _worker(cfgs[i].to_dict()))
+
+    ordered = [rows[i] for i in range(len(cfgs))]
+    return SweepResult(
+        spec_name=spec.name, spec_hash=spec.spec_hash(), rows=ordered,
+        executed=sum(1 for r in ordered if not r["cached"]),
+        cached=sum(1 for r in ordered if r["cached"]),
+        failed=sum(1 for r in ordered if not r["ok"]),
+        jobs=max(1, int(jobs)),
+        wall_s=round(time.perf_counter() - t0, 4))

@@ -1,0 +1,403 @@
+"""Declarative co-design experiment specs (paper §5 / Fig 12 as data).
+
+An :class:`ExperimentSpec` names a set of *workloads* and the *axes* of the
+design space to sweep them across; :meth:`ExperimentSpec.expand` turns it
+into concrete :class:`RunConfig` rows, each with a canonical content hash
+that keys the runner's on-disk cache.  Everything is deterministic: the same
+spec + seed expands to the byte-identical grid on every machine (fixed axis
+order, canonical JSON, SplitMix64 sampling — no global RNG).
+
+Workload entries (one dict each, exactly one selector key):
+
+* ``{"pattern": "moe_mixed", "args": {"mode": "alltoall", "iters": 4}}`` —
+  a :data:`repro.core.generator.PATTERNS` generator, simulated single-trace
+  what-if style (one rank priced for the full ``world_size`` group — the
+  Fig-12 sweep shape).
+* ``{"scenario": "dp-dense"}`` — a :mod:`repro.synth` scenario: the profile
+  is re-fitted and ``world_size`` coherent ranks are synthesized per run
+  (the synth knob axes — ``steps``, ``stragglers``, ``jitter``,
+  ``scale_comm_bytes`` … — apply here).
+* ``{"chkb": ["rank00000.chkb", ...]}`` — pre-captured per-rank trace
+  files; the rank count comes from the file list.
+
+Axes (all optional; single-value defaults fill the gaps so every RunConfig
+is fully specified and its hash is stable under spec edits that only *add*
+axes at their default value):
+
+``world_size``, ``topology``, ``link_bw``, ``latency_s``, ``fidelity``
+(fabric axes) and ``steps``, ``ops_per_step``, ``scale_duration``,
+``scale_comm_bytes``, ``jitter``, ``stragglers`` (synth knob axes; recorded
+on every run, applied to scenario workloads — pattern/chkb workloads take
+stragglers via simulator speed factors and ignore the other knobs).
+
+Sampling: ``{"mode": "grid"}`` (default, full cartesian product) or
+``{"mode": "random", "n": 64, "seed": 7}`` — ``n`` distinct grid points
+drawn by index from a seeded SplitMix64 stream without materializing the
+full grid.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+from ..core.infragraph import TPU_V5E
+
+SPEC_SCHEMA = "repro-explore-spec/v1"
+GRID_SCHEMA = "repro-explore-grid/v1"
+#: bumping this invalidates every cached run (config semantics changed)
+CACHE_SCHEMA = "repro-explore-cache/v1"
+
+#: fixed expansion order — the determinism contract rides on it
+AXIS_ORDER = ("world_size", "topology", "link_bw", "latency_s", "fidelity",
+              "steps", "ops_per_step", "scale_duration", "scale_comm_bytes",
+              "jitter", "stragglers")
+
+AXIS_DEFAULTS: Dict[str, List[Any]] = {
+    "world_size": [8],
+    "topology": ["switch"],
+    "link_bw": [TPU_V5E["ici_link_bw"]],
+    "latency_s": [TPU_V5E["ici_latency_s"]],
+    "fidelity": ["analytic"],
+    "steps": [None],
+    "ops_per_step": [None],
+    "scale_duration": [1.0],
+    "scale_comm_bytes": [1.0],
+    # None = "workload decides" (scenario knob defaults apply); an explicit
+    # axis value — including 0.0 / {} — always wins over scenario defaults
+    "jitter": [None],
+    "stragglers": [None],
+}
+
+_WORKLOAD_KINDS = ("pattern", "scenario", "chkb")
+
+
+def canonical_json(obj: Any) -> bytes:
+    """Canonical encoding: sorted keys, no whitespace — the hash input."""
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"),
+                      ensure_ascii=True).encode("utf-8")
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    """One concrete design point: workload x fabric x synth knobs."""
+
+    workload: str                    # canonical JSON of the workload entry
+    world_size: int
+    topology: str
+    link_bw: float
+    latency_s: float
+    fidelity: str
+    steps: Optional[int]
+    ops_per_step: Optional[int]
+    scale_duration: float
+    scale_comm_bytes: float
+    jitter: Optional[float]
+    stragglers: Optional[Tuple[Tuple[str, float], ...]]
+    seed: int
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "workload": json.loads(self.workload),
+            "world_size": self.world_size,
+            "topology": self.topology,
+            "link_bw": self.link_bw,
+            "latency_s": self.latency_s,
+            "fidelity": self.fidelity,
+            "steps": self.steps,
+            "ops_per_step": self.ops_per_step,
+            "scale_duration": self.scale_duration,
+            "scale_comm_bytes": self.scale_comm_bytes,
+            "jitter": self.jitter,
+            "stragglers": (None if self.stragglers is None
+                           else dict(self.stragglers)),
+            "seed": self.seed,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "RunConfig":
+        return cls(workload=_freeze(d["workload"]),
+                   world_size=int(d["world_size"]),
+                   topology=str(d["topology"]),
+                   link_bw=float(d["link_bw"]),
+                   latency_s=float(d["latency_s"]),
+                   fidelity=str(d["fidelity"]),
+                   steps=None if d.get("steps") is None else int(d["steps"]),
+                   ops_per_step=(None if d.get("ops_per_step") is None
+                                 else int(d["ops_per_step"])),
+                   scale_duration=float(d.get("scale_duration", 1.0)),
+                   scale_comm_bytes=float(d.get("scale_comm_bytes", 1.0)),
+                   jitter=(None if d.get("jitter") is None
+                           else float(d["jitter"])),
+                   stragglers=(None if d.get("stragglers") is None
+                               else _freeze_stragglers(d["stragglers"])),
+                   seed=int(d.get("seed", 0)))
+
+    @property
+    def run_hash(self) -> str:
+        """Content address: sha256 over the canonical config + cache schema.
+
+        Two configs hash equal iff every field that can influence the
+        simulation result is equal, so the runner's cache is safe to share
+        across specs, machines, and sessions.
+        """
+        payload = canonical_json({"schema": CACHE_SCHEMA,
+                                  "config": self.to_dict()})
+        return hashlib.sha256(payload).hexdigest()
+
+    def workload_dict(self) -> Dict[str, Any]:
+        return json.loads(self.workload)
+
+    @property
+    def workload_name(self) -> str:
+        return self.workload_dict()["name"]
+
+    @property
+    def cost(self) -> float:
+        """Co-design cost proxy: chip count x per-link bandwidth."""
+        return self.world_size * self.link_bw
+
+    def label(self) -> str:
+        return (f"{self.workload_name}/{self.topology}"
+                f"x{self.world_size}@{self.fidelity}")
+
+
+def _freeze(obj: Dict[str, Any]) -> str:
+    """Hashable, order-stable view of a workload entry (canonical JSON)."""
+    return canonical_json(obj).decode("utf-8")
+
+
+def _freeze_stragglers(obj: Dict[Any, Any]) -> Tuple[Tuple[str, float], ...]:
+    # keys as strings (JSON object keys), sorted numerically for stability
+    return tuple(sorted(((str(int(k)), float(v)) for k, v in obj.items()),
+                        key=lambda kv: int(kv[0])))
+
+
+@dataclass
+class ExperimentSpec:
+    """A declarative design-space sweep: workloads x axes (+ sampling)."""
+
+    name: str
+    workloads: List[Dict[str, Any]]
+    axes: Dict[str, List[Any]] = field(default_factory=dict)
+    seed: int = 0
+    sample: Dict[str, Any] = field(default_factory=lambda: {"mode": "grid"})
+
+    # ------------------------------------------------------------- loading
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ExperimentSpec":
+        if not isinstance(d, dict):
+            raise ValueError(f"spec must be a dict, got {type(d).__name__}")
+        unknown = set(d) - {"schema", "name", "workloads", "axes", "seed",
+                            "sample"}
+        if unknown:
+            raise ValueError(f"unknown spec keys: {sorted(unknown)}")
+        spec = cls(name=str(d.get("name", "experiment")),
+                   workloads=[dict(w) for w in d.get("workloads", [])],
+                   axes=dict(d.get("axes") or {}),
+                   seed=int(d.get("seed", 0)),
+                   sample=dict(d.get("sample") or {"mode": "grid"}))
+        spec.validate()
+        return spec
+
+    @classmethod
+    def from_file(cls, path: str) -> "ExperimentSpec":
+        with open(path) as fh:
+            return cls.from_dict(json.load(fh))
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"schema": SPEC_SCHEMA, "name": self.name,
+                "workloads": self.workloads, "axes": self.axes,
+                "seed": self.seed, "sample": self.sample}
+
+    def save(self, path: str) -> str:
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(path, "w") as fh:
+            json.dump(self.to_dict(), fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        return path
+
+    def spec_hash(self) -> str:
+        return hashlib.sha256(canonical_json(self.to_dict())).hexdigest()
+
+    # ---------------------------------------------------------- validation
+    def validate(self) -> None:
+        if not self.workloads:
+            raise ValueError("spec needs at least one workload entry")
+        seen_names = set()
+        for i, w in enumerate(self.workloads):
+            kinds = [k for k in _WORKLOAD_KINDS if k in w]
+            if len(kinds) != 1:
+                raise ValueError(
+                    f"workload #{i} must have exactly one of "
+                    f"{_WORKLOAD_KINDS}, got {sorted(w)}")
+            kind = kinds[0]
+            unknown = set(w) - {"name", "args", kind, "chkb_digest"}
+            if unknown:
+                raise ValueError(
+                    f"workload #{i}: unknown keys {sorted(unknown)}")
+            if kind == "chkb":
+                paths = w["chkb"]
+                if not isinstance(paths, list) or not paths:
+                    raise ValueError(
+                        f"workload #{i}: chkb needs a non-empty path list")
+                # content-address the files themselves: a re-captured trace
+                # must change the run hash, or the cache would silently
+                # serve results for the file's previous contents
+                w["chkb_digest"] = [_digest_file(p) for p in paths]
+            if "name" not in w:
+                w["name"] = _default_name(kind, w)
+            if w["name"] in seen_names:
+                raise ValueError(f"duplicate workload name {w['name']!r}")
+            seen_names.add(w["name"])
+        unknown_axes = set(self.axes) - set(AXIS_ORDER)
+        if unknown_axes:
+            raise ValueError(f"unknown axes {sorted(unknown_axes)}; "
+                             f"options: {list(AXIS_ORDER)}")
+        for axis, values in self.axes.items():
+            # a bare scalar (the natural typo for a one-value axis) must be
+            # rejected, not list()-ed: "ring" would become ['r','i','n','g']
+            if isinstance(values, (str, bytes)) or not isinstance(
+                    values, (list, tuple)):
+                raise ValueError(
+                    f"axis {axis!r} must be a list of values, got "
+                    f"{values!r}")
+            if not values:
+                raise ValueError(f"axis {axis!r} has no values")
+            self.axes[axis] = list(values)
+        # topology / fidelity names are validated lazily (repro.sim pulls in
+        # heavy backends); catch obvious typos early from the light tables
+        mode = self.sample.get("mode", "grid")
+        if mode not in ("grid", "random"):
+            raise ValueError(
+                f"unknown sample mode {mode!r}; options: grid, random")
+        if mode == "random" and int(self.sample.get("n", 0)) <= 0:
+            raise ValueError("random sampling needs a positive sample n")
+
+    # ----------------------------------------------------------- expansion
+    def _axis_values(self) -> List[Tuple[str, List[Any]]]:
+        return [(a, list(self.axes.get(a, AXIS_DEFAULTS[a])))
+                for a in AXIS_ORDER]
+
+    def grid_size(self) -> int:
+        total = len(self.workloads)
+        for _, values in self._axis_values():
+            total *= len(values)
+        return total
+
+    def _config_at(self, index: int,
+                   axes: List[Tuple[str, List[Any]]]) -> RunConfig:
+        """Decode a flat grid index (mixed radix, workload-major)."""
+        dims = [len(v) for _, v in axes]
+        choice: Dict[str, Any] = {}
+        for (axis, values), dim in zip(reversed(axes), reversed(dims)):
+            choice[axis] = values[index % dim]
+            index //= dim
+        w = self.workloads[index]
+        return RunConfig(
+            workload=_freeze(w),
+            world_size=int(choice["world_size"]),
+            topology=str(choice["topology"]),
+            link_bw=float(choice["link_bw"]),
+            latency_s=float(choice["latency_s"]),
+            fidelity=str(choice["fidelity"]),
+            steps=(None if choice["steps"] is None else int(choice["steps"])),
+            ops_per_step=(None if choice["ops_per_step"] is None
+                          else int(choice["ops_per_step"])),
+            scale_duration=float(choice["scale_duration"]),
+            scale_comm_bytes=float(choice["scale_comm_bytes"]),
+            jitter=(None if choice["jitter"] is None
+                    else float(choice["jitter"])),
+            stragglers=(None if choice["stragglers"] is None
+                        else _freeze_stragglers(choice["stragglers"])),
+            seed=self.seed)
+
+    def _sample_indices(self, total: int) -> Iterator[int]:
+        mode = self.sample.get("mode", "grid")
+        if mode == "grid":
+            yield from range(total)
+            return
+        # lazy: repro.synth's package import registers pipeline stages,
+        # which (re-)imports this module — keep spec.py cycle-free
+        from ..synth.sampler import SplitMix64, derive_seed
+        n = min(int(self.sample["n"]), total)
+        rng = SplitMix64(derive_seed(
+            int(self.sample.get("seed", self.seed)), "explore.sample"))
+        seen = set()
+        while len(seen) < n:
+            idx = rng.randint(total)
+            if idx not in seen:
+                seen.add(idx)
+                yield idx
+
+    def expand(self) -> List[RunConfig]:
+        """Concrete design points, in deterministic expansion order."""
+        axes = self._axis_values()
+        total = self.grid_size()
+        return [self._config_at(i, axes) for i in self._sample_indices(total)]
+
+    def expansion_doc(self) -> Dict[str, Any]:
+        """The ``--dry-run`` document: every config + its content hash."""
+        configs = self.expand()
+        return {"schema": GRID_SCHEMA,
+                "spec": {"name": self.name, "hash": self.spec_hash()},
+                "grid_size": self.grid_size(),
+                "total": len(configs),
+                "configs": [{"hash": c.run_hash, **c.to_dict()}
+                            for c in configs]}
+
+    def expansion_json(self) -> bytes:
+        """Canonical bytes of :meth:`expansion_doc` (determinism tests)."""
+        return canonical_json(self.expansion_doc())
+
+
+#: (abspath, size, mtime_ns) -> digest — re-validation within one process
+#: (as_spec, CLI overrides) must not re-read multi-GB trace files
+_DIGEST_MEMO: Dict[Tuple[str, int, int], str] = {}
+
+
+def _digest_file(path: str, chunk: int = 1 << 20) -> str:
+    try:
+        st = os.stat(path)
+        key = (os.path.abspath(path), st.st_size, st.st_mtime_ns)
+        hit = _DIGEST_MEMO.get(key)
+        if hit is not None:
+            return hit
+        h = hashlib.blake2b(digest_size=16)
+        with open(path, "rb") as fh:
+            while True:
+                block = fh.read(chunk)
+                if not block:
+                    break
+                h.update(block)
+    except OSError as e:
+        raise ValueError(f"chkb workload file unreadable: {path} "
+                         f"({e.strerror})") from None
+    _DIGEST_MEMO[key] = h.hexdigest()
+    return _DIGEST_MEMO[key]
+
+
+def _default_name(kind: str, w: Dict[str, Any]) -> str:
+    if kind == "pattern":
+        mode = (w.get("args") or {}).get("mode")
+        return f"{w['pattern']}-{mode}" if mode else w["pattern"]
+    if kind == "scenario":
+        return w["scenario"]
+    return os.path.splitext(os.path.basename(w["chkb"][0]))[0]
+
+
+def as_spec(spec: Any) -> ExperimentSpec:
+    """Coerce a spec-like (ExperimentSpec | dict | JSON path) to a
+    validated spec (validation also normalizes: workload names, file
+    digests — a directly-constructed ExperimentSpec needs it too)."""
+    if isinstance(spec, ExperimentSpec):
+        spec.validate()
+        return spec
+    if isinstance(spec, dict):
+        return ExperimentSpec.from_dict(spec)
+    if isinstance(spec, str):
+        return ExperimentSpec.from_file(spec)
+    raise ValueError(f"cannot build an ExperimentSpec from "
+                     f"{type(spec).__name__}")

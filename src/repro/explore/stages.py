@@ -1,0 +1,29 @@
+"""Registry wiring for the sweep engine (kind="experiment").
+
+Like the perf suite's kind="benchmark" entries, the explore stages live in
+the shared stage registry so ``python -m repro stages`` lists them and
+downstream harnesses dispatch them by name instead of importing call sites:
+
+    make_stage("experiment", "explore.run", spec, jobs=4, cache_dir=".cache")
+    make_stage("experiment", "explore.report", sweep_result)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from ..pipeline.registry import register_stage
+from .runner import SweepResult, run_sweep
+from .report import build_report
+
+
+@register_stage("explore.run", kind="experiment")
+def explore_run(spec: Any, jobs: int = 1, cache_dir: Optional[str] = None,
+                **kw: Any) -> SweepResult:
+    """Expand a co-design spec and execute the sweep (cached, parallel)."""
+    return run_sweep(spec, jobs=jobs, cache_dir=cache_dir, **kw)
+
+
+@register_stage("explore.report", kind="experiment")
+def explore_report(result: SweepResult) -> Dict[str, Any]:
+    """Rank a sweep's rows: per-workload ranking + Pareto + sensitivity."""
+    return build_report(result)

@@ -24,6 +24,9 @@ Three benchmarks, registered in the stage registry under kind="benchmark"
   into CHKB v4 (the ≥100k nodes/sec floor; full scale synthesizes a ≥1M-node
   8-rank workload), and a tracemalloc bounded-memory probe showing the
   generator never materializes per-rank node lists.
+* ``perf_explore`` — co-design sweep engine (``repro.explore``): spec
+  expansion rate (canonical hashing included) and a cold sweep vs its
+  fully-cached replay — the replay must execute zero simulations.
 
 Results aggregate into a JSON document written to ``BENCH_perf.json`` at the
 repo root (see :func:`run_suite` / :func:`write_bench`).  Wall-clock numbers
@@ -60,6 +63,9 @@ _SCALE = {
         # world x (steps * ops/step) = 2 x 10k = 20k nodes
         "synth": {"world": 2, "steps": 50, "ops_per_step": 200,
                   "profile_nodes": 10_000},
+        # 2 workloads x 4 topo x 4 world x 4 bw x 2 lat x 2 fid x 2 jitter
+        "explore": {"jitter_values": 2, "iters": 4,
+                    "world_sizes": [4, 8], "jobs": 2},
     },
     "full": {
         "feeder_nodes": [10_000, 100_000],
@@ -74,6 +80,9 @@ _SCALE = {
         # world x (steps * ops/step) = 8 x 131072 = 1,048,576 nodes (>=1M)
         "synth": {"world": 8, "steps": 512, "ops_per_step": 256,
                   "profile_nodes": 50_000},
+        # 2048-config expansion; 24-config sweep, 4-way parallel
+        "explore": {"jitter_values": 4, "iters": 16,
+                    "world_sizes": [4, 8, 16, 32], "jobs": 4},
     },
 }
 
@@ -376,6 +385,72 @@ def perf_synth(scale: str = "full", **_: Any) -> Dict[str, Any]:
     }
 
 
+# ------------------------------------------------------------------ explore
+def perf_explore(scale: str = "full", **_: Any) -> Dict[str, Any]:
+    """Co-design sweep engine: grid expansion rate + cold-vs-cached sweeps.
+
+    ``expand.configs_per_sec`` prices the spec-to-RunConfig pipeline
+    (canonical hashing included); the sweep rows compare a cold run against
+    a fully-cached replay of the same spec — ``cached_executed`` must be 0
+    (the replay performs zero simulations) and ``cache_speedup`` is the
+    headline win for iterative co-design studies.
+    """
+    import tempfile
+
+    from ..explore import ExperimentSpec, run_sweep
+
+    cfg = _cfg(scale)["explore"]
+    big = ExperimentSpec.from_dict({
+        "name": "perf-expand",
+        "workloads": [{"pattern": "moe_mixed",
+                       "args": {"mode": m, "iters": 2}}
+                      for m in ("allreduce", "alltoall")],
+        "axes": {"topology": ["ring", "switch", "clos", "fully_connected"],
+                 "world_size": [4, 8, 16, 32],
+                 "link_bw": [2.5e10, 5e10, 1e11, 2e11],
+                 "latency_s": [1e-6, 2e-6],
+                 "fidelity": ["analytic", "link"],
+                 "jitter": [0.0, 0.1, 0.2, 0.3][:cfg["jitter_values"]]},
+    })
+    t0 = time.perf_counter()
+    configs = big.expand()
+    expand_s = time.perf_counter() - t0
+
+    sweep_spec = ExperimentSpec.from_dict({
+        "name": "perf-sweep",
+        "workloads": [{"pattern": "moe_mixed",
+                       "args": {"mode": "mixed", "iters": cfg["iters"]}}],
+        "axes": {"topology": ["ring", "switch", "clos"],
+                 "world_size": cfg["world_sizes"],
+                 "fidelity": ["analytic", "link"]},
+    })
+    with tempfile.TemporaryDirectory() as tmp:
+        t0 = time.perf_counter()
+        cold = run_sweep(sweep_spec, jobs=cfg["jobs"], cache_dir=tmp)
+        cold_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        warm = run_sweep(sweep_spec, jobs=cfg["jobs"], cache_dir=tmp)
+        warm_s = time.perf_counter() - t0
+
+    return {
+        "expand": {
+            "configs": len(configs),
+            "wall_s": round(expand_s, 4),
+            "configs_per_sec": round(len(configs) / expand_s, 1),
+        },
+        "sweep": {
+            "configs": len(cold.rows),
+            "jobs": cfg["jobs"],
+            "cold_wall_s": round(cold_s, 4),
+            "cold_runs_per_sec": round(len(cold.rows) / cold_s, 1),
+            "cached_wall_s": round(warm_s, 4),
+            "cached_runs_per_sec": round(len(warm.rows) / warm_s, 1),
+            "cached_executed": warm.executed,   # must be 0: replay = cache
+            "cache_speedup": round(cold_s / warm_s, 2),
+        },
+    }
+
+
 # ------------------------------------------------------------------- driver
 BENCHMARKS = {
     "perf_feeder": perf_feeder,
@@ -383,6 +458,7 @@ BENCHMARKS = {
     "perf_netmodel": perf_netmodel,
     "perf_chkb": perf_chkb,
     "perf_synth": perf_synth,
+    "perf_explore": perf_explore,
 }
 
 
@@ -467,4 +543,18 @@ def gate_regressions(current: Dict[str, Any], baseline: Dict[str, Any],
                   f"{r['ranks']} events/sec",
                   r["engine"]["events_per_sec"],
                   b["engine"]["events_per_sec"])
+
+    # explore engine: expansion rate always comparable; the cached-replay
+    # rate only when the sweep grids match (configs and jobs agree)
+    cur_x = current.get("perf_explore", {})
+    base_x = baseline.get("perf_explore", {})
+    if "expand" in cur_x and "expand" in base_x:
+        check("perf_explore expand configs/sec",
+              cur_x["expand"]["configs_per_sec"],
+              base_x["expand"]["configs_per_sec"])
+    cs, bs = cur_x.get("sweep", {}), base_x.get("sweep", {})
+    if cs and bs and (cs["configs"], cs["jobs"]) == (bs["configs"],
+                                                     bs["jobs"]):
+        check(f"perf_explore cached sweep {cs['configs']} configs runs/sec",
+              cs["cached_runs_per_sec"], bs["cached_runs_per_sec"])
     return failures, report

@@ -472,3 +472,6 @@ class ReplaySink:
 # imported last so `import repro.pipeline` also registers the synth.*
 # stages (the synth package is import-light: no jax, core+pipeline only)
 from ..synth import stages as _synth_stages  # noqa: E402, F401
+# ... and the co-design sweep engine (kind="experiment"; also import-light:
+# simulation backends load lazily inside each run)
+from ..explore import stages as _explore_stages  # noqa: E402, F401

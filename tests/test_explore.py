@@ -1,0 +1,461 @@
+"""repro.explore: spec expansion, content-addressed caching, parallel
+execution, failure isolation, ranked reports, and the acceptance gates
+(≥200-config parallel sweep, zero-resim cached replay, byte-identical
+grid/report determinism, Fig-12 re-ranking from one spec file)."""
+import json
+import os
+
+import pytest
+
+from repro.explore import (ExperimentSpec, RunCache, RunConfig, as_spec,
+                           build_report, build_workload, execute_run,
+                           render_markdown, report_json_bytes, run_sweep)
+from repro.explore.runner import RESULT_COLUMNS
+from repro.pipeline.registry import make_stage
+
+
+def mini_spec(**over):
+    d = {
+        "name": "mini",
+        "workloads": [
+            {"pattern": "moe_mixed", "args": {"mode": "allreduce",
+                                              "iters": 2}},
+            {"pattern": "moe_mixed", "args": {"mode": "alltoall",
+                                              "iters": 2}},
+        ],
+        "axes": {"topology": ["ring", "switch"], "world_size": [4]},
+    }
+    d.update(over)
+    return ExperimentSpec.from_dict(d)
+
+
+# ----------------------------------------------------------------- spec
+def test_spec_validation_errors():
+    with pytest.raises(ValueError, match="at least one workload"):
+        ExperimentSpec.from_dict({"name": "x", "workloads": []})
+    with pytest.raises(ValueError, match="exactly one of"):
+        ExperimentSpec.from_dict({"workloads": [{"pattern": "a",
+                                                 "scenario": "b"}]})
+    with pytest.raises(ValueError, match="unknown axes"):
+        mini_spec(axes={"warp_speed": [9]})
+    with pytest.raises(ValueError, match="no values"):
+        mini_spec(axes={"topology": []})
+    with pytest.raises(ValueError, match="sample mode"):
+        mini_spec(sample={"mode": "psychic"})
+    with pytest.raises(ValueError, match="duplicate workload name"):
+        ExperimentSpec.from_dict({"workloads": [
+            {"pattern": "moe_mixed"}, {"pattern": "moe_mixed"}]})
+    with pytest.raises(ValueError, match="unknown spec keys"):
+        ExperimentSpec.from_dict({"workloads": [{"pattern": "a"}],
+                                  "axis": {}})
+
+
+def test_grid_expansion_counts_and_defaults():
+    spec = mini_spec()
+    assert spec.grid_size() == 2 * 2 * 1
+    cfgs = spec.expand()
+    assert len(cfgs) == 4
+    # defaults fill unswept axes so every config is fully specified
+    assert all(c.fidelity == "analytic" and c.scale_comm_bytes == 1.0
+               for c in cfgs)
+    # expansion order: workload-major, then axis order
+    assert [c.label() for c in cfgs[:2]] == [
+        "moe_mixed-allreduce/ringx4@analytic",
+        "moe_mixed-allreduce/switchx4@analytic"]
+
+
+def test_expansion_byte_identical_for_same_spec_and_seed():
+    a = mini_spec(seed=3).expansion_json()
+    b = mini_spec(seed=3).expansion_json()
+    assert a == b
+    assert a != mini_spec(seed=4).expansion_json()
+
+
+def test_run_hash_content_addressing():
+    c1, c2 = mini_spec().expand()[:2]
+    assert c1.run_hash != c2.run_hash            # topology differs
+    assert len(c1.run_hash) == 64
+    # hash is content-based: rebuilding from the dict round-trips it
+    assert RunConfig.from_dict(c1.to_dict()).run_hash == c1.run_hash
+    # ... and is insensitive to workload key order
+    w = {"args": {"iters": 2, "mode": "allreduce"}, "pattern": "moe_mixed",
+         "name": "moe_mixed-allreduce"}
+    d = c1.to_dict()
+    d["workload"] = w
+    assert RunConfig.from_dict(d).run_hash == c1.run_hash
+
+
+def test_random_sampling_deterministic_subset():
+    spec = mini_spec(sample={"mode": "random", "n": 3, "seed": 11},
+                     axes={"topology": ["ring", "switch", "clos"],
+                           "world_size": [4, 8]})
+    picks = [c.run_hash for c in spec.expand()]
+    assert len(picks) == 3 and len(set(picks)) == 3
+    assert picks == [c.run_hash for c in spec.expand()]
+    grid = {c.run_hash
+            for c in mini_spec(axes=spec.axes).expand()}
+    assert set(picks) <= grid
+    # n >= grid size degrades to the full grid
+    big = mini_spec(sample={"mode": "random", "n": 99, "seed": 1})
+    assert len(big.expand()) == big.grid_size()
+
+
+def test_as_spec_coercions(tmp_path):
+    spec = mini_spec()
+    path = spec.save(str(tmp_path / "spec.json"))
+    assert as_spec(str(path)).spec_hash() == spec.spec_hash()
+    assert as_spec(spec.to_dict()).spec_hash() == spec.spec_hash()
+    with pytest.raises(ValueError):
+        as_spec(42)
+
+
+# ------------------------------------------------------------- workloads
+def test_build_workload_kinds(tmp_path):
+    spec = mini_spec()
+    traces = build_workload(spec.expand()[0])
+    assert len(traces) == 1 and len(traces[0]) > 0    # single-trace what-if
+    sc = ExperimentSpec.from_dict({
+        "workloads": [{"scenario": "dp-dense"}],
+        "axes": {"world_size": [2], "steps": [2]}})
+    traces = build_workload(sc.expand()[0])
+    assert len(traces) == 2                           # synthesized per rank
+    assert all(len(t) > 0 for t in traces)
+    from repro.core.serialization import save
+    p = str(tmp_path / "r0.chkb")
+    save(traces[0], p, version=4)
+    ck = ExperimentSpec.from_dict({"workloads": [{"chkb": [p]}]})
+    loaded = build_workload(ck.expand()[0])
+    assert len(loaded) == 1 and len(loaded[0]) == len(traces[0])
+
+
+def test_execute_run_row_shape():
+    row = execute_run(mini_spec().expand()[0])
+    assert row["ok"] and not row["cached"]
+    assert row["makespan_s"] > 0 and row["total_nodes"] > 0
+    assert row["cost"] == pytest.approx(4 * row["link_bw"])
+    for col in RESULT_COLUMNS:
+        assert col in row or col in ("error",), col
+
+
+# ------------------------------------------------------------------ sweep
+def test_sweep_cache_replay_executes_zero_simulations(tmp_path):
+    spec = mini_spec()
+    cache = str(tmp_path / "cache")
+    cold = run_sweep(spec, jobs=1, cache_dir=cache)
+    assert cold.executed == 4 and cold.cached == 0 and cold.failed == 0
+    warm = run_sweep(spec, jobs=1, cache_dir=cache)
+    assert warm.executed == 0 and warm.cached == 4   # zero re-simulations
+    assert [r["hash"] for r in warm.rows] == [r["hash"] for r in cold.rows]
+    # incremental spec edit: only the new configs execute
+    grown = mini_spec(axes={"topology": ["ring", "switch", "clos"],
+                            "world_size": [4]})
+    inc = run_sweep(grown, jobs=1, cache_dir=cache)
+    assert inc.executed == 2 and inc.cached == 4
+
+
+def test_sweep_parallel_matches_serial(tmp_path):
+    spec = mini_spec()
+    serial = run_sweep(spec, jobs=1)
+    parallel = run_sweep(spec, jobs=2)
+    ks = ("hash", "makespan_s", "exposed_comm_s", "comm_time_total_s")
+    assert ([{k: r[k] for k in ks} for r in serial.rows]
+            == [{k: r[k] for k in ks} for r in parallel.rows])
+
+
+def test_sweep_isolates_per_run_failures(tmp_path):
+    # tpu_pod with a prime world size cannot form a torus: that run fails,
+    # the rest of the sweep completes
+    spec = mini_spec(axes={"topology": ["ring", "tpu_pod"],
+                           "world_size": [7]})
+    res = run_sweep(spec, jobs=1, cache_dir=str(tmp_path / "c"))
+    assert res.failed == 2 and len(res.rows) == 4
+    bad = [r for r in res.rows if not r["ok"]]
+    assert all("tpu_pod" == r["topology"] and "ValueError" in r["error"]
+               for r in bad)
+    # failures are never cached: a fixed engine would re-run them
+    assert run_sweep(spec, jobs=1,
+                     cache_dir=str(tmp_path / "c")).executed == 2
+    # ... and they surface in the report, not as rankings
+    doc = build_report(res)
+    assert doc["runs"]["failed"] == 2 and len(doc["failures"]) == 2
+
+
+def test_cache_rejects_corrupt_and_mismatched_entries(tmp_path):
+    cache = RunCache(str(tmp_path))
+    cfg = mini_spec().expand()[0]
+    row = execute_run(cfg)
+    cache.put(row)
+    assert cache.get(cfg.run_hash)["cached"] is True
+    with open(cache.path(cfg.run_hash), "w") as fh:
+        fh.write("{not json")
+    assert cache.get(cfg.run_hash) is None
+    assert cache.get("0" * 64) is None
+
+
+# ----------------------------------------------------------------- report
+def test_report_ranking_pareto_sensitivity():
+    spec = mini_spec(axes={"topology": ["ring", "switch"],
+                           "world_size": [4, 8],
+                           "link_bw": [2.5e10, 5e10]})
+    res = run_sweep(spec, jobs=1)
+    doc = build_report(res)
+    for name, w in doc["workloads"].items():
+        ranking = w["ranking"]
+        assert len(ranking) == 8
+        makespans = [e["makespan_s"] for e in ranking]
+        assert makespans == sorted(makespans)
+        assert w["best"] == ranking[0]
+        # pareto: non-dominated on (cost, makespan)
+        pareto = w["pareto"]
+        assert pareto
+        for p in pareto:
+            assert not any(e["cost"] < p["cost"]
+                           and e["makespan_s"] < p["makespan_s"]
+                           for e in ranking)
+        # swept axes appear in the sensitivity table, collapsed ones don't
+        assert "topology" in w["sensitivity"]
+        assert "world_size" in w["sensitivity"]
+        assert "fidelity" not in w["sensitivity"]
+        assert w["sensitivity"]["topology"]["delta_pct"] is not None
+    md = render_markdown(doc)
+    assert "Pareto frontier" in md and "| topology |" in md
+
+
+def test_report_byte_identical_fresh_vs_cached(tmp_path):
+    spec = mini_spec(seed=5)
+    cache = str(tmp_path / "cache")
+    fresh = report_json_bytes(build_report(run_sweep(spec, jobs=1,
+                                                     cache_dir=cache)))
+    cached = report_json_bytes(build_report(run_sweep(spec, jobs=1,
+                                                      cache_dir=cache)))
+    nocache = report_json_bytes(build_report(run_sweep(spec, jobs=2)))
+    assert fresh == cached == nocache
+
+
+# -------------------------------------------------------------- registry
+def test_registry_stages_dispatch():
+    res = make_stage("experiment", "explore.run", mini_spec(), jobs=1)
+    doc = make_stage("experiment", "explore.report", res)
+    assert doc["runs"]["total"] == 4 and doc["schema"].startswith(
+        "repro-explore-report")
+
+
+# ------------------------------------------------- acceptance: Fig-12 spec
+FIG12_SPEC = {
+    "name": "fig12",
+    "workloads": [
+        {"pattern": "moe_mixed", "args": {"mode": "allreduce", "iters": 4}},
+        {"pattern": "moe_mixed", "args": {"mode": "alltoall", "iters": 4}},
+    ],
+    "axes": {
+        "topology": ["ring", "switch", "clos", "fully_connected"],
+        "world_size": [8],
+        "fidelity": ["link"],
+    },
+}
+
+
+def test_fig12_reranking_from_one_spec():
+    """The paper's co-design headline as a single declarative spec: ring
+    wins the allreduce-heavy workload, the point-to-point fabrics win the
+    a2a-heavy one — emergent from the routed link model."""
+    doc = build_report(run_sweep(ExperimentSpec.from_dict(FIG12_SPEC),
+                                 jobs=2))
+    best = {name: w["best"]["topology"]
+            for name, w in doc["workloads"].items()}
+    assert best["moe_mixed-allreduce"] == "ring"
+    assert best["moe_mixed-alltoall"] in ("switch", "clos",
+                                          "fully_connected")
+
+
+def test_big_sweep_process_parallel_via_cli(tmp_path, capsys):
+    """≥200-config sweep, process-parallel, through `python -m repro
+    explore`; the repeated run completes from cache alone (zero
+    simulations) and the report JSON is byte-identical."""
+    from repro import cli
+    spec_dict = {
+        "name": "big",
+        "workloads": [
+            {"pattern": "moe_mixed", "args": {"mode": "allreduce",
+                                              "iters": 2}},
+            {"pattern": "moe_mixed", "args": {"mode": "alltoall",
+                                              "iters": 2}},
+        ],
+        "axes": {
+            "topology": ["ring", "switch", "clos", "fully_connected",
+                         "tpu_pod"],
+            "world_size": [4, 8, 16],
+            "link_bw": [2.5e10, 5e10],
+            "latency_s": [1e-6, 2e-6],
+            "fidelity": ["analytic", "link"],
+        },
+    }
+    assert ExperimentSpec.from_dict(spec_dict).grid_size() == 240
+    sp = str(tmp_path / "big.json")
+    json.dump(spec_dict, open(sp, "w"))
+    cache = str(tmp_path / "cache")
+    rj1, rj2 = str(tmp_path / "r1.json"), str(tmp_path / "r2.json")
+    assert cli.main(["explore", sp, "--jobs", "4", "--cache-dir", cache,
+                     "--json", rj1]) == 0
+    assert "240 configs, 240 simulated, 0 cached, 0 failed" \
+        in capsys.readouterr().out
+    assert cli.main(["explore", sp, "--jobs", "4", "--cache-dir", cache,
+                     "--json", rj2]) == 0
+    assert "240 configs, 0 simulated, 240 cached" in capsys.readouterr().out
+    assert open(rj1, "rb").read() == open(rj2, "rb").read()
+
+
+# -------------------------------------------------- review regression fixes
+def test_explicit_zero_jitter_overrides_scenario_default():
+    """An explicit jitter axis value — including 0.0 — must beat the
+    scenario's default, so sweeping jitter actually sweeps it."""
+    spec = ExperimentSpec.from_dict({
+        "workloads": [{"scenario": "straggler-jitter"}],
+        "axes": {"world_size": [2], "steps": [2],
+                 "jitter": [0.0, 0.6], "stragglers": [{}]}})
+    zero, jittered = spec.expand()
+    assert zero.jitter == 0.0 and jittered.jitter == 0.6
+    dur = lambda t: sum(n.duration_micros for n in t)
+    t_zero = build_workload(zero)
+    t_jit = build_workload(jittered)
+    # jitter=0.0 must NOT fall back to the scenario default (0.3): the
+    # jittered grid point perturbs durations, the zero point doesn't
+    assert dur(t_zero[0]) != dur(t_jit[0])
+    # explicit {} also disables the scenario's default straggler: both
+    # synthesized ranks run at the same speed under jitter 0.0
+    assert dur(t_zero[0]) == pytest.approx(dur(t_zero[1]))
+    # unswept (None) keeps the scenario's character: rank 0 is 1.8x slow
+    default = ExperimentSpec.from_dict({
+        "workloads": [{"scenario": "straggler-jitter"}],
+        "axes": {"world_size": [2], "steps": [2]}})
+    t0, t1 = build_workload(default.expand()[0])
+    comp = lambda t: sum(n.duration_micros for n in t if not n.is_comm)
+    assert comp(t0) > 1.5 * comp(t1)
+
+
+def test_cli_seed_redraws_random_sample(tmp_path, capsys):
+    from repro import cli
+    spec = {"workloads": [{"pattern": "moe_mixed", "args": {"iters": 2}}],
+            "axes": {"topology": ["ring", "switch", "clos",
+                                  "fully_connected"],
+                     "world_size": [2, 4, 8]}}
+    sp = str(tmp_path / "s.json")
+    json.dump(spec, open(sp, "w"))
+
+    def grid(seed):
+        assert cli.main(["explore", sp, "--dry-run", "--sample", "4",
+                         "--seed", seed]) == 0
+        doc = json.loads(capsys.readouterr().out)
+        return [(c["topology"], c["world_size"]) for c in doc["configs"]]
+
+    g1, g2 = grid("1"), grid("2")
+    assert len(g1) == len(g2) == 4
+    assert g1 != g2                     # --seed redraws the sample
+    assert g1 == grid("1")              # ... deterministically
+
+
+def test_chkb_workload_cache_invalidates_on_file_change(tmp_path):
+    from repro.core import generator
+    from repro.core.serialization import save
+    p = str(tmp_path / "w.chkb")
+    save(generator.moe_mixed_collectives(iters=2, ranks=2, rank=0), p,
+         version=4)
+    d = {"workloads": [{"chkb": [p]}], "axes": {"topology": ["ring"]}}
+    h1 = ExperimentSpec.from_dict(d).expand()[0].run_hash
+    assert h1 == ExperimentSpec.from_dict(d).expand()[0].run_hash
+    save(generator.moe_mixed_collectives(iters=4, ranks=2, rank=0), p,
+         version=4)
+    # same path, new contents: the content digest changes the run hash,
+    # so a cached row for the old file can never be served
+    assert ExperimentSpec.from_dict(d).expand()[0].run_hash != h1
+    with pytest.raises(ValueError, match="unreadable"):
+        ExperimentSpec.from_dict({"workloads": [
+            {"chkb": [str(tmp_path / "missing.chkb")]}]})
+
+
+def test_chkb_workload_sizes_fabric_from_file_list(tmp_path):
+    from repro.core import generator
+    from repro.core.serialization import save
+    paths = []
+    for r in range(2):
+        p = str(tmp_path / f"rank{r}.chkb")
+        save(generator.moe_mixed_collectives(iters=2, ranks=2, rank=r), p,
+             version=4)
+        paths.append(p)
+    # no world_size axis: the default (8) must NOT leak into the fabric or
+    # the cost proxy — the file list says this is a 2-rank job
+    spec = ExperimentSpec.from_dict({"workloads": [{"chkb": paths}],
+                                     "axes": {"topology": ["ring"]}})
+    row = execute_run(spec.expand()[0])
+    assert row["ok"] and row["ranks_simulated"] == 2
+    assert row["world_size"] == 2
+    assert row["cost"] == pytest.approx(2 * row["link_bw"])
+
+
+def test_cli_partial_failure_exits_nonzero(tmp_path, capsys):
+    from repro import cli
+    spec = {"workloads": [{"pattern": "moe_mixed", "args": {"iters": 2}}],
+            "axes": {"topology": ["ring", "tpu_pod"], "world_size": [7]}}
+    sp = str(tmp_path / "s.json")
+    json.dump(spec, open(sp, "w"))
+    assert cli.main(["explore", sp, "--jobs", "1",
+                     "--cache-dir", str(tmp_path / "c")]) == 1
+    assert "1/2 run(s) failed" in capsys.readouterr().err
+
+
+def test_run_sweep_validates_directly_constructed_spec():
+    # the README's Python API: a hand-built spec (never from_dict'd) must
+    # be normalized by run_sweep, not crash on the missing workload name
+    spec = ExperimentSpec(name="direct",
+                          workloads=[{"pattern": "dp_allreduce",
+                                      "args": {"steps": 1, "layers": 2}}],
+                          axes={"topology": ["ring"]})
+    res = run_sweep(spec, jobs=1)
+    assert res.failed == 0 and res.rows[0]["workload"] == "dp_allreduce"
+
+
+def test_scalar_axis_value_rejected_not_charsplit():
+    with pytest.raises(ValueError, match="must be a list"):
+        mini_spec(axes={"topology": "ring"})
+
+
+def test_cli_seed_redraws_sample_pinned_in_spec(tmp_path, capsys):
+    from repro import cli
+    spec = {"workloads": [{"pattern": "moe_mixed", "args": {"iters": 2}}],
+            "axes": {"topology": ["ring", "switch", "clos",
+                                  "fully_connected"],
+                     "world_size": [2, 4, 8]},
+            "sample": {"mode": "random", "n": 4, "seed": 7}}
+    sp = str(tmp_path / "s.json")
+    json.dump(spec, open(sp, "w"))
+
+    def grid(extra):
+        assert cli.main(["explore", sp, "--dry-run"] + extra) == 0
+        doc = json.loads(capsys.readouterr().out)
+        return [(c["topology"], c["world_size"]) for c in doc["configs"]]
+
+    assert grid(["--seed", "99"]) != grid([])
+
+
+def test_busiest_link_frac_is_max_over_top_links():
+    spec = ExperimentSpec.from_dict({
+        "workloads": [{"pattern": "moe_mixed", "args": {"iters": 3}}],
+        "axes": {"topology": ["clos"], "world_size": [8],
+                 "fidelity": ["link"]}})
+    row = execute_run(spec.expand()[0])
+    assert row["top_links"]
+    assert row["busiest_link_frac"] == max(l["busy_frac"]
+                                           for l in row["top_links"])
+
+
+# -------------------------------------------------------------- results
+def test_columnar_results_store(tmp_path):
+    res = run_sweep(mini_spec(), jobs=1)
+    path = res.save_results(str(tmp_path / "results.json"))
+    doc = json.load(open(path))
+    assert doc["schema"] == "repro-explore-results/v1"
+    assert doc["count"] == 4
+    cols = doc["columns"]
+    assert set(cols) == set(RESULT_COLUMNS)
+    assert all(len(v) == 4 for v in cols.values())
+    assert all(m > 0 for m in cols["makespan_s"])

@@ -30,6 +30,22 @@ def test_infragraph_json_roundtrip():
     assert g2.num_npus == 4 and len(g2.links) == len(g.links)
 
 
+def test_to_dot_truncation_deterministic_and_announced():
+    et = generator.dp_allreduce_pattern(steps=4, layers=8, ranks=4)
+    total = len(et)
+    dot = visualize.to_dot(et, max_nodes=10)
+    # deterministic selection: the 10 lowest node ids, regardless of
+    # insertion order
+    for nid in range(10):
+        assert f'n{nid} [' in dot
+    assert f"n{total - 1} [" not in dot
+    # the elision is visible, not silent
+    assert f"{total - 10} nodes elided" in dot
+    assert dot == visualize.to_dot(et, max_nodes=10)
+    # no elision marker when everything fits
+    assert "elided" not in visualize.to_dot(et, max_nodes=total)
+
+
 def test_visualizer_outputs():
     et = generator.dp_allreduce_pattern(steps=1, layers=3, ranks=4)
     dot = visualize.to_dot(et)
