@@ -1,8 +1,8 @@
 #!/usr/bin/env python
 """CI perf gate: fail when the hot paths regress vs the committed baseline.
 
-Runs ``python -m repro bench perf_feeder perf_sim perf_explore`` (fresh
-numbers, no reference-engine baseline pass, results via the ``--json``
+Runs ``python -m repro bench perf_feeder perf_sim perf_explore perf_ingest``
+(fresh numbers, no reference-engine baseline pass, results via the ``--json``
 sidecar — stdout is never parsed) and compares events/sec / nodes/sec /
 configs/sec against the committed ``BENCH_perf.json``.  Any row more than
 ``--threshold`` (default 20%, or ``$PERF_GATE_THRESHOLD``) below its
@@ -25,7 +25,7 @@ import tempfile
 _REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(_REPO_ROOT, "src"))
 
-GATED = ("perf_feeder", "perf_sim", "perf_explore")
+GATED = ("perf_feeder", "perf_sim", "perf_explore", "perf_ingest")
 
 
 def main(argv=None) -> int:

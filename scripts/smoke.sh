@@ -21,10 +21,14 @@ python -m repro analyze "$tmp/canon.chkb" --deep -o "$tmp/stats.json"
 grep -q '"nodes"' "$tmp/stats.json"
 
 echo "== feed =="
-python -m repro feed "$tmp/canon.chkb" --policy comm_priority | grep -q nodes_fed
+# capture-then-grep (not `| grep -q`): -q exits on first match, and with
+# pipefail + an unbuffered python that turns into a SIGPIPE flake
+python -m repro feed "$tmp/canon.chkb" --policy comm_priority > "$tmp/feed.out"
+grep -q nodes_fed "$tmp/feed.out"
 
 echo "== sim (analytic + link fidelity) =="
-python -m repro sim "$tmp/canon.chkb" --topology ring --ranks 4 | grep -q makespan
+python -m repro sim "$tmp/canon.chkb" --topology ring --ranks 4 > "$tmp/sim.out"
+grep -q makespan "$tmp/sim.out"
 python -m repro sim "$tmp/canon.chkb" --topology ring --ranks 4 \
   --fidelity link -o "$tmp/sim_link.json" > "$tmp/sim_link.out"
 grep -q makespan "$tmp/sim_link.out"
@@ -37,7 +41,8 @@ echo "== synth (profile -> synthesize 4 ranks -> simulate) =="
 python -m repro profile "$tmp/canon.chkb" -o "$tmp/profile.json"
 grep -q category_mix "$tmp/profile.json"
 python -m repro synth -p "$tmp/profile.json" -o "$tmp/synth" --ranks 4 \
-  --steps 4 --sim --manifest "$tmp/synth_manifest.json" | grep -q makespan
+  --steps 4 --sim --manifest "$tmp/synth_manifest.json" > "$tmp/synth.out"
+grep -q makespan "$tmp/synth.out"
 python -c "
 import json, sys
 man = json.load(open('$tmp/synth_manifest.json'))
@@ -63,10 +68,24 @@ python -m repro explore "$tmp/study.json" --jobs 2 --cache-dir "$tmp/cache" \
   > "$tmp/explore2.out"
 grep -q "0 simulated, 3 cached" "$tmp/explore2.out"
 
+echo "== ingest (Kineto golden -> profile -> sim closed loop) =="
+python -m repro ingest tests/data/mini_kineto.json -o "$tmp/ingested.chkb" -v
+python -m repro profile "$tmp/ingested.chkb" --sim > "$tmp/ingest_sim.out"
+grep -q makespan "$tmp/ingest_sim.out"
+python -m repro ingest tests/data/mini_kineto.json.gz \
+  --format chrome -o "$tmp/ingested.chkb.gz"
+python -m repro analyze "$tmp/ingested.chkb.gz" -o "$tmp/ingested_stats.json"
+grep -q AllReduce "$tmp/ingested_stats.json"
+python -m repro ingest tests/data/mini_pytorch_et.json \
+  --format pytorch_et -o "$tmp/ingested_et.chkb"
+
 echo "== stages =="
 python -m repro stages > "$tmp/stages.txt"
 grep -q scale_time "$tmp/stages.txt"
 grep -q synth.generate "$tmp/stages.txt"
+python -m repro stages --kind source > "$tmp/stages_src.txt"
+grep -q ingest.chrome "$tmp/stages_src.txt"
+grep -q ingest.pytorch_et "$tmp/stages_src.txt"
 
 echo "== bench (chkb codec only, smoke scale; --json sidecar) =="
 python -m repro bench perf_chkb --scale smoke --json "$tmp/bench.json"

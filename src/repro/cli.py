@@ -7,7 +7,9 @@
     python -m repro sim      canonical.chkb --topology ring --ranks 8
     python -m repro replay   canonical.chkb --mode compute --limit 64
     python -m repro analyze  canonical.chkb [--deep] [-o stats.json]
-    python -m repro profile  rank*.chkb -o profile.json [--obfuscate]
+    python -m repro ingest   kineto.json -o trace.chkb [--format chrome]
+    python -m repro ingest   rank*.json  -o job.chkb   # one file per rank
+    python -m repro profile  rank*.chkb -o profile.json [--obfuscate] [--sim]
     python -m repro synth    --profile profile.json -o out/ --ranks 32 --sim
     python -m repro synth    --scenario moe-mixed -o out/ --ranks 8
     python -m repro explore  study.json --jobs 8 --report report.md
@@ -22,6 +24,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import re
 import sys
 from typing import Any, Dict, List, Optional
 
@@ -155,7 +158,8 @@ def _cmd_replay(ns: argparse.Namespace) -> int:
 
 
 def _cmd_analyze(ns: argparse.Namespace) -> int:
-    if not ns.deep and ns.input.endswith(".chkb"):
+    from .core.serialization import is_chkb_path
+    if not ns.deep and is_chkb_path(ns.input):
         # CHKB v4: whole-file columnar fast path — same document, no ETNode
         # materialization (v3 and --deep fall through to the node path)
         from .core.analysis import columnar_analyze
@@ -170,24 +174,123 @@ def _cmd_analyze(ns: argparse.Namespace) -> int:
     return 0
 
 
+_RANK_PATTERNS = (
+    re.compile(r"rank[_\-. ]?(\d+)", re.I),
+    re.compile(r"(?:^|[_\-.])rk(\d+)", re.I),
+    re.compile(r"[_\-](\d+)\.[^.]+(?:\.gz)?$"),
+)
+
+
+def infer_rank(path: str) -> Optional[int]:
+    """Best-effort rank from a trace filename (rank7 / rk7 / _7.json)."""
+    base = os.path.basename(path)
+    for pat in _RANK_PATTERNS:
+        m = pat.search(base)
+        if m:
+            return int(m.group(1))
+    return None
+
+
+def _parse_rank_map(pairs: Optional[List[str]]) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for pair in pairs or []:
+        if "=" not in pair:
+            raise SystemExit(f"--rank-map expects FILE=RANK, got {pair!r}")
+        f, r = pair.rsplit("=", 1)
+        out[os.path.basename(f)] = int(r)
+    return out
+
+
+def _rank_output(template: str, rank: int) -> str:
+    """Per-rank output path: insert rankNNNNN before the suffix."""
+    for suffix in (".chkb.gz", ".chkb", ".json.zst", ".json"):
+        if template.endswith(suffix):
+            return f"{template[:-len(suffix)]}.rank{rank:05d}{suffix}"
+    return f"{template}.rank{rank:05d}"
+
+
+def _cmd_ingest(ns: argparse.Namespace) -> int:
+    from .ingest import FORMATS, sniff_format
+
+    rank_map = _parse_rank_map(ns.rank_map)
+    files = list(ns.inputs)
+    # resolve per-file ranks: explicit map > filename pattern > file order
+    ranks: List[int] = []
+    for i, path in enumerate(files):
+        base = os.path.basename(path)
+        if base in rank_map:
+            ranks.append(rank_map[base])
+        else:
+            inferred = infer_rank(path)
+            ranks.append(inferred if inferred is not None else i)
+    if len(files) > 1 and len(set(ranks)) != len(ranks):
+        raise SystemExit(f"ambiguous rank assignment {ranks} for {files}; "
+                         f"disambiguate with --rank-map FILE=RANK")
+    world_size = ns.world_size
+    if world_size is None and len(files) > 1:
+        world_size = max(len(files), max(ranks) + 1)
+
+    outputs: List[str] = []
+    for path, rank in zip(files, ranks):
+        fmt = ns.format
+        if fmt == "auto":
+            fmt = sniff_format(path)
+        stage = {"chrome": "ingest.chrome",
+                 "pytorch_et": "ingest.pytorch_et"}[fmt]
+        out = (ns.output if len(files) == 1
+               else _rank_output(ns.output, rank))
+        pipe = Pipeline.from_source(
+            stage, path=path, window=ns.window,
+            rank=rank if (len(files) > 1 or ns.rank_map
+                          or infer_rank(path) is not None) else None,
+            world_size=world_size, device_path=ns.device)
+        written = pipe.sink("save", out).run()
+        _print_reports(pipe, ns.verbose)
+        outputs.append(written)
+        print(f"ingested [{fmt}] {path} -> {written}")
+    if len(outputs) > 1:
+        print(f"ingested {len(outputs)} rank(s) -> "
+              f"{os.path.dirname(os.path.abspath(ns.output)) or '.'}")
+    return 0
+
+
 def _cmd_profile(ns: argparse.Namespace) -> int:
     # one shared builder across all inputs -> one profile for the whole
     # job, finished exactly once
-    from .core.serialization import load
+    from .core.serialization import is_chkb_path, load
     from .synth import ProfileBuilder
 
     builder = ProfileBuilder()
     for path in ns.inputs:
-        if path.endswith(".chkb"):
+        if is_chkb_path(path):
             # CHKB files ride the columnar fast path (v4: statistics come
             # straight off typed arrays, no ETNode materialization)
             builder.add_chkb(path)
         else:
             builder.add_trace(load(path))   # JSON materializes regardless
     profile = builder.finish(obfuscate=ns.obfuscate)
-    profile.save(ns.output)
-    print(f"profiled {len(ns.inputs)} trace(s) -> {ns.output}")
+    if ns.output:
+        profile.save(ns.output)
+        print(f"profiled {len(ns.inputs)} trace(s) -> {ns.output}")
+    else:
+        print(f"profiled {len(ns.inputs)} trace(s)")
     print(profile.summary())
+    if ns.sim:
+        # closed loop: synthesize a small workload from the fitted profile
+        # and simulate it (the ingest acceptance path ends here)
+        import tempfile
+
+        from .synth import synthesize
+        with tempfile.TemporaryDirectory() as td:
+            man = synthesize(profile, td,
+                             world_size=max(profile.world_size, 1),
+                             steps=ns.sim_steps, seed=0)
+            res = (Pipeline
+                   .from_source("load", man["paths"][0], window=ns.window)
+                   .sink("sim", topology=ns.topology,
+                         ranks=max(len(man["paths"]), 2),
+                         extra_traces=man["paths"][1:]).run())
+        print(res.summary())
     return 0
 
 
@@ -240,11 +343,24 @@ def _cmd_synth(ns: argparse.Namespace) -> int:
     return 0
 
 
+#: registry display order: pipeline taxonomy first, tool families after;
+#: unknown kinds (future registrations) sort alphabetically at the end
+_KIND_ORDER = ("source", "pass", "sink", "benchmark", "experiment")
+
+
 def _cmd_stages(ns: argparse.Namespace) -> int:
     from . import perf as _perf  # noqa: F401 — registers kind="benchmark"
-    for kind, names in available_stages().items():
+    stages = available_stages()
+    if ns.kind is not None:
+        if ns.kind not in stages:
+            raise SystemExit(
+                f"unknown kind {ns.kind!r}; registered: {sorted(stages)}")
+        stages = {ns.kind: stages[ns.kind]}
+    ordered = [k for k in _KIND_ORDER if k in stages]
+    ordered += sorted(k for k in stages if k not in _KIND_ORDER)
+    for kind in ordered:
         print(f"{kind}:")
-        for n in names:
+        for n in stages[kind]:
             print(f"  {n:24s} {stage_doc(kind, n)}")
     return 0
 
@@ -387,13 +503,45 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("-o", "--output")
     p.set_defaults(fn=_cmd_analyze)
 
+    p = sub.add_parser("ingest",
+                       help="standardize external traces (Kineto/PyTorch-ET)")
+    p.add_argument("inputs", nargs="+",
+                   help="foreign trace files, one per rank "
+                        "(.json or .json.gz; gzip detected by magic bytes)")
+    p.add_argument("--format", default="auto",
+                   choices=("auto", "chrome", "pytorch_et"),
+                   help="input format (auto = sniff per file)")
+    p.add_argument("--rank-map", action="append", metavar="FILE=RANK",
+                   help="explicit file->rank assignment (repeatable); "
+                        "default: rankN/rkN/_N filename patterns, then "
+                        "file order")
+    p.add_argument("--world-size", type=int, default=None,
+                   help="override the job size (default: trace metadata, "
+                        "then file count)")
+    p.add_argument("--device", default=None,
+                   help="device-side Kineto trace spliced under a "
+                        "pytorch_et host trace")
+    p.add_argument("-o", "--output", required=True,
+                   help="output trace; multi-file input writes one "
+                        "OUT.rankNNNNN.chkb per rank")
+    p.add_argument("--window", type=int, default=1024)
+    p.add_argument("-v", "--verbose", action="store_true")
+    p.set_defaults(fn=_cmd_ingest)
+
     p = sub.add_parser("profile",
                        help="fit a statistical WorkloadProfile from trace(s)")
     p.add_argument("inputs", nargs="+",
                    help="per-rank trace files (.chkb rides the columnar path)")
     p.add_argument("--obfuscate", action="store_true",
                    help="hash op names (shareable profile; structure kept)")
-    p.add_argument("-o", "--output", required=True)
+    p.add_argument("-o", "--output", default=None,
+                   help="write the profile JSON here (optional with --sim)")
+    p.add_argument("--sim", action="store_true",
+                   help="closed loop: synthesize from the fitted profile "
+                        "and simulate (summary to stdout)")
+    p.add_argument("--sim-steps", type=int, default=2,
+                   help="training steps for the --sim synthesis")
+    p.add_argument("--topology", default="switch")
     p.add_argument("--window", type=int, default=1024)
     p.add_argument("-v", "--verbose", action="store_true")
     p.set_defaults(fn=_cmd_profile)
@@ -429,6 +577,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.set_defaults(fn=_cmd_synth)
 
     p = sub.add_parser("stages", help="list the stage registry")
+    p.add_argument("--kind", default=None,
+                   help="only one kind (source|pass|sink|benchmark|"
+                        "experiment)")
     p.set_defaults(fn=_cmd_stages)
 
     p = sub.add_parser("bench", help="hot-path perf suite (BENCH_perf metrics)")

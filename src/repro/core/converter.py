@@ -54,13 +54,34 @@ def _edge_count(et: ExecutionTrace) -> int:
 def verify_and_clean(et: ExecutionTrace, report: ConvertReport) -> None:
     """In-place dependency verification + cleanup."""
     ids = set(et.nodes)
+    # Tracked while cleaning: when every dependency points at a *lower* node
+    # id the graph is acyclic by construction (the linker/ingest emission
+    # discipline), so the Kahn validation below can be skipped entirely —
+    # that check is the difference between O(edges) and a full topological
+    # sort per trace on the ingestion hot path.
+    monotone = True
     for n in et.nodes.values():
+        nid = n.id
         for attr in ("ctrl_deps", "data_deps", "sync_deps"):
             deps = getattr(n, attr)
+            if not deps:
+                continue
+            if len(deps) == 1:
+                # dominant case: zero or one dep per list — no set juggling
+                d = deps[0]
+                if d == nid:
+                    report.self_deps_removed += 1
+                    setattr(n, attr, [])
+                elif d not in ids:
+                    report.dangling_deps_removed += 1
+                    setattr(n, attr, [])
+                elif d > nid:
+                    monotone = False
+                continue
             cleaned: List[int] = []
             seen = set()
             for d in deps:
-                if d == n.id:
+                if d == nid:
                     report.self_deps_removed += 1
                     continue
                 if d not in ids:
@@ -69,24 +90,27 @@ def verify_and_clean(et: ExecutionTrace, report: ConvertReport) -> None:
                 if d in seen:
                     report.dup_deps_removed += 1
                     continue
+                if d > nid:
+                    monotone = False
                 seen.add(d)
                 cleaned.append(d)
             setattr(n, attr, cleaned)
         # ctrl edge duplicating a data edge carries no extra constraint
-        dset = set(n.data_deps)
-        kept = []
-        for d in n.ctrl_deps:
-            if d in dset:
-                report.redundant_ctrl_removed += 1
-            else:
-                kept.append(d)
-        n.ctrl_deps = kept
+        if n.ctrl_deps and n.data_deps:
+            dset = set(n.data_deps)
+            kept = []
+            for d in n.ctrl_deps:
+                if d in dset:
+                    report.redundant_ctrl_removed += 1
+                else:
+                    kept.append(d)
+            n.ctrl_deps = kept
 
     # Break cycles: iteratively find a cycle via DFS and drop its weakest
     # (ctrl > sync > data preference) back-edge.  Linked production traces are
     # expected acyclic; this is the paper's "prune edges contradicted by
     # per-stream order" safety net.
-    while not et.is_acyclic():
+    while not monotone and not et.is_acyclic():
         edge = _find_cycle_edge(et)
         if edge is None:  # pragma: no cover - defensive
             report.errors.append("cycle detected but no edge found")

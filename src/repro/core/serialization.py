@@ -42,6 +42,7 @@ to the window size, not the trace (paper §4.1 "Dependency-Aware ET Feeder").
 """
 from __future__ import annotations
 
+import gzip
 import io
 import os
 import struct
@@ -60,9 +61,26 @@ _MAGIC_PREFIX = b"CHKB\x00"
 _MAGIC_V3 = b"CHKB\x00\x03\x00\x00"
 _MAGIC_V4 = b"CHKB\x00\x04\x00\x00"
 _MAGIC = _MAGIC_V3          # legacy alias (pre-v4 code imported this name)
+_GZIP_MAGIC = b"\x1f\x8b"
 _VERSIONS = (3, 4)
 DEFAULT_VERSION = 4
 _DEFAULT_BLOCK = 1024
+
+#: suffixes that select the CHKB binary format (plain / gzip-wrapped)
+CHKB_SUFFIXES = (".chkb", ".chkb.gz")
+
+
+def is_chkb_path(path: str) -> bool:
+    """True when ``path`` names a CHKB file (plain or gzip-wrapped)."""
+    return path.endswith(CHKB_SUFFIXES)
+
+
+def _gzip_bytes(data: bytes) -> bytes:
+    """Deterministic gzip (mtime pinned to 0, no filename header)."""
+    buf = io.BytesIO()
+    with gzip.GzipFile(fileobj=buf, mode="wb", mtime=0) as gz:
+        gz.write(data)
+    return buf.getvalue()
 
 _BIG_ENDIAN = sys.byteorder == "big"
 # enum-by-value tables: IntEnum.__call__ is far too slow for the decode loop
@@ -332,9 +350,15 @@ class ChkbWriter:
         return out.getvalue()
 
     def write(self, path: str) -> str:
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        if path.endswith(".gz"):
+            # gzip wrapper is deterministic (mtime=0): the payload is
+            # byte-identical to the plain .chkb, just wrapped
+            with open(path, "wb") as fh:
+                fh.write(_gzip_bytes(self.getvalue()))
+            return path
         self._flush_block()
         hb = self._header_bytes()
-        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
         with open(path, "wb") as fh:
             fh.write(_magic_for(self.version))
             fh.write(struct.pack("<I", len(hb)))
@@ -378,6 +402,8 @@ def _header_decompressor(header: Dict[str, Any]):
 
 
 def from_chkb_bytes(data: bytes) -> ExecutionTrace:
+    if data[:2] == _GZIP_MAGIC:
+        data = gzip.decompress(data)
     header, off, version = _read_chkb_header(data)
     d = dict(header)
     d["nodes"] = []
@@ -396,6 +422,8 @@ def from_chkb_bytes(data: bytes) -> ExecutionTrace:
 
 def iter_chkb_nodes(data: bytes) -> Iterator[ETNode]:
     """Stream nodes block-by-block (partial loading), either version."""
+    if data[:2] == _GZIP_MAGIC:
+        data = gzip.decompress(data)
     header, off, version = _read_chkb_header(data)
     dctx = _header_decompressor(header)
     decode = _BLOCK_DECODERS[version]
@@ -424,6 +452,17 @@ class ChkbReader:
     def __init__(self, path: str) -> None:
         self.path = path
         self._fh = open(path, "rb")
+        self._fh.seek(0)
+        if self._fh.read(2) == _GZIP_MAGIC:
+            # gzip-wrapped CHKB (magic-byte sniff, suffix irrelevant): the
+            # deflate stream has no block index, so random access requires
+            # the decompressed image — held in memory for the reader's
+            # lifetime.  Storage stays compressed end-to-end; the windowed
+            # block API on top is unchanged.
+            self._fh.seek(0)
+            data = gzip.decompress(self._fh.read())
+            self._fh.close()
+            self._fh = io.BytesIO(data)
         self._fh.seek(0)
         head = self._fh.read(12)
         self.version = _parse_magic(head[:8])
@@ -503,12 +542,15 @@ class ChkbReader:
 
 # ------------------------------------------------------------------ file IO
 def save(et: ExecutionTrace, path: str, **kw: Any) -> str:
-    """Write a trace; format selected by suffix (.json, .json.zst, .chkb)."""
+    """Write a trace; format selected by suffix
+    (.json, .json.zst, .chkb, .chkb.gz)."""
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     if path.endswith(".json"):
         data = to_json_bytes(et)
     elif path.endswith(".json.zst"):
         data = compressor(level=3).compress(to_json_bytes(et))
+    elif path.endswith(".chkb.gz"):
+        data = _gzip_bytes(to_chkb_bytes(et, **kw))
     elif path.endswith(".chkb"):
         data = to_chkb_bytes(et, **kw)
     else:
@@ -525,8 +567,8 @@ def load(path: str) -> ExecutionTrace:
         return from_json_bytes(data)
     if path.endswith(".json.zst"):
         return from_json_bytes(decompressor(sniff_codec(data)).decompress(data))
-    if path.endswith(".chkb"):
-        return from_chkb_bytes(data)
+    if is_chkb_path(path):
+        return from_chkb_bytes(data)    # gzip handled by magic sniff
     raise ValueError(f"unknown trace suffix: {path}")
 
 

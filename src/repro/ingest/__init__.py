@@ -1,0 +1,61 @@
+"""repro.ingest — real-trace ingestion.
+
+Parses external profiler outputs — Chrome-trace/Kineto ``traceEvents`` JSON
+and PyTorch-ET node lists — and standardizes them into Chakra
+ExecutionTraces, so production traces become first-class citizens of the
+collect→profile→synthesize→simulate→explore pipeline (the paper's
+interoperability claim, §3.1).
+
+Layers:
+
+* :mod:`.chrome_trace` — streaming Chrome/Kineto parser (gzip-transparent,
+  incremental, X/B-E/flow/metadata events, µs→ns normalization),
+* :mod:`.pytorch_et` — PyTorch-ET host-trace parser + ``rf_id`` splice,
+* :mod:`.correlate` — host/device correlation, NodeType classification,
+  comm recovery, dependency-correct emission,
+* :mod:`.stages` — ``ingest.chrome`` / ``ingest.pytorch_et`` registry
+  Sources (the ``repro ingest`` CLI verb lives in :mod:`repro.cli`).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple, Union
+
+from ..core.schema import ExecutionTrace
+from .chrome_trace import ChromeTrace, parse_chrome_trace, sniff_format
+from .correlate import IngestReport, standardize_chrome
+from .pytorch_et import PTTrace, parse_pytorch_et, standardize_pytorch_et
+
+FORMATS = ("auto", "chrome", "pytorch_et")
+
+
+def ingest_file(path: str, fmt: str = "auto", rank: Optional[int] = None,
+                world_size: Optional[int] = None,
+                device_path: Optional[str] = None
+                ) -> Tuple[ExecutionTrace, IngestReport]:
+    """One-call ingestion: sniff + parse + standardize one foreign trace.
+
+    ``device_path`` optionally supplies a device-side Kineto trace to splice
+    under a PyTorch host ET (ignored for ``chrome`` input, which already
+    carries both sides in one file).
+    """
+    if fmt not in FORMATS:
+        raise ValueError(f"unknown format {fmt!r}; options: {FORMATS}")
+    if fmt == "auto":
+        fmt = sniff_format(path)
+    name = os.path.basename(path)
+    if fmt == "chrome":
+        ct = parse_chrome_trace(path)
+        return standardize_chrome(ct, rank=rank, world_size=world_size,
+                                  source_name=name)
+    pt = parse_pytorch_et(path)
+    dev = parse_chrome_trace(device_path) if device_path else None
+    return standardize_pytorch_et(pt, device=dev, rank=rank,
+                                  world_size=world_size, source_name=name)
+
+
+__all__ = [
+    "FORMATS", "ChromeTrace", "IngestReport", "PTTrace", "ingest_file",
+    "parse_chrome_trace", "parse_pytorch_et", "sniff_format",
+    "standardize_chrome", "standardize_pytorch_et",
+]

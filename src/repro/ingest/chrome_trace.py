@@ -1,0 +1,340 @@
+"""Streaming Chrome-trace / Kineto JSON parser.
+
+PyTorch's Kineto profiler (and everything else in the Chrome ecosystem)
+emits the `Trace Event Format`_: a ``traceEvents`` array of small JSON
+objects.  Production traces run to gigabytes, so this parser never loads the
+document — it scans the byte stream for the ``traceEvents`` array and
+decodes **one complete event at a time** with ``json.JSONDecoder.raw_decode``
+(the C-speed scanner; no ``ijson`` dependency), keeping memory proportional
+to one read chunk plus the structured events we retain.
+
+Handled event phases:
+
+* ``X``  — complete duration events (the Kineto default),
+* ``B``/``E`` — begin/end pairs, matched per ``(pid, tid)`` stack,
+* ``s``/``t``/``f`` — flow events (Kineto's ``ac2g`` CPU→GPU arrows),
+  resolved to their anchor events by ``(pid, tid, timestamp)``,
+* ``M``  — metadata (process/thread names: how streams are recognized),
+* everything else (counters, instants, samples) is counted and skipped.
+
+Timestamps: the Chrome format stamps ``ts``/``dur`` in **microseconds**,
+frequently fractional.  Everything is normalized to integer **nanoseconds**
+on ingest (``ts_ns``/``dur_ns``) so correlation and stream ordering never
+hit float-equality trouble; the standardizer converts back to the schema's
+micros at emission.  Gzip input (``.json.gz`` or bare magic bytes) is
+transparent.
+
+.. _Trace Event Format:
+   https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU
+"""
+from __future__ import annotations
+
+import gzip
+import io
+import json
+import re
+from typing import (Any, Dict, Iterable, Iterator, List, Optional, Tuple,
+                    Union)
+
+_GZIP_MAGIC = b"\x1f\x8b"
+_CHUNK = 1 << 20            # 1 MiB reads
+_COMPACT_AT = 1 << 16       # drop consumed buffer prefix beyond 64 KiB
+
+_DECODER = json.JSONDecoder()
+_WS = " \t\n\r"
+
+#: ``ts``/``dur`` multipliers to nanoseconds, by declared unit
+_UNIT_NS = {"us": 1000.0, "ms": 1e6, "ns": 1.0, "s": 1e9}
+
+
+class KEvent:
+    """One normalized duration event (phase X, or a matched B/E pair)."""
+
+    __slots__ = ("name", "cat", "ph", "pid", "tid", "ts_ns", "dur_ns", "args")
+
+    def __init__(self, name: str, cat: str, ph: str, pid: Any, tid: Any,
+                 ts_ns: int, dur_ns: int, args: Optional[Dict[str, Any]]):
+        self.name = name
+        self.cat = cat
+        self.ph = ph
+        self.pid = pid
+        self.tid = tid
+        self.ts_ns = ts_ns
+        self.dur_ns = dur_ns
+        self.args = args or {}
+
+    @property
+    def end_ns(self) -> int:
+        return self.ts_ns + self.dur_ns
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"KEvent({self.name!r}, cat={self.cat!r}, pid={self.pid}, "
+                f"tid={self.tid}, ts_ns={self.ts_ns}, dur_ns={self.dur_ns})")
+
+
+class ChromeTrace:
+    """Structured result of one parsed Chrome/Kineto trace file."""
+
+    def __init__(self) -> None:
+        self.events: List[KEvent] = []
+        #: flow id -> (pid, tid, ts_ns) of the flow *start* anchor
+        self.flow_starts: Dict[Any, Tuple[Any, Any, int]] = {}
+        #: flow id -> (pid, tid, ts_ns) of the flow *end* anchor
+        self.flow_ends: Dict[Any, Tuple[Any, Any, int]] = {}
+        #: (pid, tid) -> thread name (from M/thread_name events)
+        self.thread_names: Dict[Tuple[Any, Any], str] = {}
+        #: pid -> process name
+        self.process_names: Dict[Any, str] = {}
+        self.rank: Optional[int] = None          # distributedInfo.rank
+        self.world_size: Optional[int] = None    # distributedInfo.world_size
+        self.events_seen = 0
+        self.skipped = 0
+        self.unmatched_be = 0
+
+    def summary(self) -> str:
+        return (f"chrome: {self.events_seen} events "
+                f"({len(self.events)} duration, {len(self.flow_starts)} "
+                f"flows, {self.skipped} skipped, "
+                f"{self.unmatched_be} unmatched B/E)")
+
+
+# ------------------------------------------------------------ byte streaming
+def _open_text(source: Union[str, bytes, io.IOBase]) -> io.TextIOBase:
+    """Text stream over a path / bytes / binary file, gzip-transparent.
+
+    Detection is by magic bytes, not suffix, so ``trace.json`` files that
+    are secretly gzipped (a common Kineto misconfiguration) still load.
+    """
+    if isinstance(source, (bytes, bytearray)):
+        raw: io.IOBase = io.BytesIO(source)
+    elif isinstance(source, str):
+        raw = open(source, "rb")
+    else:
+        raw = source
+    if not raw.seekable():
+        raw = io.BytesIO(raw.read())
+    pos = raw.tell()
+    head = raw.read(2)
+    raw.seek(pos)
+    if head == _GZIP_MAGIC:
+        raw = gzip.GzipFile(fileobj=raw)
+    # TextIOWrapper handles multi-byte UTF-8 split across chunk boundaries
+    return io.TextIOWrapper(raw, encoding="utf-8", errors="replace")
+
+
+def _iter_array_values(fh: io.TextIOBase, key: str = "traceEvents"
+                       ) -> Iterator[Any]:
+    """Yield the elements of the ``key`` array (or a bare top-level array),
+    one decoded value at a time, then yield a final ``("__tail__", text)``
+    marker carrying everything after the array (small metadata keys like
+    ``distributedInfo`` live there).
+    """
+    buf = fh.read(_CHUNK)
+    # ---- locate the array start ------------------------------------------
+    i = 0
+    while i < len(buf) and buf[i] in _WS:
+        i += 1
+    if i < len(buf) and buf[i] == "[":
+        pos = i + 1
+    else:
+        needle = f'"{key}"'
+        while True:
+            k = buf.find(needle)
+            if k >= 0:
+                b = buf.find("[", k + len(needle))
+                if b >= 0:
+                    pos = b + 1
+                    break
+            chunk = fh.read(_CHUNK)
+            if not chunk:
+                raise ValueError(
+                    f"not a Chrome trace: no {needle} array found")
+            # keep a needle-sized overlap so a key split across chunks is
+            # still found
+            if len(buf) > len(needle) + 64:
+                buf = buf[-(len(needle) + 64):]
+            buf += chunk
+
+    # ---- decode elements --------------------------------------------------
+    exhausted = False
+    while True:
+        # skip whitespace / separators
+        while True:
+            while pos < len(buf) and buf[pos] in _WS + ",":
+                pos += 1
+            if pos < len(buf):
+                break
+            chunk = fh.read(_CHUNK)
+            if not chunk:
+                raise ValueError("truncated Chrome trace (array not closed)")
+            buf, pos = "", 0
+            buf = chunk
+        if buf[pos] == "]":
+            pos += 1
+            break
+        try:
+            value, pos = _DECODER.raw_decode(buf, pos)
+        except ValueError:
+            chunk = fh.read(_CHUNK)
+            if not chunk:
+                if exhausted:
+                    raise ValueError(
+                        "truncated Chrome trace (incomplete event)") from None
+                exhausted = True
+            if pos > _COMPACT_AT:
+                buf = buf[pos:]
+                pos = 0
+            buf += chunk
+            continue
+        yield value
+
+    # ---- tail: whatever follows the array (bounded metadata) -------------
+    tail = buf[pos:]
+    while True:
+        chunk = fh.read(_CHUNK)
+        if not chunk:
+            break
+        tail += chunk
+    yield ("__tail__", tail)
+
+
+def _tail_value(tail: str, key: str) -> Optional[Any]:
+    """Decode one ``"key": value`` pair out of loose trailing JSON text."""
+    k = tail.find(f'"{key}"')
+    if k < 0:
+        return None
+    colon = tail.find(":", k)
+    if colon < 0:
+        return None
+    start = colon + 1
+    while start < len(tail) and tail[start] in _WS:
+        start += 1      # raw_decode does not skip leading whitespace
+    try:
+        value, _ = _DECODER.raw_decode(tail, start)
+    except ValueError:
+        return None
+    return value
+
+
+# ------------------------------------------------------------------- parsing
+def parse_chrome_trace(source: Union[str, bytes, io.IOBase],
+                       time_unit: str = "us") -> ChromeTrace:
+    """Parse a Chrome/Kineto trace into a :class:`ChromeTrace`.
+
+    ``source`` is a path, raw bytes, or a binary file object; gzip is
+    detected by magic bytes.  ``time_unit`` declares the unit of ``ts`` /
+    ``dur`` fields (the Chrome format specifies microseconds; some exporters
+    stamp nanoseconds — pass ``"ns"`` for those).
+    """
+    scale = _UNIT_NS.get(time_unit)
+    if scale is None:
+        raise ValueError(f"unknown time unit {time_unit!r}; "
+                         f"options: {sorted(_UNIT_NS)}")
+    ct = ChromeTrace()
+    be_stacks: Dict[Tuple[Any, Any], List[Tuple[str, str, int, Dict]]] = {}
+    fh = _open_text(source)
+    try:
+        for ev in _iter_array_values(fh):
+            if isinstance(ev, tuple) and ev[0] == "__tail__":
+                _absorb_tail(ct, ev[1])
+                continue
+            if not isinstance(ev, dict):
+                ct.skipped += 1
+                continue
+            ct.events_seen += 1
+            ph = ev.get("ph", "X")
+            pid = ev.get("pid", 0)
+            tid = ev.get("tid", 0)
+            if ph == "X":
+                ts = int(float(ev.get("ts", 0)) * scale)
+                dur = int(float(ev.get("dur", 0)) * scale)
+                ct.events.append(KEvent(str(ev.get("name", "")),
+                                        str(ev.get("cat", "")), "X",
+                                        pid, tid, ts, dur, ev.get("args")))
+            elif ph == "B":
+                be_stacks.setdefault((pid, tid), []).append(
+                    (str(ev.get("name", "")), str(ev.get("cat", "")),
+                     int(float(ev.get("ts", 0)) * scale), ev.get("args") or {}))
+            elif ph == "E":
+                stack = be_stacks.get((pid, tid))
+                if not stack:
+                    ct.unmatched_be += 1
+                    continue
+                name, cat, ts, args = stack.pop()
+                end = int(float(ev.get("ts", ts / scale)) * scale)
+                if ev.get("args"):
+                    args = {**args, **ev["args"]}
+                ct.events.append(KEvent(name, cat, "X", pid, tid, ts,
+                                        max(0, end - ts), args))
+            elif ph in ("s", "t", "f"):
+                fid = ev.get("id", ev.get("bind_id"))
+                anchor = (pid, tid, int(float(ev.get("ts", 0)) * scale))
+                if ph == "s":
+                    ct.flow_starts.setdefault(fid, anchor)
+                else:           # "t" (step) and "f" (finish) both terminate
+                    ct.flow_ends[fid] = anchor
+            elif ph == "M":
+                args = ev.get("args") or {}
+                name = ev.get("name", "")
+                if name == "thread_name":
+                    ct.thread_names[(pid, tid)] = str(args.get("name", ""))
+                elif name == "process_name":
+                    ct.process_names[pid] = str(args.get("name", ""))
+            else:
+                ct.skipped += 1
+    finally:
+        fh.close()
+    # drop unterminated B events (crash-truncated traces)
+    ct.unmatched_be += sum(len(s) for s in be_stacks.values())
+    return ct
+
+
+def _absorb_tail(ct: ChromeTrace, tail: str) -> None:
+    """Pick trailing metadata (distributedInfo) out of the document tail."""
+    info = _tail_value(tail, "distributedInfo")
+    if isinstance(info, dict):
+        if "rank" in info:
+            ct.rank = int(info["rank"])
+        ws = info.get("world_size", info.get("worldSize"))
+        if ws is not None:
+            ct.world_size = int(ws)
+
+
+# -------------------------------------------------------------- format sniff
+_PT_ET_HINT = re.compile(r'"nodes"\s*:\s*\[')
+_CHROME_HINT = re.compile(r'"traceEvents"\s*:\s*\[')
+
+
+def sniff_format(source: Union[str, bytes], head_bytes: int = 1 << 16) -> str:
+    """Best-effort trace format detection: ``"chrome"`` or ``"pytorch_et"``.
+
+    Reads at most ``head_bytes`` (decompressed) and looks for the
+    ``traceEvents`` vs ``nodes`` signature; a bare top-level array is a
+    Chrome trace (event streams have no other common array-of-dicts shape).
+    """
+    if isinstance(source, str):
+        with open(source, "rb") as fh:
+            head = fh.read(head_bytes)
+    else:
+        head = bytes(source[:head_bytes])
+    if head[:2] == _GZIP_MAGIC:
+        try:
+            head = gzip.GzipFile(fileobj=io.BytesIO(head)).read(head_bytes)
+        except (OSError, EOFError):
+            # truncated gzip member: decompress what the head contains
+            dec = gzip.zlib.decompressobj(16 + gzip.zlib.MAX_WBITS)
+            try:
+                head = dec.decompress(head, head_bytes)
+            except gzip.zlib.error:
+                raise ValueError("undecodable gzip trace head") from None
+    text = head.decode("utf-8", errors="replace")
+    if _CHROME_HINT.search(text):
+        return "chrome"
+    if _PT_ET_HINT.search(text):
+        return "pytorch_et"
+    stripped = text.lstrip()
+    if stripped.startswith("["):
+        return "chrome"
+    raise ValueError(
+        "cannot sniff trace format (no traceEvents or nodes array in the "
+        "first 64 KiB); pass --format chrome|pytorch_et explicitly")

@@ -1,0 +1,263 @@
+"""PyTorch execution-trace (host-side ET) parser and standardizer.
+
+PyTorch's ExecutionTraceObserver emits a JSON document with a ``nodes`` array
+of host operator records::
+
+    {"schema": "1.0.2-chakra.0.0.4", "pid": ..., "nodes": [
+        {"id": 3, "name": "aten::mm", "ctrl_deps": 2, "inputs": {...},
+         "attrs": [{"name": "rf_id", "type": "uint64", "value": 41}, ...]},
+        ...]}
+
+This module parses that shape (tolerantly — ``ctrl_deps`` may be a single
+parent id or a list, attrs may be a list-of-records or a plain dict) and
+standardizes it into our ET.  When a device-side Kineto trace is supplied the
+host→device splice runs through ``rf_id``: PyTorch stamps each op's record
+function id, and the same value appears as ``External id`` on the Kineto
+side — so GPU kernels attach under the host op that launched them
+(Chakra's two-trace merge, paper §3.1.1).
+
+Streaming note: host ETs are orders of magnitude smaller than device traces
+(one record per *operator call*, not per event), so this parser decodes the
+``nodes`` array with the same incremental scanner as the Chrome parser but
+materializes the records — linking needs random access by id anyway.
+"""
+from __future__ import annotations
+
+import io
+from typing import Any, Dict, List, Optional, Tuple, Union
+
+from ..core.schema import ExecutionTrace, NodeType
+from .chrome_trace import ChromeTrace, _iter_array_values, _open_text
+from .correlate import IngestReport, _apply_comm, _finish, classify_comm
+
+
+class PTTrace:
+    """Parsed PyTorch-ET document: raw node records + document metadata."""
+
+    def __init__(self) -> None:
+        self.nodes: List[Dict[str, Any]] = []
+        self.schema: str = ""
+        self.rank: Optional[int] = None
+        self.world_size: Optional[int] = None
+        self.skipped = 0
+
+    def summary(self) -> str:
+        return (f"pytorch_et[{self.schema or '?'}]: {len(self.nodes)} nodes, "
+                f"{self.skipped} skipped")
+
+
+def _attrs_dict(raw: Any) -> Dict[str, Any]:
+    """Normalize an attrs payload: list of {name,value} records or a dict."""
+    if isinstance(raw, dict):
+        return dict(raw)
+    out: Dict[str, Any] = {}
+    if isinstance(raw, list):
+        for rec in raw:
+            if isinstance(rec, dict) and "name" in rec:
+                out[str(rec["name"])] = rec.get("value")
+    return out
+
+
+def parse_pytorch_et(source: Union[str, bytes, io.IOBase]) -> PTTrace:
+    """Parse a PyTorch-ET JSON document (plain or gzip) into a PTTrace."""
+    pt = PTTrace()
+    fh = _open_text(source)
+    try:
+        for value in _iter_array_values(fh, key="nodes"):
+            if isinstance(value, tuple) and value[0] == "__tail__":
+                continue       # schema/pid usually precede the array
+            if not isinstance(value, dict) or "id" not in value:
+                pt.skipped += 1
+                continue
+            pt.nodes.append(value)
+    finally:
+        fh.close()
+    # schema / rank live before the nodes array: cheap second look at the head
+    head = _head_text(source)
+    v = _head_value(head, "schema")
+    if isinstance(v, str):
+        pt.schema = v
+    rank = _head_value(head, "rank")
+    if isinstance(rank, (int, float)):
+        pt.rank = int(rank)
+    ws = _head_value(head, "world_size")
+    if isinstance(ws, (int, float)):
+        pt.world_size = int(ws)
+    return pt
+
+
+def _head_text(source: Union[str, bytes, io.IOBase], n: int = 1 << 14) -> str:
+    try:
+        if isinstance(source, io.IOBase) and source.seekable():
+            source.seek(0)
+        fh = _open_text(source)
+        try:
+            return fh.read(n)
+        finally:
+            fh.close()
+    except (OSError, ValueError):
+        return ""
+
+
+def _head_value(head: str, key: str) -> Any:
+    from .chrome_trace import _tail_value
+    return _tail_value(head, key)
+
+
+# ----------------------------------------------------------- standardization
+def standardize_pytorch_et(pt: PTTrace,
+                           device: Optional[ChromeTrace] = None,
+                           rank: Optional[int] = None,
+                           world_size: Optional[int] = None,
+                           source_name: str = ""
+                           ) -> Tuple[ExecutionTrace, IngestReport]:
+    """Standardize a host ET (plus optional device Kineto trace) into our ET.
+
+    Node ids are renumbered densely in document order (PyTorch ids are
+    arbitrary); ``ctrl_deps`` parent references are remapped.  With a
+    ``device`` trace, kernels splice under host ops via
+    ``rf_id == External id`` and chain per-stream through sync deps.
+    """
+    report = IngestReport(source_format="pytorch_et", source_name=source_name,
+                          events_seen=len(pt.nodes), skipped_events=pt.skipped)
+    r = rank if rank is not None else (pt.rank if pt.rank is not None else 0)
+    et = ExecutionTrace(rank=int(r), world_size=1)
+    et.metadata["source_format"] = "pytorch_et"
+    if pt.schema:
+        et.metadata["source_schema"] = pt.schema
+    if source_name:
+        et.metadata["source"] = source_name
+
+    # --- host nodes, document order -----------------------------------
+    idmap: Dict[Any, int] = {}
+    rf_to_node: Dict[Any, int] = {}
+    host_attrs: Dict[int, Dict[str, Any]] = {}   # node id -> normalized attrs
+    deferred: List[Tuple[int, Any]] = []     # (node_id, raw parent ref)
+    classify_on_host = device is None or not device.events
+    for raw in pt.nodes:
+        attrs = _attrs_dict(raw.get("attrs"))
+        node = et.add_node(
+            name=str(raw.get("name", "")), type=NodeType.COMP,
+            start_time_micros=float(raw.get("ts", 0.0)),
+            duration_micros=float(raw.get("dur",
+                                          raw.get("exclusive_dur", 0.0))))
+        idmap[raw["id"]] = node.id
+        report.host_nodes += 1
+
+        parents = raw.get("ctrl_deps", raw.get("parent"))
+        if parents is None:
+            parents_list: List[Any] = []
+        elif isinstance(parents, (list, tuple)):
+            parents_list = list(parents)
+        else:
+            parents_list = [parents]
+        for p in parents_list:
+            if p in idmap:
+                if idmap[p] != node.id:
+                    node.ctrl_deps.append(idmap[p])
+            else:
+                deferred.append((node.id, p))   # forward reference
+
+        for dep in raw.get("data_deps", ()):
+            if dep in idmap and idmap[dep] != node.id:
+                node.data_deps.append(idmap[dep])
+            elif dep not in idmap:
+                deferred.append((node.id, dep))
+
+        rf = attrs.get("rf_id", attrs.get("record_function_id"))
+        if rf is not None:
+            rf_to_node.setdefault(rf, node.id)
+        if attrs:
+            host_attrs[node.id] = attrs
+
+        if classify_on_host:
+            ntype, ctype = classify_comm(node.name, attrs)
+            if ntype is not None:
+                _apply_comm(et, node, attrs, ntype, ctype, report)
+        if "stream" in attrs:
+            node.attrs["stream"] = str(attrs["stream"])
+
+    # resolve forward parent references now that every id is mapped
+    forward_edges = False
+    for nid, ref in deferred:
+        mapped = idmap.get(ref)
+        if mapped is not None and mapped != nid:
+            et.nodes[nid].ctrl_deps.append(mapped)
+            if mapped > nid:
+                forward_edges = True
+        # unmapped refs (PyTorch's phantom root id) are simply dropped
+
+    # --- device splice via rf_id == External id ------------------------
+    if device is not None and device.events:
+        _splice_device(et, device, rf_to_node, host_attrs, report)
+        if world_size is None and device.world_size is not None:
+            world_size = device.world_size
+
+    ws_src = pt.world_size if pt.world_size is not None else None
+    _finish(et, None, world_size if world_size is not None else ws_src,
+            report)
+    if forward_edges:
+        # PyTorch ids can reference forward (a child record precedes its
+        # parent); renumber into topological order so downstream consumers
+        # see the same deps-point-backwards invariant as the Chrome path.
+        from ..core.converter import canonicalize
+        et = canonicalize(et)
+    return et, report
+
+
+def _splice_device(et: ExecutionTrace, device: ChromeTrace,
+                   rf_to_node: Dict[Any, int],
+                   host_attrs: Dict[int, Dict[str, Any]],
+                   report: IngestReport) -> None:
+    from .correlate import DEVICE_CATS, _memcpy_type, comm_bytes_from_args
+
+    events = [ev for ev in device.events if ev.cat.lower() in DEVICE_CATS]
+    events.sort(key=lambda e: (repr(e.pid), repr(e.tid), e.ts_ns))
+    # eager anchor so deps point backwards; dropped if every kernel matched
+    unattributed_id: Optional[int] = None
+    if events:
+        unattributed_id = et.add_node(name="ingest/unattributed",
+                                      type=NodeType.METADATA).id
+    prev_in_stream: Dict[Tuple[Any, Any], int] = {}
+    for ev in events:
+        cat = ev.cat.lower()
+        if cat in ("gpu_memcpy", "gpu_memset", "memcpy", "memset"):
+            ntype0 = _memcpy_type(ev.name, cat)
+        else:
+            ntype0 = NodeType.COMP
+        node = et.add_node(name=ev.name, type=ntype0,
+                           duration_micros=ev.dur_ns / 1000.0,
+                           attrs={"stream": str(ev.tid)})
+        report.device_nodes += 1
+        if ntype0 != NodeType.COMP:
+            report.mem_nodes += 1
+            node.comm_bytes = comm_bytes_from_args(ev.args)
+
+        skey = (ev.pid, ev.tid)
+        prev = prev_in_stream.get(skey)
+        if prev is not None:
+            node.sync_deps.append(prev)
+        prev_in_stream[skey] = node.id
+
+        ext = ev.args.get("External id", ev.args.get("external id"))
+        anchor = rf_to_node.get(ext) if ext is not None else None
+        if anchor is not None:
+            report.ext_resolved += 1
+        else:
+            anchor = unattributed_id
+            report.unattributed_device += 1
+        node.ctrl_deps.append(anchor)
+
+        ntype, ctype = classify_comm(ev.name, ev.args)
+        if ntype is not None:
+            # device kernels rarely carry the group/size args — those live
+            # on the host op that launched them; host fills the gaps
+            args = ({**host_attrs[anchor], **ev.args}
+                    if anchor in host_attrs else ev.args)
+            _apply_comm(et, node, args, ntype, ctype, report)
+
+    if unattributed_id is not None and not report.unattributed_device:
+        del et.nodes[unattributed_id]
+
+
+__all__ = ["PTTrace", "parse_pytorch_et", "standardize_pytorch_et"]

@@ -1,0 +1,58 @@
+"""Pipeline-registry wiring for the ingestion subsystem.
+
+* ``ingest.chrome``     (source) — Chrome/Kineto trace file -> TraceStream
+* ``ingest.pytorch_et`` (source) — PyTorch-ET file (optionally + device
+  Kineto trace) -> TraceStream
+
+Both sources parse + standardize on ``open()`` and expose the
+:class:`~repro.ingest.correlate.IngestReport` as ``.report`` afterwards, so
+``Pipeline.from_source("ingest.chrome", path=...)`` drops an external trace
+straight into any existing pipeline tail (analyze / profile / chkb / sim).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from ..pipeline.registry import register_stage
+from ..pipeline.stages import DEFAULT_WINDOW, TraceStream
+from . import ingest_file
+from .correlate import IngestReport
+
+
+class _IngestSourceBase:
+    fmt = "auto"
+
+    def __init__(self, path: str, rank: Optional[int] = None,
+                 world_size: Optional[int] = None,
+                 device_path: Optional[str] = None,
+                 window: int = DEFAULT_WINDOW):
+        self.path = path
+        self.rank = rank
+        self.world_size = world_size
+        self.device_path = device_path
+        self.window = max(1, int(window))
+        #: one-line summary (Pipeline.reports); the full IngestReport object
+        #: stays on .ingest_report
+        self.report: Optional[str] = None
+        self.ingest_report: Optional[IngestReport] = None
+
+    def open(self) -> TraceStream:
+        et, self.ingest_report = ingest_file(
+            self.path, fmt=self.fmt, rank=self.rank,
+            world_size=self.world_size, device_path=self.device_path)
+        self.report = self.ingest_report.summary()
+        return TraceStream.from_trace(et, window=self.window)
+
+
+@register_stage("ingest.chrome", kind="source")
+class ChromeIngestSource(_IngestSourceBase):
+    """Standardize a Chrome-trace/Kineto JSON file into a TraceStream."""
+
+    fmt = "chrome"
+
+
+@register_stage("ingest.pytorch_et", kind="source")
+class PytorchEtIngestSource(_IngestSourceBase):
+    """Standardize a PyTorch-ET JSON file (± device trace) into a stream."""
+
+    fmt = "pytorch_et"

@@ -27,6 +27,11 @@ Three benchmarks, registered in the stage registry under kind="benchmark"
 * ``perf_explore`` — co-design sweep engine (``repro.explore``): spec
   expansion rate (canonical hashing included) and a cold sweep vs its
   fully-cached replay — the replay must execute zero simulations.
+* ``perf_ingest`` — real-trace ingestion (``repro.ingest``): streaming
+  Chrome/Kineto parse rate and standardization into an ExecutionTrace
+  (correlation splice + comm classification + dependency verification
+  included); the subsystem's floor is ≥100k events/sec in each stage,
+  with ``end_to_end`` reporting their combined rate.
 
 Results aggregate into a JSON document written to ``BENCH_perf.json`` at the
 repo root (see :func:`run_suite` / :func:`write_bench`).  Wall-clock numbers
@@ -66,6 +71,7 @@ _SCALE = {
         # 2 workloads x 4 topo x 4 world x 4 bw x 2 lat x 2 fid x 2 jitter
         "explore": {"jitter_values": 2, "iters": 4,
                     "world_sizes": [4, 8], "jobs": 2},
+        "ingest_events": 20_000,
     },
     "full": {
         "feeder_nodes": [10_000, 100_000],
@@ -83,6 +89,7 @@ _SCALE = {
         # 2048-config expansion; 24-config sweep, 4-way parallel
         "explore": {"jitter_values": 4, "iters": 16,
                     "world_sizes": [4, 8, 16, 32], "jobs": 4},
+        "ingest_events": 200_000,
     },
 }
 
@@ -451,6 +458,88 @@ def perf_explore(scale: str = "full", **_: Any) -> Dict[str, Any]:
     }
 
 
+# ------------------------------------------------------------------- ingest
+def _synth_kineto_doc(n_events: int) -> bytes:
+    """Synthetic Kineto document sized to ``n_events``: host op + runtime
+    launch + correlated kernel triplets, with a periodic NCCL collective
+    carrying full comm args — the shapes the hot splice path has to chew."""
+    ev: List[Dict[str, Any]] = []
+    t = 0
+    corr = 0
+    while len(ev) < n_events:
+        t += 100
+        corr += 1
+        ev.append({"ph": "X", "name": "aten::mm", "cat": "cpu_op",
+                   "pid": 1, "tid": 2, "ts": t, "dur": 30,
+                   "args": {"External id": corr}})
+        ev.append({"ph": "X", "name": "cudaLaunchKernel",
+                   "cat": "cuda_runtime", "pid": 1, "tid": 2,
+                   "ts": t + 35, "dur": 5, "args": {"correlation": corr}})
+        if corr % 16:
+            ev.append({"ph": "X", "name": "sgemm_128x64_tn", "cat": "kernel",
+                       "pid": 0, "tid": 7, "ts": t + 50, "dur": 40,
+                       "args": {"correlation": corr}})
+        else:
+            ev.append({"ph": "X",
+                       "name": "ncclDevKernel_AllReduce_Sum_f32_RING_LL",
+                       "cat": "kernel", "pid": 0, "tid": 7,
+                       "ts": t + 50, "dur": 80,
+                       "args": {"correlation": corr,
+                                "In msg nelems": 262144, "dtype": "float32",
+                                "Process Group Ranks": "[0, 1, 2, 3]",
+                                "Process Group Name": "0"}})
+    doc = {"traceEvents": ev,
+           "distributedInfo": {"rank": 0, "world_size": 4}}
+    return json.dumps(doc).encode("utf-8")
+
+
+def perf_ingest(scale: str = "full", **_: Any) -> Dict[str, Any]:
+    """Chrome/Kineto ingestion throughput (events/sec).
+
+    ``parse`` (raw JSON bytes to the KEvent stream) and ``standardize``
+    (KEvents to a verified ExecutionTrace: host nesting, correlation
+    splice, comm classification, ``verify_and_clean``) must each clear the
+    100k events/sec floor; ``end_to_end`` is their combined rate.  The
+    topological-by-construction emission discipline is what keeps
+    standardization over the floor — no canonicalize pass on the hot path.
+    """
+    from ..ingest import parse_chrome_trace, standardize_chrome
+
+    n = _cfg(scale)["ingest_events"]
+    payload = _synth_kineto_doc(n)
+
+    t0 = time.perf_counter()
+    ct = parse_chrome_trace(payload)
+    parse_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    et, report = standardize_chrome(ct)
+    std_s = time.perf_counter() - t0
+
+    events = ct.events_seen
+    total_s = parse_s + std_s
+    return {
+        "events": events,
+        "payload_mb": round(len(payload) / 1e6, 2),
+        "parse": {
+            "wall_s": round(parse_s, 4),
+            "events_per_sec": round(events / parse_s, 1),
+            "mb_per_sec": round(len(payload) / parse_s / 1e6, 2),
+        },
+        "standardize": {
+            "wall_s": round(std_s, 4),
+            "events_per_sec": round(events / std_s, 1),
+            "nodes_out": len(et),
+            "comm_nodes": report.comm_nodes,
+            "corr_resolved": report.corr_resolved,
+        },
+        "end_to_end": {
+            "wall_s": round(total_s, 4),
+            "events_per_sec": round(events / total_s, 1),
+        },
+    }
+
+
 # ------------------------------------------------------------------- driver
 BENCHMARKS = {
     "perf_feeder": perf_feeder,
@@ -459,6 +548,7 @@ BENCHMARKS = {
     "perf_chkb": perf_chkb,
     "perf_synth": perf_synth,
     "perf_explore": perf_explore,
+    "perf_ingest": perf_ingest,
 }
 
 
@@ -557,4 +647,14 @@ def gate_regressions(current: Dict[str, Any], baseline: Dict[str, Any],
                                                      bs["jobs"]):
         check(f"perf_explore cached sweep {cs['configs']} configs runs/sec",
               cs["cached_runs_per_sec"], bs["cached_runs_per_sec"])
+
+    # ingestion: events/sec is scale-independent (streaming, O(events)), so
+    # a smoke run gates directly against the full-scale baseline rates
+    cur_i = current.get("perf_ingest", {})
+    base_i = baseline.get("perf_ingest", {})
+    for stage in ("parse", "standardize", "end_to_end"):
+        if stage in cur_i and stage in base_i:
+            check(f"perf_ingest {stage} events/sec",
+                  cur_i[stage]["events_per_sec"],
+                  base_i[stage]["events_per_sec"])
     return failures, report

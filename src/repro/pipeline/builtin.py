@@ -19,8 +19,8 @@ from ..core.converter import convert_trace
 from ..core.feeder import ETFeeder, POLICIES
 from ..core.linker import link_traces
 from ..core.schema import ETNode, ExecutionTrace, NodeType
-from ..core.serialization import (ChkbReader, ChkbWriter, load, save,
-                                  to_json_bytes)
+from ..core.serialization import (ChkbReader, ChkbWriter, is_chkb_path, load,
+                                  save, to_json_bytes)
 from .registry import register_stage
 from .stages import (DEFAULT_WINDOW, TracePass, TraceStream, Window,
                      WindowPass)
@@ -78,7 +78,7 @@ class LoadSource:
         self.window = window
 
     def open(self) -> TraceStream:
-        if self.path.endswith(".chkb"):
+        if is_chkb_path(self.path):
             return TraceStream.from_chkb(self.path, window=self.window)
         return TraceStream.from_trace(load(self.path), window=self.window)
 
@@ -322,14 +322,15 @@ class JsonSink:
 
 @register_stage("save", kind="sink")
 class SaveSink:
-    """Suffix-dispatched writer: .chkb streams, .json/.json.zst materialize."""
+    """Suffix-dispatched writer: .chkb/.chkb.gz stream, .json/.json.zst
+    materialize."""
 
     def __init__(self, path: str, **kw: Any):
         self.path = path
         self.kw = kw
 
     def consume(self, stream: TraceStream) -> str:
-        if self.path.endswith(".chkb"):
+        if is_chkb_path(self.path):
             return ChkbSink(self.path, **self.kw).consume(stream)
         return save(stream.materialize(), self.path, **self.kw)
 
@@ -475,3 +476,5 @@ from ..synth import stages as _synth_stages  # noqa: E402, F401
 # ... and the co-design sweep engine (kind="experiment"; also import-light:
 # simulation backends load lazily inside each run)
 from ..explore import stages as _explore_stages  # noqa: E402, F401
+# ... and real-trace ingestion (stdlib-only parsers; import-light)
+from ..ingest import stages as _ingest_stages  # noqa: E402, F401

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import bisect
 import hashlib
+import math
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 _MASK64 = (1 << 64) - 1
@@ -205,6 +206,14 @@ class ValueAccumulator:
 
     def add(self, value: float, count: int = 1) -> None:
         v = float(value)
+        # Every profiled quantity (durations, byte counts, fan degrees) is
+        # non-negative by definition, but *ingested* production traces carry
+        # whatever the profiler wrote: missing fields, negative clock skew,
+        # NaN from a truncated record.  Clamp here — the one accumulation
+        # point — so no Dist ever goes degenerate and the canonical-JSON
+        # profile stays serializable (NaN has no JSON encoding).
+        if not math.isfinite(v) or v < 0.0:
+            v = 0.0
         self.n += count
         self.total += v * count
         if self._capped and v not in self._counts:

@@ -1,0 +1,189 @@
+"""Regenerate the ingestion golden fixtures (checked-in; run manually).
+
+    PYTHONPATH=src python tests/data/gen_ingest_fixtures.py
+
+Produces, in this directory:
+
+* ``mini_kineto.json``          — a miniature Kineto/Chrome trace: two
+  training steps of cpu_ops + runtime launches + device kernels (GeMM,
+  NCCL allreduce + reduce_scatter with full comm args, memcpy with an
+  ``ac2g`` flow arrow), B/E pairs, metadata and counter events, and a
+  ``distributedInfo`` tail — every event shape the parser handles.
+* ``mini_kineto.json.gz``       — the same bytes, gzip with mtime=0.
+* ``mini_pytorch_et.json``      — a miniature PyTorch-ET node list with
+  rf_id attrs and a comm op.
+* ``mini_kineto.expected.chkb`` / ``mini_pytorch_et.expected.chkb`` —
+  byte-stable standardized output, written with ``compress=False`` so the
+  bytes are identical whether or not orjson/zstandard are installed.
+
+Everything here is hand-pinned (no timestamps, no randomness): the goldens
+must be byte-identical on every machine and in every dependency matrix.
+"""
+from __future__ import annotations
+
+import gzip
+import io
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def mini_kineto() -> dict:
+    ev = []
+    # ------------------------------------------------ metadata events
+    ev.append({"ph": "M", "name": "process_name", "pid": 4001, "tid": 0,
+               "args": {"name": "python"}})
+    ev.append({"ph": "M", "name": "process_name", "pid": 0, "tid": 0,
+               "args": {"name": "CUDA 0"}})
+    ev.append({"ph": "M", "name": "thread_name", "pid": 0, "tid": 7,
+               "args": {"name": "stream 7"}})
+    ev.append({"ph": "M", "name": "thread_name", "pid": 0, "tid": 20,
+               "args": {"name": "stream 20 (memcpy)"}})
+
+    def step(base_ts: int, ext0: int, corr0: int) -> None:
+        t = base_ts
+        # profiler step annotation wraps the whole step (B/E pair)
+        ev.append({"ph": "B", "name": f"ProfilerStep#{ext0 // 100}",
+                   "cat": "user_annotation", "pid": 4001, "tid": 2, "ts": t})
+        # host op: linear -> nested mm -> runtime launch
+        ev.append({"ph": "X", "name": "aten::linear", "cat": "cpu_op",
+                   "pid": 4001, "tid": 2, "ts": t + 10, "dur": 120,
+                   "args": {"External id": ext0 + 1}})
+        ev.append({"ph": "X", "name": "aten::mm", "cat": "cpu_op",
+                   "pid": 4001, "tid": 2, "ts": t + 20, "dur": 80,
+                   "args": {"External id": ext0 + 2}})
+        ev.append({"ph": "X", "name": "cudaLaunchKernel",
+                   "cat": "cuda_runtime", "pid": 4001, "tid": 2,
+                   "ts": t + 60, "dur": 8,
+                   "args": {"External id": ext0 + 2,
+                            "correlation": corr0 + 1}})
+        # GeMM kernel on stream 7, correlation-matched
+        ev.append({"ph": "X",
+                   "name": "ampere_sgemm_128x64_tn", "cat": "kernel",
+                   "pid": 0, "tid": 7, "ts": t + 90, "dur": 40.5,
+                   "args": {"External id": ext0 + 2,
+                            "correlation": corr0 + 1}})
+        # collective: host op -> launch -> nccl kernel with full comm args
+        ev.append({"ph": "X", "name": "c10d::allreduce_", "cat": "cpu_op",
+                   "pid": 4001, "tid": 2, "ts": t + 140, "dur": 30,
+                   "args": {"External id": ext0 + 3}})
+        ev.append({"ph": "X", "name": "cudaLaunchKernel",
+                   "cat": "cuda_runtime", "pid": 4001, "tid": 2,
+                   "ts": t + 150, "dur": 6,
+                   "args": {"External id": ext0 + 3,
+                            "correlation": corr0 + 2}})
+        ev.append({"ph": "X",
+                   "name": "ncclDevKernel_AllReduce_Sum_f32_RING_LL",
+                   "cat": "kernel", "pid": 0, "tid": 7,
+                   "ts": t + 170, "dur": 95,
+                   "args": {"External id": ext0 + 3,
+                            "correlation": corr0 + 2,
+                            "In msg nelems": 262144,
+                            "Out msg nelems": 262144,
+                            "dtype": "float32", "Group size": 2,
+                            "Process Group Ranks": "[0, 1]",
+                            "Process Group Name": "0",
+                            "Collective name": "allreduce"}})
+        # memcpy attributed through an ac2g flow arrow (no correlation)
+        ev.append({"ph": "X", "name": "cudaMemcpyAsync",
+                   "cat": "cuda_runtime", "pid": 4001, "tid": 2,
+                   "ts": t + 210, "dur": 5, "args": {}})
+        ev.append({"ph": "s", "cat": "ac2g", "id": corr0 + 3,
+                   "pid": 4001, "tid": 2, "ts": t + 210})
+        ev.append({"ph": "X", "name": "Memcpy HtoD (Pageable -> Device)",
+                   "cat": "gpu_memcpy", "pid": 0, "tid": 20,
+                   "ts": t + 230, "dur": 12,
+                   "args": {"bytes": 1048576}})
+        ev.append({"ph": "f", "cat": "ac2g", "id": corr0 + 3, "bp": "e",
+                   "pid": 0, "tid": 20, "ts": t + 230})
+        # a zero-duration instant-ish op (profile-robustness fixture: the
+        # synth guard must not produce NaN dists from it)
+        ev.append({"ph": "X", "name": "aten::empty", "cat": "cpu_op",
+                   "pid": 4001, "tid": 2, "ts": t + 250, "dur": 0,
+                   "args": {"External id": ext0 + 4}})
+        ev.append({"ph": "E", "cat": "user_annotation",
+                   "pid": 4001, "tid": 2, "ts": t + 300})
+
+    step(1000, 100, 500)
+    step(2000, 200, 600)
+    # a reduce-scatter kernel with no host anchor (unattributed path) and
+    # name-pattern comm classification (no "Collective name" arg)
+    ev.append({"ph": "X",
+               "name": "ncclDevKernel_ReduceScatter_Sum_bf16_RING_LL",
+               "cat": "kernel", "pid": 0, "tid": 7, "ts": 3000, "dur": 60,
+               "args": {"In msg nelems": 131072, "dtype": "bf16",
+                        "Group size": 2,
+                        "Process Group Ranks": "[0, 1]",
+                        "Process Group Name": "0"}})
+    # counter event: counted as skipped
+    ev.append({"ph": "C", "name": "Memory", "pid": 4001, "tid": 0,
+               "ts": 3100, "args": {"allocated": 1024}})
+    return {
+        "schemaVersion": 1,
+        "traceEvents": ev,
+        "traceName": "mini_kineto",
+        "distributedInfo": {"backend": "nccl", "rank": 0, "world_size": 2},
+    }
+
+
+def mini_pytorch_et() -> dict:
+    nodes = [
+        {"id": 1, "name": "[pytorch|profiler|execution_trace|process]",
+         "ctrl_deps": None, "inputs": {"values": []},
+         "attrs": [{"name": "rf_id", "type": "uint64", "value": 0}]},
+        {"id": 2, "name": "aten::linear", "ctrl_deps": 1, "dur": 120,
+         "attrs": [{"name": "rf_id", "type": "uint64", "value": 102}]},
+        {"id": 3, "name": "aten::mm", "ctrl_deps": 2, "dur": 80,
+         "attrs": [{"name": "rf_id", "type": "uint64", "value": 103}]},
+        {"id": 4, "name": "aten::relu", "ctrl_deps": 2, "dur": 15,
+         "attrs": [{"name": "rf_id", "type": "uint64", "value": 104}]},
+        {"id": 5, "name": "nccl:all_reduce", "ctrl_deps": 1, "dur": 95,
+         "attrs": [{"name": "rf_id", "type": "uint64", "value": 105},
+                   {"name": "In msg nelems", "type": "uint64",
+                    "value": 262144},
+                   {"name": "dtype", "type": "string", "value": "float32"},
+                   {"name": "Process Group Ranks", "type": "string",
+                    "value": "[0, 1]"},
+                   {"name": "Process Group Name", "type": "string",
+                    "value": "0"}]},
+        # zero-duration node + list-valued ctrl_deps (tolerant-parse paths)
+        {"id": 6, "name": "aten::empty", "ctrl_deps": [1], "dur": 0,
+         "attrs": [{"name": "rf_id", "type": "uint64", "value": 106}]},
+    ]
+    return {"schema": "1.0.2-chakra.0.0.4", "pid": 4001, "time": "pinned",
+            "start_ts": 0, "nodes": nodes}
+
+
+def main() -> None:
+    from repro.core.serialization import to_chkb_bytes
+    from repro.ingest import ingest_file
+
+    kineto_path = os.path.join(HERE, "mini_kineto.json")
+    payload = (json.dumps(mini_kineto(), indent=1, sort_keys=False)
+               + "\n").encode("utf-8")
+    with open(kineto_path, "wb") as fh:
+        fh.write(payload)
+    buf = io.BytesIO()
+    with gzip.GzipFile(fileobj=buf, mode="wb", mtime=0) as gz:
+        gz.write(payload)
+    with open(kineto_path + ".gz", "wb") as fh:
+        fh.write(buf.getvalue())
+
+    pt_path = os.path.join(HERE, "mini_pytorch_et.json")
+    with open(pt_path, "wb") as fh:
+        fh.write((json.dumps(mini_pytorch_et(), indent=1) + "\n")
+                 .encode("utf-8"))
+
+    # goldens: compress=False so bytes match in every dependency matrix
+    # (the default codec differs between zstd and stdlib-zlib environments)
+    for src, name in ((kineto_path, "mini_kineto.expected.chkb"),
+                      (pt_path, "mini_pytorch_et.expected.chkb")):
+        et, report = ingest_file(src)
+        with open(os.path.join(HERE, name), "wb") as fh:
+            fh.write(to_chkb_bytes(et, compress=False))
+        print(f"{name}: {report.summary()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,393 @@
+"""Ingestion subsystem tests: parsers, correlation/standardization, golden
+byte-stability, gzip transparency, CLI verb, and the closed loop
+ingest -> profile -> synth -> sim.
+
+The golden fixtures live in ``tests/data`` (regenerate with
+``python tests/data/gen_ingest_fixtures.py``); the expected CHKB files are
+written with ``compress=False`` so the bytes are identical in the full and
+minimal (no orjson/zstandard) dependency matrices.
+"""
+import gzip
+import io
+import json
+import math
+import os
+
+import pytest
+
+from repro import cli
+from repro.core.schema import CollectiveType, NodeType
+from repro.core.serialization import (ChkbReader, ChkbWriter, is_chkb_path,
+                                      load, save, to_chkb_bytes)
+from repro.ingest import (ingest_file, parse_chrome_trace, parse_pytorch_et,
+                          sniff_format, standardize_chrome,
+                          standardize_pytorch_et)
+from repro.ingest.correlate import classify_comm, comm_bytes_from_args, \
+    parse_ranks
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+KINETO = os.path.join(DATA, "mini_kineto.json")
+KINETO_GZ = os.path.join(DATA, "mini_kineto.json.gz")
+PT_ET = os.path.join(DATA, "mini_pytorch_et.json")
+
+
+# ===================================================================== parser
+def test_parse_chrome_counts_and_metadata():
+    ct = parse_chrome_trace(KINETO)
+    # 2 steps x (1 B/E pair + 10 X) + 1 trailing kernel = 23 duration events
+    assert len(ct.events) == 23
+    assert ct.skipped == 1                       # the counter event
+    assert ct.unmatched_be == 0
+    assert ct.rank == 0 and ct.world_size == 2   # distributedInfo tail
+    assert ct.process_names[0] == "CUDA 0"
+    assert ct.thread_names[(0, 7)] == "stream 7"
+    assert len(ct.flow_starts) == 2 and len(ct.flow_ends) == 2
+
+
+def test_parse_chrome_gzip_is_identical():
+    plain = parse_chrome_trace(KINETO)
+    gzipped = parse_chrome_trace(KINETO_GZ)
+    assert len(plain.events) == len(gzipped.events)
+    assert [(e.name, e.ts_ns, e.dur_ns) for e in plain.events] == \
+           [(e.name, e.ts_ns, e.dur_ns) for e in gzipped.events]
+
+
+def test_parse_chrome_be_pairing_and_us_to_ns():
+    ct = parse_chrome_trace(KINETO)
+    steps = [e for e in ct.events if e.name.startswith("ProfilerStep")]
+    assert len(steps) == 2
+    # B at ts=1000us, E at ts=1300us -> 300us == 300000ns
+    assert steps[0].dur_ns == 300_000
+    gemm = next(e for e in ct.events if e.name.startswith("ampere_sgemm"))
+    assert gemm.dur_ns == 40_500                 # fractional 40.5us
+
+
+def test_parse_chrome_bare_array_and_truncation():
+    events = [{"ph": "X", "name": "a", "ts": 1, "dur": 1}]
+    ct = parse_chrome_trace(json.dumps(events).encode())
+    assert len(ct.events) == 1                   # bare top-level array form
+    with pytest.raises(ValueError):
+        parse_chrome_trace(b'{"traceEvents": [{"ph": "X", "name": "a"')
+    with pytest.raises(ValueError):
+        parse_chrome_trace(b'{"no_events_here": 1}')
+
+
+def test_sniff_format():
+    assert sniff_format(KINETO) == "chrome"
+    assert sniff_format(KINETO_GZ) == "chrome"
+    assert sniff_format(PT_ET) == "pytorch_et"
+    assert sniff_format(b"[{}]") == "chrome"
+    with pytest.raises(ValueError):
+        sniff_format(b'{"neither": 1}')
+
+
+# ============================================================= classification
+def test_classify_comm_patterns():
+    cases = [
+        ("ncclDevKernel_AllReduce_Sum_f32", NodeType.COMM_COLL,
+         CollectiveType.ALL_REDUCE),
+        ("ncclDevKernel_ReduceScatter_f32", NodeType.COMM_COLL,
+         CollectiveType.REDUCE_SCATTER),
+        ("nccl:all_gather", NodeType.COMM_COLL, CollectiveType.ALL_GATHER),
+        ("ncclAllToAll", NodeType.COMM_COLL, CollectiveType.ALL_TO_ALL),
+        ("c10d::broadcast_", NodeType.COMM_COLL, CollectiveType.BROADCAST),
+        ("nccl:barrier", NodeType.COMM_COLL, CollectiveType.BARRIER),
+        ("ncclDevKernel_SendRecv", NodeType.COMM_SEND,
+         CollectiveType.POINT_TO_POINT),
+        ("nccl:recv 0<-1", NodeType.COMM_RECV, CollectiveType.POINT_TO_POINT),
+    ]
+    for name, ntype, ctype in cases:
+        got_nt, got_ct = classify_comm(name, {})
+        assert (got_nt, got_ct) == (ntype, ctype), name
+    assert classify_comm("aten::mm", {})[0] is None
+    # the Collective name arg wins over the (absent) name pattern
+    nt, ct = classify_comm("void kernel_x", {"Collective name": "allreduce"})
+    assert (nt, ct) == (NodeType.COMM_COLL, CollectiveType.ALL_REDUCE)
+
+
+def test_comm_bytes_and_ranks_recovery():
+    assert comm_bytes_from_args(
+        {"In msg nelems": 1024, "dtype": "bf16"}) == 2048
+    assert comm_bytes_from_args({"In msg nelems": 16}) == 64   # default f32
+    assert comm_bytes_from_args({"bytes": 99}) == 99
+    assert comm_bytes_from_args({}) == 0
+    assert parse_ranks("[0, 1, 3]") == (0, 1, 3)
+    assert parse_ranks([4, 5]) == (4, 5)
+    assert parse_ranks("0 1 2") == (0, 1, 2)
+    assert parse_ranks(None) == ()
+
+
+# ============================================================== standardizing
+def _assert_standard(et):
+    """The ingestion output contract: valid, acyclic, deps backwards."""
+    assert et.is_acyclic()
+    ids = set(et.nodes)
+    for n in et.nodes.values():
+        for d, _ in n.all_deps():
+            assert d in ids
+            assert d < n.id, f"forward dep {d} -> {n.id}"
+
+
+def test_standardize_chrome_structure():
+    et, report = ingest_file(KINETO)
+    _assert_standard(et)
+    assert et.rank == 0 and et.world_size == 2
+    assert report.host_nodes == 16 and report.device_nodes == 7
+    comm = et.comm_nodes()
+    assert len(comm) == 3                        # 2 allreduce + 1 reduce_sc
+    kinds = sorted(n.comm_type for n in comm)
+    assert kinds == [CollectiveType.ALL_REDUCE, CollectiveType.ALL_REDUCE,
+                     CollectiveType.REDUCE_SCATTER]
+    # comm bytes: 262144 f32 elems = 1 MiB each; 131072 bf16 = 256 KiB
+    assert sum(n.comm_bytes for n in comm) == 2 * 1048576 + 262144
+    # process group recovered once (dedup) with ranks from the args
+    assert len(et.process_groups) == 1
+    assert et.process_groups[0].ranks == (0, 1)
+    assert all(n.comm_group == 0 for n in comm)
+    # memcpy events became MEM_LOAD with byte sizes
+    mems = [n for n in et.nodes.values() if n.type == NodeType.MEM_LOAD]
+    assert len(mems) == 2 and all(n.comm_bytes == 1048576 for n in mems)
+    # device kernels carry their stream id and an anchor ctrl dep
+    gemms = [n for n in et.nodes.values()
+             if n.name.startswith("ampere_sgemm")]
+    assert len(gemms) == 2
+    for g in gemms:
+        assert g.attrs["stream"] == "7" and len(g.ctrl_deps) == 1
+        assert et.nodes[g.ctrl_deps[0]].name == "cudaLaunchKernel"
+    # the orphan reduce-scatter hangs off the synthetic anchor
+    un = [n for n in et.nodes.values() if n.name == "ingest/unattributed"]
+    assert len(un) == 1 and un[0].type == NodeType.METADATA
+
+
+def test_standardize_chrome_host_nesting():
+    et, _ = ingest_file(KINETO)
+    mm = [n for n in et.nodes.values() if n.name == "aten::mm"]
+    assert len(mm) == 2
+    for n in mm:   # nested inside aten::linear on the same thread
+        assert [et.nodes[d].name for d in n.ctrl_deps] == ["aten::linear"]
+
+
+def test_standardize_pytorch_et_and_device_splice():
+    et, report = ingest_file(PT_ET)
+    _assert_standard(et)
+    assert report.host_nodes == 6
+    assert et.metadata["source_schema"] == "1.0.2-chakra.0.0.4"
+    comm = et.comm_nodes()
+    assert len(comm) == 1
+    assert comm[0].comm_type == CollectiveType.ALL_REDUCE
+    assert comm[0].comm_bytes == 262144 * 4
+    assert et.world_size == 2                    # from group ranks [0, 1]
+
+    # device splice: rf_id == External id, group args inherited from host
+    dev = {"traceEvents": [
+        {"ph": "X", "name": "sgemm", "cat": "kernel", "pid": 0, "tid": 7,
+         "ts": 10, "dur": 5, "args": {"External id": 103}},
+        {"ph": "X", "name": "ncclDevKernel_AllReduce_f32", "cat": "kernel",
+         "pid": 0, "tid": 7, "ts": 20, "dur": 9,
+         "args": {"External id": 105, "In msg nelems": 262144,
+                  "dtype": "float32"}}]}
+    pt = parse_pytorch_et(PT_ET)
+    devct = parse_chrome_trace(json.dumps(dev).encode())
+    et2, rep2 = standardize_pytorch_et(pt, device=devct)
+    _assert_standard(et2)
+    assert rep2.ext_resolved == 2 and rep2.unattributed_device == 0
+    kern = next(n for n in et2.nodes.values() if n.name == "sgemm")
+    assert et2.nodes[kern.ctrl_deps[0]].name == "aten::mm"
+    nccl = next(n for n in et2.nodes.values()
+                if n.name.startswith("ncclDevKernel"))
+    # host nccl:all_reduce stays COMP (device side carries the comm op) and
+    # the kernel inherits the host op's process-group args
+    host_comm = next(n for n in et2.nodes.values()
+                     if n.name == "nccl:all_reduce")
+    assert host_comm.type == NodeType.COMP
+    assert nccl.type == NodeType.COMM_COLL and nccl.comm_group >= 0
+    assert et2.process_groups[nccl.comm_group].ranks == (0, 1)
+
+
+def test_standardize_rank_world_size_overrides():
+    et, _ = ingest_file(KINETO, rank=1, world_size=4)
+    assert et.rank == 1 and et.world_size == 4
+
+
+# ==================================================================== goldens
+@pytest.mark.parametrize("src,golden", [
+    (KINETO, "mini_kineto.expected.chkb"),
+    (PT_ET, "mini_pytorch_et.expected.chkb"),
+])
+def test_golden_chkb_byte_stable(src, golden):
+    et, _ = ingest_file(src)
+    got = to_chkb_bytes(et, compress=False)
+    with open(os.path.join(DATA, golden), "rb") as fh:
+        assert got == fh.read()
+
+
+def test_ingested_roundtrips_through_chkb(tmp_path):
+    et, _ = ingest_file(KINETO)
+    path = str(tmp_path / "t.chkb")
+    save(et, path)
+    back = load(path)
+    assert back.to_dict() == et.to_dict()
+    _assert_standard(back)
+
+
+# ================================================================ chkb gzip
+def test_chkb_gz_roundtrip(tmp_path):
+    et, _ = ingest_file(KINETO)
+    plain = str(tmp_path / "t.chkb")
+    gz = str(tmp_path / "t.chkb.gz")
+    save(et, plain)
+    save(et, gz)
+    # the gzip payload is exactly the plain file (deterministic mtime=0)
+    with open(gz, "rb") as fh:
+        assert gzip.decompress(fh.read()) == open(plain, "rb").read()
+    assert load(gz).to_dict() == et.to_dict()
+    # the windowed reader sniffs the magic and keeps its block API
+    with ChkbReader(gz) as r:
+        assert r.version == 4
+        assert r.node_count == len(et)
+        assert [n.id for n in r.iter_nodes()] == sorted(et.nodes)
+
+
+def test_chkb_gz_writer_and_suffix_helper(tmp_path):
+    et, _ = ingest_file(PT_ET)
+    w = ChkbWriter(et.skeleton())
+    w.add_nodes(et.sorted_nodes())
+    out = w.write(str(tmp_path / "w.chkb.gz"))
+    assert load(out).to_dict() == et.to_dict()
+    assert is_chkb_path("a.chkb") and is_chkb_path("a.chkb.gz")
+    assert not is_chkb_path("a.json") and not is_chkb_path("a.gz")
+
+
+# ============================================================ synth guards
+def test_value_accumulator_clamps_pathological_values():
+    from repro.synth.sampler import ValueAccumulator
+    acc = ValueAccumulator()
+    for v in (float("nan"), float("inf"), float("-inf"), -5.0, 0.0, 2.0):
+        acc.add(v)
+    d = acc.dist()
+    assert d.kind == "discrete"
+    assert all(math.isfinite(v) and v >= 0 for v in d.values)
+    assert d.total() == 6
+
+
+def test_profile_of_ingested_trace_is_finite_and_canonical():
+    from repro.synth import ProfileBuilder
+    et, _ = ingest_file(KINETO)   # has zero-duration + no-comm_bytes nodes
+    profile = ProfileBuilder().add_trace(et).finish()
+    payload = profile.to_json_bytes()
+    assert b"NaN" not in payload and b"Infinity" not in payload
+    doc = json.loads(payload)     # strict: NaN would raise in most parsers
+    for dist in list(doc["duration_us"].values()) + \
+            list(doc["comm_bytes"].values()):
+        for v in dist.get("values", []):
+            assert math.isfinite(v) and v >= 0
+    # byte-stable: profiling the same trace twice is identical
+    assert ProfileBuilder().add_trace(et).finish().to_json_bytes() == payload
+
+
+# ================================================================== pipeline
+def test_ingest_stage_in_pipeline():
+    from repro.pipeline import Pipeline
+    stats = (Pipeline.from_source("ingest.chrome", path=KINETO)
+             .sink("analyze").run())
+    assert stats["nodes"] == 24 and stats["world_size"] == 2
+    assert "AllReduce" in stats["comm_summary"]
+
+
+def test_closed_loop_ingest_profile_synth_sim(tmp_path):
+    """The paper's interoperability loop: a foreign trace drives profile ->
+    synthesize -> simulate with a valid, rendezvous-consistent result."""
+    from repro.pipeline import Pipeline
+    from repro.synth import ProfileBuilder, synthesize
+    et, _ = ingest_file(KINETO)
+    profile = ProfileBuilder().add_trace(et).finish()
+    man = synthesize(profile, str(tmp_path / "synth"),
+                     world_size=profile.world_size, steps=2, seed=0)
+    assert man["total_nodes"] > 0 and len(man["paths"]) == 2
+    for p in man["paths"]:
+        _assert_standard(load(p))
+    res = (Pipeline.from_source("load", man["paths"][0])
+           .sink("sim", topology="ring", ranks=len(man["paths"]),
+                 extra_traces=man["paths"][1:]).run())
+    assert res.makespan_s > 0
+
+
+# ======================================================================= CLI
+def test_cli_ingest_single(tmp_path, capsys):
+    out = str(tmp_path / "t.chkb")
+    assert cli.main(["ingest", KINETO, "-o", out]) == 0
+    assert "ingested [chrome]" in capsys.readouterr().out
+    _assert_standard(load(out))
+
+
+def test_cli_ingest_gz_input_gz_output(tmp_path):
+    out = str(tmp_path / "t.chkb.gz")
+    assert cli.main(["ingest", KINETO_GZ, "--format", "chrome",
+                     "-o", out]) == 0
+    assert load(out).world_size == 2
+
+
+def test_cli_ingest_multi_rank(tmp_path, capsys):
+    # one file per rank; ranks inferred from the filenames
+    for r in (0, 1):
+        doc = json.load(open(KINETO))
+        doc["distributedInfo"]["rank"] = r
+        with open(tmp_path / f"trace_rank{r}.json", "w") as fh:
+            json.dump(doc, fh)
+    out = str(tmp_path / "job.chkb")
+    assert cli.main(["ingest", str(tmp_path / "trace_rank0.json"),
+                     str(tmp_path / "trace_rank1.json"), "-o", out]) == 0
+    for r in (0, 1):
+        et = load(str(tmp_path / f"job.rank{r:05d}.chkb"))
+        assert et.rank == r and et.world_size == 2
+    assert "2 rank(s)" in capsys.readouterr().out
+
+
+def test_cli_ingest_rank_conflict_and_rank_map(tmp_path):
+    # both filenames infer rank 1 -> ambiguous without --rank-map
+    for name in ("a_rank1.json", "b_rank1.json"):
+        with open(tmp_path / name, "w") as fh:
+            json.dump(json.load(open(KINETO)), fh)
+    args = [str(tmp_path / "a_rank1.json"), str(tmp_path / "b_rank1.json"),
+            "-o", str(tmp_path / "o.chkb")]
+    with pytest.raises(SystemExit):
+        cli.main(["ingest"] + args)
+    assert cli.main(["ingest"] + args
+                    + ["--rank-map", "b_rank1.json=3"]) == 0
+    et = load(str(tmp_path / "o.rank00003.chkb"))
+    assert et.rank == 3 and et.world_size == 4
+
+
+def test_cli_ingest_pytorch_et_with_device(tmp_path):
+    dev = {"traceEvents": [
+        {"ph": "X", "name": "sgemm", "cat": "kernel", "pid": 0, "tid": 7,
+         "ts": 10, "dur": 5, "args": {"External id": 103}}]}
+    devp = str(tmp_path / "dev.json")
+    json.dump(dev, open(devp, "w"))
+    out = str(tmp_path / "pt.chkb")
+    assert cli.main(["ingest", PT_ET, "--device", devp, "-o", out]) == 0
+    et = load(out)
+    assert any(n.name == "sgemm" for n in et.nodes.values())
+
+
+def test_cli_profile_sim_closed_loop(tmp_path, capsys):
+    out = str(tmp_path / "t.chkb")
+    assert cli.main(["ingest", KINETO, "-o", out]) == 0
+    assert cli.main(["profile", out, "--sim"]) == 0
+    assert "makespan" in capsys.readouterr().out
+
+
+def test_cli_stages_kind_filter(capsys):
+    assert cli.main(["stages", "--kind", "source"]) == 0
+    out = capsys.readouterr().out
+    assert "ingest.chrome" in out and "ingest.pytorch_et" in out
+    assert "\nsink:" not in out
+    # full listing is kind-grouped in canonical order
+    assert cli.main(["stages"]) == 0
+    out = capsys.readouterr().out
+    order = [ln[:-1] for ln in out.splitlines()
+             if ln.endswith(":") and not ln.startswith(" ")]
+    assert order == [k for k in ("source", "pass", "sink", "benchmark",
+                                 "experiment") if k in order]
+    with pytest.raises(SystemExit):
+        cli.main(["stages", "--kind", "nope"])
