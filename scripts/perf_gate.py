@@ -1,7 +1,8 @@
 #!/usr/bin/env python
 """CI perf gate: fail when the hot paths regress vs the committed baseline.
 
-Runs ``python -m repro bench perf_feeder perf_sim perf_explore perf_ingest``
+Runs ``python -m repro bench perf_feeder perf_sim perf_explore perf_ingest
+perf_faults``
 (fresh numbers, no reference-engine baseline pass, results via the ``--json``
 sidecar — stdout is never parsed) and compares events/sec / nodes/sec /
 configs/sec against the committed ``BENCH_perf.json``.  Any row more than
@@ -25,7 +26,8 @@ import tempfile
 _REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(_REPO_ROOT, "src"))
 
-GATED = ("perf_feeder", "perf_sim", "perf_explore", "perf_ingest")
+GATED = ("perf_feeder", "perf_sim", "perf_explore", "perf_ingest",
+         "perf_faults")
 
 
 def main(argv=None) -> int:

@@ -34,6 +34,18 @@ python -m repro sim "$tmp/canon.chkb" --topology ring --ranks 4 \
 grep -q makespan "$tmp/sim_link.out"
 grep -q link_stats "$tmp/sim_link.json"
 
+echo "== sim (fault plan: one straggler rank) =="
+cat > "$tmp/plan.json" <<'PLAN'
+{"schema": "repro-faults/v1", "name": "smoke-straggler", "policy": "abort",
+ "collective_timeout_s": 1.0,
+ "events": [{"kind": "rank_slowdown", "rank": 0,
+             "t0": 0.0, "t1": 10.0, "factor": 4.0}]}
+PLAN
+python -m repro sim "$tmp/canon.chkb" --topology ring --ranks 4 \
+  --faults "$tmp/plan.json" -o "$tmp/sim_faults.json" > "$tmp/sim_faults.out"
+grep -q makespan "$tmp/sim_faults.out"
+grep -q fault_stats "$tmp/sim_faults.json"
+
 echo "== replay (dry-run) =="
 python -m repro replay "$tmp/canon.chkb" --mode compute --limit 8
 
@@ -67,6 +79,31 @@ grep -q "Pareto" "$tmp/report.md"
 python -m repro explore "$tmp/study.json" --jobs 2 --cache-dir "$tmp/cache" \
   > "$tmp/explore2.out"
 grep -q "0 simulated, 3 cached" "$tmp/explore2.out"
+
+echo "== explore chaos (fault axis + injected worker SIGKILL, zero lost rows) =="
+cat > "$tmp/chaos_study.json" <<'SPEC'
+{"name": "smoke-chaos",
+ "workloads": [{"pattern": "moe_mixed", "args": {"mode": "mixed", "iters": 2}}],
+ "axes": {"topology": ["ring", "switch", "clos"], "world_size": [4],
+          "faults": [{"schema": "repro-faults/v1", "name": "slow0",
+                      "policy": "abort", "collective_timeout_s": 1.0,
+                      "events": [{"kind": "rank_slowdown", "rank": 0,
+                                  "t0": 0.0, "t1": 10.0, "factor": 4.0}]}]}}
+SPEC
+# pick one run hash from the expansion and SIGKILL its first attempt; the
+# sweep must still harvest all 3 rows (bounded retry + pool rebuild)
+python -m repro explore "$tmp/chaos_study.json" --dry-run > "$tmp/chaos_grid.json"
+victim="$(python -c "
+import json
+doc = json.load(open('$tmp/chaos_grid.json'))
+print(doc['configs'][0]['hash'][:12])
+")"
+REPRO_CHAOS_KILL="$victim:$tmp/chaos.marker" \
+  python -m repro explore "$tmp/chaos_study.json" --jobs 2 \
+  --cache-dir "$tmp/chaos_cache" > "$tmp/explore_chaos.out"
+grep -q "3 simulated" "$tmp/explore_chaos.out"
+grep -q "retried" "$tmp/explore_chaos.out"
+test -f "$tmp/chaos.marker"
 
 echo "== ingest (Kineto golden -> profile -> sim closed loop) =="
 python -m repro ingest tests/data/mini_kineto.json -o "$tmp/ingested.chkb" -v

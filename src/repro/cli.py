@@ -125,10 +125,13 @@ def _cmd_sim(ns: argparse.Namespace) -> int:
     res = (Pipeline.from_source("load", ns.input, window=ns.window)
            .sink("sim", topology=ns.topology, ranks=ns.ranks,
                  congestion=not ns.no_congestion,
-                 fidelity=ns.fidelity).run())
+                 fidelity=ns.fidelity, faults=ns.faults).run())
     print(res.summary())
     if ns.verbose and res.link_stats:
         print(f"  [link] {json.dumps(res.link_stats, default=str)}",
+              file=sys.stderr)
+    if ns.verbose and res.fault_stats:
+        print(f"  [faults] {json.dumps(res.fault_stats, default=str)}",
               file=sys.stderr)
     if ns.output:
         doc = {"makespan_s": res.makespan_s,
@@ -139,6 +142,10 @@ def _cmd_sim(ns: argparse.Namespace) -> int:
                "fidelity": ns.fidelity}
         if res.link_stats:
             doc["link_stats"] = res.link_stats
+        if res.fault_stats:
+            doc["aborted"] = res.aborted
+            doc["abort_reason"] = res.abort_reason
+            doc["fault_stats"] = res.fault_stats
         _emit(doc, ns.output)
     return 0
 
@@ -403,7 +410,8 @@ def _cmd_explore(ns: argparse.Namespace) -> int:
         sys.stdout.buffer.write(spec.expansion_json() + b"\n")
         return 0
     jobs = ns.jobs if ns.jobs > 0 else (os.cpu_count() or 1)
-    res = run_sweep(spec, jobs=jobs, cache_dir=ns.cache_dir)
+    res = run_sweep(spec, jobs=jobs, cache_dir=ns.cache_dir,
+                    timeout_s=ns.timeout_s, max_retries=ns.retries)
     print(res.summary())
     if ns.results:
         print(f"results -> {res.save_results(ns.results)}")
@@ -425,6 +433,14 @@ def _cmd_explore(ns: argparse.Namespace) -> int:
         # failures are isolated per run but must not look green to CI:
         # the report lists them, the exit code flags them
         print(f"explore: {res.failed}/{len(res.rows)} run(s) failed",
+              file=sys.stderr)
+        return 1
+    if res.aborted and ns.strict:
+        # aborted = the *simulated fleet* hit a modeled fault (a collective
+        # timed out on a dead rank) — a legitimate study outcome, not a
+        # harness error, so it only fails the sweep under --strict
+        print(f"explore: {res.aborted}/{len(res.rows)} run(s) aborted "
+              "(modeled fault outcomes; failing due to --strict)",
               file=sys.stderr)
         return 1
     return 0
@@ -484,6 +500,9 @@ def build_parser() -> argparse.ArgumentParser:
                    help="network model: closed-form alpha-beta (analytic) "
                         "or per-link routed flows (link)")
     p.add_argument("--no-congestion", action="store_true")
+    p.add_argument("--faults", metavar="PLAN_JSON",
+                   help="fault-plan JSON file (repro.faults schema): "
+                        "seeded slowdowns, crashes, link degradation")
     p.add_argument("-o", "--output")
     p.set_defaults(fn=_cmd_sim)
 
@@ -615,6 +634,15 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--json", dest="json_out", metavar="PATH",
                    help="write the canonical report JSON here")
     p.add_argument("--results", help="write the columnar results store here")
+    p.add_argument("--timeout-s", type=float, default=None,
+                   help="per-run wall-clock budget; an overdue worker is "
+                        "killed and the run retried (parallel sweeps only)")
+    p.add_argument("--retries", type=int, default=2,
+                   help="max retries for a run whose worker dies or "
+                        "times out (default 2)")
+    p.add_argument("--strict", action="store_true",
+                   help="exit non-zero when any run aborts on a modeled "
+                        "fault (default: aborts are reported, not fatal)")
     p.add_argument("-v", "--verbose", action="store_true",
                    help="print the markdown report to stdout")
     p.set_defaults(fn=_cmd_explore)

@@ -137,6 +137,8 @@ class RoutingTable:
             if (d, hops) > dist.get(u, (float("inf"), 0)):
                 continue
             for idx, l in self._adj.get(u, ()):
+                if l.bandwidth <= 0.0:
+                    continue        # downed link (fault injection): unroutable
                 nd, nh = d + l.latency_s, hops + 1
                 if (nd, nh) < dist.get(l.dst, (float("inf"), 1 << 30)):
                     dist[l.dst] = (nd, nh)

@@ -28,7 +28,9 @@ from typing import Any, Dict, List, Optional
 from .runner import SweepResult
 from .spec import AXIS_ORDER, canonical_json
 
-REPORT_SCHEMA = "repro-explore-report/v1"
+#: v2: entries carry the ``faults`` axis + makespan inflation vs the
+#: fault-free baseline; aborted runs are counted apart from failures
+REPORT_SCHEMA = "repro-explore-report/v2"
 
 #: axes that can explain a result delta (everything swept except workload)
 _SENSITIVITY_AXES = AXIS_ORDER
@@ -41,7 +43,8 @@ def _f(x: Optional[float]) -> Optional[float]:
     return float(f"{float(x):.6g}")
 
 
-def _entry(row: Dict[str, Any]) -> Dict[str, Any]:
+def _entry(row: Dict[str, Any],
+           fault_inflation_pct: Optional[float] = None) -> Dict[str, Any]:
     """One compact ranking entry (no wall-clock, no cache provenance)."""
     return {
         "hash": row["hash"][:12],
@@ -53,6 +56,8 @@ def _entry(row: Dict[str, Any]) -> Dict[str, Any]:
         "steps": row["steps"],
         "scale_comm_bytes": _f(row["scale_comm_bytes"]),
         "jitter": _f(row["jitter"]),
+        "faults": row.get("faults"),
+        "fault_inflation_pct": _f(fault_inflation_pct),
         "makespan_s": _f(row["makespan_s"]),
         "exposed_comm_s": _f(row["exposed_comm_s"]),
         "comm_time_total_s": _f(row["comm_time_total_s"]),
@@ -75,9 +80,39 @@ def _pareto(entries: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
 
 
 def _axis_of(row: Dict[str, Any], axis: str) -> Any:
-    if axis in ("stragglers", "ops_per_step", "scale_duration"):
+    if axis in ("stragglers", "ops_per_step", "scale_duration", "faults"):
         return canonical_json(row["config"].get(axis)).decode()
     return row.get(axis)
+
+
+def _baseline_key(row: Dict[str, Any]) -> str:
+    """Config identity *minus* the faults axis: the fault-free twin's key."""
+    cfg = dict(row["config"])
+    cfg.pop("faults", None)
+    return canonical_json(cfg).decode()
+
+
+def _fault_inflations(ok_rows: List[Dict[str, Any]]
+                      ) -> Dict[str, Optional[float]]:
+    """Per-row-hash makespan inflation (%) vs the fault-free twin config.
+
+    Rows without faults inflate 0 by definition and rows whose fault-free
+    twin is not in the sweep (or failed) get None — inflation is only
+    meaningful against a measured baseline, never a guessed one.
+    """
+    baseline: Dict[str, float] = {}
+    for r in ok_rows:
+        if r["config"].get("faults") is None and r["makespan_s"]:
+            baseline[_baseline_key(r)] = r["makespan_s"]
+    out: Dict[str, Optional[float]] = {}
+    for r in ok_rows:
+        if r["config"].get("faults") is None:
+            out[r["hash"]] = 0.0
+            continue
+        base = baseline.get(_baseline_key(r))
+        out[r["hash"]] = (None if base is None or not r["makespan_s"]
+                          else 100.0 * (r["makespan_s"] / base - 1.0))
+    return out
 
 
 def _sensitivity(rows: List[Dict[str, Any]]) -> Dict[str, Any]:
@@ -102,11 +137,12 @@ def build_report(result: SweepResult) -> Dict[str, Any]:
     """The deterministic report document for one sweep."""
     per_workload: Dict[str, Dict[str, Any]] = {}
     by_workload: Dict[str, List[Dict[str, Any]]] = {}
+    inflation = _fault_inflations(result.ok_rows)
     for row in result.ok_rows:
         by_workload.setdefault(row["workload"], []).append(row)
     for name in sorted(by_workload):
         rows = by_workload[name]
-        ranking = sorted((_entry(r) for r in rows),
+        ranking = sorted((_entry(r, inflation.get(r["hash"])) for r in rows),
                          key=lambda e: (e["makespan_s"], e["cost"],
                                         e["hash"]))
         per_workload[name] = {
@@ -119,14 +155,20 @@ def build_report(result: SweepResult) -> Dict[str, Any]:
     failures = [{"hash": r["hash"][:12], "workload": r["workload"],
                  "topology": r["topology"], "world_size": r["world_size"],
                  "error": r["error"]}
-                for r in result.rows if not r["ok"]]
+                for r in result.rows if not r["ok"] and not r.get("aborted")]
+    aborted = [{"hash": r["hash"][:12], "workload": r["workload"],
+                "topology": r["topology"], "world_size": r["world_size"],
+                "faults": r.get("faults"),
+                "abort_reason": r.get("abort_reason")}
+               for r in result.rows if r.get("aborted")]
     return {
         "schema": REPORT_SCHEMA,
         "spec": {"name": result.spec_name, "hash": result.spec_hash},
         "runs": {"total": len(result.rows), "ok": len(result.ok_rows),
-                 "failed": result.failed},
+                 "failed": result.failed, "aborted": len(aborted)},
         "workloads": per_workload,
         "failures": failures,
+        "aborted": aborted,
     }
 
 
@@ -158,9 +200,11 @@ def render_markdown(doc: Dict[str, Any], top: int = 10) -> str:
     """Human-readable report: per-workload ranking tables + sensitivity."""
     lines = [f"# Co-design sweep report: {doc['spec']['name']}", ""]
     runs = doc["runs"]
+    aborted_n = runs.get("aborted", 0)
     lines.append(f"{runs['total']} configs ({runs['ok']} ok, "
-                 f"{runs['failed']} failed) · spec "
-                 f"`{doc['spec']['hash'][:12]}`")
+                 f"{runs['failed']} failed"
+                 + (f", {aborted_n} aborted" if aborted_n else "")
+                 + f") · spec `{doc['spec']['hash'][:12]}`")
     for name, w in doc["workloads"].items():
         lines += ["", f"## {name}", ""]
         if not w["ranking"]:
@@ -190,6 +234,12 @@ def render_markdown(doc: Dict[str, Any], top: int = 10) -> str:
                 vals = ", ".join(f"{v}={_ms(m)}ms"
                                  for v, m in s["best_makespan_s"].items())
                 lines.append(f"| {axis} | {spread} | {vals} |")
+    if doc.get("aborted"):
+        lines += ["", "## Aborted (modeled fault outcomes)", ""]
+        for a in doc["aborted"]:
+            lines.append(f"- `{a['hash']}` {a['workload']}/{a['topology']}"
+                         f"x{a['world_size']} [{a.get('faults')}]: "
+                         f"{a.get('abort_reason')}")
     if doc["failures"]:
         lines += ["", "## Failures", ""]
         for f in doc["failures"]:

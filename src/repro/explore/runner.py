@@ -19,10 +19,13 @@ from __future__ import annotations
 
 import json
 import os
+import signal
 import tempfile
 import time
+import warnings
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .spec import CACHE_SCHEMA, ExperimentSpec, RunConfig, as_spec
 
@@ -32,7 +35,8 @@ RESULTS_SCHEMA = "repro-explore-results/v1"
 #: like a CHKB v4 block: one list per field, parallel across runs)
 RESULT_COLUMNS = (
     "hash", "workload", "topology", "world_size", "link_bw", "latency_s",
-    "fidelity", "steps", "scale_comm_bytes", "jitter", "ok", "cached",
+    "fidelity", "steps", "scale_comm_bytes", "jitter", "faults", "ok",
+    "aborted", "cached", "attempts", "requeues",
     "makespan_s", "compute_busy_s", "exposed_comm_s", "comm_time_total_s",
     "comm_bytes_total", "events", "total_nodes", "ranks_simulated", "cost",
     "busiest_link_frac", "error",
@@ -94,24 +98,41 @@ def build_workload(cfg: RunConfig) -> List[Any]:
 
 
 # ---------------------------------------------------------------- execution
+def _effective_world(cfg: RunConfig) -> int:
+    """Rank count actually simulated: chkb workloads carry their own count
+    (spec.py's contract: "the rank count comes from the file list"), so the
+    fabric, the cost proxy — and the error row — must size to it."""
+    w = cfg.workload_dict()
+    return len(w["chkb"]) if "chkb" in w else cfg.world_size
+
+
 def execute_run(cfg: RunConfig) -> Dict[str, Any]:
     """Run one design point and reduce it to a flat result row (no cache)."""
     from ..sim import Fabric, SimConfig, Simulator
     t0 = time.perf_counter()
     traces = build_workload(cfg)
     w = cfg.workload_dict()
-    # chkb workloads carry their own rank count (spec.py's contract: "the
-    # rank count comes from the file list") — the fabric and the cost
-    # proxy must be sized to it, not to the world_size axis default
-    world = len(traces) if "chkb" in w else cfg.world_size
+    world = _effective_world(cfg)
     fabric = Fabric.build(cfg.topology, world,
                           link_bw=cfg.link_bw, latency_s=cfg.latency_s,
                           mode=cfg.fidelity)
     sim_cfg = SimConfig()
     if cfg.stragglers and "scenario" not in w:
         # synth injects stragglers into the traces; pattern/chkb workloads
-        # model them in the engine (factor > 1 = slower => speed < 1)
+        # model them in the engine (factor > 1 = slower => speed < 1); a
+        # non-positive factor would invert to a bogus speed, so fail loudly
+        # before the division
+        for r, f in cfg.stragglers:
+            if not (isinstance(f, (int, float)) and f > 0):
+                raise ValueError(
+                    f"straggler factor for rank {r} must be strictly "
+                    f"positive, got {f!r}")
         sim_cfg.speed_factors = {int(r): 1.0 / f for r, f in cfg.stragglers}
+    fault_name = None
+    if cfg.faults is not None:
+        plan = json.loads(cfg.faults)
+        fault_name = plan.get("name", "faults")
+        sim_cfg.fault_plan = plan
     res = Simulator(traces, fabric, sim_cfg).run()
     row: Dict[str, Any] = {
         "schema": CACHE_SCHEMA,
@@ -126,8 +147,18 @@ def execute_run(cfg: RunConfig) -> Dict[str, Any]:
         "steps": cfg.steps,
         "scale_comm_bytes": cfg.scale_comm_bytes,
         "jitter": cfg.jitter,
-        "ok": True,
+        "faults": fault_name,
+        # a simulation the fault plan aborted (crash timeout under the
+        # "abort" policy) is a *modeled outcome*, not a harness failure:
+        # ok=False so it never ranks, aborted=True so it is counted apart
+        # from genuine errors, error=None so it is cacheable
+        "ok": not res.aborted,
+        "aborted": res.aborted,
+        "abort_reason": res.abort_reason,
+        "fault_stats": res.fault_stats,
         "cached": False,
+        "attempts": 1,
+        "requeues": 0,
         "error": None,
         "makespan_s": res.makespan_s,
         "compute_busy_s": res.compute_busy_s,
@@ -157,31 +188,81 @@ def execute_run(cfg: RunConfig) -> Dict[str, Any]:
     return row
 
 
-def _error_row(cfg: RunConfig, err: BaseException) -> Dict[str, Any]:
+def _error_row(cfg: RunConfig,
+               err: Optional[BaseException] = None,
+               message: Optional[str] = None) -> Dict[str, Any]:
     # .get: this row is the isolation backstop — it must be constructible
     # even for a malformed workload entry (e.g. unvalidated, no "name")
     name = cfg.workload_dict().get("name", "?")
+    try:
+        world = _effective_world(cfg)
+    except Exception:               # malformed workload entry
+        world = cfg.world_size
+    fault_name = None
+    if cfg.faults is not None:
+        try:
+            fault_name = json.loads(cfg.faults).get("name", "faults")
+        except ValueError:
+            fault_name = "faults"
     return {
         "schema": CACHE_SCHEMA, "hash": cfg.run_hash,
         "config": cfg.to_dict(), "workload": name,
-        "topology": cfg.topology, "world_size": cfg.world_size,
+        "topology": cfg.topology, "world_size": world,
         "link_bw": cfg.link_bw, "latency_s": cfg.latency_s,
         "fidelity": cfg.fidelity, "steps": cfg.steps,
         "scale_comm_bytes": cfg.scale_comm_bytes, "jitter": cfg.jitter,
-        "ok": False, "cached": False,
-        "error": f"{type(err).__name__}: {err}",
+        "faults": fault_name,
+        "ok": False, "aborted": False, "abort_reason": None,
+        "fault_stats": None, "cached": False, "attempts": 1, "requeues": 0,
+        "error": (message if message is not None
+                  else f"{type(err).__name__}: {err}"),
         "makespan_s": None, "compute_busy_s": None, "exposed_comm_s": None,
         "collective_time_s": {}, "collective_bytes": {},
         "comm_time_total_s": None, "comm_bytes_total": None,
         "events": 0, "total_nodes": 0, "ranks_simulated": 0,
-        "cost": cfg.cost, "busiest_link_frac": None, "top_links": [],
-        "wall_s": 0.0,
+        # same cost basis as success rows (world * link_bw); cfg.cost uses
+        # the raw world_size axis, which diverges for chkb workloads
+        "cost": world * cfg.link_bw, "busiest_link_frac": None,
+        "top_links": [], "wall_s": 0.0,
     }
+
+
+def _maybe_chaos(run_hash: str) -> None:
+    """Test-only harness fault injection — spawned pool workers cannot be
+    monkeypatched, so the chaos hooks ride in env vars (inherited by the
+    pool's spawn context):
+
+    * ``REPRO_CHAOS_KILL="<hash_prefix>:<marker_path>"`` SIGKILLs the worker
+      on the first run whose hash matches the prefix; the marker file
+      (created ``O_EXCL``, exactly-once across all workers) makes the
+      retried attempt succeed.
+    * ``REPRO_CHAOS_HANG="<hash_prefix>:<seconds>"`` sleeps matching runs —
+      every attempt — so the per-run timeout path is testable.
+    """
+    kill = os.environ.get("REPRO_CHAOS_KILL")
+    if kill:
+        prefix, _, marker = kill.partition(":")
+        if prefix and marker and run_hash.startswith(prefix):
+            try:
+                os.close(os.open(marker,
+                                 os.O_CREAT | os.O_EXCL | os.O_WRONLY))
+            except FileExistsError:
+                pass                # already fired once: let the retry live
+            else:
+                os.kill(os.getpid(), signal.SIGKILL)
+    hang = os.environ.get("REPRO_CHAOS_HANG")
+    if hang:
+        prefix, _, secs = hang.partition(":")
+        if prefix and run_hash.startswith(prefix):
+            time.sleep(float(secs or 3600))
 
 
 def _worker(cfg_dict: Dict[str, Any]) -> Dict[str, Any]:
     """Pool entry point: rebuild the config, never raise."""
     cfg = RunConfig.from_dict(cfg_dict)
+    if os.environ.get("REPRO_CHAOS_KILL") or os.environ.get(
+            "REPRO_CHAOS_HANG"):
+        _maybe_chaos(cfg.run_hash)
     try:
         return execute_run(cfg)
     except Exception as e:          # noqa: BLE001 — isolation is the point
@@ -210,16 +291,30 @@ class RunCache:
         return row
 
     def put(self, row: Dict[str, Any]) -> None:
+        """Best-effort write: a full disk or read-only cache degrades to a
+        warning (the sweep's rows are already in memory — losing the cache
+        must never lose the sweep)."""
         path = self.path(row["hash"])
-        os.makedirs(os.path.dirname(path), exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
+        tmp = None
         try:
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                       suffix=".tmp")
             with os.fdopen(fd, "w") as fh:
                 json.dump(row, fh, sort_keys=True)
             os.replace(tmp, path)   # atomic: concurrent sweeps never see half
-        except BaseException:
-            os.unlink(tmp)
-            raise
+        except OSError as e:
+            # guarded cleanup: a failing unlink must not mask the original
+            # error we are about to report
+            if tmp is not None:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+            warnings.warn(
+                f"run cache unwritable ({e}): row {row['hash'][:12]} not "
+                f"cached; the sweep continues uncached", RuntimeWarning,
+                stacklevel=2)
 
 
 # -------------------------------------------------------------------- sweep
@@ -232,7 +327,12 @@ class SweepResult:
     rows: List[Dict[str, Any]] = field(default_factory=list)
     executed: int = 0               # simulations actually run this sweep
     cached: int = 0                 # rows served from the cache
-    failed: int = 0
+    failed: int = 0                 # genuine harness/workload errors
+    aborted: int = 0                # fault-plan-aborted sims (modeled outcome)
+    retries: int = 0                # re-attempts after worker death/timeout
+    requeues: int = 0               # innocent re-submissions (pool rebuilt)
+    pool_rebuilds: int = 0
+    timeouts: int = 0
     jobs: int = 1
     wall_s: float = 0.0
 
@@ -241,10 +341,15 @@ class SweepResult:
         return [r for r in self.rows if r["ok"]]
 
     def summary(self) -> str:
-        return (f"sweep {self.spec_name}: {len(self.rows)} configs, "
-                f"{self.executed} simulated, {self.cached} cached, "
-                f"{self.failed} failed ({self.jobs} jobs, "
-                f"{self.wall_s:.2f}s)")
+        s = (f"sweep {self.spec_name}: {len(self.rows)} configs, "
+             f"{self.executed} simulated, {self.cached} cached, "
+             f"{self.failed} failed")
+        if self.aborted:
+            s += f", {self.aborted} aborted"
+        if self.retries or self.requeues:
+            s += (f", {self.retries} retried/{self.requeues} requeued"
+                  f" ({self.pool_rebuilds} pool rebuilds)")
+        return s + f" ({self.jobs} jobs, {self.wall_s:.2f}s)"
 
     def results_doc(self) -> Dict[str, Any]:
         """Columnar (struct-of-arrays) results store document."""
@@ -264,15 +369,41 @@ class SweepResult:
         return path
 
 
+def _retry_backoff_s(spec_seed: int, run_hash: str, attempt: int,
+                     base_s: float) -> float:
+    """Exponential backoff with *seeded* jitter: deterministic per
+    (seed, config, attempt), so two racing sweeps of the same spec still
+    decorrelate their retries without a global RNG."""
+    # lazy: same import-cycle avoidance as spec.py's sampler use
+    from ..synth.sampler import SplitMix64, derive_seed
+    u = SplitMix64(derive_seed(spec_seed, "explore.retry", run_hash,
+                               attempt)).uniform()
+    return base_s * (2.0 ** (attempt - 1)) * (0.5 + u)
+
+
 def run_sweep(spec: Any, jobs: int = 1, cache_dir: Optional[str] = None,
               configs: Optional[Sequence[RunConfig]] = None,
-              progress: Optional[Any] = None) -> SweepResult:
+              progress: Optional[Any] = None,
+              timeout_s: Optional[float] = None,
+              max_retries: int = 2,
+              retry_backoff_s: float = 0.25) -> SweepResult:
     """Expand (unless ``configs`` is given) and execute the sweep.
 
     Cache hits are resolved in the parent before any worker spawns, so a
     fully-cached sweep performs zero simulations and never pays pool
     startup.  Misses run serially for ``jobs <= 1``, else on a process
     pool; ``progress`` (a callable taking one row) streams completion.
+
+    The pool path is chaos-hardened: a worker dying (OOM kill, SIGKILL,
+    segfault) breaks the whole ``ProcessPoolExecutor``, so the pool is
+    rebuilt, every in-flight config is requeued (with ``attempts + 1`` and
+    seeded-jitter exponential backoff — a config that keeps killing workers
+    fails with an error row after ``max_retries`` retries instead of
+    looping), and every already-harvested row is kept.  ``timeout_s``
+    bounds each run's wall time the same way (the pool is torn down — a
+    hung worker cannot be cancelled individually — and innocents requeued
+    without burning their retry budget).  Serial execution ignores
+    ``timeout_s`` (there is no pool to kill).
     """
     spec = as_spec(spec)
     t0 = time.perf_counter()
@@ -280,6 +411,7 @@ def run_sweep(spec: Any, jobs: int = 1, cache_dir: Optional[str] = None,
     cache = RunCache(cache_dir) if cache_dir else None
     rows: Dict[int, Dict[str, Any]] = {}
     misses: List[int] = []
+    stats = {"retries": 0, "requeues": 0, "pool_rebuilds": 0, "timeouts": 0}
     for i, cfg in enumerate(cfgs):
         hit = cache.get(cfg.run_hash) if cache else None
         if hit is not None:
@@ -289,29 +421,23 @@ def run_sweep(spec: Any, jobs: int = 1, cache_dir: Optional[str] = None,
         else:
             misses.append(i)
 
-    def finish(i: int, row: Dict[str, Any]) -> None:
+    def finish(i: int, row: Dict[str, Any], attempts: int = 1,
+               requeues: int = 0) -> None:
+        row["attempts"] = max(attempts, int(row.get("attempts") or 1))
+        row["requeues"] = requeues
         rows[i] = row
-        if cache and row["ok"]:
+        # cache every *deterministic* outcome — ok rows AND fault-plan
+        # aborts; harness errors (error != None) may be transient, so they
+        # are re-attempted by the next sweep instead of pinned by the cache
+        if cache and row.get("error") is None:
             cache.put(row)
         if progress:
             progress(row)
 
     if misses and jobs > 1:
-        import multiprocessing
-        from concurrent.futures import ProcessPoolExecutor, as_completed
-        # spawn, not fork: the parent often has jax (multithreaded) loaded
-        # — forking a multithreaded process can deadlock the workers.
-        # Workers rebuild configs from plain dicts and import lazily, so a
-        # fresh interpreter is all they need.
-        ctx = multiprocessing.get_context("spawn")
-        with ProcessPoolExecutor(max_workers=min(jobs, len(misses)),
-                                 mp_context=ctx) as pool:
-            futs = {pool.submit(_worker, cfgs[i].to_dict()): i
-                    for i in misses}
-            # completion order: every finished row is cached (and streamed
-            # to `progress`) immediately, never held behind a slower run
-            for fut in as_completed(futs):
-                finish(futs[fut], fut.result())
+        _pool_sweep(spec, cfgs, misses, finish, jobs, stats,
+                    timeout_s=timeout_s, max_retries=max_retries,
+                    backoff_base_s=retry_backoff_s)
     else:
         for i in misses:
             finish(i, _worker(cfgs[i].to_dict()))
@@ -321,6 +447,166 @@ def run_sweep(spec: Any, jobs: int = 1, cache_dir: Optional[str] = None,
         spec_name=spec.name, spec_hash=spec.spec_hash(), rows=ordered,
         executed=sum(1 for r in ordered if not r["cached"]),
         cached=sum(1 for r in ordered if r["cached"]),
-        failed=sum(1 for r in ordered if not r["ok"]),
+        failed=sum(1 for r in ordered
+                   if not r["ok"] and not r.get("aborted")),
+        aborted=sum(1 for r in ordered if r.get("aborted")),
+        retries=stats["retries"], requeues=stats["requeues"],
+        pool_rebuilds=stats["pool_rebuilds"], timeouts=stats["timeouts"],
         jobs=max(1, int(jobs)),
         wall_s=round(time.perf_counter() - t0, 4))
+
+
+def _pool_sweep(spec: ExperimentSpec, cfgs: List[RunConfig],
+                misses: List[int], finish, jobs: int,
+                stats: Dict[str, int], timeout_s: Optional[float],
+                max_retries: int, backoff_base_s: float) -> None:
+    """Process-pool execution with worker-death and timeout recovery."""
+    import multiprocessing
+    from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
+    from concurrent.futures.process import BrokenProcessPool
+    # spawn, not fork: the parent often has jax (multithreaded) loaded
+    # — forking a multithreaded process can deadlock the workers.
+    # Workers rebuild configs from plain dicts and import lazily, so a
+    # fresh interpreter is all they need.
+    ctx = multiprocessing.get_context("spawn")
+    nworkers = min(jobs, len(misses))
+
+    def make_pool() -> ProcessPoolExecutor:
+        return ProcessPoolExecutor(max_workers=nworkers, mp_context=ctx)
+
+    def kill_pool(p: ProcessPoolExecutor) -> None:
+        # terminate first: shutdown() alone waits politely on workers that
+        # may be hung or mid-death
+        for proc in getattr(p, "_processes", {}).values():
+            try:
+                proc.terminate()
+            except Exception:       # noqa: BLE001 — already-dead race
+                pass
+        p.shutdown(wait=False, cancel_futures=True)
+
+    # queue entries: (config index, attempt number, requeues, earliest
+    # submit time); inflight: future -> (index, attempt, requeues, t_submit)
+    queue = deque((i, 1, 0, 0.0) for i in misses)
+    inflight: Dict[Any, Tuple[int, int, int, float]] = {}
+    pool = make_pool()
+
+    def requeue_inflight(victim_attempted: bool) -> None:
+        """Pool died: every in-flight future is lost.  The executor cannot
+        say which worker held which future, so every entry is retried; the
+        attempt counter only advances when the entry itself may be at fault
+        (worker death), not when a *timeout on another run* tore the pool
+        down."""
+        now = time.monotonic()
+        for idx, attempt, req, _sub in inflight.values():
+            h = cfgs[idx].run_hash
+            if victim_attempted:
+                nxt = attempt + 1
+                stats["retries"] += 1
+                if nxt > max_retries + 1:
+                    finish(idx, _error_row(
+                        cfgs[idx], message=(
+                            f"worker died (BrokenProcessPool) on all "
+                            f"{attempt} attempts")), attempts=attempt,
+                        requeues=req)
+                    continue
+            else:
+                nxt = attempt
+                stats["requeues"] += 1
+            queue.append((idx, nxt, req + 1,
+                          now + _retry_backoff_s(spec.seed, h, nxt,
+                                                 backoff_base_s)))
+        inflight.clear()
+
+    def rebuild(victim_attempted: bool) -> None:
+        nonlocal pool
+        kill_pool(pool)
+        requeue_inflight(victim_attempted)
+        stats["pool_rebuilds"] += 1
+        pool = make_pool()
+
+    try:
+        while queue or inflight:
+            now = time.monotonic()
+            # submit every entry whose backoff window has passed
+            next_eligible = float("inf")
+            for _ in range(len(queue)):
+                idx, attempt, req, not_before = queue.popleft()
+                if not_before > now:
+                    queue.append((idx, attempt, req, not_before))
+                    next_eligible = min(next_eligible, not_before)
+                    continue
+                try:
+                    fut = pool.submit(_worker, cfgs[idx].to_dict())
+                except BrokenProcessPool:
+                    queue.append((idx, attempt, req, not_before))
+                    rebuild(victim_attempted=True)
+                    break
+                inflight[fut] = (idx, attempt, req, time.monotonic())
+            if not inflight:
+                if queue:           # everything is backing off
+                    time.sleep(max(0.0, min(next_eligible - now, 1.0))
+                               or 0.005)
+                continue
+            # harvest: short wait so per-run timeouts stay responsive
+            wait_s = 0.5
+            if timeout_s is not None:
+                oldest = min(sub for _, _, _, sub in inflight.values())
+                wait_s = min(wait_s, max(0.01, oldest + timeout_s
+                                         - time.monotonic()))
+            done, _ = wait(list(inflight), timeout=wait_s,
+                           return_when=FIRST_COMPLETED)
+            broke = False
+            for fut in done:
+                idx, attempt, req, _sub = inflight.pop(fut)
+                try:
+                    row = fut.result()
+                except BrokenProcessPool:
+                    # this future died with the pool; retry it (bounded),
+                    # and let the rebuild sweep up the rest of inflight
+                    stats["retries"] += 1
+                    if attempt + 1 > max_retries + 1:
+                        finish(idx, _error_row(cfgs[idx], message=(
+                            f"worker died (BrokenProcessPool) on all "
+                            f"{attempt} attempts")), attempts=attempt,
+                            requeues=req)
+                    else:
+                        queue.append((idx, attempt + 1, req + 1,
+                                      time.monotonic() + _retry_backoff_s(
+                                          spec.seed, cfgs[idx].run_hash,
+                                          attempt + 1, backoff_base_s)))
+                    broke = True
+                    break
+                except Exception as e:  # noqa: BLE001 — unpicklable result?
+                    finish(idx, _error_row(cfgs[idx], e), attempts=attempt,
+                           requeues=req)
+                else:
+                    finish(idx, row, attempts=attempt, requeues=req)
+            if broke:
+                rebuild(victim_attempted=False)
+                continue
+            # per-run timeout: tear the pool down (a hung worker cannot be
+            # cancelled) — the overdue run burns an attempt, innocents are
+            # requeued for free
+            if timeout_s is not None and inflight:
+                now = time.monotonic()
+                overdue = {fut: meta for fut, meta in inflight.items()
+                           if now - meta[3] > timeout_s}
+                if overdue:
+                    stats["timeouts"] += len(overdue)
+                    for fut, (idx, attempt, req, _sub) in overdue.items():
+                        del inflight[fut]
+                        stats["retries"] += 1
+                        if attempt + 1 > max_retries + 1:
+                            finish(idx, _error_row(cfgs[idx], message=(
+                                f"run exceeded timeout_s={timeout_s:g} on "
+                                f"all {attempt} attempts")),
+                                attempts=attempt, requeues=req)
+                        else:
+                            queue.append(
+                                (idx, attempt + 1, req + 1,
+                                 now + _retry_backoff_s(
+                                     spec.seed, cfgs[idx].run_hash,
+                                     attempt + 1, backoff_base_s)))
+                    rebuild(victim_attempted=False)
+    finally:
+        pool.shutdown(wait=False, cancel_futures=True)

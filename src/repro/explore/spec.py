@@ -48,12 +48,13 @@ from ..core.infragraph import TPU_V5E
 SPEC_SCHEMA = "repro-explore-spec/v1"
 GRID_SCHEMA = "repro-explore-grid/v1"
 #: bumping this invalidates every cached run (config semantics changed)
-CACHE_SCHEMA = "repro-explore-cache/v1"
+#: v2: RunConfig gained the ``faults`` axis (a FaultPlan per design point)
+CACHE_SCHEMA = "repro-explore-cache/v2"
 
 #: fixed expansion order — the determinism contract rides on it
 AXIS_ORDER = ("world_size", "topology", "link_bw", "latency_s", "fidelity",
               "steps", "ops_per_step", "scale_duration", "scale_comm_bytes",
-              "jitter", "stragglers")
+              "jitter", "stragglers", "faults")
 
 AXIS_DEFAULTS: Dict[str, List[Any]] = {
     "world_size": [8],
@@ -69,6 +70,11 @@ AXIS_DEFAULTS: Dict[str, List[Any]] = {
     # axis value — including 0.0 / {} — always wins over scenario defaults
     "jitter": [None],
     "stragglers": [None],
+    # fault-injection axis: None (fault-free) or a repro.faults plan dict /
+    # JSON path; values are normalized to plan dicts at validation so the
+    # run hash is content-based (an empty plan normalizes to None — it is
+    # bit-identical to fault-free by contract and must share its cache row)
+    "faults": [None],
 }
 
 _WORKLOAD_KINDS = ("pattern", "scenario", "chkb")
@@ -96,6 +102,7 @@ class RunConfig:
     scale_comm_bytes: float
     jitter: Optional[float]
     stragglers: Optional[Tuple[Tuple[str, float], ...]]
+    faults: Optional[str]            # canonical JSON of a FaultPlan dict
     seed: int
 
     def to_dict(self) -> Dict[str, Any]:
@@ -113,6 +120,8 @@ class RunConfig:
             "jitter": self.jitter,
             "stragglers": (None if self.stragglers is None
                            else dict(self.stragglers)),
+            "faults": (None if self.faults is None
+                       else json.loads(self.faults)),
             "seed": self.seed,
         }
 
@@ -133,6 +142,8 @@ class RunConfig:
                            else float(d["jitter"])),
                    stragglers=(None if d.get("stragglers") is None
                                else _freeze_stragglers(d["stragglers"])),
+                   faults=(None if d.get("faults") is None
+                           else _freeze(d["faults"])),
                    seed=int(d.get("seed", 0)))
 
     @property
@@ -266,6 +277,25 @@ class ExperimentSpec:
                     f"{values!r}")
             if not values:
                 raise ValueError(f"axis {axis!r} has no values")
+            if axis == "stragglers":
+                for v in values:
+                    for r, f in (v or {}).items():
+                        if not (isinstance(f, (int, float)) and f > 0):
+                            raise ValueError(
+                                f"stragglers axis: factor for rank {r} must "
+                                f"be strictly positive, got {f!r} (factors "
+                                f"are inverted into speed divisors)")
+            if axis == "faults":
+                # lazy import (same cycle-avoidance as the sampler below);
+                # normalize every value to a validated plan dict so hashes
+                # are content-based regardless of how the plan was given
+                from ..faults import as_fault_plan
+                norm = []
+                for v in values:
+                    plan = as_fault_plan(v)
+                    norm.append(None if plan is None or plan.is_empty()
+                                else plan.to_dict())
+                values = norm
             self.axes[axis] = list(values)
         # topology / fidelity names are validated lazily (repro.sim pulls in
         # heavy backends); catch obvious typos early from the light tables
@@ -312,6 +342,8 @@ class ExperimentSpec:
                     else float(choice["jitter"])),
             stragglers=(None if choice["stragglers"] is None
                         else _freeze_stragglers(choice["stragglers"])),
+            faults=(None if choice["faults"] is None
+                    else _freeze(choice["faults"])),
             seed=self.seed)
 
     def _sample_indices(self, total: int) -> Iterator[int]:

@@ -1,0 +1,32 @@
+"""Deterministic fault injection for the simulated fleet (repro.faults).
+
+See :mod:`repro.faults.plan` for the serializable, content-hashable
+:class:`FaultPlan` timeline (and its MTBF generators) and
+:mod:`repro.faults.runtime` for the compiled :class:`FaultRuntime` the
+engine and LinkModel consume.
+"""
+from .plan import (FAULT_SCHEMA, POLICIES, FaultPlan, LinkDegrade, LinkDown,
+                   RankCrash, RankSlowdown)
+from .runtime import FaultRuntime
+
+
+def as_fault_plan(obj) -> "FaultPlan | None":
+    """Coerce a plan-like (FaultPlan | dict | JSON path | None) to a
+    validated FaultPlan (None passes through: no faults)."""
+    if obj is None:
+        return None
+    if isinstance(obj, FaultPlan):
+        obj.validate()
+        return obj
+    if isinstance(obj, dict):
+        return FaultPlan.from_dict(obj)
+    if isinstance(obj, (str, bytes)):
+        return FaultPlan.load(obj if isinstance(obj, str)
+                              else obj.decode("utf-8"))
+    raise ValueError(
+        f"cannot build a FaultPlan from {type(obj).__name__}")
+
+
+__all__ = ["FAULT_SCHEMA", "POLICIES", "FaultPlan", "FaultRuntime",
+           "LinkDegrade", "LinkDown", "RankCrash", "RankSlowdown",
+           "as_fault_plan"]

@@ -1,0 +1,386 @@
+"""Seeded, serializable fault plans for the simulated fleet.
+
+A :class:`FaultPlan` is a *timeline* of degradation events over the ranks
+and links of one simulated job — the missing half of "what-if co-design on
+production traces": production fleets straggle, drop links, and lose ranks,
+and Mystique-style production benchmarks must reproduce that behavior to be
+credible (PAPERS.md).  Four event kinds:
+
+* ``rank_slowdown(rank, t0, t1, factor)`` — the rank's compute runs
+  ``factor``x slower inside the window (generalizing the static
+  ``SimConfig.speed_factors`` straggler dict to time windows);
+* ``rank_crash(rank, t, restart_after)`` — the rank stops issuing work at
+  ``t``; ``restart_after`` seconds later it resumes (``None`` = never).
+  Collectives touching a dead rank stall until the plan's
+  ``collective_timeout_s``, then either ``abort`` the simulation or
+  ``shrink`` the communicator to the live members (the plan's ``policy``);
+* ``link_degrade(link, t0, t1, factor)`` — the link's bandwidth is divided
+  by ``factor`` inside the window (link fidelity only);
+* ``link_down(link, t0, t1)`` — the link carries nothing inside the window;
+  routing re-routes around it, or traffic *waits out* the window when the
+  graph is cut (link fidelity only).
+
+Link selectors are topology-portable: an exact link ``name`` (``"up3"``,
+``"ring0->1"``), a ``"SRC->DST"`` node-id pair, or ``"npu:R"`` for every
+link adjacent to NPU ``R`` (the form that means "rank R's connectivity" on
+*any* topology, which is what chaos studies sweeping topologies need).
+
+Plans are canonical-JSON serializable and content-hashable
+(:meth:`FaultPlan.plan_hash`), so the explore RunCache keys on them exactly
+like it keys on workloads; :meth:`FaultPlan.generate` draws MTBF-style
+exponential event timelines from the repo's deterministic SplitMix64
+streams — same seed, same plan, byte-identical, on every machine.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import math
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+FAULT_SCHEMA = "repro-faults/v1"
+
+POLICIES = ("abort", "shrink")
+
+_INF = float("inf")
+
+
+def _canonical_json(obj: Any) -> bytes:
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"),
+                      ensure_ascii=True).encode("utf-8")
+
+
+def _positive(name: str, value: float) -> float:
+    value = float(value)
+    # `not (v > 0)` also rejects NaN, which would silently poison durations
+    if not value > 0:
+        raise ValueError(f"{name} must be strictly positive, got {value!r}")
+    return value
+
+
+def _window(t0: float, t1: float) -> Tuple[float, float]:
+    t0, t1 = float(t0), float(t1)
+    if not t0 >= 0:
+        raise ValueError(f"fault window start must be >= 0, got {t0!r}")
+    if not t1 > t0:
+        raise ValueError(f"fault window must have t1 > t0, got "
+                         f"[{t0!r}, {t1!r})")
+    return t0, t1
+
+
+@dataclass(frozen=True)
+class RankSlowdown:
+    rank: int
+    t0: float
+    t1: float
+    factor: float                   # > 1 = slower (duration x factor)
+    kind: str = "rank_slowdown"
+
+    def validate(self) -> None:
+        if int(self.rank) < 0:
+            raise ValueError(f"rank must be >= 0, got {self.rank}")
+        _window(self.t0, self.t1)
+        _positive("rank_slowdown factor", self.factor)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"kind": self.kind, "rank": int(self.rank),
+                "t0": float(self.t0), "t1": float(self.t1),
+                "factor": float(self.factor)}
+
+
+@dataclass(frozen=True)
+class RankCrash:
+    rank: int
+    t: float
+    restart_after: Optional[float] = None   # None = never restarts
+    kind: str = "rank_crash"
+
+    def validate(self) -> None:
+        if int(self.rank) < 0:
+            raise ValueError(f"rank must be >= 0, got {self.rank}")
+        if not float(self.t) >= 0:
+            raise ValueError(f"crash time must be >= 0, got {self.t!r}")
+        if self.restart_after is not None:
+            _positive("rank_crash restart_after", self.restart_after)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"kind": self.kind, "rank": int(self.rank),
+                "t": float(self.t),
+                "restart_after": (None if self.restart_after is None
+                                  else float(self.restart_after))}
+
+
+@dataclass(frozen=True)
+class LinkDegrade:
+    link: str                       # name | "SRC->DST" | "npu:R"
+    t0: float
+    t1: float
+    factor: float                   # > 1 = slower (bandwidth / factor)
+    kind: str = "link_degrade"
+
+    def validate(self) -> None:
+        if not str(self.link):
+            raise ValueError("link selector must be non-empty")
+        _window(self.t0, self.t1)
+        _positive("link_degrade factor", self.factor)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"kind": self.kind, "link": str(self.link),
+                "t0": float(self.t0), "t1": float(self.t1),
+                "factor": float(self.factor)}
+
+
+@dataclass(frozen=True)
+class LinkDown:
+    link: str
+    t0: float
+    t1: float
+    kind: str = "link_down"
+
+    def validate(self) -> None:
+        if not str(self.link):
+            raise ValueError("link selector must be non-empty")
+        _window(self.t0, self.t1)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"kind": self.kind, "link": str(self.link),
+                "t0": float(self.t0), "t1": float(self.t1)}
+
+
+FaultEvent = Any  # RankSlowdown | RankCrash | LinkDegrade | LinkDown
+
+_EVENT_TYPES = {
+    "rank_slowdown": RankSlowdown,
+    "rank_crash": RankCrash,
+    "link_degrade": LinkDegrade,
+    "link_down": LinkDown,
+}
+
+
+def _event_start(e: FaultEvent) -> float:
+    return float(getattr(e, "t0", getattr(e, "t", 0.0)))
+
+
+def _event_sort_key(e: FaultEvent) -> Tuple:
+    d = e.to_dict()
+    return (_event_start(e), d["kind"],
+            str(d.get("rank", d.get("link", ""))),
+            _canonical_json(d))
+
+
+def _event_from_dict(d: Dict[str, Any]) -> FaultEvent:
+    kind = d.get("kind")
+    cls = _EVENT_TYPES.get(kind)
+    if cls is None:
+        raise ValueError(f"unknown fault event kind {kind!r}; "
+                         f"options: {sorted(_EVENT_TYPES)}")
+    kw = {k: v for k, v in d.items() if k != "kind"}
+    try:
+        ev = cls(**kw)
+    except TypeError as e:
+        raise ValueError(f"bad {kind} event {d!r}: {e}") from None
+    ev.validate()
+    return ev
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """An immutable timeline of fault events + the crash-handling policy.
+
+    Builder methods return a *new* plan (the dataclass is frozen), so plans
+    compose fluently::
+
+        plan = (FaultPlan(name="one-bad-host", policy="shrink")
+                .rank_slowdown(3, t0=0.0, t1=2.0, factor=4.0)
+                .rank_crash(5, t=1.5, restart_after=0.5)
+                .link_down("npu:5", t0=1.5, t1=2.0))
+    """
+
+    name: str = "faults"
+    events: Tuple[FaultEvent, ...] = ()
+    collective_timeout_s: float = 1.0
+    policy: str = "abort"           # abort | shrink
+
+    # ------------------------------------------------------------- builders
+    def _add(self, ev: FaultEvent) -> "FaultPlan":
+        ev.validate()
+        return replace(self, events=self.events + (ev,))
+
+    def rank_slowdown(self, rank: int, t0: float, t1: float,
+                      factor: float) -> "FaultPlan":
+        return self._add(RankSlowdown(int(rank), float(t0), float(t1),
+                                      float(factor)))
+
+    def rank_crash(self, rank: int, t: float,
+                   restart_after: Optional[float] = None) -> "FaultPlan":
+        return self._add(RankCrash(int(rank), float(t),
+                                   None if restart_after is None
+                                   else float(restart_after)))
+
+    def link_degrade(self, link: str, t0: float, t1: float,
+                     factor: float) -> "FaultPlan":
+        return self._add(LinkDegrade(str(link), float(t0), float(t1),
+                                     float(factor)))
+
+    def link_down(self, link: str, t0: float, t1: float) -> "FaultPlan":
+        return self._add(LinkDown(str(link), float(t0), float(t1)))
+
+    # ----------------------------------------------------------- inspection
+    def is_empty(self) -> bool:
+        return not self.events
+
+    def validate(self) -> None:
+        if self.policy not in POLICIES:
+            raise ValueError(f"unknown fault policy {self.policy!r}; "
+                             f"options: {POLICIES}")
+        _positive("collective_timeout_s", self.collective_timeout_s)
+        for ev in self.events:
+            ev.validate()
+
+    # -------------------------------------------------------- serialization
+    def to_dict(self) -> Dict[str, Any]:
+        """Canonical dict: events deterministically sorted, so round-trips
+        are byte-stable regardless of builder call order."""
+        return {
+            "schema": FAULT_SCHEMA,
+            "name": self.name,
+            "policy": self.policy,
+            "collective_timeout_s": float(self.collective_timeout_s),
+            "events": [e.to_dict()
+                       for e in sorted(self.events, key=_event_sort_key)],
+        }
+
+    def to_json(self) -> bytes:
+        return _canonical_json(self.to_dict())
+
+    @property
+    def plan_hash(self) -> str:
+        """Content address over the canonical JSON — what the explore
+        RunCache keys on."""
+        return hashlib.sha256(self.to_json()).hexdigest()
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "FaultPlan":
+        if not isinstance(d, dict):
+            raise ValueError(
+                f"fault plan must be a dict, got {type(d).__name__}")
+        unknown = set(d) - {"schema", "name", "policy",
+                            "collective_timeout_s", "events"}
+        if unknown:
+            raise ValueError(f"unknown fault plan keys: {sorted(unknown)}")
+        schema = d.get("schema", FAULT_SCHEMA)
+        if schema != FAULT_SCHEMA:
+            raise ValueError(f"unknown fault plan schema {schema!r} "
+                             f"(expected {FAULT_SCHEMA})")
+        plan = cls(
+            name=str(d.get("name", "faults")),
+            events=tuple(_event_from_dict(e) for e in d.get("events", [])),
+            collective_timeout_s=float(d.get("collective_timeout_s", 1.0)),
+            policy=str(d.get("policy", "abort")))
+        plan.validate()
+        return plan
+
+    @classmethod
+    def from_json(cls, data: bytes) -> "FaultPlan":
+        return cls.from_dict(json.loads(data))
+
+    @classmethod
+    def load(cls, path: str) -> "FaultPlan":
+        with open(path) as fh:
+            return cls.from_dict(json.load(fh))
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as fh:
+            json.dump(self.to_dict(), fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        return path
+
+    def summary(self) -> str:
+        kinds: Dict[str, int] = {}
+        for e in self.events:
+            kinds[e.kind] = kinds.get(e.kind, 0) + 1
+        detail = ", ".join(f"{k}={v}" for k, v in sorted(kinds.items()))
+        return (f"plan {self.name}: {len(self.events)} event(s) "
+                f"[{detail or 'none'}] policy={self.policy} "
+                f"timeout={self.collective_timeout_s}s")
+
+    # ------------------------------------------------------------ generator
+    @classmethod
+    def generate(cls, world_size: int, duration_s: float, seed: int = 0, *,
+                 crash_mtbf_s: Optional[float] = None,
+                 restart_after_s: Optional[float] = None,
+                 slowdown_mtbf_s: Optional[float] = None,
+                 slowdown_factor: float = 4.0,
+                 slowdown_duration_s: Optional[float] = None,
+                 link_mtbf_s: Optional[float] = None,
+                 link_down_duration_s: Optional[float] = None,
+                 links: Sequence[str] = (),
+                 policy: str = "abort",
+                 collective_timeout_s: float = 1.0,
+                 name: Optional[str] = None) -> "FaultPlan":
+        """Draw an MTBF-style fault timeline from seeded SplitMix64 streams.
+
+        Per rank (and per link selector), event inter-arrival times are
+        exponential with the given mean-time-between-failures; every stream
+        is derived from ``(seed, kind, rank-or-link)`` so timelines are
+        independent across ranks yet fully deterministic: the same arguments
+        produce the byte-identical plan on every machine.
+        """
+        # lazy: repro.synth's package import registers pipeline stages —
+        # keep repro.faults importable without pulling that in eagerly
+        from ..synth.sampler import SplitMix64, derive_seed
+
+        world_size = int(world_size)
+        duration_s = _positive("duration_s", duration_s)
+        events: List[FaultEvent] = []
+
+        def arrivals(stream_kind: str, token: Any, mtbf: float):
+            rng = SplitMix64(derive_seed(int(seed), "fault",
+                                         stream_kind, token))
+            t = 0.0
+            while True:
+                # exponential inter-arrival; uniform() < 1 so log is finite
+                t += -mtbf * math.log(1.0 - rng.uniform())
+                if t >= duration_s:
+                    return
+                yield t, rng
+
+        if slowdown_mtbf_s is not None:
+            _positive("slowdown_mtbf_s", slowdown_mtbf_s)
+            _positive("slowdown_factor", slowdown_factor)
+            dur = (slowdown_duration_s if slowdown_duration_s is not None
+                   else duration_s / 10.0)
+            _positive("slowdown_duration_s", dur)
+            for rank in range(world_size):
+                for t, _ in arrivals("slowdown", rank, slowdown_mtbf_s):
+                    events.append(RankSlowdown(
+                        rank, t, min(t + dur, duration_s + dur),
+                        float(slowdown_factor)))
+        if crash_mtbf_s is not None:
+            _positive("crash_mtbf_s", crash_mtbf_s)
+            if restart_after_s is not None:
+                _positive("restart_after_s", restart_after_s)
+            for rank in range(world_size):
+                for t, _ in arrivals("crash", rank, crash_mtbf_s):
+                    events.append(RankCrash(rank, t, restart_after_s))
+                    if restart_after_s is None:
+                        break       # never restarts: later crashes are moot
+        if link_mtbf_s is not None:
+            _positive("link_mtbf_s", link_mtbf_s)
+            if not links:
+                raise ValueError("link_mtbf_s needs a non-empty `links` "
+                                 "selector list to draw outages for")
+            dur = (link_down_duration_s if link_down_duration_s is not None
+                   else duration_s / 20.0)
+            _positive("link_down_duration_s", dur)
+            for sel in links:
+                for t, _ in arrivals("link", str(sel), link_mtbf_s):
+                    events.append(LinkDown(str(sel), t, t + dur))
+
+        plan = cls(name=name or f"mtbf-seed{int(seed)}",
+                   events=tuple(events),
+                   collective_timeout_s=float(collective_timeout_s),
+                   policy=str(policy))
+        plan.validate()
+        return plan

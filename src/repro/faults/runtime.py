@@ -1,0 +1,246 @@
+"""Execution-side view of a FaultPlan: piecewise rank rates + link epochs.
+
+The engine never walks the raw event list.  :class:`FaultRuntime` compiles a
+plan once into:
+
+* per-rank **rate segments** — disjoint ``(t0, t1, rate)`` windows where the
+  rank's compute progresses at ``rate`` work-seconds per wall-second
+  (``1/factor`` inside slowdown windows, ``0`` while crashed), so
+  :meth:`compute_end` prices a compute op across any mix of overlapping
+  windows in one O(segments) walk;
+* per-rank **dead intervals** — merged crash outages for the engine's issue
+  gate (:meth:`is_dead` / :meth:`next_alive`) and the rendezvous timeout
+  machinery;
+* a **link epoch schedule** — the sorted set of link-event boundaries plus,
+  per epoch, the multiplicative bandwidth state of every affected link
+  (``0.0`` = down), which the LinkModel turns into per-epoch routing tables
+  (:meth:`link_schedule`).  Epochs with identical state share one key, so a
+  transient outage costs exactly one extra routing table, not three.
+
+Everything here is pure stdlib over the plan — no simulator imports, so the
+engine can depend on this module without a cycle.
+"""
+from __future__ import annotations
+
+from bisect import bisect_right
+from typing import Dict, List, Optional, Tuple
+
+from .plan import FaultPlan
+
+_INF = float("inf")
+
+#: per-epoch link state: ((link_index, bandwidth_multiplier), ...) — the
+#: empty tuple is the pristine (no active link faults) state
+LinkStateKey = Tuple[Tuple[int, float], ...]
+
+
+def _resolve_selector(sel: str, graph) -> List[int]:
+    """Selector -> link indices: exact name, ``SRC->DST`` ids, ``npu:R``."""
+    idxs = [i for i, l in enumerate(graph.links) if l.name == sel]
+    if idxs:
+        return idxs
+    if sel.startswith("npu:"):
+        try:
+            npu = int(sel[4:])
+        except ValueError:
+            raise ValueError(
+                f"fault link selector {sel!r}: expected npu:<int>") from None
+        idxs = [i for i, l in enumerate(graph.links)
+                if l.src == npu or l.dst == npu]
+        if idxs:
+            return idxs
+        raise ValueError(f"fault link selector {sel!r}: no links touch "
+                         f"NPU {npu} in graph {graph.name!r}")
+    if "->" in sel:
+        a_s, _, b_s = sel.partition("->")
+        try:
+            a, b = int(a_s), int(b_s)
+        except ValueError:
+            pass
+        else:
+            idxs = [i for i, l in enumerate(graph.links)
+                    if l.src == a and l.dst == b]
+            if idxs:
+                return idxs
+    raise ValueError(
+        f"fault link selector {sel!r} matches no link in graph "
+        f"{graph.name!r} (selectors: exact link name, 'SRC->DST' node "
+        f"ids, or 'npu:R' for all links adjacent to NPU R)")
+
+
+def _merge_intervals(spans: List[Tuple[float, float]]
+                     ) -> List[Tuple[float, float]]:
+    spans = sorted(spans)
+    merged: List[Tuple[float, float]] = []
+    for t0, t1 in spans:
+        if merged and t0 <= merged[-1][1]:
+            merged[-1] = (merged[-1][0], max(merged[-1][1], t1))
+        else:
+            merged.append((t0, t1))
+    return merged
+
+
+class FaultRuntime:
+    """Compiled FaultPlan, ready for the engine's per-event queries."""
+
+    def __init__(self, plan: FaultPlan) -> None:
+        plan.validate()
+        self.plan = plan
+        self.policy = plan.policy
+        self.timeout_s = float(plan.collective_timeout_s)
+
+        slow: Dict[int, List[Tuple[float, float, float]]] = {}
+        crash: Dict[int, List[Tuple[float, float]]] = {}
+        self._link_events = []
+        for ev in plan.events:
+            if ev.kind == "rank_slowdown":
+                slow.setdefault(int(ev.rank), []).append(
+                    (float(ev.t0), float(ev.t1), float(ev.factor)))
+            elif ev.kind == "rank_crash":
+                end = (_INF if ev.restart_after is None
+                       else float(ev.t) + float(ev.restart_after))
+                crash.setdefault(int(ev.rank), []).append((float(ev.t), end))
+            else:
+                self._link_events.append(ev)
+
+        self.has_crashes = bool(crash)
+        self.has_link_events = bool(self._link_events)
+
+        self._dead: Dict[int, List[Tuple[float, float]]] = {
+            r: _merge_intervals(spans) for r, spans in crash.items()}
+        self._dead_starts: Dict[int, List[float]] = {
+            r: [t0 for t0, _ in iv] for r, iv in self._dead.items()}
+
+        self._segments: Dict[int, List[Tuple[float, float, float]]] = {}
+        self._seg_ends: Dict[int, List[float]] = {}
+        for rank in set(slow) | set(crash):
+            segs = self._compile_rank(slow.get(rank, []),
+                                      self._dead.get(rank, []))
+            if segs:
+                self._segments[rank] = segs
+                self._seg_ends[rank] = [s1 for _, s1, _ in segs]
+
+    @classmethod
+    def build(cls, plan: Optional[FaultPlan]) -> Optional["FaultRuntime"]:
+        """None for a missing or *empty* plan — the engine's fault-free path
+        must stay bit-identical, so an empty plan compiles to nothing."""
+        if plan is None or plan.is_empty():
+            return None
+        return cls(plan)
+
+    # --------------------------------------------------------- compilation
+    @staticmethod
+    def _compile_rank(slow: List[Tuple[float, float, float]],
+                      dead: List[Tuple[float, float]]
+                      ) -> List[Tuple[float, float, float]]:
+        """Boundary sweep -> disjoint (t0, t1, rate) with rate != 1."""
+        pts = sorted({p for t0, t1, _ in slow for p in (t0, t1)} |
+                     {p for t0, t1 in dead for p in (t0, t1) if p != _INF})
+        if not pts:
+            return []
+        segs: List[Tuple[float, float, float]] = []
+        bounds = list(zip(pts, pts[1:] + [_INF]))
+        for s0, s1 in bounds:
+            if any(c0 <= s0 < c1 for c0, c1 in dead):
+                rate = 0.0
+            else:
+                factor = 1.0
+                for t0, t1, f in slow:
+                    if t0 <= s0 < t1:
+                        factor *= f
+                rate = 1.0 / factor
+            if rate == 1.0:
+                continue
+            if segs and segs[-1][1] == s0 and segs[-1][2] == rate:
+                segs[-1] = (segs[-1][0], s1, rate)
+            else:
+                segs.append((s0, s1, rate))
+        return segs
+
+    # ------------------------------------------------------------- compute
+    def compute_end(self, rank: int, t: float, dur: float
+                    ) -> Tuple[Optional[float], float]:
+        """Wall-clock completion of ``dur`` work-seconds started at ``t``.
+
+        Returns ``(end, stall_s)`` where ``stall_s`` is the dead (crashed)
+        time inside [t, end]; ``(None, stall)`` means the rank dies mid-op
+        and never restarts, so the op never completes.
+        """
+        segs = self._segments.get(rank)
+        if not segs:
+            return t + dur, 0.0
+        stall = 0.0
+        cur = t
+        remaining = dur
+        for s0, s1, rate in segs[bisect_right(self._seg_ends[rank], t):]:
+            if cur < s0:                      # full-speed gap before segment
+                gap = s0 - cur
+                if remaining <= gap:
+                    return cur + remaining, stall
+                cur = s0
+                remaining -= gap
+            if rate <= 0.0:
+                if s1 == _INF:
+                    return None, stall        # dead forever: never completes
+                stall += s1 - cur
+                cur = s1
+            else:
+                capacity = (s1 - cur) * rate
+                if remaining <= capacity:
+                    return cur + remaining / rate, stall
+                remaining -= capacity
+                cur = s1
+        return cur + remaining, stall
+
+    # ------------------------------------------------------------- crashes
+    def is_dead(self, rank: int, t: float) -> bool:
+        iv = self._dead.get(rank)
+        if not iv:
+            return False
+        i = bisect_right(self._dead_starts[rank], t) - 1
+        return i >= 0 and t < iv[i][1]
+
+    def next_alive(self, rank: int, t: float) -> Optional[float]:
+        """``t`` when alive, the restart time when crashed, ``None`` when
+        the rank never comes back."""
+        iv = self._dead.get(rank)
+        if not iv:
+            return t
+        i = bisect_right(self._dead_starts[rank], t) - 1
+        if i < 0 or t >= iv[i][1]:
+            return t
+        end = iv[i][1]
+        return None if end == _INF else end
+
+    def dead_forever_ranks(self) -> List[int]:
+        return sorted(r for r, iv in self._dead.items()
+                      if any(t1 == _INF for _, t1 in iv))
+
+    # --------------------------------------------------------------- links
+    def link_schedule(self, graph
+                      ) -> Tuple[List[float], List[LinkStateKey]]:
+        """``(boundary_times, epoch_state_keys)`` over ``graph``.
+
+        Epoch ``e`` covers ``[times[e-1], times[e])`` (epoch 0 is pristine
+        before the first boundary); ``keys[e]`` holds the affected links'
+        bandwidth multipliers, canonically sorted so identical states —
+        e.g. "before" and "after" a transient outage — share one key and
+        therefore one routing table in the LinkModel.
+        """
+        resolved = []
+        for ev in self._link_events:
+            idxs = _resolve_selector(ev.link, graph)
+            mult = (0.0 if ev.kind == "link_down"
+                    else 1.0 / float(ev.factor))
+            resolved.append((float(ev.t0), float(ev.t1), idxs, mult))
+        times = sorted({t for t0, t1, _, _ in resolved for t in (t0, t1)})
+        keys: List[LinkStateKey] = []
+        for e in range(len(times) + 1):
+            start = -_INF if e == 0 else times[e - 1]
+            state: Dict[int, float] = {}
+            for t0, t1, idxs, mult in resolved:
+                if t0 <= start < t1:
+                    for i in idxs:
+                        state[i] = state.get(i, 1.0) * mult
+            keys.append(tuple(sorted(state.items())))
+        return times, keys

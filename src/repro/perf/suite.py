@@ -27,6 +27,10 @@ Three benchmarks, registered in the stage registry under kind="benchmark"
 * ``perf_explore`` — co-design sweep engine (``repro.explore``): spec
   expansion rate (canonical hashing included) and a cold sweep vs its
   fully-cached replay — the replay must execute zero simulations.
+* ``perf_faults`` — fault-injection hot-path cost (``repro.faults``):
+  interleaved no-plan vs empty-plan vs chaos-plan walls on the same mixed
+  workload; the gated ``empty_plan_overhead`` must stay <= 1.05 because the
+  fault machinery lives entirely behind ``if fault is not None``.
 * ``perf_ingest`` — real-trace ingestion (``repro.ingest``): streaming
   Chrome/Kineto parse rate and standardization into an ExecutionTrace
   (correlation splice + comm classification + dependency verification
@@ -72,6 +76,7 @@ _SCALE = {
         "explore": {"jitter_values": 2, "iters": 4,
                     "world_sizes": [4, 8], "jobs": 2},
         "ingest_events": 20_000,
+        "faults": {"grid": (2_000, 8), "repeat": 3},
     },
     "full": {
         "feeder_nodes": [10_000, 100_000],
@@ -90,6 +95,7 @@ _SCALE = {
         "explore": {"jitter_values": 4, "iters": 16,
                     "world_sizes": [4, 8, 16, 32], "jobs": 4},
         "ingest_events": 200_000,
+        "faults": {"grid": (10_000, 8), "repeat": 5},
     },
 }
 
@@ -458,6 +464,88 @@ def perf_explore(scale: str = "full", **_: Any) -> Dict[str, Any]:
     }
 
 
+# ------------------------------------------------------------------- faults
+def perf_faults(scale: str = "full", **_: Any) -> Dict[str, Any]:
+    """Fault-injection hot-path cost: an empty plan must be free.
+
+    Three interleaved best-of-N runs of the same mixed workload: no plan,
+    an empty :class:`~repro.faults.FaultPlan` (normalizes to no runtime —
+    the bit-identity contract), and an MTBF-generated chaos plan under the
+    ``shrink`` policy.  ``empty_plan_overhead`` (empty wall / no-plan wall)
+    is the gated number: the fault machinery lives entirely behind
+    ``if fault is not None`` so the fault-free path pays nothing (<=5%).
+    """
+    from ..faults import FaultPlan
+    from ..sim import Fabric, SimConfig, Simulator
+
+    cfg = _cfg(scale)["faults"]
+    nodes_per_rank, ranks = cfg["grid"]
+    repeat = cfg["repeat"]
+    traces = [_mixed_trace(nodes_per_rank, ranks, rank=r)
+              for r in range(ranks)]
+    fabric = Fabric.build("switch", ranks)
+    chaos = FaultPlan.generate(
+        world_size=ranks, duration_s=1.0, seed=7,
+        slowdown_mtbf_s=0.2, slowdown_factor=3.0,
+        crash_mtbf_s=5.0, restart_after_s=0.05,
+        policy="shrink", collective_timeout_s=0.01, name="perf-chaos")
+    variants = {
+        "no_plan": None,
+        "empty_plan": FaultPlan(name="empty").to_dict(),
+        "chaos_plan": chaos.to_dict(),
+    }
+
+    best: Dict[str, float] = {k: float("inf") for k in variants}
+    results: Dict[str, Any] = {}
+    overhead = float("inf")
+    for _rep in range(repeat):
+        walls: Dict[str, float] = {}
+        for label, plan in variants.items():     # interleaved: fair clocks
+            sim = Simulator(traces, fabric, SimConfig(fault_plan=plan))
+            t0 = time.perf_counter()
+            res = sim.run(max_events=_SIM_MAX_EVENTS)
+            walls[label] = time.perf_counter() - t0
+            best[label] = min(best[label], walls[label])
+            results[label] = res
+        # pair the ratio within one repetition (machine drift cancels); a
+        # *systematic* overhead shows up in every pair, so min is honest
+        overhead = min(overhead, walls["empty_plan"] / walls["no_plan"])
+
+    none_r, empty_r = results["no_plan"], results["empty_plan"]
+    chaos_r = results["chaos_plan"]
+    rows = {label: {"wall_s": round(best[label], 4),
+                    "events": results[label].events,
+                    "events_per_sec": round(results[label].events
+                                            / best[label], 1),
+                    "makespan_s": results[label].makespan_s}
+            for label in variants}
+    fs = chaos_r.fault_stats or {}
+    return {
+        "scenario": "mixed_ar_a2a",
+        "nodes_per_rank": nodes_per_rank,
+        "ranks": ranks,
+        "runs": rows,
+        # the gated number: empty plan must cost nothing (<= 1.05);
+        # min-over-reps of the within-rep ratio, robust to machine drift
+        "empty_plan_overhead": round(overhead, 3),
+        # the correctness side of the same contract
+        "empty_plan_bit_identical": (
+            empty_r.makespan_s == none_r.makespan_s
+            and empty_r.events == none_r.events
+            and empty_r.per_rank_finish_s == none_r.per_rank_finish_s),
+        "chaos": {
+            "plan_events": len(chaos.events),
+            "makespan_inflation_pct": round(
+                100.0 * (chaos_r.makespan_s / none_r.makespan_s - 1.0), 2)
+            if none_r.makespan_s else None,
+            "timeouts": fs.get("timeouts"),
+            "collectives_shrunk": fs.get("collectives_shrunk"),
+            "rejoins": fs.get("rejoins"),
+            "aborted": chaos_r.aborted,
+        },
+    }
+
+
 # ------------------------------------------------------------------- ingest
 def _synth_kineto_doc(n_events: int) -> bytes:
     """Synthetic Kineto document sized to ``n_events``: host op + runtime
@@ -549,6 +637,7 @@ BENCHMARKS = {
     "perf_synth": perf_synth,
     "perf_explore": perf_explore,
     "perf_ingest": perf_ingest,
+    "perf_faults": perf_faults,
 }
 
 
@@ -647,6 +736,29 @@ def gate_regressions(current: Dict[str, Any], baseline: Dict[str, Any],
                                                      bs["jobs"]):
         check(f"perf_explore cached sweep {cs['configs']} configs runs/sec",
               cs["cached_runs_per_sec"], bs["cached_runs_per_sec"])
+
+    # faults: the empty-plan overhead ratio is an absolute contract (the
+    # fault-free path pays nothing), gated against 1.05 — no baseline needed
+    cur_f = current.get("perf_faults", {})
+    if "empty_plan_overhead" in cur_f:
+        overhead = cur_f["empty_plan_overhead"]
+        line = f"perf_faults empty_plan_overhead: {overhead:.3f}x (max 1.05)"
+        report.append(line)
+        if overhead > 1.05:
+            failures.append(line)
+        if not cur_f.get("empty_plan_bit_identical", True):
+            failures.append("perf_faults: empty plan broke bit-identity "
+                            "with the fault-free run")
+    base_f = baseline.get("perf_faults", {})
+    cr, br = cur_f.get("runs", {}), base_f.get("runs", {})
+    if ("no_plan" in cr and "no_plan" in br
+            and (cur_f.get("nodes_per_rank"), cur_f.get("ranks"))
+            == (base_f.get("nodes_per_rank"), base_f.get("ranks"))):
+        for label in ("no_plan", "chaos_plan"):
+            if label in cr and label in br:
+                check(f"perf_faults {label} events/sec",
+                      cr[label]["events_per_sec"],
+                      br[label]["events_per_sec"])
 
     # ingestion: events/sec is scale-independent (streaming, O(events)), so
     # a smoke run gates directly against the full-scale baseline rates

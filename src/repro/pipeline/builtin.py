@@ -419,21 +419,26 @@ class SimSink:
 
     def __init__(self, topology: str = "switch", ranks: int = 8,
                  congestion: bool = True, fidelity: str = "analytic",
+                 faults: Any = None,
                  extra_traces: Sequence[TraceLike] = (), **fabric_kw: Any):
         self.topology = topology
         self.ranks = ranks
         self.congestion = congestion
         self.fidelity = fidelity
+        self.faults = faults
         self.extra_traces = list(extra_traces)
         self.fabric_kw = fabric_kw
 
     def consume(self, stream: TraceStream) -> Any:
+        from ..faults import as_fault_plan
         from ..sim import Fabric, SimConfig, Simulator
         traces = [stream.materialize()]
         traces += [_as_trace(t) for t in self.extra_traces]
         fabric = Fabric.build(self.topology, self.ranks, mode=self.fidelity,
                               **self.fabric_kw)
-        cfg = SimConfig(congestion=self.congestion)
+        plan = as_fault_plan(self.faults)
+        cfg = SimConfig(congestion=self.congestion,
+                        fault_plan=None if plan is None else plan.to_dict())
         return Simulator(traces, fabric, cfg).run()
 
 

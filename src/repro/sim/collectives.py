@@ -31,6 +31,10 @@ class CollectiveModel:
         """Completion time of one collective over `group` ranks."""
         if group <= 1 or payload_bytes <= 0:
             return 0.0
+        if link_bw <= 0 or latency_s < 0:
+            raise ValueError(
+                f"collective pricing needs link_bw > 0 and latency_s >= 0, "
+                f"got link_bw={link_bw!r}, latency_s={latency_s!r}")
         n = group
         if kind == CollectiveType.ALL_REDUCE:
             if self.algorithm == "tree":

@@ -78,6 +78,22 @@ class SimConfig:
     dcqcn_small_flow_penalty: float = 3.0   # extra sharing for mesh flows
     collective_model: CollectiveModel = field(default_factory=CollectiveModel)
     speed_factors: Dict[int, float] = field(default_factory=dict)  # stragglers
+    #: a :class:`repro.faults.FaultPlan` (or plan dict / JSON path) injecting
+    #: time-windowed slowdowns, crashes, and link degradation; None or an
+    #: empty plan leaves the engine bit-identical to the fault-free path
+    fault_plan: Optional[Any] = None
+
+
+def validate_speed_factors(factors: Optional[Dict[int, float]]) -> None:
+    """Every straggler speed factor divides a compute duration, so zero,
+    negative, and NaN factors must fail loudly instead of producing
+    infinite or negative durations deep inside the event loop."""
+    for r, f in (factors or {}).items():
+        if not (isinstance(f, (int, float)) and f > 0):
+            raise ValueError(
+                f"speed_factors[{r}] must be a strictly positive number, "
+                f"got {f!r} (a factor <= 0 would make compute durations "
+                f"infinite or negative)")
 
 
 @dataclass
@@ -92,13 +108,19 @@ class SimResult:
     link_util_timeline: List[Tuple[float, float]]
     events: int = 0                 # engine events processed (perf metric)
     link_stats: Optional[Dict[str, Any]] = None   # link-fidelity mode only
+    aborted: bool = False           # abort-policy crash timeout fired
+    abort_reason: Optional[str] = None
+    fault_stats: Optional[Dict[str, Any]] = None  # fault injection only
 
     def summary(self) -> str:
         coll = ", ".join(f"{k}={v * 1e3:.2f}ms"
                          for k, v in sorted(self.collective_time_s.items()))
-        return (f"makespan={self.makespan_s * 1e3:.2f}ms "
-                f"compute={self.compute_busy_s * 1e3:.2f}ms "
-                f"exposed_comm={self.exposed_comm_s * 1e3:.2f}ms [{coll}]")
+        s = (f"makespan={self.makespan_s * 1e3:.2f}ms "
+             f"compute={self.compute_busy_s * 1e3:.2f}ms "
+             f"exposed_comm={self.exposed_comm_s * 1e3:.2f}ms [{coll}]")
+        if self.aborted:
+            s = f"ABORTED: {self.abort_reason} | partial {s}"
+        return s
 
 
 class _FlowIndex:
@@ -152,7 +174,16 @@ class Simulator:
         self.traces = list(traces)
         self.fabric = fabric
         self.cfg = cfg or SimConfig()
-        self._net = fabric.network_model(self.cfg.collective_model)
+        validate_speed_factors(self.cfg.speed_factors)
+        self._fault = None
+        if self.cfg.fault_plan is not None:
+            # lazy: repro.faults is stdlib-light but must not load on the
+            # fault-free hot path
+            from ..faults import FaultRuntime, as_fault_plan
+            self._fault = FaultRuntime.build(
+                as_fault_plan(self.cfg.fault_plan))
+        self._net = fabric.network_model(self.cfg.collective_model,
+                                         fault=self._fault)
 
     def run(self, max_events: int = 2_000_000) -> SimResult:
         cfg = self.cfg
@@ -182,11 +213,29 @@ class Simulator:
         # event heap: (time, seq, kind, payload)
         #   kind 0 = wake rank (payload=rank): try to issue ready nodes
         #   kind 1 = completion (payload=(rank, node_id)): release deps
+        #   kind 2 = rendezvous timeout (payload=(key, members)); fault
+        #            injection only — never scheduled on the fault-free path
         heap: List[Tuple[float, int, int, Any]] = [
             (0.0, r, 0, r) for r in range(n_ranks)]
         heapq.heapify(heap)
         events = 0
         seq = n_ranks
+
+        # fault injection state (all of it behind `fault is not None` so the
+        # fault-free path stays bit-identical to the reference engine)
+        fault = self._fault
+        aborted_reason: Optional[str] = None
+        fstats: Optional[Dict[str, Any]] = None
+        if fault is not None:
+            fstats = {"plan": fault.plan.name, "policy": fault.policy,
+                      "collective_timeout_s": fault.timeout_s,
+                      "plan_events": len(fault.plan.events),
+                      "slowdown_extra_s": 0.0, "crash_stall_s": 0.0,
+                      "timeouts": 0, "collectives_shrunk": 0, "rejoins": 0,
+                      "recovery_latency_s": 0.0}
+            pending_nodes: Dict[Tuple, ETNode] = {}   # key -> a member node
+            shrunk_end: Dict[Tuple, float] = {}       # key -> shrunk end time
+            excluded: Dict[Tuple[int, ...], set] = {}  # members -> dead set
         # Wake elimination, count-preserving: the reference engine schedules
         # one wake per completion / comm-issue and each wake pops at its push
         # timestamp, so a wake skipped while the rank has nothing ready is a
@@ -221,7 +270,8 @@ class Simulator:
 
         def launch_collective(members: Dict[int, Tuple[int, float]],
                               node: ETNode, group: int,
-                              ranks: Optional[Tuple[int, ...]] = None) -> None:
+                              ranks: Optional[Tuple[int, ...]] = None
+                              ) -> float:
             """All members arrived: collectives are ASYNC — they occupy the
             fabric for [start, end] but member ranks keep issuing
             independent work; dependents release at the completion event."""
@@ -239,6 +289,7 @@ class Simulator:
             for r, (nid, _) in members.items():
                 rank_time[r] = max(rank_time[r], end)
                 push(end, 1, (r, nid))
+            return end
 
         while heap and events < max_events:
             t, _, kind, payload = heapq.heappop(heap)
@@ -248,7 +299,49 @@ class Simulator:
                 feeders[r].mark_completed(nid)
                 wake(t, r)
                 continue
+            if kind == 2:
+                # rendezvous timeout: fires collective_timeout_s after the
+                # last LIVE member arrived at a collective whose remaining
+                # members were all dead.  Re-checked here — the collective
+                # may have completed (restart) or a live member may still be
+                # on its way (then the next live arrival re-arms).
+                key, members_ranks = payload
+                pend = pending.get(key)
+                if pend is None:
+                    continue
+                missing = [m for m in members_ranks if m not in pend]
+                if not missing or not all(fault.is_dead(m, t)
+                                          for m in missing):
+                    continue
+                node = pending_nodes[key]
+                fstats["timeouts"] += 1
+                fstats["recovery_latency_s"] += (
+                    t - max(at for _, at in pend.values()))
+                if fault.policy == "abort":
+                    aborted_reason = (
+                        f"{COLL_NAME.get(node.comm_type, 'Comm')} over ranks "
+                        f"{list(members_ranks)} timed out at t={t:.6f}s "
+                        f"waiting for dead rank(s) {missing} "
+                        f"(collective_timeout_s={fault.timeout_s})")
+                    break
+                # shrink: the communicator drops the dead members and the
+                # collective proceeds over the live group
+                live = tuple(sorted(pend))
+                shrunk_end[key] = launch_collective(pend, node, len(live),
+                                                    live)
+                excluded.setdefault(members_ranks, set()).update(missing)
+                fstats["collectives_shrunk"] += 1
+                del pending[key]
+                pending_nodes.pop(key, None)
+                continue
             rank = payload
+            if fault is not None:
+                alive = fault.next_alive(rank, t)
+                if alive is None:
+                    continue            # dead forever: issues nothing more
+                if alive > t:
+                    push(alive, 0, rank)    # crashed: re-wake at restart
+                    continue
             feeder = feeders[rank]
             if not feeder.has_pending():
                 continue
@@ -274,12 +367,47 @@ class Simulator:
                 occ = occurrence.get(okey, 0)
                 occurrence[okey] = occ + 1
                 key = (bid, occ)
+                if fault is not None and key in shrunk_end:
+                    # late rejoin: a restarted rank reaches a collective the
+                    # shrunk group already ran — it syncs to the shrunk end
+                    # and is welcomed back into future rendezvous (entry kept:
+                    # several excluded members may rejoin the same key)
+                    end = max(t, shrunk_end[key])
+                    rank_time[rank] = max(rank_time[rank], end)
+                    push(end, 1, (rank, node.id))
+                    fstats["rejoins"] += 1
+                    exc = excluded.get(members_ranks)
+                    if exc is not None:
+                        exc.discard(rank)
+                        if not exc:
+                            del excluded[members_ranks]
+                    wake(t, rank)
+                    continue
                 pend = pending.setdefault(key, {})
                 pend[rank] = (node.id, t)
                 if len(pend) == len(members_ranks):
                     launch_collective(pend, node, len(members_ranks),
                                       members_ranks)
                     del pending[key]
+                    if fault is not None:
+                        pending_nodes.pop(key, None)
+                elif fault is not None and fault.has_crashes:
+                    missing = [m for m in members_ranks if m not in pend]
+                    exc = excluded.get(members_ranks)
+                    if exc and all(m in exc for m in missing):
+                        # group already shrunk past these members: proceed
+                        # immediately over the live subset, no new timeout
+                        live = tuple(sorted(pend))
+                        shrunk_end[key] = launch_collective(
+                            pend, node, len(live), live)
+                        fstats["collectives_shrunk"] += 1
+                        del pending[key]
+                    elif all(fault.is_dead(m, t) for m in missing):
+                        # every remaining member is currently dead: arm the
+                        # rendezvous timeout (re-armed per live arrival, and
+                        # re-validated at fire in case of restarts)
+                        pending_nodes[key] = node
+                        push(t + fault.timeout_s, 2, (key, members_ranks))
                 wake(t, rank)        # keep issuing independent work
             elif node.type in COMM_NODE_TYPES:
                 pg = self.traces[rank].process_groups.get(node.comm_group)
@@ -290,7 +418,17 @@ class Simulator:
             else:
                 dur = node.duration_micros * 1e-6
                 dur /= cfg.speed_factors.get(rank, 1.0)
-                end = t + dur
+                if fault is None:
+                    end = t + dur
+                else:
+                    end, stall = fault.compute_end(rank, t, dur)
+                    if end is None:
+                        # rank dies mid-op and never restarts: the op (and
+                        # this rank's remaining work) never completes
+                        fstats["crash_stall_s"] += stall
+                        continue
+                    fstats["crash_stall_s"] += stall
+                    fstats["slowdown_extra_s"] += (end - t) - stall - dur
                 compute_busy += dur
                 rank_time[rank] = max(rank_time[rank], end)
                 push(end, 1, (rank, node.id))
@@ -303,6 +441,17 @@ class Simulator:
         total_comm = sum(coll_time.values())
         per_rank_compute = compute_busy / max(n_ranks, 1)
         exposed = max(0.0, makespan - per_rank_compute)
+        if fault is not None:
+            fstats["dead_ranks"] = fault.dead_forever_ranks()
+            fstats["unfinished_ranks"] = sorted(
+                r for r in range(n_ranks) if feeders[r].has_pending())
+            fstats["lost_time_s"] = (fstats["crash_stall_s"]
+                                     + fstats["slowdown_extra_s"]
+                                     + fstats["recovery_latency_s"])
+            if self._net.mode == "analytic" and fault.has_link_events:
+                # analytic pricing has no per-link routing, so link faults
+                # cannot shape it — surface that instead of silently no-oping
+                fstats["link_events_ignored"] = True
         return SimResult(
             makespan_s=makespan,
             per_rank_finish_s=rank_time,
@@ -314,6 +463,9 @@ class Simulator:
             link_util_timeline=util,
             events=events,
             link_stats=self._net.stats(wall_s=makespan),
+            aborted=aborted_reason is not None,
+            abort_reason=aborted_reason,
+            fault_stats=fstats,
         )
 
     def _comm_time(self, node: ETNode, group: int, t: float,
@@ -323,7 +475,8 @@ class Simulator:
         cfg = self.cfg
         kindname = COLL_NAME.get(node.comm_type, "Comm")
         base = self._net.collective_time(node.comm_type,
-                                         float(node.comm_bytes), group, ranks)
+                                         float(node.comm_bytes), group,
+                                         ranks, t)
         throttle = 1.0
         if cfg.congestion:
             # bandwidth sharing with flows ALREADY on the fabric (a

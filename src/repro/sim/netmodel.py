@@ -33,9 +33,10 @@ scale (``perf_netmodel`` measures this).
 from __future__ import annotations
 
 import math
+from bisect import bisect_right
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from ..core.infragraph import LinkLoad, RoutingTable
+from ..core.infragraph import InfraGraph, Link, LinkLoad, RoutingTable
 from ..core.schema import CollectiveType
 from .collectives import CollectiveModel, decompose
 
@@ -89,7 +90,11 @@ class NetworkModel:
 
     def collective_time(self, kind: CollectiveType, payload_bytes: float,
                         group: int,
-                        ranks: Optional[Tuple[int, ...]] = None) -> float:
+                        ranks: Optional[Tuple[int, ...]] = None,
+                        t: float = 0.0) -> float:
+        """Completion time of a collective *starting at* ``t`` (the start
+        time only matters under link-fault injection, where bandwidth is
+        time-varying; both models are time-invariant without faults)."""
         raise NotImplementedError
 
     def stats(self, wall_s: float = 0.0) -> Optional[Dict[str, object]]:
@@ -114,7 +119,8 @@ class AnalyticModel(NetworkModel):
 
     def collective_time(self, kind: CollectiveType, payload_bytes: float,
                         group: int,
-                        ranks: Optional[Tuple[int, ...]] = None) -> float:
+                        ranks: Optional[Tuple[int, ...]] = None,
+                        t: float = 0.0) -> float:
         base = self.model.time_s(kind, payload_bytes, group,
                                  self.fabric.link_bw, self.fabric.latency_s)
         if kind == CollectiveType.ALL_TO_ALL:
@@ -137,30 +143,45 @@ class LinkModel(NetworkModel):
 
     mode = "link"
 
-    def __init__(self, fabric, model: CollectiveModel) -> None:
+    def __init__(self, fabric, model: CollectiveModel, fault=None) -> None:
         self.fabric = fabric
         self.model = model
         self.routes: RoutingTable = fabric.graph.routing()
         self.load = LinkLoad(self.routes)
         self._nnpu = fabric.graph.num_npus
         self._npu_ids = tuple(sorted(fabric.graph.npus))
-        # spec: (kind, members) -> (phase specs, link byte fractions)
-        self._spec: Dict[Tuple, Tuple[Tuple[Tuple[int, Tuple[Tuple[float, float], ...]], ...],
-                                      Tuple[Tuple[int, float], ...]]] = {}
+        # spec: (kind, members[, state]) -> (phase specs, link byte fracs);
+        # None value = collective unroutable in that fault state
+        self._spec: Dict[Tuple, Optional[Tuple[Tuple[Tuple[int, Tuple[Tuple[float, float], ...]], ...],
+                                               Tuple[Tuple[int, float], ...]]]] = {}
         self._times: Dict[Tuple, float] = {}
         self.cache_hits = 0
         self.cache_misses = 0
+        # link-fault epochs (FaultRuntime.link_schedule): epoch e covers
+        # [times[e-1], times[e]); identical states share one key and hence
+        # one variant routing table in _state_routes
+        self._fault_times: List[float] = []
+        self._fault_keys: List[Tuple[Tuple[int, float], ...]] = []
+        self._state_routes: Dict[Tuple[Tuple[int, float], ...],
+                                 RoutingTable] = {(): self.routes}
+        self.reroutes = 0
+        self.fault_waits = 0
+        if fault is not None and fault.has_link_events:
+            self._fault_times, self._fault_keys = fault.link_schedule(
+                fabric.graph)
 
     def _npu(self, rank: int) -> int:
         """Map a logical group rank onto a fabric NPU (wraps when the trace
         declares more ranks than the fabric has chips)."""
         return self._npu_ids[rank % self._nnpu]
 
-    def _build_spec(self, kind: CollectiveType, members: Tuple[int, ...]):
+    def _build_spec(self, kind: CollectiveType, members: Tuple[int, ...],
+                    routes: Optional[RoutingTable] = None):
+        routes = routes if routes is not None else self.routes
         phases = decompose(kind, len(members), self.model.algorithm)
         spec: List[Tuple[int, Tuple[Tuple[float, float], ...]]] = []
         link_frac: Dict[int, float] = {}
-        lat = self.routes.path_latency
+        lat = routes.path_latency
         for phase in phases:
             routed: List[Tuple[Tuple[int, ...], float]] = []
             for f in phase.flows:
@@ -168,11 +189,11 @@ class LinkModel(NetworkModel):
                 dst = self._npu(members[f.dst % len(members)])
                 if src == dst:
                     continue
-                routed.append((self.routes.path(src, dst), f.frac))
+                routed.append((routes.path(src, dst), f.frac))
             if not routed:
                 continue
             rates = max_min_fair_rates([p for p, _ in routed],
-                                       self.routes.link_bw)
+                                       routes.link_bw)
             terms: List[Tuple[float, float]] = []
             for (path, frac), rate in zip(routed, rates):
                 coeff = (len(path) * frac / rate) if frac > 0 else 0.0
@@ -195,12 +216,19 @@ class LinkModel(NetworkModel):
 
     def collective_time(self, kind: CollectiveType, payload_bytes: float,
                         group: int,
-                        ranks: Optional[Tuple[int, ...]] = None) -> float:
+                        ranks: Optional[Tuple[int, ...]] = None,
+                        t: float = 0.0) -> float:
         if group <= 1 or payload_bytes <= 0:
             if kind == CollectiveType.BARRIER and group > 1:
                 payload_bytes = 0.0     # barriers carry no payload but sync
             else:
                 return 0.0
+        if self._fault_times:
+            epoch = bisect_right(self._fault_times, t)
+            state = self._fault_keys[epoch]
+            if state:
+                return self._faulted_time(kind, payload_bytes, group, ranks,
+                                          t, epoch, state)
         members = tuple(ranks) if ranks else tuple(range(group))
         tkey = (int(kind), payload_bytes, members)
         cached = self._times.get(tkey)
@@ -212,6 +240,77 @@ class LinkModel(NetworkModel):
         for l, frac in link_frac:       # per-link utilization, every call
             self.load.bytes_by_link[l] = (self.load.bytes_by_link.get(l, 0.0)
                                           + frac * payload_bytes)
+        if cached is not None:
+            self.cache_hits += 1
+            return cached
+        self.cache_misses += 1
+        total = 0.0
+        for repeat, terms in spec:
+            total += repeat * max(la + co * payload_bytes for la, co in terms)
+        self._times[tkey] = total
+        return total
+
+    # ------------------------------------------------------ fault injection
+    def _routes_for(self, state: Tuple[Tuple[int, float], ...]
+                    ) -> RoutingTable:
+        """Routing table for a link-fault state: a variant graph with the
+        affected links' bandwidth scaled (0.0 = down, which Dijkstra skips,
+        so traffic reroutes around outages).  Link order is preserved, so
+        link indices — and the LinkLoad accounting — stay valid across
+        states.  One table per *distinct* state, built on first use."""
+        rt = self._state_routes.get(state)
+        if rt is None:
+            g = self.fabric.graph
+            mult = dict(state)
+            variant = InfraGraph(
+                name=f"{g.name}|{'|'.join(f'{i}x{m:g}' for i, m in state)}",
+                npus=g.npus,
+                links=[Link(l.src, l.dst,
+                            l.bandwidth * mult.get(i, 1.0),
+                            l.latency_s, l.name)
+                       for i, l in enumerate(g.links)],
+                attrs=g.attrs)
+            rt = self._state_routes[state] = RoutingTable(variant)
+            self.reroutes += 1
+        return rt
+
+    def _faulted_time(self, kind: CollectiveType, payload_bytes: float,
+                      group: int, ranks: Optional[Tuple[int, ...]],
+                      t: float, epoch: int,
+                      state: Tuple[Tuple[int, float], ...]) -> float:
+        """collective_time under an active link-fault state: same spec/time
+        caches, keyed additionally by the state, over the state's rerouted
+        table.  A state that *partitions* the members blocks the collective
+        until the next epoch boundary (the outage window closing), then
+        re-prices from there — so a transient link_down shows up as stalled
+        collectives, not a crash."""
+        members = tuple(ranks) if ranks else tuple(range(group))
+        skey = (int(kind), members, state)
+        if skey in self._spec:
+            spec_entry = self._spec[skey]
+        else:
+            try:
+                spec_entry = self._build_spec(kind, members,
+                                              self._routes_for(state))
+            except ValueError:
+                spec_entry = None       # unroutable in this state
+            self._spec[skey] = spec_entry
+        if spec_entry is None:
+            if epoch >= len(self._fault_times):
+                raise ValueError(
+                    f"fault plan permanently partitions ranks {members} on "
+                    f"graph {self.fabric.graph.name!r}: no route in the "
+                    f"final link-fault state and no later epoch to wait for")
+            resume = self._fault_times[epoch]
+            self.fault_waits += 1
+            return (resume - t) + self.collective_time(
+                kind, payload_bytes, group, ranks, resume)
+        spec, link_frac = spec_entry
+        for l, frac in link_frac:
+            self.load.bytes_by_link[l] = (self.load.bytes_by_link.get(l, 0.0)
+                                          + frac * payload_bytes)
+        tkey = (int(kind), payload_bytes, members, state)
+        cached = self._times.get(tkey)
         if cached is not None:
             self.cache_hits += 1
             return cached
@@ -249,7 +348,7 @@ class LinkModel(NetworkModel):
         return total
 
     def stats(self, wall_s: float = 0.0) -> Dict[str, object]:
-        return {
+        out = {
             "mode": self.mode,
             "routed_sources": len(self.routes._paths),
             "spec_cache": len(self._spec),
@@ -259,14 +358,27 @@ class LinkModel(NetworkModel):
             "links_touched": len(self.load.bytes_by_link),
             "top_links": self.load.top(8, wall_s=wall_s),
         }
+        if self._fault_times:
+            out["faults"] = {
+                "epochs": len(self._fault_keys),
+                "distinct_states": len(self._state_routes) - 1,
+                "reroutes": self.reroutes,
+                "blocked_waits": self.fault_waits,
+            }
+        return out
 
 
-def build_network_model(fabric, model: Optional[CollectiveModel] = None
-                        ) -> NetworkModel:
-    """Instantiate the fabric's active fidelity (``fabric.mode``)."""
+def build_network_model(fabric, model: Optional[CollectiveModel] = None,
+                        fault=None) -> NetworkModel:
+    """Instantiate the fabric's active fidelity (``fabric.mode``).
+
+    ``fault`` is an optional :class:`repro.faults.FaultRuntime`; only the
+    link model consumes it (analytic pricing has no per-link routing for
+    link faults to act on — the engine surfaces ``link_events_ignored`` in
+    ``fault_stats`` in that case)."""
     model = model or CollectiveModel()
     if fabric.mode == "link":
-        return LinkModel(fabric, model)
+        return LinkModel(fabric, model, fault=fault)
     if fabric.mode == "analytic":
         return AnalyticModel(fabric, model)
     raise ValueError(

@@ -20,7 +20,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from ..core.feeder import ETFeeder
 from ..core.schema import CollectiveType, ETNode, ExecutionTrace
-from .engine import COLL_NAME, FlowRecord, SimConfig, SimResult
+from .engine import (COLL_NAME, FlowRecord, SimConfig, SimResult,
+                     validate_speed_factors)
 from .topology import Fabric
 
 
@@ -32,6 +33,8 @@ class ReferenceSimulator:
         self.traces = list(traces)
         self.fabric = fabric
         self.cfg = cfg or SimConfig()
+        # input validation only — the frozen arithmetic below is untouched
+        validate_speed_factors(self.cfg.speed_factors)
 
     def run(self, max_events: int = 2_000_000) -> SimResult:
         cfg = self.cfg

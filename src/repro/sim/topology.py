@@ -87,8 +87,10 @@ class Fabric:
             raise KeyError(f"unknown topology {name!r}; have {TOPOLOGIES}")
         return cls(name, g, link_bw, latency_s, capacity_flows=cap, mode=mode)
 
-    def network_model(self, collective_model=None):
+    def network_model(self, collective_model=None, fault=None):
         """The active :class:`repro.sim.netmodel.NetworkModel` for this
-        fabric's ``mode`` (imported lazily to avoid a module cycle)."""
+        fabric's ``mode`` (imported lazily to avoid a module cycle);
+        ``fault`` is an optional compiled :class:`repro.faults.FaultRuntime`
+        whose link events shape link-mode routing."""
         from .netmodel import build_network_model
-        return build_network_model(self, collective_model)
+        return build_network_model(self, collective_model, fault=fault)

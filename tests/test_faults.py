@@ -1,0 +1,346 @@
+"""repro.faults: deterministic fault injection + the hardened sweep harness.
+
+The acceptance gates: plan round-trips are byte-stable, same-seed MTBF
+generation is deterministic, crash policies (abort vs shrink vs rejoin)
+behave per contract, link_down reroutes on the routed fabric, an empty /
+absent plan leaves the engine bit-identical, non-positive speed factors
+fail loudly everywhere, and a SIGKILLed sweep worker loses zero rows."""
+import json
+import os
+import signal
+import warnings
+
+import pytest
+
+from repro.core import generator
+from repro.explore import ExperimentSpec, build_report, run_sweep
+from repro.explore.runner import RunCache, execute_run
+from repro.faults import FaultPlan, FaultRuntime, as_fault_plan
+from repro.sim import Fabric, ReferenceSimulator, SimConfig, Simulator
+
+
+def dp_traces(ranks=4, steps=3, layers=4):
+    return generator.generate_ranks("dp_allreduce", ranks=ranks,
+                                    steps=steps, layers=layers)
+
+
+def run_sim(traces, ranks, plan=None, topology="switch", mode="analytic",
+            **cfg_kw):
+    fabric = Fabric.build(topology, ranks, mode=mode)
+    cfg = SimConfig(fault_plan=plan, **cfg_kw)
+    return Simulator(traces, fabric, cfg).run()
+
+
+# ------------------------------------------------------------------- plans
+def test_plan_roundtrip_byte_stable():
+    a = (FaultPlan(name="p", policy="shrink", collective_timeout_s=0.5)
+         .rank_crash(1, t=2.0, restart_after=1.0)
+         .rank_slowdown(0, t0=0.0, t1=1.0, factor=4.0)
+         .link_down("npu:2", t0=0.5, t1=0.7))
+    # builder order never leaks into the canonical form
+    b = (FaultPlan(name="p", policy="shrink", collective_timeout_s=0.5)
+         .link_down("npu:2", t0=0.5, t1=0.7)
+         .rank_slowdown(0, t0=0.0, t1=1.0, factor=4.0)
+         .rank_crash(1, t=2.0, restart_after=1.0))
+    assert a.to_json() == b.to_json()
+    assert a.plan_hash == b.plan_hash
+    assert FaultPlan.from_json(a.to_json()).to_json() == a.to_json()
+
+
+def test_plan_save_load_and_coercions(tmp_path):
+    plan = FaultPlan(name="x").rank_slowdown(0, 0.0, 1.0, 2.0)
+    p = plan.save(str(tmp_path / "plan.json"))
+    assert FaultPlan.load(p).to_json() == plan.to_json()
+    # as_fault_plan: None | plan | dict | path all coerce
+    assert as_fault_plan(None) is None
+    assert as_fault_plan(plan) is plan
+    assert as_fault_plan(plan.to_dict()).to_json() == plan.to_json()
+    assert as_fault_plan(p).to_json() == plan.to_json()
+
+
+def test_plan_validation_rejects_bad_events():
+    with pytest.raises(ValueError, match="strictly positive"):
+        FaultPlan().rank_slowdown(0, 0.0, 1.0, factor=0.0)
+    with pytest.raises(ValueError, match="strictly positive"):
+        FaultPlan().rank_slowdown(0, 0.0, 1.0, factor=-2.0)
+    with pytest.raises(ValueError, match="t1 > t0"):
+        FaultPlan().link_down("l", t0=1.0, t1=1.0)
+    with pytest.raises(ValueError, match="rank must be >= 0"):
+        FaultPlan().rank_crash(-1, t=0.0)
+    with pytest.raises(ValueError, match="unknown fault policy"):
+        FaultPlan(policy="panic").validate()
+    with pytest.raises(ValueError, match="unknown fault event kind"):
+        FaultPlan.from_dict({"events": [{"kind": "meteor_strike"}]})
+
+
+def test_mtbf_generation_same_seed_byte_identical():
+    kw = dict(world_size=8, duration_s=10.0,
+              crash_mtbf_s=5.0, restart_after_s=0.5,
+              slowdown_mtbf_s=3.0, slowdown_factor=4.0,
+              link_mtbf_s=8.0, links=["npu:0", "npu:3"])
+    a = FaultPlan.generate(seed=7, **kw)
+    b = FaultPlan.generate(seed=7, **kw)
+    c = FaultPlan.generate(seed=8, **kw)
+    assert a.to_json() == b.to_json()
+    assert a.to_json() != c.to_json()
+    assert not a.is_empty()
+
+
+# ------------------------------------------------------------------ engine
+def test_empty_plan_bit_identical_to_fault_free():
+    traces = dp_traces()
+    base = run_sim(traces, 4, plan=None)
+    for empty in (FaultPlan(name="empty"), FaultPlan().to_dict()):
+        res = run_sim(traces, 4, plan=empty)
+        assert res.makespan_s == base.makespan_s
+        assert res.per_rank_finish_s == base.per_rank_finish_s
+        assert res.events == base.events
+        assert res.collective_time_s == base.collective_time_s
+        assert [vars(f) for f in res.flows] == [vars(f) for f in base.flows]
+        assert res.fault_stats is None and not res.aborted
+    # FaultRuntime.build is the normalization point
+    assert FaultRuntime.build(None) is None
+    assert FaultRuntime.build(FaultPlan()) is None
+
+
+def test_slowdown_is_deterministic_and_accounted():
+    traces = dp_traces()
+    plan = FaultPlan(name="slow").rank_slowdown(0, 0.0, 10.0, factor=60.0)
+    a = run_sim(traces, 4, plan=plan)
+    b = run_sim(traces, 4, plan=plan)
+    assert a.makespan_s == b.makespan_s
+    assert a.fault_stats == b.fault_stats
+    assert a.fault_stats["slowdown_extra_s"] > 0
+    assert a.makespan_s > run_sim(traces, 4).makespan_s
+
+
+def test_crash_abort_vs_shrink():
+    traces = dp_traces()
+    crash = dict(rank=1, t=0.0005)          # mid compute chain, no restart
+    aborted = run_sim(traces, 4, plan=FaultPlan(
+        name="a", policy="abort", collective_timeout_s=0.001)
+        .rank_crash(**crash))
+    assert aborted.aborted
+    assert "timed out" in aborted.abort_reason
+    assert "ABORTED" in aborted.summary()
+    assert aborted.fault_stats["timeouts"] >= 1
+
+    shrunk = run_sim(traces, 4, plan=FaultPlan(
+        name="s", policy="shrink", collective_timeout_s=0.001)
+        .rank_crash(**crash))
+    assert not shrunk.aborted
+    assert shrunk.fault_stats["collectives_shrunk"] >= 1
+    assert shrunk.fault_stats["dead_ranks"] == [1]
+    # the dead rank never finishes its trace; the survivors do
+    assert shrunk.fault_stats["unfinished_ranks"] == [1]
+
+
+def test_crash_restart_rejoins_and_finishes():
+    traces = dp_traces()
+    plan = (FaultPlan(name="flap", policy="shrink",
+                      collective_timeout_s=0.0005)
+            .rank_crash(1, t=0.0005, restart_after=0.002))
+    res = run_sim(traces, 4, plan=plan)
+    assert not res.aborted
+    assert res.fault_stats["rejoins"] >= 1
+    assert res.fault_stats["unfinished_ranks"] == []
+    assert res.fault_stats["dead_ranks"] == []
+
+
+def test_link_down_reroutes_on_ring():
+    traces = dp_traces()
+    base = run_sim(traces, 4, topology="ring", mode="link")
+    res = run_sim(traces, 4, topology="ring", mode="link",
+                  plan=FaultPlan(name="cut").link_down(
+                      "ring0->1", t0=0.0, t1=base.makespan_s * 10))
+    assert res.link_stats["faults"]["reroutes"] >= 1
+    assert res.makespan_s > base.makespan_s     # detour costs hops
+    # determinism under faults holds on the routed path too
+    res2 = run_sim(traces, 4, topology="ring", mode="link",
+                   plan=FaultPlan(name="cut").link_down(
+                       "ring0->1", t0=0.0, t1=base.makespan_s * 10))
+    assert res2.makespan_s == res.makespan_s
+
+
+def test_link_degrade_slows_routed_traffic():
+    traces = dp_traces()
+    base = run_sim(traces, 4, topology="ring", mode="link")
+    res = run_sim(traces, 4, topology="ring", mode="link",
+                  plan=FaultPlan(name="deg").link_degrade(
+                      "npu:0", t0=0.0, t1=base.makespan_s * 10, factor=8.0))
+    assert res.makespan_s > base.makespan_s
+
+
+def test_analytic_mode_flags_ignored_link_events():
+    traces = dp_traces()
+    res = run_sim(traces, 4, plan=FaultPlan(name="l").link_down(
+        "npu:0", t0=0.0, t1=1.0))
+    assert res.fault_stats["link_events_ignored"] is True
+
+
+def test_bad_link_selector_fails_loudly():
+    with pytest.raises(ValueError, match="selector"):
+        run_sim(dp_traces(), 4, topology="ring", mode="link",
+                plan=FaultPlan().link_down("no_such_link", 0.0, 1.0))
+
+
+# ----------------------------------------------- speed-factor regressions
+@pytest.mark.parametrize("bad", [0.0, -1.0, float("nan")])
+def test_speed_factor_must_be_positive(bad):
+    traces = dp_traces()
+    fabric = Fabric.build("switch", 4)
+    for engine in (Simulator, ReferenceSimulator):
+        with pytest.raises(ValueError, match="strictly positive"):
+            engine(traces, fabric, SimConfig(speed_factors={0: bad}))
+
+
+def test_straggler_axis_rejects_non_positive_factors():
+    with pytest.raises(ValueError, match="strictly positive"):
+        ExperimentSpec.from_dict({
+            "name": "bad", "workloads": [{"pattern": "moe_mixed"}],
+            "axes": {"stragglers": [{"0": 0}]}})
+
+
+# ----------------------------------------------------------------- explore
+def faults_spec(**over):
+    plan = (FaultPlan(name="chaos", policy="shrink",
+                      collective_timeout_s=0.001)
+            .rank_slowdown(0, 0.0, 10.0, factor=60.0))
+    d = {
+        "name": "faulty",
+        "workloads": [{"pattern": "moe_mixed",
+                       "args": {"mode": "mixed", "iters": 2}}],
+        "axes": {"topology": ["ring", "switch"], "world_size": [4],
+                 "faults": [None, plan.to_dict()]},
+    }
+    d.update(over)
+    return ExperimentSpec.from_dict(d)
+
+
+def test_empty_plan_normalizes_to_fault_free_hash():
+    free = faults_spec(axes={"topology": ["ring"], "world_size": [4]})
+    empty = faults_spec(axes={"topology": ["ring"], "world_size": [4],
+                              "faults": [FaultPlan(name="noop").to_dict()]})
+    assert [c.run_hash for c in free.expand()] \
+        == [c.run_hash for c in empty.expand()]
+
+
+def test_faults_axis_sweep_report_inflation(tmp_path):
+    res = run_sweep(faults_spec(), jobs=1, cache_dir=str(tmp_path / "c"))
+    assert res.failed == 0 and len(res.rows) == 4
+    by_faults = {}
+    for r in res.rows:
+        by_faults.setdefault(r["faults"], []).append(r)
+    assert set(by_faults) == {None, "chaos"}
+    doc = build_report(res)
+    entries = next(iter(doc["workloads"].values()))["ranking"]
+    infl = {e["hash"]: e["fault_inflation_pct"] for e in entries}
+    for e in entries:
+        if e["faults"] is None:
+            assert infl[e["hash"]] == 0.0
+        else:
+            assert infl[e["hash"]] is not None and infl[e["hash"]] > 0
+    # cached replay of the faulted sweep is byte-identical
+    res2 = run_sweep(faults_spec(), jobs=1, cache_dir=str(tmp_path / "c"))
+    assert res2.executed == 0
+    from repro.explore import report_json_bytes
+    assert report_json_bytes(build_report(res2)) == report_json_bytes(doc)
+
+
+def test_aborted_run_is_a_result_not_a_failure(tmp_path):
+    plan = (FaultPlan(name="killer", policy="abort",
+                      collective_timeout_s=0.0005)
+            .rank_crash(1, t=0.0001))
+    spec = ExperimentSpec.from_dict({
+        "name": "abortive",
+        "workloads": [{"scenario": "dp-dense"}],
+        "axes": {"topology": ["ring"], "world_size": [4], "steps": [2],
+                 "faults": [plan.to_dict()]},
+    })
+    res = run_sweep(spec, jobs=1, cache_dir=str(tmp_path / "c"))
+    assert res.failed == 0 and res.aborted == 1
+    row = res.rows[0]
+    assert row["aborted"] and not row["ok"] and row["error"] is None
+    assert "timed out" in row["abort_reason"]
+    assert "1 aborted" in res.summary()
+    # deterministic outcome => cacheable
+    assert run_sweep(spec, jobs=1,
+                     cache_dir=str(tmp_path / "c")).executed == 0
+    doc = build_report(res)
+    assert doc["runs"]["aborted"] == 1 and not doc["failures"]
+    assert doc["aborted"][0]["abort_reason"] == row["abort_reason"]
+    from repro.explore import render_markdown
+    assert "Aborted (modeled fault outcomes)" in render_markdown(doc)
+
+
+def test_sigkilled_worker_loses_zero_rows(tmp_path, monkeypatch):
+    spec = faults_spec()
+    victim = spec.expand()[0].run_hash[:12]
+    marker = str(tmp_path / "chaos.marker")
+    monkeypatch.setenv("REPRO_CHAOS_KILL", f"{victim}:{marker}")
+    res = run_sweep(spec, jobs=2, cache_dir=str(tmp_path / "c"),
+                    max_retries=2, retry_backoff_s=0.05)
+    assert os.path.exists(marker)           # the kill actually fired
+    assert len(res.rows) == 4 and res.failed == 0
+    assert all(r["ok"] or r["aborted"] for r in res.rows)
+    assert res.retries >= 1 and res.pool_rebuilds >= 1
+    # the retry burned an attempt somewhere: when the pool breaks, every
+    # in-flight future fails identically, so blame lands on one of them
+    # (not provably the killed run) — the accounting, not the attribution,
+    # is the contract
+    assert any(r["attempts"] >= 2 for r in res.rows)
+    assert "retried" in res.summary()
+    # serial ground truth: the chaotic parallel sweep converged to it
+    monkeypatch.delenv("REPRO_CHAOS_KILL")
+    serial = run_sweep(spec, jobs=1)
+    ks = ("hash", "makespan_s", "comm_time_total_s")
+    assert ([{k: r[k] for k in ks} for r in serial.rows]
+            == [{k: r[k] for k in ks} for r in res.rows])
+
+
+def test_timed_out_run_becomes_failure_row_after_retries(tmp_path,
+                                                         monkeypatch):
+    # hang one run on every attempt: the per-run timeout tears the pool
+    # down, retries it, and after max_retries emits a failure row while the
+    # innocent runs still complete
+    spec = faults_spec(axes={"topology": ["ring", "switch"],
+                             "world_size": [4]})
+    victim = spec.expand()[0].run_hash[:12]
+    monkeypatch.setenv("REPRO_CHAOS_HANG", f"{victim}:60")
+    res = run_sweep(spec, jobs=2, timeout_s=1.0, max_retries=1,
+                    retry_backoff_s=0.05)
+    assert res.failed == 1 and res.timeouts >= 1
+    bad = next(r for r in res.rows if r["hash"].startswith(victim))
+    assert "exceeded timeout_s" in bad["error"] and bad["attempts"] == 2
+    assert all(r["ok"] for r in res.rows if not r["hash"].startswith(victim))
+
+
+def test_cli_aborted_exits_zero_unless_strict(tmp_path, capsys):
+    from repro.cli import main
+    plan = (FaultPlan(name="killer", policy="abort",
+                      collective_timeout_s=0.0005)
+            .rank_crash(1, t=0.0001))
+    spec_path = tmp_path / "spec.json"
+    spec_path.write_text(json.dumps({
+        "name": "abortive",
+        "workloads": [{"scenario": "dp-dense"}],
+        "axes": {"topology": ["ring"], "world_size": [4], "steps": [2],
+                 "faults": [plan.to_dict()]},
+    }))
+    args = ["explore", str(spec_path), "--jobs", "1",
+            "--cache-dir", str(tmp_path / "c")]
+    assert main(args) == 0                  # modeled outcome, not an error
+    out = capsys.readouterr()
+    assert "1 aborted" in out.out and "failed" not in out.err
+    assert main(args + ["--strict"]) == 1
+    assert "aborted" in capsys.readouterr().err
+    blocker = tmp_path / "file"
+    blocker.write_text("x")
+    cache = RunCache(str(blocker / "sub"))   # parent is a file: unwritable
+    cfg = faults_spec().expand()[0]
+    row = execute_run(cfg)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        cache.put(row)                       # must not raise
+    assert any("run cache unwritable" in str(w.message) for w in caught)
+    assert cache.get(cfg.run_hash) is None
