@@ -41,7 +41,7 @@ def main(argv=None) -> int:
                     baseline=ns.baseline, names=ns.names or None)
     path = write_bench(doc, ns.output)
     for name in ("perf_feeder", "perf_sim", "perf_netmodel", "perf_chkb",
-                 "perf_synth", "perf_explore"):
+                 "perf_synth", "perf_explore", "perf_obs"):
         if name in doc:
             print(f"[ok] {name:12s} ({doc[name]['bench_wall_s']}s)")
     sims = doc.get("perf_sim", {}).get("scenarios", [])

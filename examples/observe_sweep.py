@@ -1,0 +1,77 @@
+"""Watch the tooling watch itself: an observed sweep + a self-traced sim.
+
+Two halves of `repro.obs` in one script:
+
+1. A small co-design sweep runs with a heartbeat (one-line progress on
+   stderr) and a Prometheus :class:`MetricsRegistry` armed to snapshot a
+   ``.prom`` file — the same text any scraper would ingest.
+2. One simulation re-runs with a :class:`TimelineRecorder` attached; the
+   recorder's Chrome-trace export loads straight into Perfetto
+   (https://ui.perfetto.dev), and ``top_sinks`` prints where the simulated
+   fleet actually spent its time — compute lanes vs collective lanes.
+
+  PYTHONPATH=src python examples/observe_sweep.py
+
+Shell equivalent:
+  python -m repro explore study.json --heartbeat-s 5 --metrics run.prom
+  python -m repro sim trace.chkb --ranks 8 --timeline timeline.json
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import generator
+from repro.explore import ExperimentSpec, run_sweep
+from repro.obs import MetricsRegistry, TimelineRecorder
+from repro.sim import Fabric, SimConfig, Simulator
+
+SPEC = {
+    "name": "observed-sweep",
+    "workloads": [
+        {"pattern": "moe_mixed", "name": "allreduce-heavy",
+         "args": {"mode": "allreduce", "iters": 4}},
+        {"pattern": "moe_mixed", "name": "a2a-heavy",
+         "args": {"mode": "alltoall", "iters": 4}},
+    ],
+    "axes": {"topology": ["ring", "switch", "clos"], "world_size": [8]},
+}
+
+
+def main() -> None:
+    out_dir = tempfile.mkdtemp(prefix="observe_sweep_")
+    prom = os.path.join(out_dir, "sweep.prom")
+
+    # -- 1. the observed sweep: heartbeat to stderr, metrics to .prom ------
+    registry = MetricsRegistry()
+    registry.arm_snapshots(prom, interval_s=1.0)
+    res = run_sweep(ExperimentSpec.from_dict(SPEC), jobs=2,
+                    heartbeat_s=0.5, metrics=registry)
+    registry.snapshot()
+    print(res.summary())
+    print(f"\nscrapeable metrics -> {prom}")
+    for line in registry.expose().splitlines():
+        if line.startswith("repro_explore_runs_total"):
+            print(f"  {line}")
+
+    # -- 2. one self-traced simulation: where does the time actually go? --
+    ranks = 8
+    traces = [generator.moe_mixed_collectives(iters=4, ranks=ranks, rank=r)
+              for r in range(ranks)]
+    fabric = Fabric.build("ring", ranks, mode="link")
+    cfg = SimConfig(timeline=TimelineRecorder())
+    sim_res = Simulator(traces, fabric, cfg).run()
+    timeline = os.path.join(out_dir, "timeline.json")
+    sim_res.timeline.export(timeline)
+    print(f"\n{sim_res.summary()}")
+    print(f"timeline -> {timeline}  (load it at https://ui.perfetto.dev)")
+
+    print("\ntop 5 time sinks across all rank lanes:")
+    for row in sim_res.timeline.top_sinks(5):
+        print(f"  {row['name']:28s} {row['total_s'] * 1e3:9.3f} ms "
+              f"across {row['count']} span(s)")
+
+
+if __name__ == "__main__":
+    main()

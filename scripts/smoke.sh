@@ -46,6 +46,19 @@ python -m repro sim "$tmp/canon.chkb" --topology ring --ranks 4 \
 grep -q makespan "$tmp/sim_faults.out"
 grep -q fault_stats "$tmp/sim_faults.json"
 
+echo "== obs (self-tracing timeline + metrics, re-ingested closed loop) =="
+python -m repro sim "$tmp/canon.chkb" --topology ring --ranks 4 \
+  --timeline "$tmp/sim_timeline.json" --metrics "$tmp/sim.prom" \
+  > "$tmp/sim_obs.out"
+grep -q makespan "$tmp/sim_obs.out"
+grep -q traceEvents "$tmp/sim_timeline.json"
+grep -q '# TYPE repro_sim' "$tmp/sim.prom"
+# the emitted Chrome trace must round-trip through our own ingest path
+python -m repro ingest "$tmp/sim_timeline.json" --format chrome \
+  -o "$tmp/sim_timeline.chkb" -q
+python -m repro analyze "$tmp/sim_timeline.chkb" -o "$tmp/sim_timeline_stats.json" -q
+grep -q AllReduce "$tmp/sim_timeline_stats.json"
+
 echo "== replay (dry-run) =="
 python -m repro replay "$tmp/canon.chkb" --mode compute --limit 8
 

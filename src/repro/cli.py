@@ -49,15 +49,36 @@ def _parse_opts(pairs: Optional[List[str]]) -> Dict[str, Any]:
     return out
 
 
-def _emit(obj: Any, path: Optional[str], compact: bool = False) -> None:
+def _emit(obj: Any, path: Optional[str], compact: bool = False,
+          quiet: bool = False) -> None:
     text = json.dumps(obj, separators=(",", ":"), default=str) if compact \
         else json.dumps(obj, indent=1, default=str)
     if path:
         with open(path, "w") as fh:
             fh.write(text + "\n")
-        print(f"wrote {path}")
+        if not quiet:
+            print(f"wrote {path}")
     else:
         print(text)
+
+
+def _obs_registry(path: Optional[str]) -> Optional[Any]:
+    """--metrics PATH -> an armed MetricsRegistry (None when unset)."""
+    if not path:
+        return None
+    from .obs import MetricsRegistry
+    reg = MetricsRegistry()
+    reg.arm_snapshots(path)
+    return reg
+
+
+def _finish_metrics(reg: Optional[Any], path: Optional[str],
+                    quiet: bool) -> None:
+    if reg is None:
+        return
+    reg.snapshot()
+    if not quiet:
+        print(f"metrics -> {path}")
 
 
 def _print_reports(pipe: Pipeline, verbose: bool) -> None:
@@ -97,7 +118,8 @@ def _cmd_capture(ns: argparse.Namespace) -> int:
         pipe = pipe.then("convert")
     path = pipe.sink("save", ns.output).run()
     _print_reports(pipe, ns.verbose)
-    print(f"captured -> {path}")
+    if not ns.quiet:
+        print(f"captured -> {path}")
     return 0
 
 
@@ -110,23 +132,31 @@ def _cmd_convert(ns: argparse.Namespace) -> int:
         pipe = pipe.then("scale_time", factor=ns.scale_time)
     path = pipe.sink("save", ns.output).run()
     _print_reports(pipe, ns.verbose)
-    print(f"converted -> {path}")
+    if not ns.quiet:
+        print(f"converted -> {path}")
     return 0
 
 
 def _cmd_feed(ns: argparse.Namespace) -> int:
     stats = (Pipeline.from_source("load", ns.input, window=ns.window)
              .sink("feed", policy=ns.policy, window=ns.window).run())
-    _emit(stats, ns.output)
+    _emit(stats, ns.output, quiet=ns.quiet)
     return 0
 
 
 def _cmd_sim(ns: argparse.Namespace) -> int:
+    reg = _obs_registry(ns.metrics)
     res = (Pipeline.from_source("load", ns.input, window=ns.window)
            .sink("sim", topology=ns.topology, ranks=ns.ranks,
                  congestion=not ns.no_congestion,
-                 fidelity=ns.fidelity, faults=ns.faults).run())
+                 fidelity=ns.fidelity, faults=ns.faults,
+                 timeline=bool(ns.timeline), metrics=reg).run())
     print(res.summary())
+    if ns.timeline:
+        res.timeline.export(ns.timeline)
+        if not ns.quiet:
+            print(f"timeline -> {ns.timeline}")
+    _finish_metrics(reg, ns.metrics, ns.quiet)
     if ns.verbose and res.link_stats:
         print(f"  [link] {json.dumps(res.link_stats, default=str)}",
               file=sys.stderr)
@@ -146,7 +176,7 @@ def _cmd_sim(ns: argparse.Namespace) -> int:
             doc["aborted"] = res.aborted
             doc["abort_reason"] = res.abort_reason
             doc["fault_stats"] = res.fault_stats
-        _emit(doc, ns.output)
+        _emit(doc, ns.output, quiet=ns.quiet)
     return 0
 
 
@@ -160,7 +190,7 @@ def _cmd_replay(ns: argparse.Namespace) -> int:
         _emit({"wall_s": rep.wall_s, "nodes_executed": rep.nodes_executed,
                "compute_nodes": rep.compute_nodes,
                "comm_nodes": rep.comm_nodes, "skipped": rep.skipped},
-              ns.output)
+              ns.output, quiet=ns.quiet)
     return 0
 
 
@@ -173,11 +203,11 @@ def _cmd_analyze(ns: argparse.Namespace) -> int:
         from .core.serialization import ChkbReader
         with ChkbReader(ns.input) as reader:
             if reader.version == 4:
-                _emit(columnar_analyze(reader), ns.output)
+                _emit(columnar_analyze(reader), ns.output, quiet=ns.quiet)
                 return 0
     stats = (Pipeline.from_source("load", ns.input, window=ns.window)
              .sink("analyze", deep=ns.deep).run())
-    _emit(stats, ns.output)
+    _emit(stats, ns.output, quiet=ns.quiet)
     return 0
 
 
@@ -237,6 +267,9 @@ def _cmd_ingest(ns: argparse.Namespace) -> int:
     if world_size is None and len(files) > 1:
         world_size = max(len(files), max(ranks) + 1)
 
+    reg = _obs_registry(ns.metrics)
+    t_ingest0 = reg.now() if reg is not None else 0.0
+    events_total = 0
     outputs: List[str] = []
     for path, rank in zip(files, ranks):
         fmt = ns.format
@@ -254,8 +287,26 @@ def _cmd_ingest(ns: argparse.Namespace) -> int:
         written = pipe.sink("save", out).run()
         _print_reports(pipe, ns.verbose)
         outputs.append(written)
-        print(f"ingested [{fmt}] {path} -> {written}")
-    if len(outputs) > 1:
+        if reg is not None:
+            seen = sum(getattr(rep, "events_seen", 0)
+                       for rep in pipe.reports.values())
+            events_total += seen
+            reg.counter("repro_ingest_files_total",
+                        "Foreign trace files ingested",
+                        labels=("format",)).inc(format=fmt)
+            reg.counter("repro_ingest_events_total",
+                        "Foreign trace events parsed").inc(seen)
+            reg.maybe_snapshot()
+        if not ns.quiet:
+            print(f"ingested [{fmt}] {path} -> {written}")
+    if reg is not None:
+        dt = reg.now() - t_ingest0
+        if dt > 0:
+            reg.gauge("repro_ingest_events_per_second",
+                      "Parse throughput over the whole ingest run"
+                      ).set(events_total / dt)
+    _finish_metrics(reg, ns.metrics, ns.quiet)
+    if len(outputs) > 1 and not ns.quiet:
         print(f"ingested {len(outputs)} rank(s) -> "
               f"{os.path.dirname(os.path.abspath(ns.output)) or '.'}")
     return 0
@@ -278,8 +329,9 @@ def _cmd_profile(ns: argparse.Namespace) -> int:
     profile = builder.finish(obfuscate=ns.obfuscate)
     if ns.output:
         profile.save(ns.output)
-        print(f"profiled {len(ns.inputs)} trace(s) -> {ns.output}")
-    else:
+        if not ns.quiet:
+            print(f"profiled {len(ns.inputs)} trace(s) -> {ns.output}")
+    elif not ns.quiet:
         print(f"profiled {len(ns.inputs)} trace(s)")
     print(profile.summary())
     if ns.sim:
@@ -336,23 +388,33 @@ def _cmd_synth(ns: argparse.Namespace) -> int:
                      scale_duration=ns.scale_duration,
                      scale_comm_bytes=ns.scale_comm_bytes,
                      stragglers=stragglers, jitter=jitter, **rest)
-    print(f"synthesized {man['total_nodes']} nodes across "
-          f"{len(man['paths'])} rank(s) (world={man['world_size']}) "
-          f"-> {man['out_dir']}")
+    if not ns.quiet:
+        print(f"synthesized {man['total_nodes']} nodes across "
+              f"{len(man['paths'])} rank(s) (world={man['world_size']}) "
+              f"-> {man['out_dir']}")
     if ns.manifest:
-        _emit(man, ns.manifest)
+        _emit(man, ns.manifest, quiet=ns.quiet)
     if ns.sim:
+        reg = _obs_registry(ns.metrics)
         res = (Pipeline.from_source("load", man["paths"][0], window=ns.window)
                .sink("sim", topology=ns.topology, ranks=len(man["paths"]),
-                     fidelity=ns.fidelity,
-                     extra_traces=man["paths"][1:]).run())
+                     fidelity=ns.fidelity, extra_traces=man["paths"][1:],
+                     timeline=bool(ns.timeline), metrics=reg).run())
         print(res.summary())
+        if ns.timeline:
+            res.timeline.export(ns.timeline)
+            if not ns.quiet:
+                print(f"timeline -> {ns.timeline}")
+        _finish_metrics(reg, ns.metrics, ns.quiet)
+    elif ns.timeline or ns.metrics:
+        raise SystemExit("synth --timeline/--metrics require --sim")
     return 0
 
 
 #: registry display order: pipeline taxonomy first, tool families after;
 #: unknown kinds (future registrations) sort alphabetically at the end
-_KIND_ORDER = ("source", "pass", "sink", "benchmark", "experiment")
+_KIND_ORDER = ("source", "pass", "sink", "benchmark", "experiment",
+               "observe")
 
 
 def _cmd_stages(ns: argparse.Namespace) -> int:
@@ -410,23 +472,35 @@ def _cmd_explore(ns: argparse.Namespace) -> int:
         sys.stdout.buffer.write(spec.expansion_json() + b"\n")
         return 0
     jobs = ns.jobs if ns.jobs > 0 else (os.cpu_count() or 1)
+    reg = _obs_registry(ns.metrics)
     res = run_sweep(spec, jobs=jobs, cache_dir=ns.cache_dir,
-                    timeout_s=ns.timeout_s, max_retries=ns.retries)
+                    timeout_s=ns.timeout_s, max_retries=ns.retries,
+                    heartbeat_s=None if ns.quiet else ns.heartbeat_s,
+                    metrics=reg)
     print(res.summary())
+    _finish_metrics(reg, ns.metrics, ns.quiet)
     if ns.results:
-        print(f"results -> {res.save_results(ns.results)}")
+        saved = res.save_results(ns.results)
+        if not ns.quiet:
+            print(f"results -> {saved}")
     doc = build_report(res)
-    for name, w in doc["workloads"].items():
-        best = w["best"]
-        if best:
-            print(f"  {name}: best {best['topology']}x{best['world_size']}"
-                  f"@{best['fidelity']} makespan="
-                  f"{best['makespan_s'] * 1e3:.3f}ms "
-                  f"(pareto {len(w['pareto'])}/{w['runs']})")
+    if not ns.quiet:
+        for name, w in doc["workloads"].items():
+            best = w["best"]
+            if best:
+                print(f"  {name}: best "
+                      f"{best['topology']}x{best['world_size']}"
+                      f"@{best['fidelity']} makespan="
+                      f"{best['makespan_s'] * 1e3:.3f}ms "
+                      f"(pareto {len(w['pareto'])}/{w['runs']})")
     if ns.report:
-        print(f"report -> {save_markdown(doc, ns.report)}")
+        saved = save_markdown(doc, ns.report)
+        if not ns.quiet:
+            print(f"report -> {saved}")
     if ns.json_out:
-        print(f"report json -> {save_report_json(doc, ns.json_out)}")
+        saved = save_report_json(doc, ns.json_out)
+        if not ns.quiet:
+            print(f"report json -> {saved}")
     if not ns.report and not ns.json_out and ns.verbose:
         sys.stdout.write(render_markdown(doc))
     if res.failed:
@@ -458,6 +532,8 @@ def build_parser() -> argparse.ArgumentParser:
         p.add_argument("--window", type=int, default=1024,
                        help="streaming window size (nodes)")
         p.add_argument("-v", "--verbose", action="store_true")
+        p.add_argument("-q", "--quiet", action="store_true",
+                       help="suppress progress chatter (results still print)")
 
     p = sub.add_parser("capture", help="collect a trace (model or generator)")
     p.add_argument("--model", help="architecture config name")
@@ -503,6 +579,13 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--faults", metavar="PLAN_JSON",
                    help="fault-plan JSON file (repro.faults schema): "
                         "seeded slowdowns, crashes, link degradation")
+    p.add_argument("--timeline", metavar="PATH",
+                   help="export the simulator's own execution timeline: "
+                        "Chrome-trace JSON (.json, Perfetto-loadable) or "
+                        "CHKB (.chkb, re-ingestable)")
+    p.add_argument("--metrics", metavar="PATH",
+                   help="write Prometheus text-format metrics here "
+                        "(atomic .prom snapshots during + after the run)")
     p.add_argument("-o", "--output")
     p.set_defaults(fn=_cmd_sim)
 
@@ -543,8 +626,13 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("-o", "--output", required=True,
                    help="output trace; multi-file input writes one "
                         "OUT.rankNNNNN.chkb per rank")
+    p.add_argument("--metrics", metavar="PATH",
+                   help="write Prometheus text-format ingest metrics here "
+                        "(files/events parsed, parse throughput)")
     p.add_argument("--window", type=int, default=1024)
     p.add_argument("-v", "--verbose", action="store_true")
+    p.add_argument("-q", "--quiet", action="store_true",
+                   help="suppress per-file progress chatter")
     p.set_defaults(fn=_cmd_ingest)
 
     p = sub.add_parser("profile",
@@ -563,6 +651,8 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--topology", default="switch")
     p.add_argument("--window", type=int, default=1024)
     p.add_argument("-v", "--verbose", action="store_true")
+    p.add_argument("-q", "--quiet", action="store_true",
+                   help="suppress progress chatter")
     p.set_defaults(fn=_cmd_profile)
 
     p = sub.add_parser("synth",
@@ -591,8 +681,15 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--fidelity", default="analytic",
                    choices=("analytic", "link"),
                    help="network model for --sim (analytic | link)")
+    p.add_argument("--timeline", metavar="PATH",
+                   help="with --sim: export the simulator's own timeline "
+                        "(Chrome-trace .json or re-ingestable .chkb)")
+    p.add_argument("--metrics", metavar="PATH",
+                   help="with --sim: write Prometheus text-format metrics")
     p.add_argument("--manifest", help="write the synthesis manifest JSON here")
     p.add_argument("--window", type=int, default=1024)
+    p.add_argument("-q", "--quiet", action="store_true",
+                   help="suppress progress chatter")
     p.set_defaults(fn=_cmd_synth)
 
     p = sub.add_parser("stages", help="list the stage registry")
@@ -643,8 +740,16 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--strict", action="store_true",
                    help="exit non-zero when any run aborts on a modeled "
                         "fault (default: aborts are reported, not fatal)")
+    p.add_argument("--heartbeat-s", type=float, default=None,
+                   help="print a one-line progress report to stderr on "
+                        "this cadence (off by default)")
+    p.add_argument("--metrics", metavar="PATH",
+                   help="write Prometheus text-format sweep metrics here "
+                        "(runs by outcome, retries, queue depth)")
     p.add_argument("-v", "--verbose", action="store_true",
                    help="print the markdown report to stdout")
+    p.add_argument("-q", "--quiet", action="store_true",
+                   help="suppress heartbeat and progress chatter")
     p.set_defaults(fn=_cmd_explore)
 
     return ap

@@ -208,8 +208,12 @@ class LinkLoad:
     def top(self, k: int = 8, wall_s: float = 0.0) -> List[Dict[str, float]]:
         util = self.utilization(wall_s) if wall_s > 0 else {}
         rows = []
+        # ties sorted by link id: equal-byte links (every link of a
+        # symmetric ring) otherwise surface in dict-insertion order, which
+        # varies with rendezvous interleaving — reports and golden fixtures
+        # must be byte-stable
         for idx, b in sorted(self.bytes_by_link.items(),
-                             key=lambda kv: -kv[1])[:k]:
+                             key=lambda kv: (-kv[1], kv[0]))[:k]:
             link = self.routes.graph.links[idx]
             row = {"src": link.src, "dst": link.dst, "name": link.name,
                    "bytes": b}

@@ -20,6 +20,7 @@ from __future__ import annotations
 import json
 import os
 import signal
+import sys
 import tempfile
 import time
 import warnings
@@ -381,12 +382,57 @@ def _retry_backoff_s(spec_seed: int, run_hash: str, attempt: int,
     return base_s * (2.0 ** (attempt - 1)) * (0.5 + u)
 
 
+class _Heartbeat:
+    """One-line stderr progress for long sweeps (``--heartbeat-s``; off by
+    default, silenced by ``--quiet``).  ETA comes from the observed
+    completion rate, cached rows included — a mostly-cached replay converges
+    to "done in 0s" immediately instead of extrapolating cold-run cost."""
+
+    def __init__(self, name: str, total: int, interval_s: float,
+                 stream: Optional[Any] = None, clock=time.monotonic) -> None:
+        self.name = name
+        self.total = total
+        self.interval_s = max(0.0, float(interval_s))
+        self.stream = stream if stream is not None else sys.stderr
+        self.clock = clock
+        self.t0 = clock()
+        self.last = self.t0
+        self.done = self.cached = self.failed = self.aborted = 0
+
+    def note(self, row: Dict[str, Any]) -> None:
+        self.done += 1
+        if row.get("cached"):
+            self.cached += 1
+        elif row.get("aborted"):
+            self.aborted += 1
+        elif not row.get("ok"):
+            self.failed += 1
+        self.maybe_beat()
+
+    def maybe_beat(self, force: bool = False) -> None:
+        now = self.clock()
+        if not force and now - self.last < self.interval_s:
+            return
+        self.last = now
+        elapsed = max(now - self.t0, 1e-9)
+        rate = self.done / elapsed
+        remaining = self.total - self.done
+        eta = f"{remaining / rate:.0f}s" if remaining and rate > 0 else "0s"
+        print(f"explore[{self.name}]: {self.done}/{self.total} done "
+              f"({self.cached} cached, {self.failed} failed, "
+              f"{self.aborted} aborted) {rate:.1f}/s ETA {eta}",
+              file=self.stream, flush=True)
+
+
 def run_sweep(spec: Any, jobs: int = 1, cache_dir: Optional[str] = None,
               configs: Optional[Sequence[RunConfig]] = None,
               progress: Optional[Any] = None,
               timeout_s: Optional[float] = None,
               max_retries: int = 2,
-              retry_backoff_s: float = 0.25) -> SweepResult:
+              retry_backoff_s: float = 0.25,
+              heartbeat_s: Optional[float] = None,
+              heartbeat_stream: Optional[Any] = None,
+              metrics: Optional[Any] = None) -> SweepResult:
     """Expand (unless ``configs`` is given) and execute the sweep.
 
     Cache hits are resolved in the parent before any worker spawns, so a
@@ -404,6 +450,12 @@ def run_sweep(spec: Any, jobs: int = 1, cache_dir: Optional[str] = None,
     hung worker cannot be cancelled individually — and innocents requeued
     without burning their retry budget).  Serial execution ignores
     ``timeout_s`` (there is no pool to kill).
+
+    Observability: ``heartbeat_s`` enables a one-line progress report on
+    that cadence (to ``heartbeat_stream``, default stderr); ``metrics``
+    (a :class:`repro.obs.MetricsRegistry`) counts runs by outcome plus
+    retries/requeues/pool rebuilds/timeouts and gauges queue depth.  Both
+    default off and sit behind ``is not None`` checks.
     """
     spec = as_spec(spec)
     t0 = time.perf_counter()
@@ -412,12 +464,39 @@ def run_sweep(spec: Any, jobs: int = 1, cache_dir: Optional[str] = None,
     rows: Dict[int, Dict[str, Any]] = {}
     misses: List[int] = []
     stats = {"retries": 0, "requeues": 0, "pool_rebuilds": 0, "timeouts": 0}
+    hb = (_Heartbeat(spec.name, len(cfgs), heartbeat_s, heartbeat_stream)
+          if heartbeat_s else None)
+    m_runs = m_queue = None
+    if metrics is not None:
+        m_runs = metrics.counter("repro_explore_runs_total",
+                                 "Sweep runs by outcome",
+                                 labels=("status",))
+        m_queue = metrics.gauge("repro_explore_queue_depth",
+                                "Configs still queued or in flight")
+        m_queue.set(float(len(cfgs)))
+
+    def note(row: Dict[str, Any]) -> None:
+        if m_runs is not None:
+            if row.get("cached"):
+                status = "cached"
+            elif row.get("aborted"):
+                status = "aborted"
+            elif not row.get("ok"):
+                status = "failed"
+            else:
+                status = "ok"
+            m_runs.inc(status=status)
+            metrics.maybe_snapshot()
+        if hb is not None:
+            hb.note(row)
+
     for i, cfg in enumerate(cfgs):
         hit = cache.get(cfg.run_hash) if cache else None
         if hit is not None:
             rows[i] = hit
             if progress:
                 progress(hit)
+            note(hit)
         else:
             misses.append(i)
 
@@ -433,14 +512,40 @@ def run_sweep(spec: Any, jobs: int = 1, cache_dir: Optional[str] = None,
             cache.put(row)
         if progress:
             progress(row)
+        note(row)
+
+    def tick(depth: int) -> None:
+        if m_queue is not None:
+            m_queue.set(float(depth))
+            metrics.maybe_snapshot()
+        if hb is not None:
+            hb.maybe_beat()
 
     if misses and jobs > 1:
         _pool_sweep(spec, cfgs, misses, finish, jobs, stats,
                     timeout_s=timeout_s, max_retries=max_retries,
-                    backoff_base_s=retry_backoff_s)
+                    backoff_base_s=retry_backoff_s, tick=tick)
     else:
-        for i in misses:
+        for k, i in enumerate(misses):
             finish(i, _worker(cfgs[i].to_dict()))
+            tick(len(misses) - k - 1)
+
+    if metrics is not None:
+        metrics.counter("repro_explore_retries_total",
+                        "Run retries after worker death or timeout"
+                        ).inc(stats["retries"])
+        metrics.counter("repro_explore_requeues_total",
+                        "Innocent in-flight runs requeued on pool teardown"
+                        ).inc(stats["requeues"])
+        metrics.counter("repro_explore_pool_rebuilds_total",
+                        "Worker-pool rebuilds").inc(stats["pool_rebuilds"])
+        metrics.counter("repro_explore_timeouts_total",
+                        "Per-run wall-time timeouts").inc(stats["timeouts"])
+        if m_queue is not None:
+            m_queue.set(0.0)
+        metrics.maybe_snapshot()
+    if hb is not None:
+        hb.maybe_beat(force=True)
 
     ordered = [rows[i] for i in range(len(cfgs))]
     return SweepResult(
@@ -459,7 +564,8 @@ def run_sweep(spec: Any, jobs: int = 1, cache_dir: Optional[str] = None,
 def _pool_sweep(spec: ExperimentSpec, cfgs: List[RunConfig],
                 misses: List[int], finish, jobs: int,
                 stats: Dict[str, int], timeout_s: Optional[float],
-                max_retries: int, backoff_base_s: float) -> None:
+                max_retries: int, backoff_base_s: float,
+                tick: Optional[Any] = None) -> None:
     """Process-pool execution with worker-death and timeout recovery."""
     import multiprocessing
     from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
@@ -526,6 +632,8 @@ def _pool_sweep(spec: ExperimentSpec, cfgs: List[RunConfig],
 
     try:
         while queue or inflight:
+            if tick is not None:
+                tick(len(queue) + len(inflight))
             now = time.monotonic()
             # submit every entry whose backoff window has passed
             next_eligible = float("inf")

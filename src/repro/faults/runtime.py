@@ -23,7 +23,7 @@ engine can depend on this module without a cycle.
 from __future__ import annotations
 
 from bisect import bisect_right
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 from .plan import FaultPlan
 
@@ -215,6 +215,33 @@ class FaultRuntime:
     def dead_forever_ranks(self) -> List[int]:
         return sorted(r for r, iv in self._dead.items()
                       if any(t1 == _INF for _, t1 in iv))
+
+    # ----------------------------------------------------------------- obs
+    def timeline_events(self) -> List[Tuple[str, Any, float, float, str]]:
+        """Normalized plan windows for the self-tracing timeline:
+        ``(target_kind, target, t0, t1, label)`` rows, where ``target_kind``
+        is ``"rank"`` (target = rank id) or ``"link"`` (target = the plan's
+        link selector string).  ``t1`` is ``inf`` for a crash that never
+        restarts (the recorder clamps to the makespan at export)."""
+        out: List[Tuple[str, Any, float, float, str]] = []
+        for ev in self.plan.events:
+            if ev.kind == "rank_slowdown":
+                out.append(("rank", int(ev.rank), float(ev.t0), float(ev.t1),
+                            f"slowdown x{float(ev.factor):g}"))
+            elif ev.kind == "rank_crash":
+                t0 = float(ev.t)
+                t1 = (_INF if ev.restart_after is None
+                      else t0 + float(ev.restart_after))
+                label = "crash" if ev.restart_after is not None \
+                    else "crash (no restart)"
+                out.append(("rank", int(ev.rank), t0, t1, label))
+            elif ev.kind == "link_degrade":
+                out.append(("link", str(ev.link), float(ev.t0),
+                            float(ev.t1), f"degrade x{float(ev.factor):g}"))
+            else:           # link_down
+                out.append(("link", str(ev.link), float(ev.t0),
+                            float(ev.t1), "down"))
+        return out
 
     # --------------------------------------------------------------- links
     def link_schedule(self, graph

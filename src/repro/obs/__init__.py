@@ -1,0 +1,32 @@
+"""repro.obs — self-tracing telemetry for the whole loop.
+
+The observability layer (ISSUE 8 / the ROADMAP's "stream run progress as
+Prometheus-style metrics" service groundwork): every subsystem can emit its
+own execution trace and metrics, in the formats this repo already
+standardizes.
+
+* :mod:`.timeline` — :class:`TimelineRecorder`: the sim engine's own
+  execution timeline (per-rank compute, collective phases, rendezvous
+  stalls, link busy windows, fault events), exported as Chrome-trace JSON
+  (Perfetto-viewable) and as a CHKB Chakra ET via the repo's own ingest
+  parser — a free round-trip validator.
+* :mod:`.metrics` — stdlib-only Prometheus counters/gauges/histograms with
+  text exposition and atomic ``.prom`` snapshots.
+* :mod:`.stages` — the ``obs.export`` registry stage.
+
+Both hooks are ``None`` by default on :class:`~repro.sim.engine.SimConfig`;
+instrumentation sits behind ``is not None`` checks (the ``faults`` pattern),
+so the uninstrumented hot path stays bit-identical.
+"""
+from __future__ import annotations
+
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      escape_label_value)
+from .timeline import (TID_COLLECTIVE, TID_COMPUTE, TID_FAULT, TID_STALL,
+                       TimelineRecorder)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "TimelineRecorder",
+    "TID_COMPUTE", "TID_COLLECTIVE", "TID_STALL", "TID_FAULT",
+    "escape_label_value",
+]

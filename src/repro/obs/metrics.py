@@ -1,0 +1,311 @@
+"""Stdlib-only Prometheus-style metrics for the whole loop.
+
+The ROADMAP's "Live benchmark service" item needs run progress streamed as
+Prometheus-style metrics; this module is the in-process half of that:
+:class:`Counter` / :class:`Gauge` / :class:`Histogram` instruments hang off a
+:class:`MetricsRegistry`, and the registry renders the standard `text
+exposition format`_ (``# HELP`` / ``# TYPE`` lines, label escaping,
+cumulative histogram buckets) that any Prometheus scraper ingests verbatim.
+
+Design constraints, in order:
+
+* **Off the hot path.** Instruments are plain dict updates; the engine and
+  sweep runner only touch them behind ``if metrics is not None`` checks, so
+  an uninstrumented run does zero extra work.
+* **Deterministic output.** Families render sorted by metric name and
+  samples sorted by label values, so the exposition text is byte-stable for
+  golden tests, and the registry takes an injected ``clock`` so snapshot
+  cadence is testable without sleeping.
+* **Atomic snapshots.** ``arm_snapshots(path, interval_s)`` makes
+  ``maybe_snapshot()`` (called opportunistically from long-running loops)
+  write the ``.prom`` file via tmp-file + ``os.replace``, so a scraper
+  tailing the file never sees a torn write.
+
+.. _text exposition format:
+   https://prometheus.io/docs/instrumenting/exposition_formats/
+"""
+from __future__ import annotations
+
+import math
+import os
+import tempfile
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "escape_label_value"]
+
+#: default histogram buckets — latency-flavored (seconds), same spirit as
+#: prometheus client defaults
+DEFAULT_BUCKETS = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25,
+                   0.5, 1.0, 2.5, 5.0, 10.0)
+
+_INF = float("inf")
+
+
+def escape_label_value(value: Any) -> str:
+    """Escape a label value per the exposition spec: backslash, double
+    quote, and newline."""
+    return (str(value).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
+def _escape_help(text: str) -> str:
+    return text.replace("\\", "\\\\").replace("\n", "\\n")
+
+
+def _fmt(value: float) -> str:
+    """Render a sample value: integers without the trailing ``.0``,
+    non-finite values in Prometheus spelling."""
+    if value == _INF:
+        return "+Inf"
+    if value == -_INF:
+        return "-Inf"
+    if value != value:        # NaN
+        return "NaN"
+    f = float(value)
+    if f.is_integer() and abs(f) < 1e15:
+        return str(int(f))
+    return repr(f)
+
+
+class _Metric:
+    """Shared labeled-sample plumbing for all three instrument kinds."""
+
+    kind = "untyped"
+
+    def __init__(self, name: str, help: str = "",
+                 labels: Tuple[str, ...] = ()) -> None:
+        self.name = name
+        self.help = help
+        self.label_names = tuple(labels)
+        # label-values tuple -> sample state (float, or histogram state)
+        self._samples: Dict[Tuple[str, ...], Any] = {}
+
+    def _key(self, labels: Dict[str, Any]) -> Tuple[str, ...]:
+        if not self.label_names:
+            if labels:
+                raise ValueError(
+                    f"metric {self.name!r} takes no labels, got "
+                    f"{sorted(labels)}")
+            return ()
+        try:
+            return tuple(str(labels[n]) for n in self.label_names)
+        except KeyError as exc:
+            raise ValueError(
+                f"metric {self.name!r} requires labels "
+                f"{list(self.label_names)}, got {sorted(labels)}") from exc
+
+    def _render_labels(self, key: Tuple[str, ...],
+                       extra: Tuple[Tuple[str, str], ...] = ()) -> str:
+        pairs = [(n, v) for n, v in zip(self.label_names, key)]
+        pairs.extend(extra)
+        if not pairs:
+            return ""
+        inner = ",".join(f'{n}="{escape_label_value(v)}"' for n, v in pairs)
+        return "{" + inner + "}"
+
+    def samples(self) -> Iterator[Tuple[str, str, float]]:
+        """Yield ``(name_suffix, rendered_labels, value)`` rows, sorted by
+        label values so the exposition is byte-stable."""
+        raise NotImplementedError
+
+
+class Counter(_Metric):
+    """Monotonically increasing count (``repro_*_total`` by convention)."""
+
+    kind = "counter"
+
+    def inc(self, amount: float = 1.0, **labels: Any) -> None:
+        if amount < 0:
+            raise ValueError(f"counter {self.name!r} cannot decrease "
+                             f"(inc by {amount})")
+        key = self._key(labels)
+        self._samples[key] = self._samples.get(key, 0.0) + amount
+
+    def value(self, **labels: Any) -> float:
+        return float(self._samples.get(self._key(labels), 0.0))
+
+    def samples(self) -> Iterator[Tuple[str, str, float]]:
+        for key in sorted(self._samples):
+            yield "", self._render_labels(key), self._samples[key]
+
+
+class Gauge(_Metric):
+    """A value that goes up and down (queue depth, heap size)."""
+
+    kind = "gauge"
+
+    def set(self, value: float, **labels: Any) -> None:
+        self._samples[self._key(labels)] = float(value)
+
+    def inc(self, amount: float = 1.0, **labels: Any) -> None:
+        key = self._key(labels)
+        self._samples[key] = self._samples.get(key, 0.0) + amount
+
+    def dec(self, amount: float = 1.0, **labels: Any) -> None:
+        self.inc(-amount, **labels)
+
+    def value(self, **labels: Any) -> float:
+        return float(self._samples.get(self._key(labels), 0.0))
+
+    def samples(self) -> Iterator[Tuple[str, str, float]]:
+        for key in sorted(self._samples):
+            yield "", self._render_labels(key), self._samples[key]
+
+
+class Histogram(_Metric):
+    """Cumulative-bucket histogram (``_bucket``/``_sum``/``_count``)."""
+
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = "",
+                 labels: Tuple[str, ...] = (),
+                 buckets: Tuple[float, ...] = DEFAULT_BUCKETS) -> None:
+        super().__init__(name, help, labels)
+        bs = tuple(sorted(float(b) for b in buckets))
+        if not bs or any(math.isnan(b) for b in bs):
+            raise ValueError(f"histogram {self.name!r}: bad buckets {buckets}")
+        if bs and bs[-1] == _INF:
+            bs = bs[:-1]          # +Inf bucket is implicit
+        self.buckets = bs
+
+    def observe(self, value: float, **labels: Any) -> None:
+        key = self._key(labels)
+        state = self._samples.get(key)
+        if state is None:
+            # [per-bucket counts..., +Inf count, sum]
+            state = self._samples[key] = [0] * (len(self.buckets) + 1) + [0.0]
+        v = float(value)
+        for i, b in enumerate(self.buckets):
+            if v <= b:
+                state[i] += 1
+                break
+        else:
+            state[len(self.buckets)] += 1
+        state[-1] += v
+
+    def samples(self) -> Iterator[Tuple[str, str, float]]:
+        nb = len(self.buckets)
+        for key in sorted(self._samples):
+            state = self._samples[key]
+            cum = 0
+            for i, b in enumerate(self.buckets):
+                cum += state[i]
+                yield ("_bucket",
+                       self._render_labels(key, (("le", _fmt(b)),)), cum)
+            cum += state[nb]
+            yield "_bucket", self._render_labels(key, (("le", "+Inf"),)), cum
+            yield "_sum", self._render_labels(key), state[-1]
+            yield "_count", self._render_labels(key), cum
+
+
+class MetricsRegistry:
+    """Registry of instruments + text exposition + atomic ``.prom`` snapshots.
+
+    ``clock`` is injected (defaults to ``time.monotonic``) so the snapshot
+    cadence — the only wall-clock-dependent behavior — is deterministic
+    under test; nothing else in the registry reads time, so instrumented
+    runs stay reproducible.
+    """
+
+    def __init__(self, clock: Callable[[], float] = time.monotonic) -> None:
+        self._metrics: Dict[str, _Metric] = {}
+        self._clock = clock
+        self._snap_path: Optional[str] = None
+        self._snap_interval = 0.0
+        self._last_snap = -_INF
+
+    def now(self) -> float:
+        """The registry's (injected) clock — rate instrumentation reads
+        time through here so tests stay deterministic."""
+        return self._clock()
+
+    # ------------------------------------------------------------ factories
+    def _get(self, cls: type, name: str, help: str,
+             labels: Tuple[str, ...], **kw: Any) -> Any:
+        m = self._metrics.get(name)
+        if m is not None:
+            # idempotent re-registration: the engine and the sweep runner
+            # may instrument the same shared registry repeatedly
+            if not isinstance(m, cls) or m.label_names != tuple(labels):
+                raise ValueError(
+                    f"metric {name!r} already registered as {m.kind} with "
+                    f"labels {list(m.label_names)}")
+            return m
+        m = cls(name, help, tuple(labels), **kw)
+        self._metrics[name] = m
+        return m
+
+    def counter(self, name: str, help: str = "",
+                labels: Tuple[str, ...] = ()) -> Counter:
+        return self._get(Counter, name, help, labels)
+
+    def gauge(self, name: str, help: str = "",
+              labels: Tuple[str, ...] = ()) -> Gauge:
+        return self._get(Gauge, name, help, labels)
+
+    def histogram(self, name: str, help: str = "",
+                  labels: Tuple[str, ...] = (),
+                  buckets: Tuple[float, ...] = DEFAULT_BUCKETS) -> Histogram:
+        return self._get(Histogram, name, help, labels, buckets=buckets)
+
+    def get(self, name: str) -> Optional[_Metric]:
+        return self._metrics.get(name)
+
+    # ----------------------------------------------------------- exposition
+    def expose(self) -> str:
+        """Render the whole registry in Prometheus text format 0.0.4."""
+        out: List[str] = []
+        for name in sorted(self._metrics):
+            m = self._metrics[name]
+            if m.help:
+                out.append(f"# HELP {name} {_escape_help(m.help)}")
+            out.append(f"# TYPE {name} {m.kind}")
+            for suffix, rendered, value in m.samples():
+                out.append(f"{name}{suffix}{rendered} {_fmt(value)}")
+        return "\n".join(out) + ("\n" if out else "")
+
+    def write(self, path: str) -> str:
+        """Atomically write the exposition to ``path`` (tmp + rename)."""
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, prefix=".prom-", suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w", encoding="utf-8") as fh:
+                fh.write(self.expose())
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        return path
+
+    # ------------------------------------------------------------ snapshots
+    def arm_snapshots(self, path: str, interval_s: float = 5.0) -> None:
+        """Make :meth:`maybe_snapshot` write ``path`` every ``interval_s``
+        (wall clock).  The first ``maybe_snapshot()`` writes immediately."""
+        self._snap_path = path
+        self._snap_interval = max(0.0, float(interval_s))
+        self._last_snap = -_INF
+
+    def maybe_snapshot(self) -> bool:
+        """Write the armed ``.prom`` file if the cadence elapsed; cheap
+        no-op otherwise.  Safe to call from inner loops."""
+        if self._snap_path is None:
+            return False
+        now = self._clock()
+        if now - self._last_snap < self._snap_interval:
+            return False
+        self._last_snap = now
+        self.write(self._snap_path)
+        return True
+
+    def snapshot(self) -> Optional[str]:
+        """Unconditional end-of-run snapshot (if armed)."""
+        if self._snap_path is None:
+            return None
+        self._last_snap = self._clock()
+        return self.write(self._snap_path)

@@ -1,0 +1,23 @@
+"""Pipeline-registry wiring for the observability layer.
+
+* ``obs.export`` (kind="observe") — export a :class:`TimelineRecorder` (or a
+  :class:`~repro.sim.engine.SimResult` carrying one on ``.timeline``) to a
+  path: Chrome-trace JSON by default, a CHKB Chakra ET for ``.chkb`` paths.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from ..pipeline.registry import register_stage
+
+
+@register_stage("obs.export", kind="observe")
+def obs_export(timeline: Any, path: str) -> str:
+    """Export a recorded sim timeline to Chrome JSON or CHKB by suffix."""
+    rec = getattr(timeline, "timeline", timeline)
+    if rec is None or not hasattr(rec, "export"):
+        raise ValueError(
+            "obs.export needs a TimelineRecorder (or a SimResult from a "
+            "run with SimConfig.timeline set); got "
+            f"{type(timeline).__name__}")
+    return rec.export(path)

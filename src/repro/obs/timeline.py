@@ -1,0 +1,285 @@
+"""Self-tracing: the simulator emits its own execution timeline.
+
+Chakra's thesis is that standardized execution traces are the observation
+layer for AI systems — so the simulator should be observable in exactly the
+formats it standardizes.  :class:`TimelineRecorder` is threaded through
+``SimConfig.timeline`` (``None`` by default, mirroring the ``fault_plan``
+pattern: every engine call site sits behind an ``if rec is not None`` check,
+so the uninstrumented hot path stays bit-identical) and records
+
+* per-rank **compute intervals** (one Chrome pid per rank, lane 0),
+* **collective occupancy** per member rank (lane 1), with algorithm/phase
+  sub-spans from :func:`repro.sim.collectives.describe_phases` in link
+  fidelity,
+* **rendezvous stalls** — early arrival to collective start (lane 2),
+* **fault windows** from the fault plan plus engine fault marks
+  (timeouts/shrinks/rejoins, lane 3),
+* **link busy windows** from :class:`~repro.sim.netmodel.LinkModel` on a
+  synthetic ``fabric`` process (one lane per link),
+* **flow arrows** for the cross-rank dependency each rendezvous creates:
+  releaser rank -> every waiting member, anchored at the collective start.
+
+Exports: Chrome-trace JSON (loads in Perfetto / ``chrome://tracing``) and a
+CHKB Chakra ET.  The CHKB path is deliberately *dogfood*: the recorder's own
+Chrome JSON is fed back through :func:`repro.ingest.parse_chrome_trace` +
+``standardize_chrome`` — a free round-trip validator for the ingest
+subsystem (collective spans carry the ``Collective name`` / ``bytes`` /
+``Process Group Ranks`` args the standardizer recovers comm semantics from).
+
+Timestamps are recorded in simulated seconds and rendered as Chrome
+microseconds at export; nothing here reads the wall clock, so instrumented
+runs stay deterministic.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = ["TimelineRecorder", "TID_COMPUTE", "TID_COLLECTIVE", "TID_STALL",
+           "TID_FAULT"]
+
+# per-rank lanes (Chrome tid within the rank's pid)
+TID_COMPUTE = 0
+TID_COLLECTIVE = 1
+TID_STALL = 2
+TID_FAULT = 3
+_TID_NAMES = {TID_COMPUTE: "compute", TID_COLLECTIVE: "collectives",
+              TID_STALL: "rendezvous", TID_FAULT: "faults"}
+#: fabric-process lane 0 carries link fault windows; link lanes start at 1
+_FABRIC_FAULT_TID = 0
+
+#: engine kind name -> canonical ``Collective name`` arg accepted by
+#: ``ingest.correlate.classify_comm`` (P2P/CollPermute fall back to the
+#: name-pattern channel: "P2P" has no canonical arg spelling)
+_COLL_ARG = {
+    "AllReduce": "allreduce",
+    "AllGather": "all_gather",
+    "ReduceScatter": "reduce_scatter",
+    "All2All": "all_to_all",
+    "Broadcast": "broadcast",
+    "Barrier": "barrier",
+}
+
+_INF = float("inf")
+
+
+def _us(t_s: float) -> float:
+    """Simulated seconds -> Chrome microseconds, ns-rounded so the float
+    survives JSON round-trips byte-identically."""
+    return round(t_s * 1e6, 3)
+
+
+class TimelineRecorder:
+    """Accumulates engine intervals; exports Chrome JSON and CHKB.
+
+    ``max_events`` bounds memory on pathological runs; overflow increments
+    ``dropped`` (surfaced in :meth:`stats` — no silent truncation).
+    """
+
+    def __init__(self, max_events: int = 1_000_000) -> None:
+        self.max_events = int(max_events)
+        # (pid, tid, start_s, dur_s, name, args-or-None)
+        self._spans: List[Tuple[int, int, float, float, str,
+                                Optional[Dict[str, Any]]]] = []
+        # (src_pid, dst_pid, ts_s): rendezvous release arrows, both anchors
+        # on the collective lane at the collective start
+        self._flows: List[Tuple[int, int, float]] = []
+        self.dropped = 0
+        self.n_ranks = 0
+        self._link_names: List[str] = []
+        self._end_s = 0.0          # clamp for open-ended fault windows
+
+    # ------------------------------------------------------- engine hooks
+    def begin(self, n_ranks: int, fabric: Any = None) -> None:
+        self.n_ranks = int(n_ranks)
+        graph = getattr(fabric, "graph", None)
+        links = getattr(graph, "links", None)
+        if links:
+            self._link_names = [
+                f"{lk.src}->{lk.dst}" if not getattr(lk, "name", "")
+                else str(lk.name) for lk in links]
+
+    def _span(self, pid: int, tid: int, start: float, dur: float, name: str,
+              args: Optional[Dict[str, Any]] = None) -> None:
+        if len(self._spans) >= self.max_events:
+            self.dropped += 1
+            return
+        self._spans.append((pid, tid, start, dur, name, args))
+
+    def compute(self, rank: int, start: float, end: float, name: str) -> None:
+        self._span(rank, TID_COMPUTE, start, end - start, name)
+
+    def collective(self, kindname: str,
+                   members: Dict[int, Tuple[int, float]], start: float,
+                   end: float, payload_bytes: float,
+                   ranks: Optional[Sequence[int]], throttle: float = 1.0,
+                   phases: Optional[Sequence[Tuple[str, float]]] = None
+                   ) -> None:
+        """One rendezvoused collective: a span per member rank, stall spans
+        for early arrivals, flow arrows from the releasing (last) rank, and
+        optional algorithm phase sub-spans on the lowest member."""
+        args: Dict[str, Any] = {"bytes": int(payload_bytes)}
+        coll_arg = _COLL_ARG.get(kindname)
+        if coll_arg is not None:
+            args["Collective name"] = coll_arg
+        if ranks:
+            args["Process Group Ranks"] = [int(r) for r in ranks]
+        if throttle != 1.0:
+            args["throttle"] = round(throttle, 4)
+        # the releaser is the last arriver (ties: lowest rank) — its arrival
+        # is what lets every earlier-arrived member proceed
+        releaser = min(r for r, (_, at) in members.items() if at >= start)
+        for r in sorted(members):
+            _, arrive = members[r]
+            self._span(r, TID_COLLECTIVE, start, end - start, kindname, args)
+            if arrive < start:
+                self._span(r, TID_STALL, arrive, start - arrive,
+                           f"wait:{kindname}")
+            if r != releaser and len(self._flows) < self.max_events:
+                self._flows.append((releaser, r, start))
+        if phases:
+            lead = min(members)
+            cursor = start
+            for label, dur in phases:
+                self._span(lead, TID_COLLECTIVE, cursor, dur,
+                           f"{kindname}/{label}")
+                cursor += dur
+
+    def mark(self, rank: int, t: float, name: str) -> None:
+        """Zero-duration fault event on a rank's fault lane (timeout,
+        communicator shrink, late rejoin)."""
+        self._span(rank, TID_FAULT, t, 0.0, name)
+
+    def link_window(self, link_idx: int, start: float, end: float,
+                    nbytes: float) -> None:
+        if link_idx < len(self._link_names):
+            name = self._link_names[link_idx]
+        else:
+            name = f"link{link_idx}"
+        self._span(self.n_ranks, 1 + link_idx, start, end - start, name,
+                   {"bytes": int(nbytes)})
+
+    def record_fault_plan(self, fault: Any) -> None:
+        """Draw the fault plan's windows (rank slowdowns/crashes, link
+        faults) from :meth:`repro.faults.FaultRuntime.timeline_events`."""
+        for target_kind, target, t0, t1, label in fault.timeline_events():
+            if target_kind == "rank":
+                self._span(int(target), TID_FAULT, t0, t1 - t0,
+                           f"fault:{label}")
+            else:
+                self._span(self.n_ranks, _FABRIC_FAULT_TID, t0, t1 - t0,
+                           f"fault:{label} [{target}]")
+
+    def finish(self, makespan_s: float) -> None:
+        self._end_s = max(self._end_s, float(makespan_s))
+
+    # ------------------------------------------------------------- queries
+    @property
+    def n_spans(self) -> int:
+        return len(self._spans)
+
+    @property
+    def n_flows(self) -> int:
+        return len(self._flows)
+
+    def stats(self) -> Dict[str, int]:
+        return {"spans": len(self._spans), "flows": len(self._flows),
+                "dropped": self.dropped, "ranks": self.n_ranks}
+
+    def top_sinks(self, k: int = 5) -> List[Dict[str, Any]]:
+        """Aggregate rank-lane time by (lane, name): where simulated rank
+        time went.  Collective spans count once per member rank, so this is
+        rank-time, not fabric-time."""
+        agg: Dict[Tuple[int, str], List[float]] = {}
+        for pid, tid, _, dur, name, _a in self._spans:
+            if pid >= self.n_ranks:
+                continue            # fabric link windows double-count
+            cell = agg.setdefault((tid, name), [0.0, 0])
+            cell[0] += dur
+            cell[1] += 1
+        rows = [{"lane": _TID_NAMES.get(tid, str(tid)), "name": name,
+                 "total_s": tot, "count": cnt}
+                for (tid, name), (tot, cnt) in agg.items()]
+        rows.sort(key=lambda r: (-r["total_s"], r["name"]))
+        return rows[:k]
+
+    # ------------------------------------------------------------- exports
+    def _clamped(self, start: float, dur: float) -> Tuple[float, float]:
+        if dur == _INF or start + dur > self._end_s:
+            dur = max(self._end_s - start, 0.0)
+        return start, dur
+
+    def to_chrome(self) -> Dict[str, Any]:
+        """Render the Chrome Trace Event Format document (dict)."""
+        end = max([self._end_s]
+                  + [s + d for _, _, s, d, _, _ in self._spans
+                     if d != _INF])
+        self._end_s = end
+        events: List[Dict[str, Any]] = []
+        used: Dict[int, set] = {}
+        for pid, tid, *_ in self._spans:
+            used.setdefault(pid, set()).add(tid)
+        for pid in sorted(used):
+            if pid < self.n_ranks:
+                pname = f"rank {pid}"
+                tnames = _TID_NAMES
+            else:
+                pname = "fabric"
+                tnames = {}
+            events.append({"ph": "M", "name": "process_name", "pid": pid,
+                           "tid": 0, "args": {"name": pname}})
+            events.append({"ph": "M", "name": "process_sort_index",
+                           "pid": pid, "tid": 0,
+                           "args": {"sort_index": pid}})
+            for tid in sorted(used[pid]):
+                if pid >= self.n_ranks:
+                    tname = ("faults" if tid == _FABRIC_FAULT_TID
+                             else f"link {tid - 1}")
+                else:
+                    tname = tnames.get(tid, f"lane {tid}")
+                events.append({"ph": "M", "name": "thread_name", "pid": pid,
+                               "tid": tid, "args": {"name": tname}})
+        for pid, tid, start, dur, name, args in self._spans:
+            start, dur = self._clamped(start, dur)
+            cat = ("cpu_op" if pid < self.n_ranks and tid == TID_COMPUTE
+                   else "user_annotation")
+            ev: Dict[str, Any] = {"ph": "X", "name": name, "cat": cat,
+                                  "pid": pid, "tid": tid,
+                                  "ts": _us(start), "dur": _us(dur)}
+            if args is not None:
+                ev["args"] = args
+            events.append(ev)
+        for fid, (src, dst, ts) in enumerate(self._flows):
+            anchor = {"cat": "flow", "name": "rendezvous", "id": fid,
+                      "ts": _us(ts)}
+            events.append({"ph": "s", "pid": src, "tid": TID_COLLECTIVE,
+                           **anchor})
+            events.append({"ph": "f", "bp": "e", "pid": dst,
+                           "tid": TID_COLLECTIVE, **anchor})
+        return {"traceEvents": events, "displayTimeUnit": "ms",
+                "distributedInfo": {"rank": 0,
+                                    "world_size": max(self.n_ranks, 1)},
+                "repro_obs": self.stats()}
+
+    def export_chrome(self, path: str) -> str:
+        with open(path, "w", encoding="utf-8") as fh:
+            json.dump(self.to_chrome(), fh, separators=(",", ":"))
+        return path
+
+    def to_execution_trace(self) -> Tuple[Any, Any]:
+        """Round-trip through our own ingest parser: the emitted Chrome JSON
+        becomes a Chakra ET, so a simulated run is itself an ET.  Returns
+        ``(ExecutionTrace, IngestReport)``."""
+        from ..ingest import parse_chrome_trace, standardize_chrome
+        raw = json.dumps(self.to_chrome()).encode("utf-8")
+        ct = parse_chrome_trace(raw)
+        return standardize_chrome(ct, source_name="repro.sim.timeline")
+
+    def export(self, path: str) -> str:
+        """Export by suffix: ``.chkb[.gz/...]`` -> Chakra ET via the ingest
+        round trip, anything else -> Chrome-trace JSON."""
+        from ..core.serialization import is_chkb_path, save
+        if is_chkb_path(path):
+            et, _report = self.to_execution_trace()
+            return save(et, path)
+        return self.export_chrome(path)

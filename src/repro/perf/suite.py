@@ -31,6 +31,10 @@ Three benchmarks, registered in the stage registry under kind="benchmark"
   interleaved no-plan vs empty-plan vs chaos-plan walls on the same mixed
   workload; the gated ``empty_plan_overhead`` must stay <= 1.05 because the
   fault machinery lives entirely behind ``if fault is not None``.
+* ``perf_obs`` — self-tracing telemetry cost (``repro.obs``): interleaved
+  off vs timeline-recorder vs metrics-registry walls on the same mixed
+  workload; both gated overhead ratios must stay <= 1.15 and the
+  instrumented runs must remain bit-identical to the off run.
 * ``perf_ingest`` — real-trace ingestion (``repro.ingest``): streaming
   Chrome/Kineto parse rate and standardization into an ExecutionTrace
   (correlation splice + comm classification + dependency verification
@@ -77,6 +81,7 @@ _SCALE = {
                     "world_sizes": [4, 8], "jobs": 2},
         "ingest_events": 20_000,
         "faults": {"grid": (2_000, 8), "repeat": 3},
+        "obs": {"grid": (1_000, 8), "repeat": 3},
     },
     "full": {
         "feeder_nodes": [10_000, 100_000],
@@ -96,6 +101,7 @@ _SCALE = {
                     "world_sizes": [4, 8, 16, 32], "jobs": 4},
         "ingest_events": 200_000,
         "faults": {"grid": (10_000, 8), "repeat": 5},
+        "obs": {"grid": (10_000, 8), "repeat": 5},
     },
 }
 
@@ -546,6 +552,100 @@ def perf_faults(scale: str = "full", **_: Any) -> Dict[str, Any]:
     }
 
 
+# ---------------------------------------------------------------------- obs
+def perf_obs(scale: str = "full", **_: Any) -> Dict[str, Any]:
+    """Self-tracing telemetry cost: recording must be cheap, off must be free.
+
+    Three interleaved best-of-N runs of the same mixed workload: no
+    instrumentation, a :class:`~repro.obs.TimelineRecorder`, and a
+    :class:`~repro.obs.MetricsRegistry`.  The gated numbers:
+    ``timeline_overhead`` and ``metrics_overhead`` (instrumented wall /
+    off wall, min of the within-rep ratios) must stay <= 1.15, and
+    ``instrumented_identical`` must hold — recording observes the
+    schedule, it never perturbs it.  The recorder-off path costs nothing
+    by construction (every hook sits behind ``if x is not None``), which
+    the off row's events/sec documents against the baseline.
+    """
+    import os as _os
+    import tempfile as _tempfile
+
+    from ..obs import MetricsRegistry, TimelineRecorder
+    from ..sim import Fabric, SimConfig, Simulator
+
+    cfg = _cfg(scale)["obs"]
+    nodes_per_rank, ranks = cfg["grid"]
+    repeat = cfg["repeat"]
+    traces = [_mixed_trace(nodes_per_rank, ranks, rank=r)
+              for r in range(ranks)]
+    fabric = Fabric.build("switch", ranks)
+    variants = ("off", "timeline", "metrics")
+
+    best: Dict[str, float] = {k: float("inf") for k in variants}
+    results: Dict[str, Any] = {}
+    tl_overhead = m_overhead = float("inf")
+    for _rep in range(repeat):
+        walls: Dict[str, float] = {}
+        for label in variants:               # interleaved: fair clocks
+            sc = SimConfig()
+            if label == "timeline":
+                sc.timeline = TimelineRecorder()
+            elif label == "metrics":
+                sc.metrics = MetricsRegistry()
+            sim = Simulator(traces, fabric, sc)
+            t0 = time.perf_counter()
+            results[label] = sim.run(max_events=_SIM_MAX_EVENTS)
+            walls[label] = time.perf_counter() - t0
+            best[label] = min(best[label], walls[label])
+        # pair ratios within one repetition (machine drift cancels); a
+        # systematic overhead shows up in every pair, so min is honest
+        tl_overhead = min(tl_overhead, walls["timeline"] / walls["off"])
+        m_overhead = min(m_overhead, walls["metrics"] / walls["off"])
+
+    off_r = results["off"]
+    rows = {label: {"wall_s": round(best[label], 4),
+                    "events": results[label].events,
+                    "events_per_sec": round(results[label].events
+                                            / best[label], 1)}
+            for label in variants}
+
+    # export cost: Chrome-trace JSON serialization of the recorded timeline
+    rec = results["timeline"].timeline
+    fd, tmp = _tempfile.mkstemp(suffix=".json")
+    _os.close(fd)
+    try:
+        t0 = time.perf_counter()
+        rec.export_chrome(tmp)
+        export_s = time.perf_counter() - t0
+        export_bytes = _os.path.getsize(tmp)
+    finally:
+        _os.unlink(tmp)
+
+    return {
+        "scenario": "mixed_ar_a2a",
+        "nodes_per_rank": nodes_per_rank,
+        "ranks": ranks,
+        "runs": rows,
+        # the gated numbers: recording stays within 15% of the off run
+        "timeline_overhead": round(tl_overhead, 3),
+        "metrics_overhead": round(m_overhead, 3),
+        # the correctness side of the contract: recording never perturbs
+        # the schedule
+        "instrumented_identical": all(
+            r.makespan_s == off_r.makespan_s
+            and r.events == off_r.events
+            and r.per_rank_finish_s == off_r.per_rank_finish_s
+            for r in (results["timeline"], results["metrics"])),
+        "export": {
+            "spans": rec.n_spans,
+            "flows": rec.n_flows,
+            "wall_s": round(export_s, 4),
+            "spans_per_sec": round(rec.n_spans / export_s, 1)
+            if export_s > 0 else None,
+            "bytes": export_bytes,
+        },
+    }
+
+
 # ------------------------------------------------------------------- ingest
 def _synth_kineto_doc(n_events: int) -> bytes:
     """Synthetic Kineto document sized to ``n_events``: host op + runtime
@@ -638,6 +738,7 @@ BENCHMARKS = {
     "perf_explore": perf_explore,
     "perf_ingest": perf_ingest,
     "perf_faults": perf_faults,
+    "perf_obs": perf_obs,
 }
 
 
@@ -759,6 +860,28 @@ def gate_regressions(current: Dict[str, Any], baseline: Dict[str, Any],
                 check(f"perf_faults {label} events/sec",
                       cr[label]["events_per_sec"],
                       br[label]["events_per_sec"])
+
+    # obs: the overhead ratios are absolute contracts (recording is cheap,
+    # off is free) — no baseline needed; the off events/sec additionally
+    # gates against the baseline like any other engine rate
+    cur_o = current.get("perf_obs", {})
+    for key, cap in (("timeline_overhead", 1.15),
+                     ("metrics_overhead", 1.15)):
+        if key in cur_o:
+            line = f"perf_obs {key}: {cur_o[key]:.3f}x (max {cap})"
+            report.append(line)
+            if cur_o[key] > cap:
+                failures.append(line)
+    if cur_o and not cur_o.get("instrumented_identical", True):
+        failures.append("perf_obs: instrumented run broke bit-identity "
+                        "with the uninstrumented run")
+    base_o = baseline.get("perf_obs", {})
+    co, bo = cur_o.get("runs", {}), base_o.get("runs", {})
+    if ("off" in co and "off" in bo
+            and (cur_o.get("nodes_per_rank"), cur_o.get("ranks"))
+            == (base_o.get("nodes_per_rank"), base_o.get("ranks"))):
+        check("perf_obs off events/sec",
+              co["off"]["events_per_sec"], bo["off"]["events_per_sec"])
 
     # ingestion: events/sec is scale-independent (streaming, O(events)), so
     # a smoke run gates directly against the full-scale baseline rates

@@ -419,13 +419,18 @@ class SimSink:
 
     def __init__(self, topology: str = "switch", ranks: int = 8,
                  congestion: bool = True, fidelity: str = "analytic",
-                 faults: Any = None,
+                 faults: Any = None, timeline: Any = None,
+                 metrics: Any = None,
                  extra_traces: Sequence[TraceLike] = (), **fabric_kw: Any):
         self.topology = topology
         self.ranks = ranks
         self.congestion = congestion
         self.fidelity = fidelity
         self.faults = faults
+        # observability hooks (repro.obs): `timeline` is a TimelineRecorder
+        # or truthy (fresh recorder per run); `metrics` a MetricsRegistry
+        self.timeline = timeline
+        self.metrics = metrics
         self.extra_traces = list(extra_traces)
         self.fabric_kw = fabric_kw
 
@@ -439,6 +444,14 @@ class SimSink:
         plan = as_fault_plan(self.faults)
         cfg = SimConfig(congestion=self.congestion,
                         fault_plan=None if plan is None else plan.to_dict())
+        if self.timeline:
+            if self.timeline is True:
+                from ..obs import TimelineRecorder
+                cfg.timeline = TimelineRecorder()
+            else:
+                cfg.timeline = self.timeline
+        if self.metrics is not None:
+            cfg.metrics = self.metrics
         return Simulator(traces, fabric, cfg).run()
 
 
@@ -483,3 +496,4 @@ from ..synth import stages as _synth_stages  # noqa: E402, F401
 from ..explore import stages as _explore_stages  # noqa: E402, F401
 # ... and real-trace ingestion (stdlib-only parsers; import-light)
 from ..ingest import stages as _ingest_stages  # noqa: E402, F401
+from ..obs import stages as _obs_stages  # noqa: E402, F401

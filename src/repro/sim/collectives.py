@@ -167,6 +167,38 @@ def decompose(kind: CollectiveType, group: int,
     return (Phase((PhaseFlow(0, min(1, n - 1), 1.0),)),)
 
 
+#: algorithm family per collective kind — labels for the obs timeline
+_ALGO_NAMES: Dict[CollectiveType, str] = {
+    CollectiveType.ALL_REDUCE: "ring",
+    CollectiveType.ALL_GATHER: "ring",
+    CollectiveType.REDUCE_SCATTER: "ring",
+    CollectiveType.ALL_TO_ALL: "mesh",
+    CollectiveType.BROADCAST: "binomial",
+    CollectiveType.COLLECTIVE_PERMUTE: "permute",
+    CollectiveType.POINT_TO_POINT: "p2p",
+    CollectiveType.BARRIER: "dissemination",
+}
+
+
+def algorithm_name(kind: CollectiveType, algorithm: str = "ring") -> str:
+    """Human name of the phase algorithm :func:`decompose` would pick."""
+    if kind == CollectiveType.ALL_REDUCE and algorithm == "tree":
+        return "halving-doubling"
+    return _ALGO_NAMES.get(kind, "flow")
+
+
+def describe_phases(kind: CollectiveType, group: int,
+                    algorithm: str = "ring") -> Tuple[str, ...]:
+    """One label per :func:`decompose` phase, index-aligned — algorithm and
+    step names for the self-tracing timeline (``repro.obs``)."""
+    phases = decompose(kind, group, algorithm)
+    name = algorithm_name(kind, algorithm)
+    total = len(phases)
+    return tuple(
+        f"{name} {i + 1}/{total}" + (f" x{p.repeat}" if p.repeat > 1 else "")
+        for i, p in enumerate(phases))
+
+
 def busbw_factor(kind: CollectiveType, group: int) -> float:
     """NCCL-tests style bus-bandwidth correction (Table 6 replay reports):
     busbw = payload / time * factor."""

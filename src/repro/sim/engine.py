@@ -43,7 +43,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 from ..core.feeder import ETFeeder
 from ..core.schema import (COMM_NODE_TYPES, CollectiveType, ETNode,
                            ExecutionTrace)
-from .collectives import CollectiveModel
+from .collectives import CollectiveModel, describe_phases
 from .topology import Fabric
 
 COLL_NAME = {
@@ -82,6 +82,15 @@ class SimConfig:
     #: time-windowed slowdowns, crashes, and link degradation; None or an
     #: empty plan leaves the engine bit-identical to the fault-free path
     fault_plan: Optional[Any] = None
+    #: a :class:`repro.obs.TimelineRecorder` capturing the run's own
+    #: execution timeline; None (default) keeps the hot path untouched —
+    #: every recording call site sits behind an ``is not None`` check
+    #: (the ``fault_plan`` pattern), so results stay bit-identical
+    timeline: Optional[Any] = None
+    #: a :class:`repro.obs.MetricsRegistry` for Prometheus-style engine
+    #: metrics (events, heap depth, live flows, cache hit rates); None by
+    #: default, same discipline as ``timeline``
+    metrics: Optional[Any] = None
 
 
 def validate_speed_factors(factors: Optional[Dict[int, float]]) -> None:
@@ -111,6 +120,9 @@ class SimResult:
     aborted: bool = False           # abort-policy crash timeout fired
     abort_reason: Optional[str] = None
     fault_stats: Optional[Dict[str, Any]] = None  # fault injection only
+    #: the run's TimelineRecorder when SimConfig.timeline was set (export
+    #: via ``timeline.export(path)`` / the ``obs.export`` stage)
+    timeline: Optional[Any] = None
 
     def summary(self) -> str:
         coll = ", ".join(f"{k}={v * 1e3:.2f}ms"
@@ -236,6 +248,30 @@ class Simulator:
             pending_nodes: Dict[Tuple, ETNode] = {}   # key -> a member node
             shrunk_end: Dict[Tuple, float] = {}       # key -> shrunk end time
             excluded: Dict[Tuple[int, ...], set] = {}  # members -> dead set
+
+        # observability (repro.obs): both hooks default None and every call
+        # site below is behind an `is not None` check, so the uninstrumented
+        # run does no extra work and stays bit-identical
+        rec = cfg.timeline
+        met = cfg.metrics
+        m_heap = m_flows = m_coll = None
+        met_t0 = 0.0
+        if rec is not None:
+            rec.begin(n_ranks, fabric=self.fabric)
+            if fault is not None:
+                rec.record_fault_plan(fault)
+        if met is not None:
+            met_t0 = met.now()
+            met.counter("repro_sim_runs_total", "Simulator runs").inc()
+            m_heap = met.gauge("repro_sim_heap_depth",
+                               "Event-heap depth (sampled every 64 events)")
+            m_flows = met.gauge(
+                "repro_sim_live_flows",
+                "Concurrent flow records on the fabric (sampled)")
+            m_coll = met.histogram("repro_sim_collective_seconds",
+                                   "Priced collective durations",
+                                   labels=("kind",))
+        rec_links = rec is not None and self._net.mode == "link"
         # Wake elimination, count-preserving: the reference engine schedules
         # one wake per completion / comm-issue and each wake pops at its push
         # timestamp, so a wake skipped while the rank has nothing ready is a
@@ -286,6 +322,32 @@ class Simulator:
             findex.add(end, nf, kindname == "AllReduce")
             flows.append(FlowRecord(kindname, start, end,
                                     float(node.comm_bytes), group, throttle))
+            if rec is not None:
+                phases = None
+                if rec_links:
+                    base_ts = self._net.phase_times(
+                        node.comm_type, float(node.comm_bytes), group, ranks)
+                    if base_ts:
+                        labels = describe_phases(
+                            node.comm_type, group,
+                            cfg.collective_model.algorithm)
+                        if len(labels) != len(base_ts):
+                            # routed spec may skip degenerate phases (rank
+                            # wrapping): fall back to positional labels
+                            labels = tuple(f"phase {i + 1}/{len(base_ts)}"
+                                           for i in range(len(base_ts)))
+                        phases = [(lb, bt * throttle)
+                                  for lb, bt in zip(labels, base_ts)]
+                rec.collective(kindname, members, start, end,
+                               float(node.comm_bytes), ranks, throttle,
+                               phases)
+                if rec_links:
+                    for li, fr in self._net.links_touched(
+                            node.comm_type, group, ranks):
+                        rec.link_window(li, start, end,
+                                        fr * float(node.comm_bytes))
+            if m_coll is not None:
+                m_coll.observe(dur, kind=kindname)
             for r, (nid, _) in members.items():
                 rank_time[r] = max(rank_time[r], end)
                 push(end, 1, (r, nid))
@@ -315,6 +377,8 @@ class Simulator:
                     continue
                 node = pending_nodes[key]
                 fstats["timeouts"] += 1
+                if rec is not None:
+                    rec.mark(min(pend), t, "fault:rendezvous_timeout")
                 fstats["recovery_latency_s"] += (
                     t - max(at for _, at in pend.values()))
                 if fault.policy == "abort":
@@ -331,6 +395,8 @@ class Simulator:
                                                     live)
                 excluded.setdefault(members_ranks, set()).update(missing)
                 fstats["collectives_shrunk"] += 1
+                if rec is not None:
+                    rec.mark(min(pend), t, "fault:shrink")
                 del pending[key]
                 pending_nodes.pop(key, None)
                 continue
@@ -376,6 +442,8 @@ class Simulator:
                     rank_time[rank] = max(rank_time[rank], end)
                     push(end, 1, (rank, node.id))
                     fstats["rejoins"] += 1
+                    if rec is not None:
+                        rec.mark(rank, t, "fault:rejoin")
                     exc = excluded.get(members_ranks)
                     if exc is not None:
                         exc.discard(rank)
@@ -401,6 +469,8 @@ class Simulator:
                         shrunk_end[key] = launch_collective(
                             pend, node, len(live), live)
                         fstats["collectives_shrunk"] += 1
+                        if rec is not None:
+                            rec.mark(min(pend), t, "fault:shrink")
                         del pending[key]
                     elif all(fault.is_dead(m, t) for m in missing):
                         # every remaining member is currently dead: arm the
@@ -426,16 +496,24 @@ class Simulator:
                         # rank dies mid-op and never restarts: the op (and
                         # this rank's remaining work) never completes
                         fstats["crash_stall_s"] += stall
+                        if rec is not None:
+                            rec.mark(rank, t, "fault:dies_mid_op")
                         continue
                     fstats["crash_stall_s"] += stall
                     fstats["slowdown_extra_s"] += (end - t) - stall - dur
                 compute_busy += dur
                 rank_time[rank] = max(rank_time[rank], end)
                 push(end, 1, (rank, node.id))
+                if rec is not None:
+                    rec.compute(rank, t, end, node.name)
 
             if events % 64 == 0:
                 cap = max(self.fabric.capacity_flows, 1)
                 util.append((t, min(findex.flows_at(t) / cap, 1.0)))
+                if met is not None:
+                    m_heap.set(float(len(heap)))
+                    m_flows.set(float(findex.flows_at(t)))
+                    met.maybe_snapshot()
 
         makespan = max(rank_time) if rank_time else 0.0
         total_comm = sum(coll_time.values())
@@ -452,6 +530,28 @@ class Simulator:
                 # analytic pricing has no per-link routing, so link faults
                 # cannot shape it — surface that instead of silently no-oping
                 fstats["link_events_ignored"] = True
+        link_stats = self._net.stats(wall_s=makespan)
+        if rec is not None:
+            rec.finish(makespan)
+        if met is not None:
+            met.counter("repro_sim_events_total",
+                        "Engine events processed").inc(events)
+            met.gauge("repro_sim_makespan_seconds",
+                      "Simulated makespan of the last run").set(makespan)
+            wall = met.now() - met_t0
+            if wall > 0:
+                met.gauge("repro_sim_events_per_second",
+                          "Engine throughput of the last run"
+                          ).set(events / wall)
+            if link_stats:
+                tc = link_stats.get("time_cache", {})
+                met.counter("repro_sim_pricing_cache_hits_total",
+                            "LinkModel time-cache hits"
+                            ).inc(tc.get("hits", 0))
+                met.counter("repro_sim_pricing_cache_misses_total",
+                            "LinkModel time-cache misses"
+                            ).inc(tc.get("misses", 0))
+            met.maybe_snapshot()
         return SimResult(
             makespan_s=makespan,
             per_rank_finish_s=rank_time,
@@ -462,10 +562,11 @@ class Simulator:
             exposed_comm_s=min(exposed, total_comm),
             link_util_timeline=util,
             events=events,
-            link_stats=self._net.stats(wall_s=makespan),
+            link_stats=link_stats,
             aborted=aborted_reason is not None,
             abort_reason=aborted_reason,
             fault_stats=fstats,
+            timeline=rec,
         )
 
     def _comm_time(self, node: ETNode, group: int, t: float,

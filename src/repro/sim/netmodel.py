@@ -102,6 +102,21 @@ class NetworkModel:
         ``wall_s`` (the observed makespan) converts bytes to busy fractions."""
         return None
 
+    # ------------------------------------------------------------ obs hooks
+    def phase_times(self, kind: CollectiveType, payload_bytes: float,
+                    group: int, ranks: Optional[Tuple[int, ...]] = None
+                    ) -> Optional[List[float]]:
+        """Per-phase durations for the obs timeline (pristine routing);
+        None when the model has no phase structure (analytic)."""
+        return None
+
+    def links_touched(self, kind: CollectiveType, group: int,
+                      ranks: Optional[Tuple[int, ...]] = None
+                      ) -> Tuple[Tuple[int, float], ...]:
+        """``(link_index, payload_fraction)`` pairs a collective occupies
+        (pristine routing); empty when unknown."""
+        return ()
+
 
 class AnalyticModel(NetworkModel):
     """Closed-form alpha-beta pricing over the flat fabric.
@@ -249,6 +264,38 @@ class LinkModel(NetworkModel):
             total += repeat * max(la + co * payload_bytes for la, co in terms)
         self._times[tkey] = total
         return total
+
+    # ---------------------------------------------------------- obs hooks
+    def phase_times(self, kind: CollectiveType, payload_bytes: float,
+                    group: int, ranks: Optional[Tuple[int, ...]] = None
+                    ) -> Optional[List[float]]:
+        """Per-phase durations over the *pristine* routing (obs timeline
+        annotation).  Reuses the spec cache; never touches the per-link load
+        accounting or the time cache, so recording cannot perturb pricing."""
+        if group <= 1 or payload_bytes <= 0:
+            if kind == CollectiveType.BARRIER and group > 1:
+                payload_bytes = 0.0
+            else:
+                return None
+        members = tuple(ranks) if ranks else tuple(range(group))
+        skey = (int(kind), members)
+        spec_entry = self._spec.get(skey)
+        if spec_entry is None:
+            try:
+                spec_entry = self._spec[skey] = self._build_spec(
+                    kind, members)
+            except ValueError:
+                return None
+        spec, _ = spec_entry
+        return [repeat * max(la + co * payload_bytes for la, co in terms)
+                for repeat, terms in spec]
+
+    def links_touched(self, kind: CollectiveType, group: int,
+                      ranks: Optional[Tuple[int, ...]] = None
+                      ) -> Tuple[Tuple[int, float], ...]:
+        members = tuple(ranks) if ranks else tuple(range(group))
+        entry = self._spec.get((int(kind), members))
+        return entry[1] if entry else ()
 
     # ------------------------------------------------------ fault injection
     def _routes_for(self, state: Tuple[Tuple[int, float], ...]

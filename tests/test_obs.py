@@ -1,0 +1,328 @@
+"""repro.obs: self-tracing telemetry acceptance.
+
+The acceptance gates: the Prometheus text exposition is byte-stable (golden
+string, label escaping, cumulative histogram buckets), snapshot cadence is
+deterministic under an injected clock, the 8-rank self-ingested timeline
+round-trips through the repo's own Chrome parser with zero skipped and zero
+unattributed events, flow-arrow endpoints resolve onto the collective lanes
+recorded in the SimResult, recording never perturbs the schedule
+(bit-identity), busiest-link ties are ordered by link id, and the sweep
+heartbeat / metrics / CLI flags all work end-to-end."""
+import io
+import json
+
+import pytest
+
+from repro import cli
+from repro.core import generator
+from repro.ingest import parse_chrome_trace, standardize_chrome
+from repro.obs import (TID_COLLECTIVE, TID_COMPUTE, TID_FAULT, Counter,
+                       MetricsRegistry, TimelineRecorder)
+from repro.sim import Fabric, SimConfig, Simulator
+
+
+def moe_traces(ranks=8, iters=3):
+    return [generator.moe_mixed_collectives(iters=iters, ranks=ranks, rank=r)
+            for r in range(ranks)]
+
+
+def run_recorded(ranks=8, iters=3, topology="switch", mode="analytic",
+                 **cfg_kw):
+    traces = moe_traces(ranks, iters)
+    fabric = Fabric.build(topology, ranks, mode=mode)
+    cfg = SimConfig(timeline=TimelineRecorder(), **cfg_kw)
+    res = Simulator(traces, fabric, cfg).run()
+    return res, res.timeline
+
+
+# ----------------------------------------------------------------- metrics
+def test_exposition_golden():
+    reg = MetricsRegistry()
+    reg.counter("repro_runs_total", "Total runs", labels=("status",)).inc(
+        3, status="ok")
+    reg.get("repro_runs_total").inc(status='we"ird\nlabel\\x')
+    reg.gauge("repro_depth", "Queue depth").set(2.5)
+    h = reg.histogram("repro_lat_seconds", "Latency",
+                      buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    h.observe(5.0)
+    expected = (
+        '# HELP repro_depth Queue depth\n'
+        '# TYPE repro_depth gauge\n'
+        'repro_depth 2.5\n'
+        '# HELP repro_lat_seconds Latency\n'
+        '# TYPE repro_lat_seconds histogram\n'
+        'repro_lat_seconds_bucket{le="0.1"} 1\n'
+        'repro_lat_seconds_bucket{le="1"} 2\n'
+        'repro_lat_seconds_bucket{le="+Inf"} 3\n'
+        'repro_lat_seconds_sum 5.55\n'
+        'repro_lat_seconds_count 3\n'
+        '# HELP repro_runs_total Total runs\n'
+        '# TYPE repro_runs_total counter\n'
+        'repro_runs_total{status="ok"} 3\n'
+        'repro_runs_total{status="we\\"ird\\nlabel\\\\x"} 1\n'
+    )
+    assert reg.expose() == expected
+    # byte-stable: rendering twice is identical
+    assert reg.expose() == expected
+
+
+def test_metric_misuse_fails_loudly():
+    reg = MetricsRegistry()
+    c = reg.counter("repro_x_total", labels=("kind",))
+    with pytest.raises(ValueError):
+        c.inc()                             # missing required label
+    with pytest.raises(ValueError):
+        c.inc(-1, kind="a")                 # counters cannot decrease
+    with pytest.raises(ValueError):
+        reg.gauge("repro_x_total")          # kind mismatch on re-register
+    with pytest.raises(ValueError):
+        reg.counter("repro_x_total", labels=("other",))   # label mismatch
+    # idempotent re-registration returns the same instrument
+    assert reg.counter("repro_x_total", labels=("kind",)) is c
+    assert isinstance(c, Counter)
+
+
+def test_snapshot_cadence_injected_clock(tmp_path):
+    now = [0.0]
+    reg = MetricsRegistry(clock=lambda: now[0])
+    path = str(tmp_path / "m.prom")
+    reg.counter("repro_ticks_total").inc()
+    reg.arm_snapshots(path, interval_s=5.0)
+    assert reg.maybe_snapshot()             # first call writes immediately
+    now[0] = 2.0
+    assert not reg.maybe_snapshot()         # inside the cadence window
+    now[0] = 6.0
+    assert reg.maybe_snapshot()
+    text = open(path).read()
+    assert "repro_ticks_total 1" in text
+    assert reg.snapshot() == path           # unconditional end-of-run write
+    # atomic write: no tmp litter next to the target
+    assert [p.name for p in tmp_path.iterdir()] == ["m.prom"]
+
+
+# ------------------------------------------------- timeline: closed loop
+def test_timeline_self_ingestion_closed_loop():
+    res, rec = run_recorded(ranks=8, iters=3)
+    doc = rec.to_chrome()
+    payload = json.dumps(doc).encode("utf-8")
+    ct = parse_chrome_trace(payload)
+
+    # our own parser must eat our own trace whole
+    assert ct.skipped == 0 and ct.unmatched_be == 0
+    assert ct.rank == 0 and ct.world_size == 8
+
+    xs = [e for e in ct.events if e.ph == "X"]
+    assert {e.pid for e in xs} == set(range(8))   # one pid per rank
+    assert len(xs) == rec.n_spans
+
+    # span accounting vs the SimResult: one compute span per compute node,
+    # one collective span per (flow x member)
+    compute = [e for e in xs if e.tid == TID_COMPUTE]
+    coll = [e for e in xs if e.tid == TID_COLLECTIVE]
+    n_compute_nodes = sum(
+        sum(1 for n in tr if not n.is_comm) for tr in moe_traces(8, 3))
+    assert len(compute) == n_compute_nodes
+    assert len(coll) == sum(f.group for f in res.flows)
+
+    # flow arrows: every id resolves, both endpoints on collective lanes,
+    # start anchor ts matches a recorded flow start in the SimResult
+    assert len(ct.flow_starts) == rec.n_flows > 0
+    starts_ns = {round(f.start_s * 1e9) for f in res.flows}
+    for fid, (spid, stid, sts) in ct.flow_starts.items():
+        dpid, dtid, dts = ct.flow_ends[fid]
+        assert stid == TID_COLLECTIVE and dtid == TID_COLLECTIVE
+        assert sts == dts and spid != dpid
+        assert sts in starts_ns
+
+    # standardization: zero unattributed events, comm classified
+    et, report = standardize_chrome(ct, source_name="self")
+    assert report.unattributed_device == 0
+    assert report.comm_nodes > 0
+    assert len(et) == rec.n_spans
+
+    assert rec.stats()["dropped"] == 0
+
+
+def test_timeline_chkb_export_roundtrip(tmp_path):
+    from repro.core.serialization import load
+    _res, rec = run_recorded(ranks=4, iters=2)
+    out = str(tmp_path / "timeline.chkb")
+    assert rec.export(out) == out
+    et = load(out)
+    assert len(et) == rec.n_spans
+    assert any(n.is_comm for n in et)
+
+
+def test_recording_is_bit_identical():
+    traces = moe_traces(4, 3)
+    fabric = Fabric.build("ring", 4)
+    plain = Simulator(traces, fabric, SimConfig()).run()
+    rec_res = Simulator(traces, fabric,
+                        SimConfig(timeline=TimelineRecorder())).run()
+    met_res = Simulator(traces, fabric,
+                        SimConfig(metrics=MetricsRegistry())).run()
+    for other in (rec_res, met_res):
+        assert other.makespan_s == plain.makespan_s
+        assert other.events == plain.events
+        assert other.per_rank_finish_s == plain.per_rank_finish_s
+    assert plain.timeline is None and rec_res.timeline is not None
+
+
+def test_link_mode_phases_and_fabric_lanes():
+    res, rec = run_recorded(ranks=4, iters=2, topology="ring", mode="link")
+    doc = rec.to_chrome()
+    xs = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    # phase sub-spans are named "<Kind>/<algo> i/n[ xrepeat]"
+    phase_names = {e["name"] for e in xs if "/" in e["name"]}
+    assert any(name.startswith("AllReduce/ring") for name in phase_names)
+    # the fabric pseudo-process carries per-link busy lanes
+    fabric_pid = rec.n_ranks
+    assert any(e["pid"] == fabric_pid for e in xs)
+    procs = {e["args"]["name"] for e in doc["traceEvents"]
+             if e.get("ph") == "M" and e["name"] == "process_name"}
+    assert "fabric" in procs
+
+
+def test_fault_plan_recorded_on_timeline():
+    plan = {"schema": "repro-faults/v1", "name": "obs-slow",
+            "policy": "abort", "collective_timeout_s": 10.0,
+            "events": [{"kind": "rank_slowdown", "rank": 1,
+                        "t0": 0.0, "t1": 5.0, "factor": 3.0}]}
+    _res, rec = run_recorded(ranks=4, iters=2, fault_plan=plan)
+    doc = rec.to_chrome()
+    faults = [e for e in doc["traceEvents"]
+              if e.get("ph") == "X" and e["tid"] == TID_FAULT]
+    assert any("slowdown x3" in e["name"] and e["pid"] == 1 for e in faults)
+
+
+def test_top_sinks_ranked():
+    _res, rec = run_recorded(ranks=4, iters=3)
+    sinks = rec.top_sinks(5)
+    assert 0 < len(sinks) <= 5
+    totals = [s["total_s"] for s in sinks]
+    assert totals == sorted(totals, reverse=True)
+    assert all(s["count"] > 0 for s in sinks)
+
+
+# --------------------------------------------- satellite: link-stat ties
+def test_busiest_link_ties_ordered_by_link_id():
+    from repro.core.infragraph import LinkLoad, RoutingTable, ring
+
+    graph = ring(4, bandwidth=1e9)
+    load = LinkLoad(RoutingTable(graph))
+    # equal byte counts inserted out of id order must surface sorted by id
+    for idx, b in ((3, 100.0), (1, 100.0), (2, 50.0)):
+        load.bytes_by_link[idx] = b
+    rows = load.top(k=3)
+    assert [r["bytes"] for r in rows] == [100.0, 100.0, 50.0]
+    first, second = rows[0], rows[1]
+    assert (first["src"], first["dst"]) < (second["src"], second["dst"]) \
+        or first["name"] < second["name"]
+
+
+# --------------------------------------------------- sweep heartbeat/metrics
+def obs_spec():
+    from repro.explore import ExperimentSpec
+    return ExperimentSpec.from_dict({
+        "name": "obs-sweep",
+        "workloads": [{"pattern": "moe_mixed",
+                       "args": {"mode": "allreduce", "iters": 2}}],
+        "axes": {"topology": ["ring", "switch"], "world_size": [4]},
+    })
+
+
+def test_sweep_heartbeat_stream(tmp_path):
+    from repro.explore import run_sweep
+    buf = io.StringIO()
+    res = run_sweep(obs_spec(), jobs=1, heartbeat_s=1e-4,
+                    heartbeat_stream=buf)
+    assert res.failed == 0
+    out = buf.getvalue()
+    assert "explore[obs-sweep]: 2/2 done" in out
+    assert "ETA" in out
+
+
+def test_sweep_metrics_counts_outcomes(tmp_path):
+    from repro.explore import run_sweep
+    cache = str(tmp_path / "cache")
+    reg = MetricsRegistry()
+    run_sweep(obs_spec(), jobs=1, cache_dir=cache, metrics=reg)
+    assert reg.get("repro_explore_runs_total").value(status="ok") == 2
+    reg2 = MetricsRegistry()
+    run_sweep(obs_spec(), jobs=1, cache_dir=cache, metrics=reg2)
+    assert reg2.get("repro_explore_runs_total").value(status="cached") == 2
+    assert reg2.get("repro_explore_queue_depth").value() == 0.0
+
+
+# --------------------------------------------------------------- registry
+def test_obs_export_stage_registered():
+    from repro.pipeline import available_stages
+    from repro.pipeline.registry import get_stage
+    import repro.pipeline.builtin  # noqa: F401 — triggers registration
+    assert "obs.export" in available_stages()["observe"]
+    with pytest.raises(ValueError):
+        get_stage("observe", "obs.export")(timeline=None, path="x.json")
+
+
+# -------------------------------------------------------------------- CLI
+def test_cli_sim_timeline_and_metrics(tmp_path, capsys):
+    from repro.core.serialization import save
+    trace = generator.moe_mixed_collectives(iters=2, ranks=4)
+    src = str(tmp_path / "t.chkb")
+    save(trace, src)
+    tl = str(tmp_path / "tl.json")
+    prom = str(tmp_path / "sim.prom")
+    assert cli.main(["sim", src, "--topology", "ring", "--ranks", "4",
+                     "--timeline", tl, "--metrics", prom]) == 0
+    out = capsys.readouterr().out
+    assert f"timeline -> {tl}" in out and f"metrics -> {prom}" in out
+    doc = json.load(open(tl))
+    assert doc["traceEvents"] and doc["repro_obs"]["dropped"] == 0
+    text = open(prom).read()
+    assert "# TYPE repro_sim_events_total counter" in text
+    assert "repro_sim_makespan_seconds" in text
+    # --quiet silences the progress chatter but keeps the summary
+    assert cli.main(["sim", src, "--ranks", "4", "--timeline", tl,
+                     "--metrics", prom, "-q"]) == 0
+    out = capsys.readouterr().out
+    assert "timeline ->" not in out and "metrics ->" not in out
+    assert "makespan" in out
+
+
+def test_cli_explore_heartbeat_metrics(tmp_path, capsys):
+    spec = str(tmp_path / "study.json")
+    with open(spec, "w") as fh:
+        json.dump({
+            "name": "cli-obs",
+            "workloads": [{"pattern": "moe_mixed",
+                           "args": {"mode": "allreduce", "iters": 2}}],
+            "axes": {"topology": ["ring"], "world_size": [4]},
+        }, fh)
+    prom = str(tmp_path / "explore.prom")
+    assert cli.main(["explore", spec, "--jobs", "1",
+                     "--cache-dir", str(tmp_path / "cache"),
+                     "--heartbeat-s", "0.0001", "--metrics", prom]) == 0
+    captured = capsys.readouterr()
+    assert "explore[cli-obs]" in captured.err
+    assert "# TYPE repro_explore_runs_total counter" in open(prom).read()
+    # --quiet silences the heartbeat
+    assert cli.main(["explore", spec, "--jobs", "1",
+                     "--cache-dir", str(tmp_path / "cache"),
+                     "--heartbeat-s", "0.0001", "-q"]) == 0
+    captured = capsys.readouterr()
+    assert "explore[cli-obs]" not in captured.err
+
+
+def test_cli_ingest_metrics(tmp_path):
+    _res, rec = run_recorded(ranks=2, iters=2)
+    tl = str(tmp_path / "tl.json")
+    rec.export_chrome(tl)
+    prom = str(tmp_path / "ingest.prom")
+    out = str(tmp_path / "rt.chkb")
+    assert cli.main(["ingest", tl, "--format", "chrome", "-o", out,
+                     "--metrics", prom, "-q"]) == 0
+    text = open(prom).read()
+    assert 'repro_ingest_files_total{format="chrome"} 1' in text
+    assert "repro_ingest_events_total" in text
