@@ -2,7 +2,7 @@
 """CI perf gate: fail when the hot paths regress vs the committed baseline.
 
 Runs ``python -m repro bench perf_feeder perf_sim perf_explore perf_ingest
-perf_faults perf_obs``
+perf_faults perf_obs perf_shard``
 (fresh numbers, no reference-engine baseline pass, results via the ``--json``
 sidecar — stdout is never parsed) and compares events/sec / nodes/sec /
 configs/sec against the committed ``BENCH_perf.json``.  Any row more than
@@ -27,7 +27,7 @@ _REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(_REPO_ROOT, "src"))
 
 GATED = ("perf_feeder", "perf_sim", "perf_explore", "perf_ingest",
-         "perf_faults", "perf_obs")
+         "perf_faults", "perf_obs", "perf_shard")
 
 
 def main(argv=None) -> int:
@@ -46,6 +46,18 @@ def main(argv=None) -> int:
 
     with open(ns.baseline) as fh:
         baseline = json.load(fh)
+
+    # perf_shard's wall-clock rates are core-count dependent: an 8-worker
+    # number from a 32-core box is not a contract a 1-core runner can
+    # honor.  Warn and skip those rows on host mismatch; the bit-identity
+    # contract still gates (it lives in the current document alone).
+    base_cpus = baseline.get("host", {}).get("cpu_count")
+    cur_cpus = os.cpu_count()
+    if base_cpus is not None and base_cpus != cur_cpus:
+        print(f"perf gate: baseline host has cpu_count={base_cpus} but "
+              f"this host has {cur_cpus}; skipping perf_shard wall-clock "
+              "rows (bit-identity still gated)", file=sys.stderr)
+        baseline.pop("perf_shard", None)
 
     if ns.current:
         with open(ns.current) as fh:

@@ -76,6 +76,16 @@ assert man['total_nodes'] > 0 and len(man['paths']) == 4, man
 python -m repro synth --list > "$tmp/scenarios.txt"
 grep -q moe-mixed "$tmp/scenarios.txt"
 
+echo "== sharded sim (2 workers; must be bit-identical to 1 process) =="
+python -m repro synth -p "$tmp/profile.json" -o "$tmp/synth_shard" --ranks 4 \
+  --steps 4 --sim --jobs 2 > "$tmp/synth_shard.out"
+grep -q makespan "$tmp/synth_shard.out"
+# same workload, same seed: the sharded makespan line must match the
+# single-process one from the synth step above byte-for-byte
+grep makespan "$tmp/synth.out" > "$tmp/mk1.txt"
+grep makespan "$tmp/synth_shard.out" > "$tmp/mk2.txt"
+diff "$tmp/mk1.txt" "$tmp/mk2.txt"
+
 echo "== explore (3-config sweep; replay must be fully cached) =="
 cat > "$tmp/study.json" <<'SPEC'
 {"name": "smoke-study",

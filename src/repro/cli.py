@@ -150,7 +150,8 @@ def _cmd_sim(ns: argparse.Namespace) -> int:
            .sink("sim", topology=ns.topology, ranks=ns.ranks,
                  congestion=not ns.no_congestion,
                  fidelity=ns.fidelity, faults=ns.faults,
-                 timeline=bool(ns.timeline), metrics=reg).run())
+                 timeline=bool(ns.timeline), metrics=reg,
+                 jobs=ns.jobs, timeline_ranks=ns.timeline_ranks).run())
     print(res.summary())
     if ns.timeline:
         res.timeline.export(ns.timeline)
@@ -399,7 +400,8 @@ def _cmd_synth(ns: argparse.Namespace) -> int:
         res = (Pipeline.from_source("load", man["paths"][0], window=ns.window)
                .sink("sim", topology=ns.topology, ranks=len(man["paths"]),
                      fidelity=ns.fidelity, extra_traces=man["paths"][1:],
-                     timeline=bool(ns.timeline), metrics=reg).run())
+                     timeline=bool(ns.timeline), metrics=reg,
+                     jobs=ns.jobs, timeline_ranks=ns.timeline_ranks).run())
         print(res.summary())
         if ns.timeline:
             res.timeline.export(ns.timeline)
@@ -438,8 +440,18 @@ def _cmd_bench(ns: argparse.Namespace) -> int:
     # importing repro.perf registers the perf benchmarks (kind="benchmark");
     # run_suite dispatches them through the registry and assembles the same
     # BENCH_perf.json document shape as `python -m benchmarks.perf.run`
-    from .perf import run_suite
+    from .perf import compare_bench, run_suite
 
+    if ns.compare:
+        old_path, new_path = ns.compare
+        with open(old_path) as fh:
+            old_doc = json.load(fh)
+        with open(new_path) as fh:
+            new_doc = json.load(fh)
+        print(compare_bench(old_doc, new_doc,
+                            old_label=os.path.basename(old_path),
+                            new_label=os.path.basename(new_path)))
+        return 0
     doc = run_suite(scale=ns.scale, baseline=ns.baseline,
                     names=ns.names or None)
     if ns.json_path:
@@ -586,6 +598,13 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--metrics", metavar="PATH",
                    help="write Prometheus text-format metrics here "
                         "(atomic .prom snapshots during + after the run)")
+    p.add_argument("--jobs", type=int, default=1,
+                   help="shard the event loop across N worker processes "
+                        "(bit-identical results; pays off on large "
+                        "multi-rank workloads)")
+    p.add_argument("--timeline-ranks", type=int, default=None,
+                   help="record timeline lanes only for the N lowest rank "
+                        "ids (deterministic sampling for huge worlds)")
     p.add_argument("-o", "--output")
     p.set_defaults(fn=_cmd_sim)
 
@@ -686,6 +705,12 @@ def build_parser() -> argparse.ArgumentParser:
                         "(Chrome-trace .json or re-ingestable .chkb)")
     p.add_argument("--metrics", metavar="PATH",
                    help="with --sim: write Prometheus text-format metrics")
+    p.add_argument("--jobs", type=int, default=1,
+                   help="with --sim: shard the event loop across N worker "
+                        "processes (bit-identical results)")
+    p.add_argument("--timeline-ranks", type=int, default=None,
+                   help="with --sim --timeline: record only the N lowest "
+                        "rank ids (deterministic sampling)")
     p.add_argument("--manifest", help="write the synthesis manifest JSON here")
     p.add_argument("--window", type=int, default=1024)
     p.add_argument("-q", "--quiet", action="store_true",
@@ -711,6 +736,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--json", dest="json_path", metavar="PATH",
                    help="also write compact single-line JSON here (the "
                         "perf gate and sweep tooling read this file)")
+    p.add_argument("--compare", nargs=2, metavar=("OLD.json", "NEW.json"),
+                   help="diff two BENCH_perf documents (per-benchmark "
+                        "events/sec delta table) instead of running")
     p.set_defaults(fn=_cmd_bench)
 
     p = sub.add_parser("explore",

@@ -159,6 +159,44 @@ class ETFeeder:
         self._exhausted = False                        # source iterator done
         self._fill()
 
+    @classmethod
+    def from_iter(cls, nodes: Iterator[ETNode], total: int,
+                  window: int = 1024, policy: str = "fifo") -> "ETFeeder":
+        """Feeder over a bare node iterator with a known node count.
+
+        This is the partition-scoped path the sharded simulator uses: a
+        synth source (``repro.synth.generate.iter_rank_nodes``) streams one
+        rank's nodes directly into the feeder inside the worker process, so
+        a million-rank fleet never materializes ``ExecutionTrace`` objects —
+        in the parent or anywhere else.  ``total`` must equal the number of
+        nodes the iterator will yield (``plan_node_count`` for synth
+        profiles); the drain condition ``has_pending`` is counted against it.
+        """
+        f = cls.__new__(cls)
+        f._reader = None
+        f._owns_reader = False
+        f._node_iter = iter(nodes)
+        f._total = int(total)
+        f.window = max(1, int(window))
+        f._counter = {"i": 0}
+        if policy not in POLICIES:
+            raise ValueError(
+                f"unknown policy {policy!r}; options: {list(POLICIES)}")
+        f._policy = POLICIES[policy](f._counter)
+        f.policy_name = policy
+        f._nodes = {}
+        f._pending_preds = {}
+        f._dependents = {}
+        f._completed = _IdSet()
+        f._issued = _IdSet()
+        f._in_flight = 0
+        f._ready = []
+        f._ingested = 0
+        f._emitted = 0
+        f._exhausted = False
+        f._fill()
+        return f
+
     # ------------------------------------------------------------------ api
     def has_pending(self) -> bool:
         return self._emitted < self._total

@@ -561,20 +561,28 @@ def run_sweep(spec: Any, jobs: int = 1, cache_dir: Optional[str] = None,
         wall_s=round(time.perf_counter() - t0, 4))
 
 
+def spawn_context():
+    """The multiprocessing context every repro process fan-out must use.
+
+    spawn, not fork: the parent often has jax (multithreaded) loaded
+    — forking a multithreaded process can deadlock the workers.
+    Workers rebuild state from pickled args and import lazily, so a
+    fresh interpreter is all they need.  Shared by the sweep pool here
+    and the sharded simulator (``repro.sim.shard``).
+    """
+    import multiprocessing
+    return multiprocessing.get_context("spawn")
+
+
 def _pool_sweep(spec: ExperimentSpec, cfgs: List[RunConfig],
                 misses: List[int], finish, jobs: int,
                 stats: Dict[str, int], timeout_s: Optional[float],
                 max_retries: int, backoff_base_s: float,
                 tick: Optional[Any] = None) -> None:
     """Process-pool execution with worker-death and timeout recovery."""
-    import multiprocessing
     from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
     from concurrent.futures.process import BrokenProcessPool
-    # spawn, not fork: the parent often has jax (multithreaded) loaded
-    # — forking a multithreaded process can deadlock the workers.
-    # Workers rebuild configs from plain dicts and import lazily, so a
-    # fresh interpreter is all they need.
-    ctx = multiprocessing.get_context("spawn")
+    ctx = spawn_context()
     nworkers = min(jobs, len(misses))
 
     def make_pool() -> ProcessPoolExecutor:

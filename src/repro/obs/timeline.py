@@ -76,8 +76,15 @@ class TimelineRecorder:
     ``dropped`` (surfaced in :meth:`stats` — no silent truncation).
     """
 
-    def __init__(self, max_events: int = 1_000_000) -> None:
+    def __init__(self, max_events: int = 1_000_000,
+                 rank_limit: Optional[int] = None) -> None:
         self.max_events = int(max_events)
+        #: record per-rank lanes only for the ``rank_limit`` lowest rank ids
+        #: (deterministic sampling, same elision rule as ``viz.to_dot``) —
+        #: a million-rank fleet cannot carry a million Chrome processes.
+        #: ``None`` records every rank.  Fault marks and fabric lanes are
+        #: kept regardless: they are sparse and diagnostic.
+        self.rank_limit = None if rank_limit is None else int(rank_limit)
         # (pid, tid, start_s, dur_s, name, args-or-None)
         self._spans: List[Tuple[int, int, float, float, str,
                                 Optional[Dict[str, Any]]]] = []
@@ -106,8 +113,12 @@ class TimelineRecorder:
             return
         self._spans.append((pid, tid, start, dur, name, args))
 
+    def _sampled(self, rank: int) -> bool:
+        return self.rank_limit is None or rank < self.rank_limit
+
     def compute(self, rank: int, start: float, end: float, name: str) -> None:
-        self._span(rank, TID_COMPUTE, start, end - start, name)
+        if self._sampled(rank):
+            self._span(rank, TID_COMPUTE, start, end - start, name)
 
     def collective(self, kindname: str,
                    members: Dict[int, Tuple[int, float]], start: float,
@@ -130,20 +141,24 @@ class TimelineRecorder:
         # is what lets every earlier-arrived member proceed
         releaser = min(r for r, (_, at) in members.items() if at >= start)
         for r in sorted(members):
+            if not self._sampled(r):
+                continue        # rank_limit: lowest-id members only
             _, arrive = members[r]
             self._span(r, TID_COLLECTIVE, start, end - start, kindname, args)
             if arrive < start:
                 self._span(r, TID_STALL, arrive, start - arrive,
                            f"wait:{kindname}")
-            if r != releaser and len(self._flows) < self.max_events:
+            if (r != releaser and self._sampled(releaser)
+                    and len(self._flows) < self.max_events):
                 self._flows.append((releaser, r, start))
         if phases:
             lead = min(members)
-            cursor = start
-            for label, dur in phases:
-                self._span(lead, TID_COLLECTIVE, cursor, dur,
-                           f"{kindname}/{label}")
-                cursor += dur
+            if self._sampled(lead):
+                cursor = start
+                for label, dur in phases:
+                    self._span(lead, TID_COLLECTIVE, cursor, dur,
+                               f"{kindname}/{label}")
+                    cursor += dur
 
     def mark(self, rank: int, t: float, name: str) -> None:
         """Zero-duration fault event on a rank's fault lane (timeout,
@@ -183,8 +198,11 @@ class TimelineRecorder:
         return len(self._flows)
 
     def stats(self) -> Dict[str, int]:
-        return {"spans": len(self._spans), "flows": len(self._flows),
-                "dropped": self.dropped, "ranks": self.n_ranks}
+        s = {"spans": len(self._spans), "flows": len(self._flows),
+             "dropped": self.dropped, "ranks": self.n_ranks}
+        if self.rank_limit is not None:
+            s["rank_limit"] = self.rank_limit
+        return s
 
     def top_sinks(self, k: int = 5) -> List[Dict[str, Any]]:
         """Aggregate rank-lane time by (lane, name): where simulated rank

@@ -11,14 +11,15 @@ the paper-figure benchmarks.  ``gate_regressions`` backs the CI perf gate
 from __future__ import annotations
 
 from ..pipeline.registry import register_stage
-from .suite import (BENCHMARKS, SCALES, gate_regressions, perf_chkb,
-                    perf_explore, perf_faults, perf_feeder, perf_netmodel,
-                    perf_obs, perf_sim, perf_synth, run_suite, write_bench)
+from .suite import (BENCHMARKS, SCALES, compare_bench, gate_regressions,
+                    perf_chkb, perf_explore, perf_faults, perf_feeder,
+                    perf_netmodel, perf_obs, perf_shard, perf_sim,
+                    perf_synth, run_suite, write_bench)
 
 for _name, _fn in BENCHMARKS.items():
     register_stage(_name, kind="benchmark", overwrite=True)(_fn)
 
-__all__ = ["BENCHMARKS", "SCALES", "gate_regressions", "perf_feeder",
-           "perf_sim", "perf_netmodel", "perf_chkb", "perf_synth",
-           "perf_explore", "perf_faults", "perf_obs", "run_suite",
-           "write_bench"]
+__all__ = ["BENCHMARKS", "SCALES", "compare_bench", "gate_regressions",
+           "perf_feeder", "perf_sim", "perf_netmodel", "perf_chkb",
+           "perf_synth", "perf_explore", "perf_faults", "perf_obs",
+           "perf_shard", "run_suite", "write_bench"]

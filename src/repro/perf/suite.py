@@ -40,6 +40,14 @@ Three benchmarks, registered in the stage registry under kind="benchmark"
   (correlation splice + comm classification + dependency verification
   included); the subsystem's floor is ≥100k events/sec in each stage,
   with ``end_to_end`` reporting their combined rate.
+* ``perf_shard`` — sharded simulation (``repro.sim.shard``): the mixed
+  workload single-process vs :class:`~repro.sim.ShardedSimulator` with
+  ``jobs`` workers (events/sec both ways, speedup, and the absolute
+  ``bit_identical`` contract), plus the million-rank ``serve-decode-burst``
+  fleet cell streamed through :class:`~repro.sim.SynthSource` without ever
+  materializing per-rank traces.  Wall-clock speedup is core-count
+  dependent — the host block records ``cpu_count`` so the gate can skip
+  cross-host comparisons.
 
 Results aggregate into a JSON document written to ``BENCH_perf.json`` at the
 repo root (see :func:`run_suite` / :func:`write_bench`).  Wall-clock numbers
@@ -48,6 +56,7 @@ are machine-dependent; the ``*_speedup`` ratios are the stable signal.
 from __future__ import annotations
 
 import json
+import os
 import platform
 import sys
 import time
@@ -82,6 +91,9 @@ _SCALE = {
         "ingest_events": 20_000,
         "faults": {"grid": (2_000, 8), "repeat": 3},
         "obs": {"grid": (1_000, 8), "repeat": 3},
+        "shard": {"grid": (250, 8), "jobs": 2,
+                  "fleet_world": 10_000, "fleet_steps": 1,
+                  "fleet_ops": 4, "fleet_jobs": 4},
     },
     "full": {
         "feeder_nodes": [10_000, 100_000],
@@ -102,6 +114,11 @@ _SCALE = {
         "ingest_events": 200_000,
         "faults": {"grid": (10_000, 8), "repeat": 5},
         "obs": {"grid": (10_000, 8), "repeat": 5},
+        # 64 ranks x ~1.6k actual nodes/rank => >100k-node scenario, 8
+        # workers; fleet: the million-rank headline cell
+        "shard": {"grid": (2_000, 64), "jobs": 8,
+                  "fleet_world": 1_000_000, "fleet_steps": 1,
+                  "fleet_ops": 4, "fleet_jobs": 8},
     },
 }
 
@@ -728,6 +745,110 @@ def perf_ingest(scale: str = "full", **_: Any) -> Dict[str, Any]:
     }
 
 
+# -------------------------------------------------------------------- shard
+def _same_result(a: Any, b: Any) -> bool:
+    """Full SimResult equality — the sharded engine's bit-identity contract."""
+    return (a.makespan_s == b.makespan_s
+            and a.per_rank_finish_s == b.per_rank_finish_s
+            and a.collective_time_s == b.collective_time_s
+            and a.collective_bytes == b.collective_bytes
+            and a.flows == b.flows
+            and a.compute_busy_s == b.compute_busy_s
+            and a.exposed_comm_s == b.exposed_comm_s
+            and a.link_util_timeline == b.link_util_timeline
+            and a.events == b.events
+            and a.link_stats == b.link_stats
+            and a.aborted == b.aborted
+            and a.abort_reason == b.abort_reason
+            and a.fault_stats == b.fault_stats)
+
+
+def perf_shard(scale: str = "full", **_: Any) -> Dict[str, Any]:
+    """Sharded-simulation throughput vs the single-process engine.
+
+    Two cells.  ``grid``: the mixed AR×A2A scenario run by the
+    single-process engine and by :class:`~repro.sim.ShardedSimulator` with
+    ``jobs`` spawn-context workers; reports events/sec both ways, the
+    speedup ratio, and the absolute ``bit_identical`` contract (the
+    sharded run must reproduce the single-process ``SimResult`` exactly —
+    gated regardless of host).  ``fleet``: the ``serve-decode-burst``
+    synthetic fleet at ``fleet_world`` ranks streamed through
+    :class:`~repro.sim.SynthSource` — per-rank traces are generated inside
+    the workers, never materialized in the parent; at full scale this is
+    the million-rank headline cell.  Wall-clock speedup is core-count
+    dependent: on a single-core host the sharded run is expected to be
+    *slower* (process + replay overhead with no parallelism to buy it
+    back), which is why ``cpu_count`` is recorded here and in the host
+    block, and why ``scripts/perf_gate.py`` skips the shard rate rows when
+    the baseline's core count differs from the current host's.
+    """
+    from ..sim import (Fabric, ShardedSimulator, SimConfig, Simulator,
+                       SynthSource)
+    from ..synth import get_scenario
+
+    cfg = _cfg(scale)["shard"]
+    nodes_per_rank, ranks = cfg["grid"]
+    jobs = cfg["jobs"]
+    traces = [_mixed_trace(nodes_per_rank, ranks, rank=r)
+              for r in range(ranks)]
+    total_nodes = sum(len(t) for t in traces)
+
+    t0 = time.perf_counter()
+    single = Simulator(traces, Fabric.build("switch", ranks),
+                       SimConfig()).run(max_events=_SIM_MAX_EVENTS)
+    single_s = time.perf_counter() - t0
+
+    sharded_sim = ShardedSimulator(traces, Fabric.build("switch", ranks),
+                                   SimConfig(), jobs=jobs)
+    t0 = time.perf_counter()
+    sharded = sharded_sim.run(max_events=_SIM_MAX_EVENTS)
+    sharded_s = time.perf_counter() - t0
+
+    out: Dict[str, Any] = {
+        "scenario": "mixed_ar_a2a",
+        "nodes_per_rank": nodes_per_rank,
+        "ranks": ranks,
+        "total_nodes": total_nodes,
+        "jobs": jobs,
+        "cpu_count": os.cpu_count(),
+        "single": {"wall_s": round(single_s, 4),
+                   "events": single.events,
+                   "events_per_sec": round(single.events / single_s, 1)},
+        "sharded": {"wall_s": round(sharded_s, 4),
+                    "events": sharded.events,
+                    "events_per_sec": round(sharded.events / sharded_s, 1),
+                    "grants": sharded_sim.stats.get("grants"),
+                    "injections": sharded_sim.stats.get("injections"),
+                    "worker_batches":
+                        sharded_sim.stats.get("worker_batches")},
+        "speedup": round(single_s / sharded_s, 3),
+        "bit_identical": _same_result(sharded, single),
+    }
+
+    world = cfg["fleet_world"]
+    src = SynthSource(profile=get_scenario("serve-decode-burst").profile(),
+                      world_size=world, steps=cfg["fleet_steps"],
+                      ops_per_step=cfg["fleet_ops"], seed=0)
+    fab = Fabric.build("switch", world, materialize_graph=False)
+    fleet_sim = ShardedSimulator(src, fab, SimConfig(),
+                                 jobs=cfg["fleet_jobs"])
+    t0 = time.perf_counter()
+    fres = fleet_sim.run(max_events=_SIM_MAX_EVENTS)
+    fleet_s = time.perf_counter() - t0
+    out["fleet"] = {
+        "scenario": "serve-decode-burst",
+        "world_size": world,
+        "jobs": cfg["fleet_jobs"],
+        "wall_s": round(fleet_s, 2),
+        "events": fres.events,
+        "events_per_sec": round(fres.events / fleet_s, 1),
+        "makespan_s": fres.makespan_s,
+        "completed": not fres.aborted,
+        "grants": fleet_sim.stats.get("grants"),
+    }
+    return out
+
+
 # ------------------------------------------------------------------- driver
 BENCHMARKS = {
     "perf_feeder": perf_feeder,
@@ -739,6 +860,7 @@ BENCHMARKS = {
     "perf_ingest": perf_ingest,
     "perf_faults": perf_faults,
     "perf_obs": perf_obs,
+    "perf_shard": perf_shard,
 }
 
 
@@ -765,6 +887,12 @@ def run_suite(scale: str = "full", baseline: bool = True,
         "host": {
             "python": sys.version.split()[0],
             "platform": platform.platform(),
+            # perf_shard's wall-clock rates only transfer between hosts
+            # with the same core count; the gate checks this field
+            "cpu_count": os.cpu_count(),
+            "jobs": {"shard": _SCALE[scale]["shard"]["jobs"],
+                     "fleet": _SCALE[scale]["shard"]["fleet_jobs"],
+                     "explore": _SCALE[scale]["explore"]["jobs"]},
         },
     }
     for name in selected:
@@ -892,4 +1020,133 @@ def gate_regressions(current: Dict[str, Any], baseline: Dict[str, Any],
             check(f"perf_ingest {stage} events/sec",
                   cur_i[stage]["events_per_sec"],
                   base_i[stage]["events_per_sec"])
+
+    # shard: bit-identity and fleet completion are absolute contracts; the
+    # wall-clock rates gate against the baseline only when the grid and
+    # worker counts match (scripts/perf_gate.py additionally warns and
+    # skips this whole section when the baseline host's core count differs
+    # from the current host's — an 8-worker rate from a 32-core box is not
+    # a contract a 1-core CI runner can honor)
+    cur_s = current.get("perf_shard", {})
+    base_s = baseline.get("perf_shard", {})
+    if cur_s:
+        ident = cur_s.get("bit_identical", True)
+        line = f"perf_shard bit_identical: {ident}"
+        report.append(line)
+        if not ident:
+            failures.append("perf_shard: sharded run broke bit-identity "
+                            "with the single-process engine")
+        fleet = cur_s.get("fleet", {})
+        if fleet and not fleet.get("completed", True):
+            failures.append(
+                f"perf_shard: fleet scenario world={fleet.get('world_size')}"
+                " did not complete")
+    if (cur_s.get("sharded") and base_s.get("sharded")
+            and (cur_s.get("nodes_per_rank"), cur_s.get("ranks"),
+                 cur_s.get("jobs"))
+            == (base_s.get("nodes_per_rank"), base_s.get("ranks"),
+                base_s.get("jobs"))):
+        check(f"perf_shard sharded {cur_s['nodes_per_rank']}x"
+              f"{cur_s['ranks']} jobs={cur_s['jobs']} events/sec",
+              cur_s["sharded"]["events_per_sec"],
+              base_s["sharded"]["events_per_sec"])
+    cf, bf = cur_s.get("fleet", {}), base_s.get("fleet", {})
+    if (cf.get("events_per_sec") and bf.get("events_per_sec")
+            and (cf.get("world_size"), cf.get("jobs"))
+            == (bf.get("world_size"), bf.get("jobs"))):
+        check(f"perf_shard fleet world={cf['world_size']} events/sec",
+              cf["events_per_sec"], bf["events_per_sec"])
     return failures, report
+
+
+# ------------------------------------------------------------ bench compare
+def _rate_rows(doc: Dict[str, Any]) -> Dict[str, float]:
+    """Flatten a bench document into ``label -> throughput`` rows.
+
+    Every benchmark's headline rate metric (events/sec, nodes/sec,
+    configs/sec, ...) under a stable label, so two documents can be joined
+    row-by-row regardless of which benchmarks each one ran."""
+    rows: Dict[str, float] = {}
+    for r in doc.get("perf_feeder", {}).get("drain", []):
+        rows[f"feeder drain nodes={r['nodes']} window={r['window']} "
+             "nodes/sec"] = r["nodes_per_sec"]
+    for r in doc.get("perf_sim", {}).get("scenarios", []):
+        rows[f"sim {r['scenario']} {r['nodes_per_rank']}x{r['ranks']} "
+             "events/sec"] = r["engine"]["events_per_sec"]
+    for r in doc.get("perf_netmodel", {}).get("scenarios", []):
+        for mode in ("analytic", "link"):
+            if mode in r:
+                rows[f"netmodel {mode} {r['nodes_per_rank']}x{r['ranks']} "
+                     "events/sec"] = r[mode]["events_per_sec"]
+    ch = doc.get("perf_chkb", {})
+    for section in ("encode", "decode", "file"):
+        for r in ch.get(section, []):
+            rows[f"chkb {section} {r['path']} nodes/sec"] = r["nodes_per_sec"]
+    sy = doc.get("perf_synth", {})
+    for section in ("profile", "generate"):
+        if "nodes_per_sec" in sy.get(section, {}):
+            rows[f"synth {section} nodes/sec"] = sy[section]["nodes_per_sec"]
+    ex = doc.get("perf_explore", {})
+    if "configs_per_sec" in ex.get("expand", {}):
+        rows["explore expand configs/sec"] = ex["expand"]["configs_per_sec"]
+    for key in ("cold_runs_per_sec", "cached_runs_per_sec"):
+        if key in ex.get("sweep", {}):
+            rows[f"explore sweep {key.split('_')[0]} runs/sec"] = \
+                ex["sweep"][key]
+    ing = doc.get("perf_ingest", {})
+    for stage in ("parse", "standardize", "end_to_end"):
+        if "events_per_sec" in ing.get(stage, {}):
+            rows[f"ingest {stage} events/sec"] = \
+                ing[stage]["events_per_sec"]
+    for name in ("perf_faults", "perf_obs"):
+        for label, r in doc.get(name, {}).get("runs", {}).items():
+            if "events_per_sec" in r:
+                rows[f"{name.split('_')[1]} {label} events/sec"] = \
+                    r["events_per_sec"]
+    sh = doc.get("perf_shard", {})
+    for label in ("single", "sharded"):
+        if "events_per_sec" in sh.get(label, {}):
+            rows[f"shard {label} {sh.get('nodes_per_rank')}x"
+                 f"{sh.get('ranks')} events/sec"] = \
+                sh[label]["events_per_sec"]
+    if "events_per_sec" in sh.get("fleet", {}):
+        rows[f"shard fleet world={sh['fleet'].get('world_size')} "
+             "events/sec"] = sh["fleet"]["events_per_sec"]
+    return rows
+
+
+def compare_bench(old_doc: Dict[str, Any], new_doc: Dict[str, Any],
+                  old_label: str = "old", new_label: str = "new") -> str:
+    """Per-benchmark throughput delta table between two bench documents.
+
+    Backs ``repro bench --compare OLD.json NEW.json``.  Rows present in
+    only one document render with a ``-`` on the missing side and no
+    delta; the delta column is ``new/old - 1`` (positive = faster)."""
+    old_rows = _rate_rows(old_doc)
+    new_rows = _rate_rows(new_doc)
+    labels = list(old_rows)
+    labels += [k for k in new_rows if k not in old_rows]
+    width = max([len(l) for l in labels] + [len("benchmark")])
+    ow = max(len(old_label), 12)
+    nw = max(len(new_label), 12)
+    lines = [
+        f"{'benchmark':<{width}}  {old_label:>{ow}}  {new_label:>{nw}}  "
+        f"{'delta':>7}",
+        f"{'-' * width}  {'-' * ow}  {'-' * nw}  {'-' * 7}",
+    ]
+    for label in labels:
+        o, n = old_rows.get(label), new_rows.get(label)
+        os_ = f"{o:,.0f}" if o is not None else "-"
+        ns_ = f"{n:,.0f}" if n is not None else "-"
+        if o and n:
+            delta = f"{n / o - 1.0:+.1%}"
+        else:
+            delta = "-"
+        lines.append(f"{label:<{width}}  {os_:>{ow}}  {ns_:>{nw}}  "
+                     f"{delta:>7}")
+    scales = (old_doc.get("scale"), new_doc.get("scale"))
+    if scales[0] != scales[1]:
+        lines.append(f"note: scales differ ({old_label}={scales[0]}, "
+                     f"{new_label}={scales[1]}); only matching grids are "
+                     "meaningful")
+    return "\n".join(lines)

@@ -420,7 +420,8 @@ class SimSink:
     def __init__(self, topology: str = "switch", ranks: int = 8,
                  congestion: bool = True, fidelity: str = "analytic",
                  faults: Any = None, timeline: Any = None,
-                 metrics: Any = None,
+                 metrics: Any = None, jobs: int = 1,
+                 timeline_ranks: Optional[int] = None,
                  extra_traces: Sequence[TraceLike] = (), **fabric_kw: Any):
         self.topology = topology
         self.ranks = ranks
@@ -428,15 +429,20 @@ class SimSink:
         self.fidelity = fidelity
         self.faults = faults
         # observability hooks (repro.obs): `timeline` is a TimelineRecorder
-        # or truthy (fresh recorder per run); `metrics` a MetricsRegistry
+        # or truthy (fresh recorder per run); `metrics` a MetricsRegistry;
+        # `timeline_ranks` caps a fresh recorder to the N lowest rank ids
         self.timeline = timeline
         self.metrics = metrics
+        self.timeline_ranks = timeline_ranks
+        # jobs > 1 partitions the event loop across worker processes
+        # (repro.sim.shard) — results stay bit-identical at any job count
+        self.jobs = max(1, int(jobs))
         self.extra_traces = list(extra_traces)
         self.fabric_kw = fabric_kw
 
     def consume(self, stream: TraceStream) -> Any:
         from ..faults import as_fault_plan
-        from ..sim import Fabric, SimConfig, Simulator
+        from ..sim import Fabric, ShardedSimulator, SimConfig, Simulator
         traces = [stream.materialize()]
         traces += [_as_trace(t) for t in self.extra_traces]
         fabric = Fabric.build(self.topology, self.ranks, mode=self.fidelity,
@@ -447,11 +453,15 @@ class SimSink:
         if self.timeline:
             if self.timeline is True:
                 from ..obs import TimelineRecorder
-                cfg.timeline = TimelineRecorder()
+                cfg.timeline = TimelineRecorder(
+                    rank_limit=self.timeline_ranks)
             else:
                 cfg.timeline = self.timeline
         if self.metrics is not None:
             cfg.metrics = self.metrics
+        if self.jobs > 1 and len(traces) > 1:
+            return ShardedSimulator(traces, fabric, cfg,
+                                    jobs=self.jobs).run()
         return Simulator(traces, fabric, cfg).run()
 
 

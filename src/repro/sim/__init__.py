@@ -7,6 +7,7 @@ from .netmodel import (FIDELITIES, AnalyticModel, LinkModel, NetworkModel,
 from .reference import ReferenceSimulator
 from .replay import (ReplayConfig, Replayer, ReplayReport,
                      collective_accuracy_check)
+from .shard import ShardedSimulator, SynthSource, partition_ranks
 from .topology import TOPOLOGIES, Fabric
 
 __all__ = ["CollectiveModel", "Phase", "PhaseFlow", "busbw_factor",
@@ -15,4 +16,5 @@ __all__ = ["CollectiveModel", "Phase", "PhaseFlow", "busbw_factor",
            "LinkModel", "NetworkModel", "build_network_model",
            "max_min_fair_rates", "ReferenceSimulator", "ReplayConfig",
            "Replayer", "ReplayReport", "collective_accuracy_check",
+           "ShardedSimulator", "SynthSource", "partition_ranks",
            "TOPOLOGIES", "Fabric"]

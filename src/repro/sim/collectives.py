@@ -61,6 +61,34 @@ class CollectiveModel:
             return 2 * math.ceil(math.log2(n)) * latency_s
         return payload_bytes / link_bw + latency_s
 
+    def latency_floor_s(self, kind: CollectiveType, group: int,
+                        latency_s: float) -> float:
+        """Payload-free lower bound on :meth:`time_s` for any positive payload.
+
+        The sharded simulator (sim.shard) uses this as conservative lookahead:
+        a collective launched at ``t`` cannot complete before ``t + floor``,
+        so a worker may safely advance its partition-local clock that far
+        past an unresolved rendezvous.  The terms are exactly the latency
+        terms of :meth:`time_s` — the bandwidth terms are >= 0 for positive
+        payloads, so the bound holds per phase.
+        """
+        if group <= 1 or latency_s <= 0:
+            return 0.0
+        n = group
+        if kind == CollectiveType.ALL_REDUCE:
+            if self.algorithm == "tree":
+                return 2 * math.ceil(math.log2(n)) * latency_s
+            return 2 * (n - 1) * latency_s
+        if kind in (CollectiveType.ALL_GATHER, CollectiveType.REDUCE_SCATTER):
+            return (n - 1) * latency_s
+        if kind == CollectiveType.ALL_TO_ALL:
+            return (n - 1) * latency_s
+        if kind == CollectiveType.BROADCAST:
+            return math.ceil(math.log2(n)) * latency_s
+        if kind == CollectiveType.BARRIER:
+            return 2 * math.ceil(math.log2(n)) * latency_s
+        return latency_s
+
     def flow_count(self, kind: CollectiveType, group: int) -> int:
         """Number of concurrent flows the collective puts on the fabric —
         the structural property behind the paper's §5.3 congestion study."""

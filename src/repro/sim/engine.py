@@ -178,6 +178,75 @@ class _FlowIndex:
         return len(self._heap)
 
 
+def comm_time(net, cfg: SimConfig, fabric, comm_type: CollectiveType,
+              comm_bytes: float, group: int, t: float, findex: _FlowIndex,
+              ranks: Optional[Tuple[int, ...]] = None
+              ) -> Tuple[float, float, str]:
+    """Price one collective: network-model base time x congestion throttle.
+
+    Shared verbatim between :class:`Simulator` and the sharded authority
+    (:mod:`repro.sim.shard`) — both must execute the *same operations in the
+    same order* for results to stay bit-identical, so the logic lives here
+    once.
+    """
+    kindname = COLL_NAME.get(comm_type, "Comm")
+    base = net.collective_time(comm_type, comm_bytes, group, ranks, t)
+    throttle = 1.0
+    if cfg.congestion:
+        # bandwidth sharing with flows ALREADY on the fabric (a
+        # collective's own flows are priced by its alpha-beta model);
+        # capped: ECMP/multipath keeps the worst case bounded
+        others = findex.flows_at(t)
+        throttle = min(1.0 + others / max(fabric.capacity_flows, 1),
+                       4.0)
+        # DCQCN-flavored: CNP rate cuts hit the many small flows of an
+        # all-to-all much harder while fat all-reduce flows are active
+        if comm_type == CollectiveType.ALL_TO_ALL and findex.fat_at(t):
+            throttle *= cfg.dcqcn_small_flow_penalty
+        elif (comm_type == CollectiveType.ALL_REDUCE
+                and others > fabric.capacity_flows):
+            throttle *= 1.5       # fat flows also degrade, less so
+    return base * throttle, throttle, kindname
+
+
+class WakeCredits:
+    """Count-preserving wake elimination, shared engine/shard-worker.
+
+    The reference engine schedules one wake per completion / comm-issue and
+    each wake pops at its push timestamp, so a wake skipped while the rank
+    has nothing ready is a no-op UNLESS a later same-timestamp event makes
+    nodes ready first.  Skipped wakes are banked as per-slot credits at the
+    current timestamp and flushed the moment readiness appears, so the rank
+    gets exactly as many same-instant issue opportunities as the reference
+    granted — idle ranks are simply never polled.
+
+    :meth:`pops` returns how many wake events the caller must push *now*
+    (the caller owns event construction — the single-process engine and the
+    partition-local worker loop push differently-shaped entries).
+    """
+
+    __slots__ = ("_stamp", "_suppressed")
+
+    def __init__(self, n_slots: int) -> None:
+        self._stamp = [-1.0] * n_slots
+        self._suppressed = [0] * n_slots
+
+    def pops(self, t: float, slot: int, feeder: ETFeeder) -> int:
+        if not feeder.has_pending():
+            return 0                # drained: reference wake is a no-op
+        if self._stamp[slot] != t:
+            # credits from older timestamps correspond to reference
+            # wakes that already popped (as no-ops) at their own time
+            self._stamp[slot] = t
+            self._suppressed[slot] = 0
+        if feeder.has_ready():
+            n = self._suppressed[slot] + 1
+            self._suppressed[slot] = 0
+            return n
+        self._suppressed[slot] += 1
+        return 0
+
+
 class Simulator:
     """Discrete-event simulation over per-rank ETs + a fabric."""
 
@@ -272,16 +341,7 @@ class Simulator:
                                    "Priced collective durations",
                                    labels=("kind",))
         rec_links = rec is not None and self._net.mode == "link"
-        # Wake elimination, count-preserving: the reference engine schedules
-        # one wake per completion / comm-issue and each wake pops at its push
-        # timestamp, so a wake skipped while the rank has nothing ready is a
-        # no-op UNLESS a later same-timestamp event makes nodes ready first.
-        # We therefore bank skipped wakes as per-rank credits at the current
-        # timestamp and flush them the moment readiness appears, so the rank
-        # gets exactly as many same-instant issue opportunities as the
-        # reference granted — idle ranks are simply never polled.
-        wake_suppressed = [0] * n_ranks
-        wake_stamp = [-1.0] * n_ranks
+        credits = WakeCredits(n_ranks)
 
         def push(t: float, kind: int, payload) -> None:
             nonlocal seq
@@ -289,20 +349,8 @@ class Simulator:
             heapq.heappush(heap, (t, seq, kind, payload))
 
         def wake(t: float, rank: int) -> None:
-            f = feeders[rank]
-            if not f.has_pending():
-                return              # drained: reference wake is a no-op
-            if wake_stamp[rank] != t:
-                # credits from older timestamps correspond to reference
-                # wakes that already popped (as no-ops) at their own time
-                wake_stamp[rank] = t
-                wake_suppressed[rank] = 0
-            if f.has_ready():
-                for _ in range(wake_suppressed[rank] + 1):
-                    push(t, 0, rank)
-                wake_suppressed[rank] = 0
-            else:
-                wake_suppressed[rank] += 1
+            for _ in range(credits.pops(t, rank, feeders[rank])):
+                push(t, 0, rank)
 
         def launch_collective(members: Dict[int, Tuple[int, float]],
                               node: ETNode, group: int,
@@ -573,27 +621,8 @@ class Simulator:
                    findex: _FlowIndex,
                    ranks: Optional[Tuple[int, ...]] = None
                    ) -> Tuple[float, float, str]:
-        cfg = self.cfg
-        kindname = COLL_NAME.get(node.comm_type, "Comm")
-        base = self._net.collective_time(node.comm_type,
-                                         float(node.comm_bytes), group,
-                                         ranks, t)
-        throttle = 1.0
-        if cfg.congestion:
-            # bandwidth sharing with flows ALREADY on the fabric (a
-            # collective's own flows are priced by its alpha-beta model);
-            # capped: ECMP/multipath keeps the worst case bounded
-            others = findex.flows_at(t)
-            throttle = min(1.0 + others / max(self.fabric.capacity_flows, 1),
-                           4.0)
-            # DCQCN-flavored: CNP rate cuts hit the many small flows of an
-            # all-to-all much harder while fat all-reduce flows are active
-            if node.comm_type == CollectiveType.ALL_TO_ALL and findex.fat_at(t):
-                throttle *= cfg.dcqcn_small_flow_penalty
-            elif (node.comm_type == CollectiveType.ALL_REDUCE
-                    and others > self.fabric.capacity_flows):
-                throttle *= 1.5       # fat flows also degrade, less so
-        return base * throttle, throttle, kindname
+        return comm_time(self._net, self.cfg, self.fabric, node.comm_type,
+                         float(node.comm_bytes), group, t, findex, ranks)
 
 
 def simulate_single_trace(trace: ExecutionTrace, fabric: Fabric,

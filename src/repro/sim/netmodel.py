@@ -102,6 +102,15 @@ class NetworkModel:
         ``wall_s`` (the observed makespan) converts bytes to busy fractions."""
         return None
 
+    def lookahead(self, kind: CollectiveType, group: int,
+                  ranks: Optional[Tuple[int, ...]] = None) -> float:
+        """Payload-free lower bound on :meth:`collective_time` for any
+        *positive* payload — the conservative-lookahead window the sharded
+        simulator (sim.shard) grants workers past an unresolved rendezvous.
+        0.0 is always a safe (if useless) answer; the base class returns it
+        so third-party models are shardable without opting in."""
+        return 0.0
+
     # ------------------------------------------------------------ obs hooks
     def phase_times(self, kind: CollectiveType, payload_bytes: float,
                     group: int, ranks: Optional[Tuple[int, ...]] = None
@@ -141,6 +150,13 @@ class AnalyticModel(NetworkModel):
         if kind == CollectiveType.ALL_TO_ALL:
             base *= self.fabric.a2a_hop_factor
         return base
+
+    def lookahead(self, kind: CollectiveType, group: int,
+                  ranks: Optional[Tuple[int, ...]] = None) -> float:
+        floor = self.model.latency_floor_s(kind, group, self.fabric.latency_s)
+        if kind == CollectiveType.ALL_TO_ALL:
+            floor *= self.fabric.a2a_hop_factor
+        return floor
 
 
 class LinkModel(NetworkModel):
@@ -393,6 +409,28 @@ class LinkModel(NetworkModel):
                     src, dst, f.frac * payload_bytes))
             total += worst * phase.repeat
         return total
+
+    def lookahead(self, kind: CollectiveType, group: int,
+                  ranks: Optional[Tuple[int, ...]] = None) -> float:
+        """Sum of per-phase routed path-latency floors (payload 0): phases
+        are sequential and each phase takes at least its slowest flow's path
+        latency, whatever the payload or link sharing.  Returns 0.0 under
+        link-fault plans — variant-state rerouting can legally pick
+        lower-latency paths, so no payload-free floor is safe there."""
+        if group <= 1 or self._fault_times:
+            return 0.0
+        members = tuple(ranks) if ranks else tuple(range(group))
+        skey = (int(kind), members)
+        spec_entry = self._spec.get(skey)
+        if spec_entry is None:
+            try:
+                spec_entry = self._spec[skey] = self._build_spec(kind,
+                                                                 members)
+            except ValueError:
+                return 0.0
+        spec, _ = spec_entry
+        return sum(repeat * max(la for la, _ in terms)
+                   for repeat, terms in spec)
 
     def stats(self, wall_s: float = 0.0) -> Dict[str, object]:
         out = {

@@ -1,0 +1,1096 @@
+"""Sharded simulation: the event loop partitioned across worker processes.
+
+``repro.sim.shard`` scales the discrete-event engine past the
+single-process ceiling (ROADMAP: "sharded simulation of a single
+million-rank fleet") while keeping the contract PR 2 set with
+``ReferenceSimulator``: results are **bit-identical** to the single-process
+engine at any partition count.
+
+Architecture — *authority replay*:
+
+* **Workers** (spawn-context processes, one per partition of contiguous
+  ranks) own their partition's feeders, compute physics, wake-credit
+  bookkeeping, and fault gating.  They run the partition-local event loop
+  extracted from the engine (``WakeCredits`` + the same feeder/compute
+  arithmetic) and log every event pop as a compact columnar record.
+* The **authority** (the parent) replays the *global* event order over
+  those records on a stub heap that assigns sequence numbers exactly as the
+  engine's ``push`` does.  Everything order-dependent lives here and only
+  here: rendezvous matching, collective pricing (the shared
+  :func:`repro.sim.engine.comm_time`), congestion state, fault timeouts /
+  shrinks / rejoins, and every floating-point accumulation — so sums land
+  in engine pop order and results match bit for bit.
+* Collective completions flow back to member workers as **injection**
+  records carrying the exact heap position ``(end, after-pop, phase, j)``
+  the engine would have pushed them at.
+
+Synchronization is *conservative*: a worker may pop its next local event
+only while its key is provably earlier than any unresolved rendezvous
+completion, whose earliest position is bounded by the network model's
+payload-free per-phase latency floor (:meth:`NetworkModel.lookahead`).
+When a worker cannot prove safety it blocks; the authority, which knows
+the true global order, grants single pops to whichever blocked worker owns
+the globally-next event — the protocol degrades to lockstep instead of
+ever reordering.
+
+Cross-partition state moves as columnar batches (CHKB v4
+struct-of-arrays style: parallel ``array`` columns, one per field) over
+``multiprocessing`` pipes, using the same spawn bootstrap as the sweep
+runner (``repro.explore.runner.spawn_context``).
+
+Million-rank path: a :class:`SynthSource` ships only the workload *spec*
+to workers; each worker streams its own ranks' nodes straight from
+``iter_rank_nodes`` into ``ETFeeder.from_iter``, so no ``ExecutionTrace``
+ever materializes — in the parent or anywhere else.
+"""
+from __future__ import annotations
+
+import heapq
+import time
+from array import array
+from bisect import bisect_right
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Mapping, Optional, Tuple
+
+from ..core.feeder import ETFeeder
+from ..core.schema import COMM_NODE_TYPES, CollectiveType, ExecutionTrace
+from .collectives import CollectiveModel, describe_phases
+from .engine import (COLL_NAME, FlowRecord, SimConfig, SimResult, Simulator,
+                     WakeCredits, _FlowIndex, comm_time,
+                     validate_speed_factors)
+from .topology import Fabric
+
+__all__ = ["ShardedSimulator", "SynthSource", "partition_ranks"]
+
+#: worker log-record kinds (NOT engine heap kinds): 0 = boring pop (only
+#: pushes), 1 = compute issue, 2 = comm arrival, 4 = compute dies mid-op
+_R_BORING, _R_COMPUTE, _R_ARRIVAL, _R_DIES = 0, 1, 2, 4
+
+_FLUSH_RECORDS = 512        # worker flushes its batch every this many pops
+_POLL_MASK = 63             # worker polls the pipe every POLL_MASK+1 pops
+_PUMP_TIMEOUT_S = 300.0     # authority gives up on a silent worker
+
+
+def partition_ranks(n_ranks: int, parts: int) -> List[Tuple[int, int]]:
+    """Contiguous, near-even ``[lo, hi)`` partitions (sizes differ by <= 1)."""
+    parts = max(1, min(int(parts), int(n_ranks)))
+    base, extra = divmod(n_ranks, parts)
+    out: List[Tuple[int, int]] = []
+    lo = 0
+    for p in range(parts):
+        hi = lo + base + (1 if p < extra else 0)
+        out.append((lo, hi))
+        lo = hi
+    return out
+
+
+@dataclass(frozen=True)
+class SynthSource:
+    """Partition-scoped synthetic workload: a spec, not a trace.
+
+    Workers call :meth:`feeder` for each rank they own and stream nodes
+    lazily; the parent only ever sees this (tiny, picklable) object.
+    ``materialize`` exists for the 1-partition fast path and for
+    equivalence tests at small world sizes.
+    """
+
+    profile: Any                    # repro.synth.WorkloadProfile
+    world_size: int
+    steps: int = 16
+    ops_per_step: Optional[int] = None
+    seed: int = 0
+    scale_duration: float = 1.0
+    scale_comm_bytes: float = 1.0
+    jitter: float = 0.0
+    stragglers: Mapping[int, float] = field(default_factory=dict)
+
+    def resolved_ops(self) -> int:
+        from ..synth.generate import default_ops_per_step
+        return self.ops_per_step or default_ops_per_step(self.profile,
+                                                         self.steps)
+
+    def node_count(self) -> int:
+        from ..synth.generate import plan_node_count
+        return plan_node_count(self.profile, self.steps, self.resolved_ops())
+
+    def iter_rank(self, rank: int):
+        from ..synth.generate import iter_rank_nodes
+        return iter_rank_nodes(
+            self.profile, rank=rank, steps=self.steps,
+            ops_per_step=self.resolved_ops(), seed=self.seed,
+            scale_duration=self.scale_duration,
+            scale_comm_bytes=self.scale_comm_bytes,
+            straggler=self.stragglers.get(rank, 1.0), jitter=self.jitter)
+
+    def feeder(self, rank: int) -> ETFeeder:
+        return ETFeeder.from_iter(self.iter_rank(rank), self.node_count(),
+                                  policy="comm_priority")
+
+    def materialize(self, rank: int) -> ExecutionTrace:
+        from ..synth.generate import rank_skeleton
+        et = rank_skeleton(self.profile, rank, self.world_size, self.seed)
+        for node in self.iter_rank(rank):
+            et.add_node(node)
+        return et
+
+
+# ===================================================================== worker
+
+class _Batch:
+    """Columnar worker->authority log batch (struct-of-arrays)."""
+
+    __slots__ = ("t", "k", "np", "pt", "cr", "cd", "ce", "cs", "dr", "ds",
+                 "ar", "ab", "ao", "an", "az", "names", "bases")
+
+    def __init__(self, with_names: bool) -> None:
+        self.t = array("d")         # pop time, one per record
+        self.k = array("B")         # record kind, one per record
+        self.np = array("H")        # push count, one per record
+        self.pt = array("d")        # flat push times
+        self.cr = array("q")        # compute: rank
+        self.cd = array("d")        #          duration (post speed-factor)
+        self.ce = array("d")        #          end
+        self.cs = array("d")        #          fault stall
+        self.dr = array("q")        # dies-mid-op: rank
+        self.ds = array("d")        #              stall
+        self.ar = array("q")        # arrival: rank
+        self.ab = array("I")        #          worker-local base id
+        self.ao = array("I")        #          occurrence
+        self.an = array("q")        #          node id
+        self.az = array("d")        #          payload bytes
+        self.names: Optional[List[str]] = [] if with_names else None
+        self.bases: List[Tuple] = []    # (wbid, ctype, members, tag, floor)
+
+    def __len__(self) -> int:
+        return len(self.t)
+
+    def wire(self) -> Tuple:
+        return (len(self.t), self.t, self.k, self.np, self.pt,
+                self.cr, self.cd, self.ce, self.cs, self.dr, self.ds,
+                self.ar, self.ab, self.ao, self.an, self.az,
+                self.names, self.bases)
+
+
+def _compress_members(ranks: Tuple[int, ...]) -> Any:
+    """Range-compress a contiguous member tuple (1M-rank groups must not
+    cross the pipe, or even exist, as 1M-element tuples)."""
+    n = len(ranks)
+    if n > 2 and ranks[-1] - ranks[0] == n - 1 \
+            and ranks == tuple(range(ranks[0], ranks[-1] + 1)):
+        return ("R", ranks[0], ranks[-1] + 1)
+    return ranks
+
+
+def _worker_main(conn, init: Dict[str, Any]) -> None:
+    try:
+        _worker_run(conn, init)
+    except BaseException as e:             # noqa: BLE001 — ship to parent
+        import traceback
+        try:
+            conn.send(("E", f"{type(e).__name__}: {e}",
+                       traceback.format_exc()))
+        except Exception:                  # noqa: BLE001 — parent gone
+            pass
+    finally:
+        try:
+            conn.close()
+        except Exception:                  # noqa: BLE001
+            pass
+
+
+def _worker_run(conn, init: Dict[str, Any]) -> None:
+    lo, hi = init["lo"], init["hi"]
+    n_ranks: int = init["n_ranks"]
+    fabric: Fabric = init["fabric"]
+    cmodel: CollectiveModel = init["cmodel"]
+    speed: Dict[int, float] = init["speed"]
+    la_on: bool = init["la_on"]
+    tl_on: bool = init["tl_on"]
+    tl_limit: Optional[int] = init["tl_limit"]
+    net = fabric.network_model(cmodel)     # lookahead floors only — the
+    #                                        authority owns all pricing
+    fault = None
+    if init["fault_plan"] is not None:
+        from ..faults import FaultRuntime, as_fault_plan
+        fault = FaultRuntime.build(as_fault_plan(init["fault_plan"]))
+
+    src_kind, src = init["source"]
+    nloc = hi - lo
+    if src_kind == "traces":
+        feeders: List[Optional[ETFeeder]] = [
+            ETFeeder(t, policy="comm_priority") for t in src]
+        pgroups: Optional[List[Dict[int, Any]]] = [t.process_groups
+                                                   for t in src]
+    else:
+        # lazy: a synth partition can span 100k+ ranks, and building every
+        # feeder up front would keep the worker silent (no batch flush)
+        # for minutes; each rank's feeder is created when its t=0 wake pops
+        feeders = [None] * nloc
+        pgroups = None
+
+    credits = WakeCredits(nloc)
+    # local heap entry: (t, i, phase, m, kind, rank, nid) — (t, i, phase, m)
+    # totally orders this partition's events exactly as the global (t, seq)
+    # order restricted to it: i = owning pop index (0 for initial wakes),
+    # phase -1/0/+1 = pushed before / during / after that pop's own pushes,
+    # m = intra-pop push index (own) or authority injection counter
+    heap: List[Tuple] = [(0.0, 0, 0, lo + i, 0, lo + i, 0)
+                         for i in range(nloc)]
+    streams: Dict[Tuple[int, int, int, str], Tuple[int, float]] = {}
+    wbases: Dict[Tuple, int] = {}
+    floors: List[float] = []
+    occurrence: Dict[Tuple[int, int], int] = {}
+    unresolved: Dict[Tuple[int, int], bool] = {}
+    ubound: List[Tuple] = []    # (bound_t, c, -1, -1, rank, nid), lazy-pruned
+
+    batch = _Batch(tl_on)
+    state = {"stop": False, "ninj": 0, "grants": 0,
+             "batches": 0, "blocked": 0, "granted": 0}
+
+    def flush() -> None:
+        if len(batch) or batch.bases:
+            conn.send(("B", batch.wire()))
+            state["batches"] += 1
+            batch.__init__(tl_on)
+
+    def handle(msg: Tuple) -> None:
+        tag = msg[0]
+        if tag == "I":
+            _, n, e, a, p, j, r, nid = msg
+            for x in range(n):
+                unresolved.pop((r[x], nid[x]), None)
+                heapq.heappush(heap, (e[x], a[x], p[x], j[x], 1, r[x],
+                                      nid[x]))
+            state["ninj"] += n
+        elif tag == "G":
+            state["grants"] += msg[1]
+            state["granted"] += msg[1]
+        elif tag == "S":
+            state["stop"] = True
+
+    def horizon() -> Optional[Tuple]:
+        while ubound:
+            b = ubound[0]
+            if (b[4], b[5]) in unresolved:
+                return b
+            heapq.heappop(ubound)
+        return None
+
+    k = 0                       # pop counter: pop k is the k-th record
+    since_flush = 0
+    while not state["stop"]:
+        if not (k & _POLL_MASK):
+            while conn.poll():
+                handle(conn.recv())
+                if state["stop"]:
+                    break
+            if state["stop"]:
+                break
+        if not heap:
+            flush()
+            conn.send(("D", state["ninj"]))
+            handle(conn.recv())
+            continue
+        force_flush = False
+        b = horizon()
+        if b is not None and not (heap[0][:4] < b[:4]):
+            if state["grants"]:
+                # authority says our next pop IS the globally-next event
+                state["grants"] -= 1
+                force_flush = True
+            else:
+                state["blocked"] += 1
+                flush()
+                conn.send(("W", state["ninj"]))
+                handle(conn.recv())
+                continue
+        t, _i, _ph, _m, kind, rank, nid = heapq.heappop(heap)
+        k += 1
+        since_flush += 1
+        li = rank - lo
+        f = feeders[li]
+        if f is None:
+            f = feeders[li] = src.feeder(rank)
+        if kind == 1:
+            f.mark_completed(nid)
+            npush = credits.pops(t, li, f)
+            for m in range(npush):
+                heapq.heappush(heap, (t, k, 0, m, 0, rank, 0))
+            batch.t.append(t)
+            batch.k.append(_R_BORING)
+            batch.np.append(npush)
+            for _ in range(npush):
+                batch.pt.append(t)
+        else:
+            # wake pop: replicate the engine's kind-0 branch locally
+            node = None
+            if fault is not None:
+                alive = fault.next_alive(rank, t)
+                if alive is None:
+                    batch.t.append(t)
+                    batch.k.append(_R_BORING)
+                    batch.np.append(0)
+                    node = False        # dead forever: no issue, no pushes
+                elif alive > t:
+                    heapq.heappush(heap, (alive, k, 0, 0, 0, rank, 0))
+                    batch.t.append(t)
+                    batch.k.append(_R_BORING)
+                    batch.np.append(1)
+                    batch.pt.append(alive)
+                    node = False
+            if node is None:
+                # matches the engine's has_pending / next_ready gating:
+                # drained feeders and blocked-on-in-flight ranks both make
+                # the wake a no-op, re-woken by a later completion
+                node = f.next_ready() if f.has_pending() else None
+                if node is None:
+                    batch.t.append(t)
+                    batch.k.append(_R_BORING)
+                    batch.np.append(0)
+                    node = False
+            if node is False:
+                pass
+            elif node.type in COMM_NODE_TYPES:
+                skey = (rank, node.comm_group, int(node.comm_type),
+                        node.comm_tag or "")
+                stream = streams.get(skey)
+                if stream is None:
+                    if pgroups is not None:
+                        pg = pgroups[li].get(node.comm_group)
+                        ranks_t = tuple(r for r in (pg.ranks
+                                                    if pg and pg.ranks
+                                                    else range(n_ranks))
+                                        if r < n_ranks)
+                        members = _compress_members(ranks_t)
+                        group = len(ranks_t)
+                    else:
+                        # synth skeletons declare one world-spanning group;
+                        # never materialize it (at a million ranks that
+                        # tuple is the whole memory budget)
+                        ranks_t = None
+                        members = ("R", 0, n_ranks)
+                        group = n_ranks
+                    base = (skey[2], members, skey[3])
+                    wbid = wbases.get(base)
+                    if wbid is None:
+                        wbid = wbases[base] = len(wbases)
+                        floor = net.lookahead(node.comm_type, group,
+                                              ranks_t) if la_on else 0.0
+                        floors.append(floor)
+                        batch.bases.append((wbid, skey[2], members, skey[3],
+                                            floor))
+                    stream = streams[skey] = (wbid, floors[wbid])
+                wbid, floor = stream
+                okey = (rank, wbid)
+                occ = occurrence.get(okey, 0)
+                occurrence[okey] = occ + 1
+                bts = float(node.comm_bytes)
+                unresolved[(rank, node.id)] = True
+                heapq.heappush(ubound, ((t + floor) if bts > 0.0 else t,
+                                        k, -1, -1, rank, node.id))
+                npush = credits.pops(t, li, f)
+                for m in range(npush):
+                    heapq.heappush(heap, (t, k, 0, m, 0, rank, 0))
+                batch.t.append(t)
+                batch.k.append(_R_ARRIVAL)
+                batch.np.append(npush)
+                for _ in range(npush):
+                    batch.pt.append(t)
+                batch.ar.append(rank)
+                batch.ab.append(wbid)
+                batch.ao.append(occ)
+                batch.an.append(node.id)
+                batch.az.append(bts)
+            else:
+                dur = node.duration_micros * 1e-6
+                dur /= speed.get(rank, 1.0)
+                if fault is None:
+                    end: Optional[float] = t + dur
+                    stall = 0.0
+                else:
+                    end, stall = fault.compute_end(rank, t, dur)
+                if end is None:
+                    batch.t.append(t)
+                    batch.k.append(_R_DIES)
+                    batch.np.append(0)
+                    batch.dr.append(rank)
+                    batch.ds.append(stall)
+                else:
+                    heapq.heappush(heap, (end, k, 0, 0, 1, rank, node.id))
+                    batch.t.append(t)
+                    batch.k.append(_R_COMPUTE)
+                    batch.np.append(1)
+                    batch.pt.append(end)
+                    batch.cr.append(rank)
+                    batch.cd.append(dur)
+                    batch.ce.append(end)
+                    batch.cs.append(stall)
+                    if batch.names is not None:
+                        batch.names.append(
+                            node.name if (tl_limit is None
+                                          or rank < tl_limit) else "")
+        if force_flush or since_flush >= _FLUSH_RECORDS:
+            flush()
+            since_flush = 0
+    flush()
+    conn.send(("F", {"events": k, "batches": state["batches"],
+                     "blocked": state["blocked"],
+                     "granted": state["granted"]}))
+
+
+# ================================================================== authority
+
+class _Base:
+    """Globally-interned collective base (comm_type, members, tag)."""
+
+    __slots__ = ("bid", "ctype", "members", "ranks", "group", "floor")
+
+    def __init__(self, bid: int, ctype: int, members: Any, floor: float,
+                 link_mode: bool) -> None:
+        self.bid = bid
+        self.ctype = CollectiveType(ctype)
+        if isinstance(members, tuple) and members[:1] == ("R",):
+            m: Any = range(members[1], members[2])
+            self.members = tuple(m) if link_mode else m
+        else:
+            self.members = members
+        self.ranks: Any = self.members
+        self.group = len(self.members)
+        self.floor = floor
+
+
+class _Recs:
+    """Cursor over one received batch's columnar arrays."""
+
+    __slots__ = ("n", "w", "i", "cpt", "cc", "cd", "ca")
+
+    def __init__(self, wire: Tuple) -> None:
+        self.n = wire[0]
+        self.w = wire
+        self.i = 0
+        self.cpt = 0    # flat push-times cursor
+        self.cc = 0     # compute cursor (also indexes the names list)
+        self.cd = 0     # dies cursor
+        self.ca = 0     # arrival cursor
+
+
+class _Worker:
+    __slots__ = ("wid", "lo", "hi", "proc", "conn", "batches", "marker",
+                 "sent_inj", "jnext", "consumed", "wmap", "final")
+
+    def __init__(self, wid: int, lo: int, hi: int) -> None:
+        self.wid = wid
+        self.lo = lo
+        self.hi = hi
+        self.proc = None
+        self.conn = None
+        self.batches: List[_Recs] = []
+        self.marker: Optional[Tuple[str, int]] = None
+        self.sent_inj = 0
+        self.jnext = 0
+        self.consumed = 0
+        self.wmap: List[_Base] = []     # worker-local bid -> global base
+        self.final: Optional[Dict[str, Any]] = None
+
+
+class ShardedSimulator:
+    """Partitioned, conservatively-synchronized, bit-identical simulation.
+
+    Drop-in for :class:`Simulator` — same ``fabric`` / ``cfg`` / ``run``
+    contract, same :class:`SimResult`, plus ``jobs`` worker processes.
+    ``source`` is either a sequence of per-rank ``ExecutionTrace`` objects
+    or a :class:`SynthSource` (the only way to reach million-rank scale).
+    After :meth:`run`, :attr:`stats` holds shard-layer accounting
+    (partitions, grants, batches, setup/run wall).
+    """
+
+    def __init__(self, source, fabric: Fabric,
+                 cfg: Optional[SimConfig] = None, jobs: int = 2) -> None:
+        self.fabric = fabric
+        self.cfg = cfg or SimConfig()
+        validate_speed_factors(self.cfg.speed_factors)
+        self.jobs = max(1, int(jobs))
+        if isinstance(source, SynthSource):
+            self.source: Any = source
+            self.n_ranks = source.world_size
+            self.traces: Optional[List[ExecutionTrace]] = None
+        else:
+            self.traces = list(source)
+            self.source = None
+            self.n_ranks = len(self.traces)
+        self.stats: Dict[str, Any] = {}
+        self._fault = None
+        if self.cfg.fault_plan is not None:
+            from ..faults import FaultRuntime, as_fault_plan
+            self._plan = as_fault_plan(self.cfg.fault_plan)
+            self._fault = FaultRuntime.build(self._plan)
+        self._net = fabric.network_model(self.cfg.collective_model,
+                                         fault=self._fault)
+
+    # ------------------------------------------------------------- fast path
+    def _unsharded(self, max_events: int) -> SimResult:
+        traces = self.traces
+        if traces is None:
+            traces = [self.source.materialize(r)
+                      for r in range(self.n_ranks)]
+        self.stats = {"mode": "unsharded", "jobs": 1, "partitions": 1}
+        return Simulator(traces, self.fabric, self.cfg).run(
+            max_events=max_events)
+
+    def run(self, max_events: int = 2_000_000) -> SimResult:
+        parts = partition_ranks(self.n_ranks, self.jobs)
+        if len(parts) <= 1 or self.n_ranks < 2:
+            return self._unsharded(max_events)
+        t_setup = time.perf_counter()
+        workers = self._spawn(parts)
+        try:
+            t_run = time.perf_counter()
+            result = self._replay(workers, max_events)
+            self.stats["setup_s"] = round(t_run - t_setup, 6)
+            self.stats["run_s"] = round(time.perf_counter() - t_run, 6)
+            return result
+        finally:
+            for h in workers:
+                if h.proc is not None and h.proc.is_alive():
+                    h.proc.terminate()
+                if h.conn is not None:
+                    try:
+                        h.conn.close()
+                    except Exception:      # noqa: BLE001
+                        pass
+            for h in workers:
+                if h.proc is not None:
+                    h.proc.join(timeout=10)
+
+    # ----------------------------------------------------------------- setup
+    def _spawn(self, parts: List[Tuple[int, int]]) -> List[_Worker]:
+        from ..explore.runner import spawn_context
+        ctx = spawn_context()
+        mode = self.fabric.mode
+        if mode == "link":
+            wfabric = self.fabric            # workers route for lookahead
+        else:
+            wfabric = Fabric(self.fabric.name, None, self.fabric.link_bw,
+                             self.fabric.latency_s,
+                             self.fabric.capacity_flows,
+                             self.fabric.a2a_hop_factor, mode)
+        fault = self._fault
+        la_on = fault is None or (not fault.has_crashes
+                                  and not (mode == "link"
+                                           and fault.has_link_events))
+        rec = self.cfg.timeline
+        tl_limit = getattr(rec, "rank_limit", None) if rec is not None \
+            else None
+        plan_dict = self._plan.to_dict() if fault is not None else None
+        workers: List[_Worker] = []
+        for wid, (lo, hi) in enumerate(parts):
+            h = _Worker(wid, lo, hi)
+            if self.traces is not None:
+                source = ("traces", self.traces[lo:hi])
+            else:
+                source = ("synth", self.source)
+            init = {"wid": wid, "lo": lo, "hi": hi, "n_ranks": self.n_ranks,
+                    "fabric": wfabric, "cmodel": self.cfg.collective_model,
+                    "speed": dict(self.cfg.speed_factors),
+                    "fault_plan": plan_dict, "la_on": la_on,
+                    "tl_on": rec is not None, "tl_limit": tl_limit,
+                    "source": source}
+            h.conn, child = ctx.Pipe(duplex=True)
+            h.proc = ctx.Process(target=_worker_main, args=(child, init),
+                                 daemon=True)
+            h.proc.start()
+            child.close()
+            workers.append(h)
+        return workers
+
+    # ---------------------------------------------------------------- replay
+    def _replay(self, workers: List[_Worker],      # noqa: C901 — mirrors the
+                max_events: int) -> SimResult:     # engine loop structurally
+        from multiprocessing.connection import wait as conn_wait
+        cfg = self.cfg
+        fabric = self.fabric
+        net = self._net
+        n_ranks = self.n_ranks
+        link_mode = net.mode == "link"
+        starts = [h.lo for h in workers]
+        by_conn = {h.conn: h for h in workers}
+
+        def wof(r: int) -> int:
+            return bisect_right(starts, r) - 1
+
+        rank_time = [0.0] * n_ranks
+        compute_busy = 0.0
+        coll_time: Dict[str, float] = {}
+        coll_bytes: Dict[str, float] = {}
+        flows: List[FlowRecord] = []
+        util: List[Tuple[float, float]] = []
+        findex = _FlowIndex()
+        pending: Dict[Tuple, Dict[int, Tuple[int, float]]] = {}
+        bases: Dict[Tuple, _Base] = {}
+        bases_by_id: List[_Base] = []
+        floor_used: set = set()
+
+        # stub heap entry: (t, seq, w); w == -2 marks a timeout event whose
+        # payload sits in timeout_payload keyed by seq
+        heap: List[Tuple[float, int, int]] = [
+            (0.0, r, wof(r)) for r in range(n_ranks)]
+        heapq.heapify(heap)
+        timeout_payload: Dict[int, Tuple] = {}
+        events = 0
+        seq = n_ranks
+
+        fault = self._fault
+        aborted_reason: Optional[str] = None
+        fstats: Optional[Dict[str, Any]] = None
+        issued: Optional[array] = None
+        totals: Optional[List[int]] = None
+        if fault is not None:
+            fstats = {"plan": fault.plan.name, "policy": fault.policy,
+                      "collective_timeout_s": fault.timeout_s,
+                      "plan_events": len(fault.plan.events),
+                      "slowdown_extra_s": 0.0, "crash_stall_s": 0.0,
+                      "timeouts": 0, "collectives_shrunk": 0, "rejoins": 0,
+                      "recovery_latency_s": 0.0}
+            pending_nodes: Dict[Tuple, float] = {}    # key -> arming bytes
+            shrunk_end: Dict[Tuple, float] = {}
+            excluded: Dict[Any, set] = {}
+            issued = array("q", bytes(8 * n_ranks))
+            if self.traces is not None:
+                totals = [len(t) for t in self.traces]
+            else:
+                totals = [self.source.node_count()] * n_ranks
+
+        rec = cfg.timeline
+        met = cfg.metrics
+        m_heap = m_flows = m_coll = None
+        met_t0 = 0.0
+        if rec is not None:
+            rec.begin(n_ranks, fabric=fabric)
+            if fault is not None:
+                rec.record_fault_plan(fault)
+        if met is not None:
+            met_t0 = met.now()
+            met.counter("repro_sim_runs_total", "Simulator runs").inc()
+            m_heap = met.gauge("repro_sim_heap_depth",
+                               "Event-heap depth (sampled every 64 events)")
+            m_flows = met.gauge(
+                "repro_sim_live_flows",
+                "Concurrent flow records on the fabric (sampled)")
+            m_coll = met.histogram("repro_sim_collective_seconds",
+                                   "Priced collective durations",
+                                   labels=("kind",))
+            met.counter("repro_shard_workers", "Sharded-run workers"
+                        ).inc(len(workers))
+        rec_links = rec is not None and link_mode
+        tl_limit = getattr(rec, "rank_limit", None) if rec is not None \
+            else None
+        grants = 0
+        injections = 0
+
+        # --------------------------------------------------- protocol plumbing
+        def dispatch(h: _Worker, msg: Tuple) -> None:
+            tag = msg[0]
+            if tag == "B":
+                wire = msg[1]
+                for wbid, ctype, members, tag_, floor in wire[17]:
+                    ckey = (ctype, members, tag_)
+                    gb = bases.get(ckey)
+                    if gb is None:
+                        gb = bases[ckey] = _Base(len(bases_by_id), ctype,
+                                                 members, floor, link_mode)
+                        bases_by_id.append(gb)
+                    assert wbid == len(h.wmap)
+                    h.wmap.append(gb)
+                if wire[0]:
+                    h.batches.append(_Recs(wire))
+                    h.marker = None
+            elif tag in ("W", "D"):
+                h.marker = (tag, msg[1])
+            elif tag == "E":
+                raise RuntimeError(
+                    f"shard worker {h.wid} failed: {msg[1]}\n{msg[2]}")
+            elif tag == "F":
+                h.final = msg[1]
+
+        def pump(need: _Worker) -> None:
+            nonlocal grants
+            deadline = time.monotonic() + _PUMP_TIMEOUT_S
+            while not need.batches:
+                m = need.marker
+                if m is not None and m[1] == need.sent_inj:
+                    if m[0] == "D":
+                        raise RuntimeError(
+                            f"shard protocol error: worker {need.wid} "
+                            f"drained but the authority expects its event")
+                    need.conn.send(("G", 1))
+                    need.marker = None
+                    grants += 1
+                ready = conn_wait(list(by_conn),
+                                  timeout=max(0.1, deadline
+                                              - time.monotonic()))
+                if not ready:
+                    # quiet is only a stall if the worker actually died; a
+                    # live worker may legitimately go silent for minutes
+                    # (e.g. generating 100k+ synthetic ranks on an
+                    # oversubscribed host) before its first batch flush
+                    if need.proc.is_alive():
+                        deadline = time.monotonic() + _PUMP_TIMEOUT_S
+                        continue
+                    raise RuntimeError(
+                        f"sharded run stalled: worker {need.wid} exited "
+                        f"without a message while the authority waited "
+                        f"{_PUMP_TIMEOUT_S:.0f}s on its events")
+                for c in ready:
+                    h = by_conn[c]
+                    try:
+                        msg = c.recv()
+                    except EOFError:
+                        raise RuntimeError(
+                            f"shard worker {h.wid} died unexpectedly")
+                    dispatch(h, msg)
+
+        inj_buf: Dict[int, List[array]] = {}
+
+        def queue_inj(v: int, end: float, after: int, phase: int, r: int,
+                      nid: int) -> None:
+            buf = inj_buf.get(v)
+            if buf is None:
+                buf = inj_buf[v] = [array("d"), array("q"), array("b"),
+                                    array("q"), array("q"), array("q")]
+            h = workers[v]
+            buf[0].append(end)
+            buf[1].append(after)
+            buf[2].append(phase)
+            buf[3].append(h.jnext)
+            h.jnext += 1
+            buf[4].append(r)
+            buf[5].append(nid)
+
+        def flush_inj() -> None:
+            nonlocal injections
+            for v, buf in inj_buf.items():
+                n = len(buf[0])
+                h = workers[v]
+                h.conn.send(("I", n, buf[0], buf[1], buf[2], buf[3],
+                             buf[4], buf[5]))
+                h.sent_inj += n
+                injections += n
+            inj_buf.clear()
+
+        # --------------------------------------------------------- launches
+        def launch(pend: Dict[int, Tuple[int, float]], base: _Base,
+                   comm_bytes: float, group: int, ranks: Any,
+                   key: Tuple, trigger_w: int) -> float:
+            nonlocal seq
+            start = max(at for _, at in pend.values())
+            if isinstance(ranks, tuple):
+                pricing_ranks = ranks
+            elif rec is not None:
+                pricing_ranks = tuple(ranks)
+            else:
+                # analytic pricing ignores member identity entirely (closed
+                # forms over group size) — don't materialize a
+                # million-element tuple per launch just to pass it through
+                pricing_ranks = None
+            dur, throttle, kindname = comm_time(
+                net, cfg, fabric, base.ctype, comm_bytes, group, start,
+                findex, pricing_ranks)
+            if key in floor_used:
+                floor_used.discard(key)
+                if dur < base.floor:
+                    raise RuntimeError(
+                        f"sharded lookahead violated: {kindname} over "
+                        f"{group} ranks priced {dur:.3e}s below its "
+                        f"payload-free floor {base.floor:.3e}s (mixed "
+                        f"positive/zero member payloads?) — rerun "
+                        f"single-process or with lookahead disabled")
+            end = start + dur
+            coll_time[kindname] = coll_time.get(kindname, 0.0) + dur
+            coll_bytes[kindname] = (coll_bytes.get(kindname, 0.0)
+                                    + comm_bytes)
+            nf = cfg.collective_model.flow_count(base.ctype, group)
+            findex.add(end, nf, kindname == "AllReduce")
+            flows.append(FlowRecord(kindname, start, end, comm_bytes,
+                                    group, throttle))
+            if rec is not None:
+                phases = None
+                if rec_links:
+                    base_ts = net.phase_times(base.ctype, comm_bytes,
+                                              group, pricing_ranks)
+                    if base_ts:
+                        labels = describe_phases(
+                            base.ctype, group,
+                            cfg.collective_model.algorithm)
+                        if len(labels) != len(base_ts):
+                            labels = tuple(f"phase {i + 1}/{len(base_ts)}"
+                                           for i in range(len(base_ts)))
+                        phases = [(lb, bt * throttle)
+                                  for lb, bt in zip(labels, base_ts)]
+                rec.collective(kindname, pend, start, end, comm_bytes,
+                               pricing_ranks, throttle, phases)
+                if rec_links:
+                    for li_, fr in net.links_touched(base.ctype, group,
+                                                     pricing_ranks):
+                        rec.link_window(li_, start, end, fr * comm_bytes)
+            if m_coll is not None:
+                m_coll.observe(dur, kind=kindname)
+            for r, (nid, _) in pend.items():
+                rank_time[r] = max(rank_time[r], end)
+                v = wof(r)
+                seq += 1
+                heapq.heappush(heap, (end, seq, v))
+                queue_inj(v, end, workers[v].consumed,
+                          -1 if v == trigger_w else 1, r, nid)
+            flush_inj()
+            return end
+
+        # -------------------------------------------------------- main loop
+        while heap and events < max_events:
+            t, s0, w = heap[0]
+            if w >= 0 and not workers[w].batches:
+                pump(workers[w])
+                continue
+            heapq.heappop(heap)
+            events += 1
+            if w == -2:
+                # rendezvous timeout (fault injection): engine kind-2 branch
+                key, members = timeout_payload.pop(s0)
+                pend = pending.get(key)
+                if pend is None:
+                    continue
+                missing = [m for m in members if m not in pend]
+                if not missing or not all(fault.is_dead(m, t)
+                                          for m in missing):
+                    continue
+                base = bases_by_id[key[0]]
+                arm_bytes = pending_nodes[key]
+                fstats["timeouts"] += 1
+                if rec is not None:
+                    rec.mark(min(pend), t, "fault:rendezvous_timeout")
+                fstats["recovery_latency_s"] += (
+                    t - max(at for _, at in pend.values()))
+                if fault.policy == "abort":
+                    aborted_reason = (
+                        f"{COLL_NAME.get(base.ctype, 'Comm')} over ranks "
+                        f"{list(members)} timed out at t={t:.6f}s "
+                        f"waiting for dead rank(s) {missing} "
+                        f"(collective_timeout_s={fault.timeout_s})")
+                    break
+                live = tuple(sorted(pend))
+                shrunk_end[key] = launch(pend, base, arm_bytes, len(live),
+                                         live, key, -2)
+                excluded.setdefault(members, set()).update(missing)
+                fstats["collectives_shrunk"] += 1
+                if rec is not None:
+                    rec.mark(min(pend), t, "fault:shrink")
+                del pending[key]
+                pending_nodes.pop(key, None)
+                continue
+
+            h = workers[w]
+            b = h.batches[0]
+            wire = b.w
+            i = b.i
+            rkind = wire[2][i]
+            rt = wire[1][i]
+            npush = wire[3][i]
+            if rt != t:
+                raise RuntimeError(
+                    f"shard replay desync: worker {w} record at t={rt!r} "
+                    f"but stub heap expected t={t!r}")
+            pt0 = b.cpt
+            b.cpt += npush
+            b.i += 1
+            h.consumed += 1
+            if b.i == b.n:
+                h.batches.pop(0)
+
+            if rkind == _R_BORING:
+                pts = wire[4]
+                for x in range(npush):
+                    seq += 1
+                    heapq.heappush(heap, (pts[pt0 + x], seq, w))
+                continue
+
+            if rkind == _R_COMPUTE:
+                cc = b.cc
+                b.cc += 1
+                r = wire[5][cc]
+                dur = wire[6][cc]
+                end = wire[7][cc]
+                stall = wire[8][cc]
+                if fault is not None:
+                    fstats["crash_stall_s"] += stall
+                    fstats["slowdown_extra_s"] += (end - t) - stall - dur
+                    issued[r] += 1
+                compute_busy += dur
+                if end > rank_time[r]:
+                    rank_time[r] = end
+                seq += 1
+                heapq.heappush(heap, (end, seq, w))
+                if rec is not None and (tl_limit is None or r < tl_limit):
+                    names = wire[16]
+                    rec.compute(r, t, end, names[cc] if names else "")
+            elif rkind == _R_DIES:
+                cd = b.cd
+                b.cd += 1
+                r = wire[9][cd]
+                fstats["crash_stall_s"] += wire[10][cd]
+                issued[r] += 1
+                if rec is not None:
+                    rec.mark(r, t, "fault:dies_mid_op")
+                continue
+            else:   # _R_ARRIVAL
+                ca = b.ca
+                b.ca += 1
+                r = wire[11][ca]
+                base = h.wmap[wire[12][ca]]
+                occ = wire[13][ca]
+                nid = wire[14][ca]
+                bts = wire[15][ca]
+                key = (base.bid, occ)
+                if fault is not None:
+                    issued[r] += 1
+                if fault is not None and key in shrunk_end:
+                    # late rejoin: sync to the shrunk group's end time
+                    end = max(t, shrunk_end[key])
+                    if end > rank_time[r]:
+                        rank_time[r] = end
+                    seq += 1
+                    heapq.heappush(heap, (end, seq, w))
+                    queue_inj(w, end, h.consumed, -1, r, nid)
+                    flush_inj()
+                    fstats["rejoins"] += 1
+                    if rec is not None:
+                        rec.mark(r, t, "fault:rejoin")
+                    exc = excluded.get(base.members)
+                    if exc is not None:
+                        exc.discard(r)
+                        if not exc:
+                            del excluded[base.members]
+                    pts = wire[4]
+                    for x in range(npush):
+                        seq += 1
+                        heapq.heappush(heap, (pts[pt0 + x], seq, w))
+                    continue
+                pend = pending.setdefault(key, {})
+                pend[r] = (nid, t)
+                if bts > 0.0 and base.floor > 0.0:
+                    floor_used.add(key)
+                if len(pend) == base.group:
+                    launch(pend, base, bts, base.group, base.ranks, key, w)
+                    del pending[key]
+                    if fault is not None:
+                        pending_nodes.pop(key, None)
+                elif fault is not None and fault.has_crashes:
+                    members = base.members
+                    missing = [m for m in members if m not in pend]
+                    exc = excluded.get(members)
+                    if exc and all(m in exc for m in missing):
+                        live = tuple(sorted(pend))
+                        shrunk_end[key] = launch(pend, base, bts,
+                                                 len(live), live, key, w)
+                        fstats["collectives_shrunk"] += 1
+                        if rec is not None:
+                            rec.mark(min(pend), t, "fault:shrink")
+                        del pending[key]
+                    elif all(fault.is_dead(m, t) for m in missing):
+                        pending_nodes[key] = bts
+                        seq += 1
+                        heapq.heappush(heap,
+                                       (t + fault.timeout_s, seq, -2))
+                        timeout_payload[seq] = (key, members)
+                pts = wire[4]
+                for x in range(npush):
+                    seq += 1
+                    heapq.heappush(heap, (pts[pt0 + x], seq, w))
+
+            if events % 64 == 0:
+                cap = max(fabric.capacity_flows, 1)
+                util.append((t, min(findex.flows_at(t) / cap, 1.0)))
+                if met is not None:
+                    m_heap.set(float(len(heap)))
+                    m_flows.set(float(findex.flows_at(t)))
+                    met.maybe_snapshot()
+
+        # ------------------------------------------------------- teardown
+        worker_stats: List[Dict[str, Any]] = []
+        for h in workers:
+            h.conn.send(("S",))
+        for h in workers:
+            while h.final is None:
+                try:
+                    msg = h.conn.recv()
+                except EOFError:
+                    break
+                dispatch(h, msg)
+            worker_stats.append(h.final or {})
+        self.stats = {
+            "mode": "sharded", "jobs": len(workers),
+            "partitions": [(h.lo, h.hi) for h in workers],
+            "grants": grants, "injections": injections,
+            "worker_batches": sum(s.get("batches", 0)
+                                  for s in worker_stats),
+            "worker_blocked": sum(s.get("blocked", 0)
+                                  for s in worker_stats),
+            "workers": worker_stats,
+        }
+        if met is not None:
+            met.counter("repro_shard_grants_total",
+                        "Lockstep grants issued to blocked shard workers"
+                        ).inc(grants)
+            met.counter("repro_shard_injections_total",
+                        "Cross-partition completion injections"
+                        ).inc(injections)
+
+        makespan = max(rank_time) if rank_time else 0.0
+        total_comm = sum(coll_time.values())
+        per_rank_compute = compute_busy / max(n_ranks, 1)
+        exposed = max(0.0, makespan - per_rank_compute)
+        if fault is not None:
+            fstats["dead_ranks"] = fault.dead_forever_ranks()
+            fstats["unfinished_ranks"] = sorted(
+                r for r in range(n_ranks) if issued[r] < totals[r])
+            fstats["lost_time_s"] = (fstats["crash_stall_s"]
+                                     + fstats["slowdown_extra_s"]
+                                     + fstats["recovery_latency_s"])
+            if net.mode == "analytic" and fault.has_link_events:
+                fstats["link_events_ignored"] = True
+        link_stats = net.stats(wall_s=makespan)
+        if rec is not None:
+            rec.finish(makespan)
+        if met is not None:
+            met.counter("repro_sim_events_total",
+                        "Engine events processed").inc(events)
+            met.gauge("repro_sim_makespan_seconds",
+                      "Simulated makespan of the last run").set(makespan)
+            wall = met.now() - met_t0
+            if wall > 0:
+                met.gauge("repro_sim_events_per_second",
+                          "Engine throughput of the last run"
+                          ).set(events / wall)
+            if link_stats:
+                tc = link_stats.get("time_cache", {})
+                met.counter("repro_sim_pricing_cache_hits_total",
+                            "LinkModel time-cache hits"
+                            ).inc(tc.get("hits", 0))
+                met.counter("repro_sim_pricing_cache_misses_total",
+                            "LinkModel time-cache misses"
+                            ).inc(tc.get("misses", 0))
+            met.maybe_snapshot()
+        return SimResult(
+            makespan_s=makespan,
+            per_rank_finish_s=rank_time,
+            collective_time_s=coll_time,
+            collective_bytes=coll_bytes,
+            flows=flows,
+            compute_busy_s=per_rank_compute,
+            exposed_comm_s=min(exposed, total_comm),
+            link_util_timeline=util,
+            events=events,
+            link_stats=link_stats,
+            aborted=aborted_reason is not None,
+            abort_reason=aborted_reason,
+            fault_stats=fstats,
+            timeline=rec,
+        )

@@ -43,7 +43,7 @@ def _torus_dims(n: int) -> "tuple[int, int]":
 @dataclass
 class Fabric:
     name: str
-    graph: InfraGraph
+    graph: "InfraGraph | None"
     link_bw: float                   # bytes/s per direction per link
     latency_s: float
     capacity_flows: int              # concurrent full-rate flows absorbed
@@ -53,10 +53,33 @@ class Fabric:
     @classmethod
     def build(cls, name: str, n: int, link_bw: float = TPU_V5E["ici_link_bw"],
               latency_s: float = TPU_V5E["ici_latency_s"],
-              mode: str = "analytic") -> "Fabric":
+              mode: str = "analytic",
+              materialize_graph: bool = True) -> "Fabric":
         if mode not in FIDELITIES:
             raise ValueError(
                 f"unknown fidelity {mode!r}; options: {FIDELITIES}")
+        if not materialize_graph:
+            # fleet-scale analytic fabrics (sim.shard's million-rank path):
+            # pricing only reads the scalar summary, so skip building the
+            # O(n) node/link graph that nothing would ever traverse
+            if mode != "analytic":
+                raise ValueError(
+                    "materialize_graph=False requires mode='analytic' — "
+                    "link fidelity routes over the graph")
+            if name == "ring":
+                return cls(name, None, link_bw, latency_s, capacity_flows=n,
+                           a2a_hop_factor=max(n / 4.0, 1.0), mode=mode)
+            if name == "fully_connected":
+                return cls(name, None, link_bw / max(n - 1, 1), latency_s,
+                           capacity_flows=n * (n - 1), mode=mode)
+            if name in ("switch", "clos"):
+                return cls(name, None, link_bw, latency_s, capacity_flows=n,
+                           mode=mode)
+            if name == "tpu_pod":
+                _torus_dims(n)      # same validation as the material path
+                return cls(name, None, link_bw, latency_s,
+                           capacity_flows=2 * n, mode=mode)
+            raise KeyError(f"unknown topology {name!r}; have {TOPOLOGIES}")
         if name == "ring":
             # analytic mode: all-to-all traffic crosses ~n/4 hops on average,
             # sharing the intermediate ring links (switch/FC deliver

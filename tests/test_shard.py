@@ -1,0 +1,170 @@
+"""Partition-invariance matrix for the sharded simulator (repro.sim.shard).
+
+The contract under test: ``ShardedSimulator`` produces a ``SimResult``
+bit-identical to the single-process ``Simulator`` at ANY partition count —
+makespan, per-rank finishes, collective accounting, flows, utilization
+timeline, link-model cache counters, and fault statistics all included.
+The authority-replay design makes this hold by construction (workers only
+propose event order; the parent replays it with the same pricing and the
+same floating-point accumulation order as the engine), and this matrix is
+the proof: analytic and link fidelities, odd rank splits, and fault plans
+with cross-partition crash/restart all compared field-by-field.
+
+Worker processes use the spawn start method, so every test here goes
+through real process startup (~1s per sharded run on a small host); the
+traces are kept to a few hundred nodes per rank to bound the wall clock.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.core import generator
+from repro.faults import FaultPlan
+from repro.sim import (Fabric, ShardedSimulator, SimConfig, Simulator,
+                       SynthSource, partition_ranks)
+
+
+def norm(res):
+    """Every SimResult field that the bit-identity contract covers."""
+    return (res.makespan_s, tuple(res.per_rank_finish_s),
+            dict(res.collective_time_s), dict(res.collective_bytes),
+            tuple(res.flows), res.compute_busy_s, res.exposed_comm_s,
+            tuple(res.link_util_timeline), res.events, res.link_stats,
+            res.aborted, res.abort_reason, res.fault_stats)
+
+
+def assert_identical(sharded, base):
+    names = ("makespan", "per_rank_finish", "collective_time",
+             "collective_bytes", "flows", "compute_busy", "exposed_comm",
+             "link_util_timeline", "events", "link_stats", "aborted",
+             "abort_reason", "fault_stats")
+    for name, a, b in zip(names, norm(sharded), norm(base)):
+        assert a == b, f"sharded run diverged on {name}: {a!r} != {b!r}"
+
+
+def dp_traces(n=5):
+    return [generator.dp_allreduce_pattern(steps=3, layers=4, ranks=n,
+                                           rank=r) for r in range(n)]
+
+
+def moe_traces(n=6):
+    return [generator.moe_mixed_collectives(iters=3, ranks=n, rank=r)
+            for r in range(n)]
+
+
+def test_partition_ranks_contiguous_near_even():
+    assert partition_ranks(5, 2) == [(0, 3), (3, 5)]
+    assert partition_ranks(7, 3) == [(0, 3), (3, 5), (5, 7)]
+    assert partition_ranks(4, 1) == [(0, 4)]
+    # more parts than ranks clamps to one rank per partition
+    assert partition_ranks(3, 8) == [(0, 1), (1, 2), (2, 3)]
+    for n, p in ((1, 1), (64, 8), (10, 3)):
+        parts = partition_ranks(n, p)
+        assert parts[0][0] == 0 and parts[-1][1] == n
+        assert all(a[1] == b[0] for a, b in zip(parts, parts[1:]))
+
+
+def test_single_partition_takes_unsharded_fast_path():
+    traces = dp_traces()
+    base = Simulator(traces, Fabric.build("switch", 5), SimConfig()).run()
+    sh = ShardedSimulator(traces, Fabric.build("switch", 5), SimConfig(),
+                          jobs=1)
+    assert_identical(sh.run(), base)
+    assert sh.stats["mode"] == "unsharded"
+    assert sh.stats["partitions"] == 1
+
+
+@pytest.mark.parametrize("jobs", [2, 3, 8])
+def test_partition_invariance_analytic(jobs):
+    # jobs=2/3 are odd splits of 5 ranks; jobs=8 clamps to 1 rank/partition
+    traces = dp_traces()
+    base = Simulator(traces, Fabric.build("switch", 5), SimConfig()).run()
+    sh = ShardedSimulator(traces, Fabric.build("switch", 5), SimConfig(),
+                          jobs=jobs)
+    assert_identical(sh.run(), base)
+    assert sh.stats["mode"] == "sharded"
+    assert len(sh.stats["partitions"]) == min(jobs, 5)
+
+
+@pytest.mark.parametrize("jobs", [2, 3])
+def test_partition_invariance_link_fidelity(jobs):
+    # link mode: per-phase pricing, congestion, and the time-memo cache all
+    # live in the authority — even the cache hit/miss counters must match
+    traces = moe_traces()
+    base = Simulator(traces, Fabric.build("ring", 6, mode="link"),
+                     SimConfig()).run()
+    sh = ShardedSimulator(traces, Fabric.build("ring", 6, mode="link"),
+                          SimConfig(), jobs=jobs)
+    assert_identical(sh.run(), base)
+
+
+@pytest.mark.parametrize("jobs", [2, 3])
+def test_partition_invariance_cross_partition_faults(jobs):
+    # rank 1 dies for good; rank 3 crashes and rejoins — with jobs=2 the
+    # two crashes land in different partitions, with jobs=3 the restart
+    # rejoin crosses a partition boundary mid-run.  fault_stats equality is
+    # part of assert_identical.
+    plan = (FaultPlan(name="x", policy="shrink",
+                      collective_timeout_s=0.001)
+            .rank_crash(1, t=0.001)
+            .rank_crash(3, t=0.002, restart_after=0.004))
+    traces = dp_traces()
+    base = Simulator(traces, Fabric.build("switch", 5),
+                     SimConfig(fault_plan=plan)).run()
+    assert base.fault_stats and base.fault_stats.get("dead_ranks") == [1]
+    sh = ShardedSimulator(traces, Fabric.build("switch", 5),
+                          SimConfig(fault_plan=plan), jobs=jobs)
+    assert_identical(sh.run(), base)
+
+
+def test_synth_source_matches_materialized_traces():
+    # the streaming fleet source must price exactly like the same workload
+    # handed to the engine as concrete per-rank traces
+    from repro.synth import get_scenario
+    src = SynthSource(profile=get_scenario("serve-decode-burst").profile(),
+                      world_size=12, steps=2, ops_per_step=4, seed=7)
+    traces = [src.materialize(r) for r in range(12)]
+    base = Simulator(traces, Fabric.build("switch", 12), SimConfig()).run()
+    sh = ShardedSimulator(src, Fabric.build("switch", 12), SimConfig(),
+                          jobs=3)
+    assert_identical(sh.run(), base)
+
+
+def test_feeder_from_iter_matches_list_feeder():
+    from repro.core.feeder import ETFeeder
+    trace = generator.dp_allreduce_pattern(steps=2, layers=3, ranks=4,
+                                           rank=0)
+    a = ETFeeder(trace, policy="comm_priority")
+    b = ETFeeder.from_iter(iter(trace), total=len(trace),
+                           policy="comm_priority")
+    order_a, order_b = [], []
+    for f, order in ((a, order_a), (b, order_b)):
+        while f.has_pending():
+            node = f.next_ready()
+            assert node is not None
+            order.append(node.id)
+            f.mark_completed(node.id)
+    assert order_a == order_b
+
+
+def test_timeline_rank_sampling():
+    # --timeline-ranks N keeps only the N lowest rank ids' spans, the same
+    # deterministic elision rule viz.to_dot uses
+    from repro.obs import TimelineRecorder
+    traces = dp_traces(4)
+    full_cfg = SimConfig()
+    full_cfg.timeline = TimelineRecorder()
+    Simulator(traces, Fabric.build("switch", 4), full_cfg).run()
+    lim_cfg = SimConfig()
+    lim_cfg.timeline = TimelineRecorder(rank_limit=2)
+    Simulator(traces, Fabric.build("switch", 4), lim_cfg).run()
+    assert lim_cfg.timeline.stats()["rank_limit"] == 2
+
+    def span_ranks(rec):
+        # rank lanes use pid == rank id; fabric lanes sit at pid >= n_ranks
+        return {e["pid"] for e in rec.to_chrome()["traceEvents"]
+                if e["ph"] == "X" and e["pid"] < 4}
+
+    assert span_ranks(full_cfg.timeline) == {0, 1, 2, 3}
+    assert span_ranks(lim_cfg.timeline) <= {0, 1}
+    assert 0 < lim_cfg.timeline.n_spans < full_cfg.timeline.n_spans
