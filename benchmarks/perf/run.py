@@ -41,7 +41,8 @@ def main(argv=None) -> int:
                     baseline=ns.baseline, names=ns.names or None)
     path = write_bench(doc, ns.output)
     for name in ("perf_feeder", "perf_sim", "perf_netmodel", "perf_chkb",
-                 "perf_synth", "perf_explore", "perf_obs"):
+                 "perf_synth", "perf_explore", "perf_ingest", "perf_faults",
+                 "perf_obs", "perf_shard", "perf_serve"):
         if name in doc:
             print(f"[ok] {name:12s} ({doc[name]['bench_wall_s']}s)")
     sims = doc.get("perf_sim", {}).get("scenarios", [])
@@ -71,6 +72,12 @@ def main(argv=None) -> int:
         print(f"     explore: expand {explore['expand']['configs_per_sec']:.0f} "
               f"configs/sec; {sw['configs']}-config sweep cached replay "
               f"{sw['cache_speedup']}x cold ({sw['cached_executed']} re-sims)")
+    serve = doc.get("perf_serve", {})
+    if serve:
+        print(f"     serve: {serve['configs']}-config submit-to-report "
+              f"{serve['cold']['wall_s']}s cold / "
+              f"{serve['cached']['wall_s']}s cached; "
+              f"{serve['scrape']['scrapes_per_sec']:.0f} /metrics scrapes/sec")
     print(f"wrote {path}")
     return 0
 

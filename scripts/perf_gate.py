@@ -2,7 +2,7 @@
 """CI perf gate: fail when the hot paths regress vs the committed baseline.
 
 Runs ``python -m repro bench perf_feeder perf_sim perf_explore perf_ingest
-perf_faults perf_obs perf_shard``
+perf_faults perf_obs perf_shard perf_serve``
 (fresh numbers, no reference-engine baseline pass, results via the ``--json``
 sidecar — stdout is never parsed) and compares events/sec / nodes/sec /
 configs/sec against the committed ``BENCH_perf.json``.  Any row more than
@@ -27,7 +27,7 @@ _REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(_REPO_ROOT, "src"))
 
 GATED = ("perf_feeder", "perf_sim", "perf_explore", "perf_ingest",
-         "perf_faults", "perf_obs", "perf_shard")
+         "perf_faults", "perf_obs", "perf_shard", "perf_serve")
 
 
 def main(argv=None) -> int:

@@ -128,6 +128,43 @@ grep -q "3 simulated" "$tmp/explore_chaos.out"
 grep -q "retried" "$tmp/explore_chaos.out"
 test -f "$tmp/chaos.marker"
 
+echo "== serve-api (background daemon: submit, scrape, diff, SIGTERM) =="
+python -m repro serve-api --port 0 --port-file "$tmp/port" \
+  --state-dir "$tmp/serve_state" --cache-dir "$tmp/serve_cache" \
+  --workers 1 -q &
+serve_pid=$!
+for _ in $(seq 1 150); do test -f "$tmp/port" && break; sleep 0.2; done
+test -f "$tmp/port"
+read -r serve_host serve_port < "$tmp/port"
+base="http://$serve_host:$serve_port"
+# submit the explore step's study and poll to done (stdlib urllib; no curl
+# dependency in the minimal image)
+python - "$base" "$tmp/study.json" "$tmp/served_report.json" <<'PY'
+import json, sys, time, urllib.request
+base, spec_path, out = sys.argv[1:]
+req = urllib.request.Request(base + "/api/v1/sweeps",
+                             data=open(spec_path, "rb").read(),
+                             method="POST")
+jid = json.load(urllib.request.urlopen(req))["id"]
+deadline = time.monotonic() + 120
+while True:
+    st = json.load(urllib.request.urlopen(base + f"/api/v1/sweeps/{jid}"))
+    if st["state"] in ("done", "failed"):
+        break
+    assert time.monotonic() < deadline, st
+    time.sleep(0.1)
+assert st["state"] == "done", st
+with urllib.request.urlopen(base + f"/api/v1/sweeps/{jid}/report") as r:
+    open(out, "wb").write(r.read())
+with urllib.request.urlopen(base + "/metrics") as r:
+    open(out + ".prom", "wb").write(r.read())
+PY
+grep -q repro_sweep_runs_total "$tmp/served_report.json.prom"
+# the served report must be byte-identical to the offline CLI's --json
+diff "$tmp/report.json" "$tmp/served_report.json"
+kill -TERM "$serve_pid"
+wait "$serve_pid"   # non-zero exit (unclean drain) fails the smoke via -e
+
 echo "== ingest (Kineto golden -> profile -> sim closed loop) =="
 python -m repro ingest tests/data/mini_kineto.json -o "$tmp/ingested.chkb" -v
 python -m repro profile "$tmp/ingested.chkb" --sim > "$tmp/ingest_sim.out"

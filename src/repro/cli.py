@@ -416,7 +416,7 @@ def _cmd_synth(ns: argparse.Namespace) -> int:
 #: registry display order: pipeline taxonomy first, tool families after;
 #: unknown kinds (future registrations) sort alphabetically at the end
 _KIND_ORDER = ("source", "pass", "sink", "benchmark", "experiment",
-               "observe")
+               "observe", "service")
 
 
 def _cmd_stages(ns: argparse.Namespace) -> int:
@@ -529,6 +529,43 @@ def _cmd_explore(ns: argparse.Namespace) -> int:
               "(modeled fault outcomes; failing due to --strict)",
               file=sys.stderr)
         return 1
+    return 0
+
+
+def _cmd_serve_api(ns: argparse.Namespace) -> int:
+    import signal
+    import threading
+
+    from .serve_api import BenchmarkService
+
+    svc = BenchmarkService(host=ns.host, port=ns.port,
+                           state_dir=ns.state_dir, cache_dir=ns.cache_dir,
+                           workers=ns.workers, sweep_jobs=ns.jobs,
+                           timeout_s=ns.timeout_s, max_retries=ns.retries,
+                           quiet=ns.quiet)
+    host, port = svc.start()
+    if ns.port_file:
+        # atomic: smoke scripts poll for this file, then read the address
+        tmp = ns.port_file + ".tmp"
+        with open(tmp, "w") as fh:
+            fh.write(f"{host} {port}\n")
+        os.replace(tmp, ns.port_file)
+    if not ns.quiet:
+        print(f"serve-api: http://{host}:{port} "
+              f"(workers={svc.workers}, state={svc.state_dir})")
+        if svc.recovered:
+            print(f"serve-api: failed {len(svc.recovered)} job(s) "
+                  "interrupted by restart")
+    if threading.current_thread() is threading.main_thread():
+        # SIGTERM/SIGINT drain: in-flight sweeps finish, then exit
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            signal.signal(sig, lambda *_: svc.request_stop())
+    svc.wait()
+    if not ns.quiet:
+        print("serve-api: draining...", file=sys.stderr)
+    svc.stop(drain=True)
+    if not ns.quiet:
+        print("serve-api: stopped", file=sys.stderr)
     return 0
 
 
@@ -779,6 +816,34 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("-q", "--quiet", action="store_true",
                    help="suppress heartbeat and progress chatter")
     p.set_defaults(fn=_cmd_explore)
+
+    p = sub.add_parser("serve-api",
+                       help="live benchmark service (HTTP sweeps, SSE "
+                            "progress, fleet /metrics)")
+    p.add_argument("--host", default="127.0.0.1",
+                   help="bind address (default 127.0.0.1)")
+    p.add_argument("--port", type=int, default=8757,
+                   help="bind port (0 = ephemeral; default 8757)")
+    p.add_argument("--state-dir", default=".serve_api",
+                   help="job records live here (atomic JSON; finished "
+                        "reports survive restarts)")
+    p.add_argument("--cache-dir", default=".explore_cache",
+                   help="shared content-addressed run cache (repeat "
+                        "submissions do zero simulations)")
+    p.add_argument("--workers", type=int, default=2,
+                   help="concurrent sweeps (worker threads, default 2)")
+    p.add_argument("--jobs", type=int, default=1,
+                   help="worker processes per sweep (default 1 = in-thread)")
+    p.add_argument("--timeout-s", type=float, default=None,
+                   help="per-run wall-clock budget (parallel sweeps only)")
+    p.add_argument("--retries", type=int, default=2,
+                   help="max retries per run (default 2)")
+    p.add_argument("--port-file", metavar="PATH",
+                   help="write 'host port' here once bound (for scripts "
+                        "starting the daemon with --port 0)")
+    p.add_argument("-q", "--quiet", action="store_true",
+                   help="suppress startup banner and request log")
+    p.set_defaults(fn=_cmd_serve_api)
 
     return ap
 

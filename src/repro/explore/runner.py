@@ -382,45 +382,133 @@ def _retry_backoff_s(spec_seed: int, run_hash: str, attempt: int,
     return base_s * (2.0 ** (attempt - 1)) * (0.5 + u)
 
 
-class _Heartbeat:
-    """One-line stderr progress for long sweeps (``--heartbeat-s``; off by
-    default, silenced by ``--quiet``).  ETA comes from the observed
-    completion rate, cached rows included — a mostly-cached replay converges
-    to "done in 0s" immediately instead of extrapolating cold-run cost."""
+class SweepProgress:
+    """The sweep's single accounting path: counters, rate, ETA, events.
 
-    def __init__(self, name: str, total: int, interval_s: float,
-                 stream: Optional[Any] = None, clock=time.monotonic) -> None:
+    Every consumer of sweep progress — the stderr heartbeat line, the
+    ``--metrics`` registry, and the service's SSE stream — reads from ONE
+    instance, so ``done/total``, retry counts, and ETA can never disagree
+    between surfaces.  ``on_event`` (optional) receives a structured dict
+    per state change:
+
+    * ``sweep_started`` / ``sweep_finished`` — bracketing the sweep,
+    * ``run_finished`` — one per row, with ``status`` in
+      ``ok|cached|failed|aborted`` plus the row's hash/workload/makespan,
+    * ``run_retried`` / ``run_requeued`` / ``run_timeout`` /
+      ``pool_rebuilt`` — the resilience machinery's transitions.
+
+    Every event carries the progress snapshot (``done``, ``total``,
+    ``eta_s``, per-status counts), so a consumer never has to re-derive
+    accounting the sweep already did.  Event callbacks run on the sweep
+    thread: keep them cheap and never raise (a raising callback would kill
+    the sweep mid-harvest).
+    """
+
+    def __init__(self, name: str, total: int,
+                 on_event: Optional[Any] = None,
+                 clock=time.monotonic) -> None:
         self.name = name
         self.total = total
-        self.interval_s = max(0.0, float(interval_s))
-        self.stream = stream if stream is not None else sys.stderr
         self.clock = clock
         self.t0 = clock()
-        self.last = self.t0
         self.done = self.cached = self.failed = self.aborted = 0
+        self.retries = self.requeues = self.pool_rebuilds = self.timeouts = 0
+        self._on_event = on_event
 
-    def note(self, row: Dict[str, Any]) -> None:
-        self.done += 1
+    # --------------------------------------------------------- accounting
+    @staticmethod
+    def row_status(row: Dict[str, Any]) -> str:
         if row.get("cached"):
+            return "cached"
+        if row.get("aborted"):
+            return "aborted"
+        if not row.get("ok"):
+            return "failed"
+        return "ok"
+
+    def note_row(self, row: Dict[str, Any]) -> str:
+        """Account one finished row; returns its status."""
+        status = self.row_status(row)
+        self.done += 1
+        if status == "cached":
             self.cached += 1
-        elif row.get("aborted"):
+        elif status == "aborted":
             self.aborted += 1
-        elif not row.get("ok"):
+        elif status == "failed":
             self.failed += 1
-        self.maybe_beat()
+        self.emit("run_finished", status=status,
+                  hash=row.get("hash", "")[:12],
+                  workload=row.get("workload"),
+                  makespan_s=row.get("makespan_s"),
+                  error=row.get("error"))
+        return status
+
+    def note(self, kind: str, **fields: Any) -> None:
+        """Account a resilience transition (retry/requeue/timeout/rebuild)."""
+        if kind == "run_retried":
+            self.retries += 1
+        elif kind == "run_requeued":
+            self.requeues += 1
+        elif kind == "run_timeout":
+            self.timeouts += 1
+        elif kind == "pool_rebuilt":
+            self.pool_rebuilds += 1
+        self.emit(kind, **fields)
+
+    # -------------------------------------------------------------- derived
+    def rate(self) -> float:
+        return self.done / max(self.clock() - self.t0, 1e-9)
+
+    def eta_s(self) -> float:
+        """ETA from the observed completion rate, cached rows included — a
+        mostly-cached replay converges to 0 immediately instead of
+        extrapolating cold-run cost."""
+        remaining = self.total - self.done
+        r = self.rate()
+        return remaining / r if remaining > 0 and r > 0 else 0.0
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {"done": self.done, "total": self.total,
+                "cached": self.cached, "failed": self.failed,
+                "aborted": self.aborted, "retries": self.retries,
+                "requeues": self.requeues,
+                "pool_rebuilds": self.pool_rebuilds,
+                "timeouts": self.timeouts,
+                "rate_per_s": round(self.rate(), 3),
+                "eta_s": round(self.eta_s(), 3)}
+
+    def emit(self, kind: str, **fields: Any) -> None:
+        if self._on_event is None:
+            return
+        ev = {"event": kind, "sweep": self.name}
+        ev.update(fields)
+        ev["progress"] = self.snapshot()
+        self._on_event(ev)
+
+
+class _Heartbeat:
+    """One-line stderr renderer over a :class:`SweepProgress`
+    (``--heartbeat-s``; off by default, silenced by ``--quiet``).  Pure
+    presentation: every number in the line is read from the shared progress
+    object, the same one the event hook and metrics read."""
+
+    def __init__(self, progress: SweepProgress, interval_s: float,
+                 stream: Optional[Any] = None) -> None:
+        self.progress = progress
+        self.interval_s = max(0.0, float(interval_s))
+        self.stream = stream if stream is not None else sys.stderr
+        self.last = progress.t0
 
     def maybe_beat(self, force: bool = False) -> None:
-        now = self.clock()
+        p = self.progress
+        now = p.clock()
         if not force and now - self.last < self.interval_s:
             return
         self.last = now
-        elapsed = max(now - self.t0, 1e-9)
-        rate = self.done / elapsed
-        remaining = self.total - self.done
-        eta = f"{remaining / rate:.0f}s" if remaining and rate > 0 else "0s"
-        print(f"explore[{self.name}]: {self.done}/{self.total} done "
-              f"({self.cached} cached, {self.failed} failed, "
-              f"{self.aborted} aborted) {rate:.1f}/s ETA {eta}",
+        eta = f"{p.eta_s():.0f}s" if p.total - p.done else "0s"
+        print(f"explore[{p.name}]: {p.done}/{p.total} done "
+              f"({p.cached} cached, {p.failed} failed, "
+              f"{p.aborted} aborted) {p.rate():.1f}/s ETA {eta}",
               file=self.stream, flush=True)
 
 
@@ -432,7 +520,8 @@ def run_sweep(spec: Any, jobs: int = 1, cache_dir: Optional[str] = None,
               retry_backoff_s: float = 0.25,
               heartbeat_s: Optional[float] = None,
               heartbeat_stream: Optional[Any] = None,
-              metrics: Optional[Any] = None) -> SweepResult:
+              metrics: Optional[Any] = None,
+              on_event: Optional[Any] = None) -> SweepResult:
     """Expand (unless ``configs`` is given) and execute the sweep.
 
     Cache hits are resolved in the parent before any worker spawns, so a
@@ -451,11 +540,14 @@ def run_sweep(spec: Any, jobs: int = 1, cache_dir: Optional[str] = None,
     without burning their retry budget).  Serial execution ignores
     ``timeout_s`` (there is no pool to kill).
 
-    Observability: ``heartbeat_s`` enables a one-line progress report on
-    that cadence (to ``heartbeat_stream``, default stderr); ``metrics``
-    (a :class:`repro.obs.MetricsRegistry`) counts runs by outcome plus
-    retries/requeues/pool rebuilds/timeouts and gauges queue depth.  Both
-    default off and sit behind ``is not None`` checks.
+    Observability rides one accounting object (:class:`SweepProgress`):
+    ``heartbeat_s`` enables a one-line progress report on that cadence (to
+    ``heartbeat_stream``, default stderr); ``metrics`` (a
+    :class:`repro.obs.MetricsRegistry`) counts runs by outcome plus
+    retries/requeues/pool rebuilds/timeouts and gauges queue depth;
+    ``on_event`` (a callable taking one dict) receives every structured
+    progress event — the benchmark service's SSE feed.  All default off
+    and sit behind ``is not None`` checks.
     """
     spec = as_spec(spec)
     t0 = time.perf_counter()
@@ -463,8 +555,8 @@ def run_sweep(spec: Any, jobs: int = 1, cache_dir: Optional[str] = None,
     cache = RunCache(cache_dir) if cache_dir else None
     rows: Dict[int, Dict[str, Any]] = {}
     misses: List[int] = []
-    stats = {"retries": 0, "requeues": 0, "pool_rebuilds": 0, "timeouts": 0}
-    hb = (_Heartbeat(spec.name, len(cfgs), heartbeat_s, heartbeat_stream)
+    prog = SweepProgress(spec.name, len(cfgs), on_event=on_event)
+    hb = (_Heartbeat(prog, heartbeat_s, heartbeat_stream)
           if heartbeat_s else None)
     m_runs = m_queue = None
     if metrics is not None:
@@ -474,21 +566,15 @@ def run_sweep(spec: Any, jobs: int = 1, cache_dir: Optional[str] = None,
         m_queue = metrics.gauge("repro_explore_queue_depth",
                                 "Configs still queued or in flight")
         m_queue.set(float(len(cfgs)))
+    prog.emit("sweep_started", spec_hash=spec.spec_hash(), jobs=jobs)
 
     def note(row: Dict[str, Any]) -> None:
+        status = prog.note_row(row)
         if m_runs is not None:
-            if row.get("cached"):
-                status = "cached"
-            elif row.get("aborted"):
-                status = "aborted"
-            elif not row.get("ok"):
-                status = "failed"
-            else:
-                status = "ok"
             m_runs.inc(status=status)
             metrics.maybe_snapshot()
         if hb is not None:
-            hb.note(row)
+            hb.maybe_beat()
 
     for i, cfg in enumerate(cfgs):
         hit = cache.get(cfg.run_hash) if cache else None
@@ -522,7 +608,7 @@ def run_sweep(spec: Any, jobs: int = 1, cache_dir: Optional[str] = None,
             hb.maybe_beat()
 
     if misses and jobs > 1:
-        _pool_sweep(spec, cfgs, misses, finish, jobs, stats,
+        _pool_sweep(spec, cfgs, misses, finish, jobs, prog,
                     timeout_s=timeout_s, max_retries=max_retries,
                     backoff_base_s=retry_backoff_s, tick=tick)
     else:
@@ -533,14 +619,14 @@ def run_sweep(spec: Any, jobs: int = 1, cache_dir: Optional[str] = None,
     if metrics is not None:
         metrics.counter("repro_explore_retries_total",
                         "Run retries after worker death or timeout"
-                        ).inc(stats["retries"])
+                        ).inc(prog.retries)
         metrics.counter("repro_explore_requeues_total",
                         "Innocent in-flight runs requeued on pool teardown"
-                        ).inc(stats["requeues"])
+                        ).inc(prog.requeues)
         metrics.counter("repro_explore_pool_rebuilds_total",
-                        "Worker-pool rebuilds").inc(stats["pool_rebuilds"])
+                        "Worker-pool rebuilds").inc(prog.pool_rebuilds)
         metrics.counter("repro_explore_timeouts_total",
-                        "Per-run wall-time timeouts").inc(stats["timeouts"])
+                        "Per-run wall-time timeouts").inc(prog.timeouts)
         if m_queue is not None:
             m_queue.set(0.0)
         metrics.maybe_snapshot()
@@ -548,17 +634,20 @@ def run_sweep(spec: Any, jobs: int = 1, cache_dir: Optional[str] = None,
         hb.maybe_beat(force=True)
 
     ordered = [rows[i] for i in range(len(cfgs))]
-    return SweepResult(
+    result = SweepResult(
         spec_name=spec.name, spec_hash=spec.spec_hash(), rows=ordered,
         executed=sum(1 for r in ordered if not r["cached"]),
         cached=sum(1 for r in ordered if r["cached"]),
         failed=sum(1 for r in ordered
                    if not r["ok"] and not r.get("aborted")),
         aborted=sum(1 for r in ordered if r.get("aborted")),
-        retries=stats["retries"], requeues=stats["requeues"],
-        pool_rebuilds=stats["pool_rebuilds"], timeouts=stats["timeouts"],
+        retries=prog.retries, requeues=prog.requeues,
+        pool_rebuilds=prog.pool_rebuilds, timeouts=prog.timeouts,
         jobs=max(1, int(jobs)),
         wall_s=round(time.perf_counter() - t0, 4))
+    prog.emit("sweep_finished", executed=result.executed,
+              wall_s=result.wall_s, summary=result.summary())
+    return result
 
 
 def spawn_context():
@@ -576,7 +665,7 @@ def spawn_context():
 
 def _pool_sweep(spec: ExperimentSpec, cfgs: List[RunConfig],
                 misses: List[int], finish, jobs: int,
-                stats: Dict[str, int], timeout_s: Optional[float],
+                prog: SweepProgress, timeout_s: Optional[float],
                 max_retries: int, backoff_base_s: float,
                 tick: Optional[Any] = None) -> None:
     """Process-pool execution with worker-death and timeout recovery."""
@@ -615,7 +704,7 @@ def _pool_sweep(spec: ExperimentSpec, cfgs: List[RunConfig],
             h = cfgs[idx].run_hash
             if victim_attempted:
                 nxt = attempt + 1
-                stats["retries"] += 1
+                prog.note("run_retried", hash=h[:12], attempt=nxt)
                 if nxt > max_retries + 1:
                     finish(idx, _error_row(
                         cfgs[idx], message=(
@@ -625,7 +714,7 @@ def _pool_sweep(spec: ExperimentSpec, cfgs: List[RunConfig],
                     continue
             else:
                 nxt = attempt
-                stats["requeues"] += 1
+                prog.note("run_requeued", hash=h[:12])
             queue.append((idx, nxt, req + 1,
                           now + _retry_backoff_s(spec.seed, h, nxt,
                                                  backoff_base_s)))
@@ -635,7 +724,7 @@ def _pool_sweep(spec: ExperimentSpec, cfgs: List[RunConfig],
         nonlocal pool
         kill_pool(pool)
         requeue_inflight(victim_attempted)
-        stats["pool_rebuilds"] += 1
+        prog.note("pool_rebuilt")
         pool = make_pool()
 
     try:
@@ -679,7 +768,9 @@ def _pool_sweep(spec: ExperimentSpec, cfgs: List[RunConfig],
                 except BrokenProcessPool:
                     # this future died with the pool; retry it (bounded),
                     # and let the rebuild sweep up the rest of inflight
-                    stats["retries"] += 1
+                    prog.note("run_retried",
+                              hash=cfgs[idx].run_hash[:12],
+                              attempt=attempt + 1)
                     if attempt + 1 > max_retries + 1:
                         finish(idx, _error_row(cfgs[idx], message=(
                             f"worker died (BrokenProcessPool) on all "
@@ -708,10 +799,13 @@ def _pool_sweep(spec: ExperimentSpec, cfgs: List[RunConfig],
                 overdue = {fut: meta for fut, meta in inflight.items()
                            if now - meta[3] > timeout_s}
                 if overdue:
-                    stats["timeouts"] += len(overdue)
                     for fut, (idx, attempt, req, _sub) in overdue.items():
                         del inflight[fut]
-                        stats["retries"] += 1
+                        prog.note("run_timeout",
+                                  hash=cfgs[idx].run_hash[:12])
+                        prog.note("run_retried",
+                                  hash=cfgs[idx].run_hash[:12],
+                                  attempt=attempt + 1)
                         if attempt + 1 > max_retries + 1:
                             finish(idx, _error_row(cfgs[idx], message=(
                                 f"run exceeded timeout_s={timeout_s:g} on "

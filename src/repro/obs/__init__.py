@@ -21,12 +21,12 @@ so the uninstrumented hot path stays bit-identical.
 from __future__ import annotations
 
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
-                      escape_label_value)
+                      escape_label_value, merged_exposition)
 from .timeline import (TID_COLLECTIVE, TID_COMPUTE, TID_FAULT, TID_STALL,
                        TimelineRecorder)
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "TimelineRecorder",
     "TID_COMPUTE", "TID_COLLECTIVE", "TID_STALL", "TID_FAULT",
-    "escape_label_value",
+    "escape_label_value", "merged_exposition",
 ]

@@ -9,9 +9,15 @@ cumulative histogram buckets) that any Prometheus scraper ingests verbatim.
 
 Design constraints, in order:
 
-* **Off the hot path.** Instruments are plain dict updates; the engine and
-  sweep runner only touch them behind ``if metrics is not None`` checks, so
-  an uninstrumented run does zero extra work.
+* **Off the hot path.** Instruments are plain dict updates behind one
+  re-entrant lock; the engine and sweep runner only touch them behind
+  ``if metrics is not None`` checks, so an uninstrumented run does zero
+  extra work.
+* **Thread safe.** Every instrument created through a registry shares that
+  registry's single lock, so a scrape (``expose()``) racing sweep-thread
+  increments can never render a torn or half-updated exposition — the
+  long-running service serves ``/metrics`` from scrape threads while worker
+  threads increment.
 * **Deterministic output.** Families render sorted by metric name and
   samples sorted by label values, so the exposition text is byte-stable for
   golden tests, and the registry takes an injected ``clock`` so snapshot
@@ -21,6 +27,10 @@ Design constraints, in order:
   write the ``.prom`` file via tmp-file + ``os.replace``, so a scraper
   tailing the file never sees a torn write.
 
+``merged_exposition`` renders many registries as one document with extra
+per-part labels (e.g. ``job="j42"``) — the fleet-wide ``/metrics`` face of
+the benchmark service.
+
 .. _text exposition format:
    https://prometheus.io/docs/instrumenting/exposition_formats/
 """
@@ -29,11 +39,13 @@ from __future__ import annotations
 import math
 import os
 import tempfile
+import threading
 import time
-from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
+                    Tuple)
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
-           "escape_label_value"]
+           "escape_label_value", "merged_exposition"]
 
 #: default histogram buckets — latency-flavored (seconds), same spirit as
 #: prometheus client defaults
@@ -75,12 +87,18 @@ class _Metric:
     kind = "untyped"
 
     def __init__(self, name: str, help: str = "",
-                 labels: Tuple[str, ...] = ()) -> None:
+                 labels: Tuple[str, ...] = (),
+                 lock: Optional[Any] = None) -> None:
         self.name = name
         self.help = help
         self.label_names = tuple(labels)
         # label-values tuple -> sample state (float, or histogram state)
         self._samples: Dict[Tuple[str, ...], Any] = {}
+        # one lock per registry: every instrument a registry hands out
+        # shares the registry's RLock (re-entrant, so expose() can render
+        # samples while already holding it); standalone instruments get
+        # their own
+        self._lock = lock if lock is not None else threading.RLock()
 
     def _key(self, labels: Dict[str, Any]) -> Tuple[str, ...]:
         if not self.label_names:
@@ -105,9 +123,13 @@ class _Metric:
         inner = ",".join(f'{n}="{escape_label_value(v)}"' for n, v in pairs)
         return "{" + inner + "}"
 
-    def samples(self) -> Iterator[Tuple[str, str, float]]:
+    def samples(self, extra: Tuple[Tuple[str, str], ...] = ()
+                ) -> Iterator[Tuple[str, str, float]]:
         """Yield ``(name_suffix, rendered_labels, value)`` rows, sorted by
-        label values so the exposition is byte-stable."""
+        label values so the exposition is byte-stable.  ``extra`` label
+        pairs are appended to every row (the merge path's per-job labels).
+        Rows are snapshotted under the lock, so a concurrent update can
+        never tear the render."""
         raise NotImplementedError
 
 
@@ -121,14 +143,19 @@ class Counter(_Metric):
             raise ValueError(f"counter {self.name!r} cannot decrease "
                              f"(inc by {amount})")
         key = self._key(labels)
-        self._samples[key] = self._samples.get(key, 0.0) + amount
+        with self._lock:
+            self._samples[key] = self._samples.get(key, 0.0) + amount
 
     def value(self, **labels: Any) -> float:
-        return float(self._samples.get(self._key(labels), 0.0))
+        with self._lock:
+            return float(self._samples.get(self._key(labels), 0.0))
 
-    def samples(self) -> Iterator[Tuple[str, str, float]]:
-        for key in sorted(self._samples):
-            yield "", self._render_labels(key), self._samples[key]
+    def samples(self, extra: Tuple[Tuple[str, str], ...] = ()
+                ) -> Iterator[Tuple[str, str, float]]:
+        with self._lock:
+            rows = sorted(self._samples.items())
+        for key, value in rows:
+            yield "", self._render_labels(key, extra), value
 
 
 class Gauge(_Metric):
@@ -137,21 +164,28 @@ class Gauge(_Metric):
     kind = "gauge"
 
     def set(self, value: float, **labels: Any) -> None:
-        self._samples[self._key(labels)] = float(value)
+        key = self._key(labels)
+        with self._lock:
+            self._samples[key] = float(value)
 
     def inc(self, amount: float = 1.0, **labels: Any) -> None:
         key = self._key(labels)
-        self._samples[key] = self._samples.get(key, 0.0) + amount
+        with self._lock:
+            self._samples[key] = self._samples.get(key, 0.0) + amount
 
     def dec(self, amount: float = 1.0, **labels: Any) -> None:
         self.inc(-amount, **labels)
 
     def value(self, **labels: Any) -> float:
-        return float(self._samples.get(self._key(labels), 0.0))
+        with self._lock:
+            return float(self._samples.get(self._key(labels), 0.0))
 
-    def samples(self) -> Iterator[Tuple[str, str, float]]:
-        for key in sorted(self._samples):
-            yield "", self._render_labels(key), self._samples[key]
+    def samples(self, extra: Tuple[Tuple[str, str], ...] = ()
+                ) -> Iterator[Tuple[str, str, float]]:
+        with self._lock:
+            rows = sorted(self._samples.items())
+        for key, value in rows:
+            yield "", self._render_labels(key, extra), value
 
 
 class Histogram(_Metric):
@@ -161,8 +195,9 @@ class Histogram(_Metric):
 
     def __init__(self, name: str, help: str = "",
                  labels: Tuple[str, ...] = (),
-                 buckets: Tuple[float, ...] = DEFAULT_BUCKETS) -> None:
-        super().__init__(name, help, labels)
+                 buckets: Tuple[float, ...] = DEFAULT_BUCKETS,
+                 lock: Optional[Any] = None) -> None:
+        super().__init__(name, help, labels, lock=lock)
         bs = tuple(sorted(float(b) for b in buckets))
         if not bs or any(math.isnan(b) for b in bs):
             raise ValueError(f"histogram {self.name!r}: bad buckets {buckets}")
@@ -172,32 +207,39 @@ class Histogram(_Metric):
 
     def observe(self, value: float, **labels: Any) -> None:
         key = self._key(labels)
-        state = self._samples.get(key)
-        if state is None:
-            # [per-bucket counts..., +Inf count, sum]
-            state = self._samples[key] = [0] * (len(self.buckets) + 1) + [0.0]
         v = float(value)
-        for i, b in enumerate(self.buckets):
-            if v <= b:
-                state[i] += 1
-                break
-        else:
-            state[len(self.buckets)] += 1
-        state[-1] += v
+        with self._lock:
+            state = self._samples.get(key)
+            if state is None:
+                # [per-bucket counts..., +Inf count, sum]
+                state = self._samples[key] = \
+                    [0] * (len(self.buckets) + 1) + [0.0]
+            for i, b in enumerate(self.buckets):
+                if v <= b:
+                    state[i] += 1
+                    break
+            else:
+                state[len(self.buckets)] += 1
+            state[-1] += v
 
-    def samples(self) -> Iterator[Tuple[str, str, float]]:
+    def samples(self, extra: Tuple[Tuple[str, str], ...] = ()
+                ) -> Iterator[Tuple[str, str, float]]:
         nb = len(self.buckets)
-        for key in sorted(self._samples):
-            state = self._samples[key]
+        with self._lock:
+            rows = [(key, list(self._samples[key]))
+                    for key in sorted(self._samples)]
+        for key, state in rows:
             cum = 0
             for i, b in enumerate(self.buckets):
                 cum += state[i]
                 yield ("_bucket",
-                       self._render_labels(key, (("le", _fmt(b)),)), cum)
+                       self._render_labels(key, extra + (("le", _fmt(b)),)),
+                       cum)
             cum += state[nb]
-            yield "_bucket", self._render_labels(key, (("le", "+Inf"),)), cum
-            yield "_sum", self._render_labels(key), state[-1]
-            yield "_count", self._render_labels(key), cum
+            yield ("_bucket",
+                   self._render_labels(key, extra + (("le", "+Inf"),)), cum)
+            yield "_sum", self._render_labels(key, extra), state[-1]
+            yield "_count", self._render_labels(key, extra), cum
 
 
 class MetricsRegistry:
@@ -212,6 +254,10 @@ class MetricsRegistry:
     def __init__(self, clock: Callable[[], float] = time.monotonic) -> None:
         self._metrics: Dict[str, _Metric] = {}
         self._clock = clock
+        # one RLock for the whole registry: factory lookups, every
+        # instrument update, and exposition all serialize on it, so a
+        # threaded scrape can never observe a torn family
+        self._lock = threading.RLock()
         self._snap_path: Optional[str] = None
         self._snap_interval = 0.0
         self._last_snap = -_INF
@@ -224,18 +270,19 @@ class MetricsRegistry:
     # ------------------------------------------------------------ factories
     def _get(self, cls: type, name: str, help: str,
              labels: Tuple[str, ...], **kw: Any) -> Any:
-        m = self._metrics.get(name)
-        if m is not None:
-            # idempotent re-registration: the engine and the sweep runner
-            # may instrument the same shared registry repeatedly
-            if not isinstance(m, cls) or m.label_names != tuple(labels):
-                raise ValueError(
-                    f"metric {name!r} already registered as {m.kind} with "
-                    f"labels {list(m.label_names)}")
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is not None:
+                # idempotent re-registration: the engine and the sweep
+                # runner may instrument the same shared registry repeatedly
+                if not isinstance(m, cls) or m.label_names != tuple(labels):
+                    raise ValueError(
+                        f"metric {name!r} already registered as {m.kind} "
+                        f"with labels {list(m.label_names)}")
+                return m
+            m = cls(name, help, tuple(labels), lock=self._lock, **kw)
+            self._metrics[name] = m
             return m
-        m = cls(name, help, tuple(labels), **kw)
-        self._metrics[name] = m
-        return m
 
     def counter(self, name: str, help: str = "",
                 labels: Tuple[str, ...] = ()) -> Counter:
@@ -251,19 +298,21 @@ class MetricsRegistry:
         return self._get(Histogram, name, help, labels, buckets=buckets)
 
     def get(self, name: str) -> Optional[_Metric]:
-        return self._metrics.get(name)
+        with self._lock:
+            return self._metrics.get(name)
 
     # ----------------------------------------------------------- exposition
     def expose(self) -> str:
         """Render the whole registry in Prometheus text format 0.0.4."""
         out: List[str] = []
-        for name in sorted(self._metrics):
-            m = self._metrics[name]
-            if m.help:
-                out.append(f"# HELP {name} {_escape_help(m.help)}")
-            out.append(f"# TYPE {name} {m.kind}")
-            for suffix, rendered, value in m.samples():
-                out.append(f"{name}{suffix}{rendered} {_fmt(value)}")
+        with self._lock:
+            for name in sorted(self._metrics):
+                m = self._metrics[name]
+                if m.help:
+                    out.append(f"# HELP {name} {_escape_help(m.help)}")
+                out.append(f"# TYPE {name} {m.kind}")
+                for suffix, rendered, value in m.samples():
+                    out.append(f"{name}{suffix}{rendered} {_fmt(value)}")
         return "\n".join(out) + ("\n" if out else "")
 
     def write(self, path: str) -> str:
@@ -309,3 +358,52 @@ class MetricsRegistry:
             return None
         self._last_snap = self._clock()
         return self.write(self._snap_path)
+
+
+# ----------------------------------------------------------------- merging
+def merged_exposition(
+        parts: Sequence[Tuple[Dict[str, str], "MetricsRegistry"]]) -> str:
+    """Render many registries as one Prometheus 0.0.4 document.
+
+    ``parts`` is a sequence of ``(extra_labels, registry)``; every sample
+    from a registry is re-rendered with its part's extra label pairs
+    appended (sorted by label name), so the benchmark service can expose
+    one fleet-wide ``/metrics`` with a ``job="..."`` label distinguishing
+    live and finished sweeps.  Families are merged by metric name across
+    parts — ``# HELP``/``# TYPE`` render once per family — and a name
+    registered with conflicting kinds across registries is rejected loudly
+    (a silent kind flip would corrupt the scrape).
+
+    Determinism: families sort by name; within a family, parts render in
+    the order given (callers pass them sorted by job id), each part's
+    samples already sorted by label values.  Each registry's lock is held
+    only while its own samples render.
+    """
+    families: Dict[str, List[Tuple[Tuple[Tuple[str, str], ...],
+                                   "_Metric"]]] = {}
+    kinds: Dict[str, str] = {}
+    help_text: Dict[str, str] = {}
+    for labels, reg in parts:
+        extra = tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+        with reg._lock:
+            metrics = dict(reg._metrics)
+        for name, m in metrics.items():
+            seen = kinds.get(name)
+            if seen is None:
+                kinds[name] = m.kind
+            elif seen != m.kind:
+                raise ValueError(
+                    f"metric {name!r} registered as {seen} in one registry "
+                    f"and {m.kind} in another; refusing to merge")
+            if m.help and name not in help_text:
+                help_text[name] = m.help
+            families.setdefault(name, []).append((extra, m))
+    out: List[str] = []
+    for name in sorted(families):
+        if name in help_text:
+            out.append(f"# HELP {name} {_escape_help(help_text[name])}")
+        out.append(f"# TYPE {name} {kinds[name]}")
+        for extra, m in families[name]:
+            for suffix, rendered, value in m.samples(extra):
+                out.append(f"{name}{suffix}{rendered} {_fmt(value)}")
+    return "\n".join(out) + ("\n" if out else "")

@@ -48,6 +48,11 @@ Three benchmarks, registered in the stage registry under kind="benchmark"
   materializing per-rank traces.  Wall-clock speedup is core-count
   dependent — the host block records ``cpu_count`` so the gate can skip
   cross-host comparisons.
+* ``perf_serve`` — live benchmark service (``repro.serve_api``): HTTP
+  submission-to-report latency cold and fully cached (the cached replay
+  must execute zero simulations — gated absolutely) plus merged
+  ``/metrics`` scrape throughput, all over a real ephemeral-port daemon
+  with scrapes racing the running sweep.
 
 Results aggregate into a JSON document written to ``BENCH_perf.json`` at the
 repo root (see :func:`run_suite` / :func:`write_bench`).  Wall-clock numbers
@@ -94,6 +99,9 @@ _SCALE = {
         "shard": {"grid": (250, 8), "jobs": 2,
                   "fleet_world": 10_000, "fleet_steps": 1,
                   "fleet_ops": 4, "fleet_jobs": 4},
+        # 3 topologies x 1 world x 1 fidelity = 3-config sweep
+        "serve": {"iters": 2, "world_sizes": [4],
+                  "fidelities": ["analytic"], "scrapes": 100},
     },
     "full": {
         "feeder_nodes": [10_000, 100_000],
@@ -119,6 +127,9 @@ _SCALE = {
         "shard": {"grid": (2_000, 64), "jobs": 8,
                   "fleet_world": 1_000_000, "fleet_steps": 1,
                   "fleet_ops": 4, "fleet_jobs": 8},
+        # 3 topologies x 2 worlds x 2 fidelities = 12-config sweep
+        "serve": {"iters": 4, "world_sizes": [4, 8],
+                  "fidelities": ["analytic", "link"], "scrapes": 500},
     },
 }
 
@@ -849,6 +860,106 @@ def perf_shard(scale: str = "full", **_: Any) -> Dict[str, Any]:
     return out
 
 
+# -------------------------------------------------------------------- serve
+def perf_serve(scale: str = "full", **_: Any) -> Dict[str, Any]:
+    """Live benchmark service: submit-to-report latency + scrape throughput.
+
+    One in-process daemon on an ephemeral port, driven over real HTTP.
+    ``cold`` is the end-to-end submission latency (POST the spec, poll to
+    completion, fetch the report bytes) with ``/metrics`` scraped
+    continuously while the sweep runs — the scrape path must never block
+    the sweep.  ``scrape`` then prices the merged exposition alone
+    (service registry + per-job sweep registries under ``job=`` labels).
+    ``cached`` resubmits the identical spec: the content-addressed cache
+    must answer with zero new simulations (``cached_executed`` is the
+    absolute contract), making the replay latency the service's floor.
+    """
+    import tempfile
+    import urllib.request
+
+    from ..serve_api import BenchmarkService
+
+    cfg = _cfg(scale)["serve"]
+    spec = {
+        "name": "perf-serve",
+        "workloads": [{"pattern": "moe_mixed",
+                       "args": {"mode": "mixed", "iters": cfg["iters"]}}],
+        "axes": {"topology": ["ring", "switch", "clos"],
+                 "world_size": cfg["world_sizes"],
+                 "fidelity": cfg["fidelities"]},
+    }
+    payload = json.dumps(spec).encode()
+
+    def post() -> str:
+        req = urllib.request.Request(
+            f"{base}/api/v1/sweeps", data=payload, method="POST")
+        with urllib.request.urlopen(req) as r:
+            return json.loads(r.read())["id"]
+
+    def get(path: str) -> bytes:
+        with urllib.request.urlopen(base + path) as r:
+            return r.read()
+
+    def submit_to_report(scrape_while_running: bool
+                         ) -> Tuple[float, str, bytes, int]:
+        t0 = time.perf_counter()
+        jid = post()
+        while True:
+            st = json.loads(get(f"/api/v1/sweeps/{jid}"))
+            if st["state"] in ("done", "failed"):
+                break
+            if scrape_while_running:
+                get("/metrics")
+        if st["state"] != "done":
+            raise RuntimeError(f"perf_serve sweep failed: {st['error']}")
+        rep = get(f"/api/v1/sweeps/{jid}/report")
+        return (time.perf_counter() - t0, jid, rep,
+                st["progress"]["cached"])
+
+    with tempfile.TemporaryDirectory() as tmp:
+        svc = BenchmarkService(
+            port=0, state_dir=os.path.join(tmp, "state"),
+            cache_dir=os.path.join(tmp, "cache"), workers=1, quiet=True)
+        host, port = svc.start()
+        base = f"http://{host}:{port}"
+        try:
+            cold_s, jid, report_bytes, _ = submit_to_report(True)
+            n_cfgs = len(json.loads(report_bytes)["workloads"]
+                         ["moe_mixed-mixed"]["ranking"])
+
+            n = cfg["scrapes"]
+            t0 = time.perf_counter()
+            for _i in range(n):
+                body = get("/metrics")
+            scrape_s = time.perf_counter() - t0
+
+            warm_s, _jid2, _rep2, cached = submit_to_report(False)
+        finally:
+            svc.stop(drain=True, timeout_s=60)
+
+    return {
+        "configs": n_cfgs,
+        "cold": {
+            "wall_s": round(cold_s, 4),
+            "runs_per_sec": round(n_cfgs / cold_s, 1),
+            "report_bytes": len(report_bytes),
+        },
+        "cached": {
+            "wall_s": round(warm_s, 4),
+            "runs_per_sec": round(n_cfgs / warm_s, 1),
+            # must equal configs: the replay performed zero simulations
+            "cached_runs": cached,
+            "speedup": round(cold_s / warm_s, 2),
+        },
+        "scrape": {
+            "n": n,
+            "wall_s": round(scrape_s, 4),
+            "scrapes_per_sec": round(n / scrape_s, 1),
+            "exposition_bytes": len(body),
+        },
+    }
+
+
 # ------------------------------------------------------------------- driver
 BENCHMARKS = {
     "perf_feeder": perf_feeder,
@@ -861,6 +972,7 @@ BENCHMARKS = {
     "perf_faults": perf_faults,
     "perf_obs": perf_obs,
     "perf_shard": perf_shard,
+    "perf_serve": perf_serve,
 }
 
 
@@ -1056,6 +1168,28 @@ def gate_regressions(current: Dict[str, Any], baseline: Dict[str, Any],
             == (bf.get("world_size"), bf.get("jobs"))):
         check(f"perf_shard fleet world={cf['world_size']} events/sec",
               cf["events_per_sec"], bf["events_per_sec"])
+    # serve: the cached replay answering with zero new simulations is an
+    # absolute contract; scrape throughput gates against the baseline and
+    # the cached submit-to-report rate gates when the sweep grids match
+    cur_v = current.get("perf_serve", {})
+    base_v = baseline.get("perf_serve", {})
+    if cur_v:
+        cached = cur_v.get("cached", {})
+        if cached and cached.get("cached_runs") != cur_v.get("configs"):
+            failures.append(
+                "perf_serve: cached resubmission was not fully "
+                f"cache-served ({cached.get('cached_runs')}/"
+                f"{cur_v.get('configs')} rows cached)")
+    if "scrape" in cur_v and "scrape" in base_v:
+        check("perf_serve /metrics scrapes/sec",
+              cur_v["scrape"]["scrapes_per_sec"],
+              base_v["scrape"]["scrapes_per_sec"])
+    if (cur_v.get("configs") == base_v.get("configs")
+            and "cached" in cur_v and "cached" in base_v):
+        check(f"perf_serve cached submit-to-report "
+              f"{cur_v['configs']} configs runs/sec",
+              cur_v["cached"]["runs_per_sec"],
+              base_v["cached"]["runs_per_sec"])
     return failures, report
 
 
@@ -1112,6 +1246,13 @@ def _rate_rows(doc: Dict[str, Any]) -> Dict[str, float]:
     if "events_per_sec" in sh.get("fleet", {}):
         rows[f"shard fleet world={sh['fleet'].get('world_size')} "
              "events/sec"] = sh["fleet"]["events_per_sec"]
+    sv = doc.get("perf_serve", {})
+    if "scrapes_per_sec" in sv.get("scrape", {}):
+        rows["serve /metrics scrapes/sec"] = sv["scrape"]["scrapes_per_sec"]
+    for label in ("cold", "cached"):
+        if "runs_per_sec" in sv.get(label, {}):
+            rows[f"serve {label} submit-to-report runs/sec"] = \
+                sv[label]["runs_per_sec"]
     return rows
 
 

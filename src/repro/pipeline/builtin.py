@@ -507,3 +507,5 @@ from ..explore import stages as _explore_stages  # noqa: E402, F401
 # ... and real-trace ingestion (stdlib-only parsers; import-light)
 from ..ingest import stages as _ingest_stages  # noqa: E402, F401
 from ..obs import stages as _obs_stages  # noqa: E402, F401
+# ... and the live benchmark service daemon (kind="service"; stdlib http)
+from ..serve_api import stages as _serve_stages  # noqa: E402, F401

@@ -1,0 +1,24 @@
+"""repro.serve_api — the live benchmark service (ROADMAP tentpole).
+
+Everything the one-shot CLI can do to a sweep, as a long-running daemon:
+``POST`` an ExperimentSpec, watch it run over Server-Sent Events, scrape
+one fleet-wide Prometheus ``/metrics``, and fetch a report byte-identical
+to offline ``repro explore --json``.  Stdlib-only (``http.server``), same
+discipline as :mod:`repro.obs.metrics` — the service runs in the
+minimal-deps CI lane with zero new dependencies.
+
+* :mod:`.server` — :class:`BenchmarkService`: worker pool, HTTP routes,
+  merged exposition, drain-on-SIGTERM.
+* :mod:`.jobs` — :class:`JobStore`: atomic canonical-JSON job records
+  (restart keeps every finished report).
+* :mod:`.events` — :class:`EventBus`: per-job replayable SSE buffers.
+* :mod:`.stages` — the ``serve.api`` registry stage (kind="service").
+"""
+from __future__ import annotations
+
+from .events import EventBus
+from .jobs import JOB_SCHEMA, JobStore
+from .server import API_SCHEMA, BenchmarkService
+
+__all__ = ["API_SCHEMA", "BenchmarkService", "EventBus", "JOB_SCHEMA",
+           "JobStore"]

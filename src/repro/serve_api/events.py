@@ -1,0 +1,87 @@
+"""In-process SSE event bus: per-job ordered buffers + blocking streams.
+
+The sweep thread publishes the structured events
+:class:`~repro.explore.runner.SweepProgress` emits; any number of HTTP
+handler threads stream them out as Server-Sent Events.  Design points:
+
+* **Replay, not fan-out bookkeeping.**  Events are appended to a per-job
+  list and never removed; a subscriber is just a cursor (``after``), so a
+  client that reconnects with ``Last-Event-ID`` (or ``?after=N``) resumes
+  exactly where it left off and late subscribers see the full history.
+  Sweep event volume is bounded (O(configs + retries)), so the buffer is
+  cheap to keep for the daemon's lifetime.
+* **One condition variable.**  Publishers notify; stream cursors wait with
+  a timeout so a handler can emit SSE keepalive comments (and notice a
+  dead socket) instead of blocking forever.
+* **Closed = complete.**  ``close(job)`` marks the stream final: cursors
+  drain whatever is buffered and then stop iterating, which ends the HTTP
+  response body — the client-visible "sweep finished" signal.  Streaming
+  an unknown job yields nothing (restart-recovered jobs have no buffer).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+#: sentinel yielded by :meth:`EventBus.stream` when ``keepalive_s`` elapses
+#: with no new events — the HTTP layer turns it into an SSE comment line
+KEEPALIVE = object()
+
+
+class EventBus:
+    def __init__(self) -> None:
+        self._cond = threading.Condition()
+        self._events: Dict[str, List[Dict[str, Any]]] = {}
+        self._closed: Dict[str, bool] = {}
+
+    def register(self, job_id: str) -> None:
+        """Open a (possibly still empty) stream for a job."""
+        with self._cond:
+            self._events.setdefault(job_id, [])
+            self._closed.setdefault(job_id, False)
+
+    def publish(self, job_id: str, event: Dict[str, Any]) -> int:
+        """Append one event; returns its 1-based sequence id."""
+        with self._cond:
+            buf = self._events.setdefault(job_id, [])
+            if self._closed.get(job_id):
+                raise ValueError(f"event stream for {job_id!r} is closed")
+            buf.append(event)
+            self._cond.notify_all()
+            return len(buf)
+
+    def close(self, job_id: str) -> None:
+        with self._cond:
+            self._events.setdefault(job_id, [])
+            self._closed[job_id] = True
+            self._cond.notify_all()
+
+    def events(self, job_id: str) -> List[Dict[str, Any]]:
+        """Snapshot of everything published so far (tests, debugging)."""
+        with self._cond:
+            return list(self._events.get(job_id, ()))
+
+    def stream(self, job_id: str, after: int = 0,
+               keepalive_s: Optional[float] = None,
+               ) -> Iterator[Tuple[int, Any]]:
+        """Yield ``(seq, event)`` from ``after`` onward, blocking for new
+        events; yields ``(0, KEEPALIVE)`` on idle timeout; returns once the
+        stream is closed and drained (or the job is unknown)."""
+        cursor = max(0, int(after))
+        while True:
+            with self._cond:
+                buf = self._events.get(job_id)
+                if buf is None:
+                    return                      # unknown job: empty stream
+                if cursor < len(buf):
+                    batch = list(enumerate(buf[cursor:], cursor + 1))
+                    cursor = len(buf)
+                elif self._closed.get(job_id):
+                    return
+                else:
+                    if not self._cond.wait(timeout=keepalive_s):
+                        batch = [(0, KEEPALIVE)]
+                    else:
+                        continue
+            for seq, ev in batch:
+                yield seq, ev

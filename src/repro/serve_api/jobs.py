@@ -1,0 +1,151 @@
+"""Persistent job records for the benchmark service.
+
+One job = one submitted :class:`~repro.explore.spec.ExperimentSpec` moving
+through ``queued -> running -> done|failed``.  Every state *transition* is
+persisted as an atomic canonical-JSON file (tmp + ``os.replace``, the same
+discipline as ``RunCache`` and ``.prom`` snapshots), so a restarted daemon
+still serves every finished report byte-identically; high-frequency progress
+updates stay in memory (the SSE stream and status endpoint read those — a
+crash loses at most the in-flight progress counters, never a result).
+
+Recovery contract: on startup every non-terminal record is marked ``failed``
+with an explicit "daemon restarted mid-sweep" error — the job's worker
+thread died with the old process, and silently resurrecting it would rerun
+simulations the submitter never asked for twice.  Resubmitting the same spec
+is free anyway: the run cache is content-addressed.
+"""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+from ..explore.spec import canonical_json
+
+JOB_SCHEMA = "repro-serve-job/v1"
+
+#: states a restarted daemon can trust (the record is complete)
+TERMINAL_STATES = ("done", "failed")
+
+_ID_RE = re.compile(r"^j(\d{5})$")
+
+
+def job_summary(job: Dict[str, Any]) -> Dict[str, Any]:
+    """The listing/status view: everything but the (large) report doc."""
+    return {k: job.get(k) for k in
+            ("id", "state", "spec_name", "spec_hash", "submitted_unix",
+             "progress", "summary", "error", "wall_s")}
+
+
+class JobStore:
+    """Thread-safe in-memory job table backed by one JSON file per job."""
+
+    def __init__(self, state_dir: str) -> None:
+        self.state_dir = os.path.abspath(state_dir)
+        self.jobs_dir = os.path.join(self.state_dir, "jobs")
+        os.makedirs(self.jobs_dir, exist_ok=True)
+        self._lock = threading.RLock()
+        self._jobs: Dict[str, Dict[str, Any]] = {}
+        self._next = 1
+        self._load()
+
+    # ------------------------------------------------------------- loading
+    def _load(self) -> None:
+        import json
+        for fn in sorted(os.listdir(self.jobs_dir)):
+            if not fn.endswith(".json"):
+                continue
+            jid = fn[:-5]
+            m = _ID_RE.match(jid)
+            if not m:
+                continue
+            try:
+                with open(os.path.join(self.jobs_dir, fn)) as fh:
+                    job = json.load(fh)
+            except (OSError, ValueError):
+                continue          # torn/foreign file: skip, never crash boot
+            if job.get("schema") != JOB_SCHEMA or job.get("id") != jid:
+                continue
+            self._jobs[jid] = job
+            self._next = max(self._next, int(m.group(1)) + 1)
+
+    def recover(self) -> List[str]:
+        """Fail every non-terminal record (its worker died with the old
+        daemon); returns the failed ids."""
+        failed = []
+        with self._lock:
+            for jid, job in self._jobs.items():
+                if job["state"] not in TERMINAL_STATES:
+                    job["state"] = "failed"
+                    job["error"] = ("daemon restarted mid-sweep; resubmit "
+                                    "(cached runs are free)")
+                    self._persist(job)
+                    failed.append(jid)
+        return failed
+
+    # ------------------------------------------------------------ mutation
+    def create(self, spec_dict: Dict[str, Any], spec_name: str,
+               spec_hash: str) -> Dict[str, Any]:
+        with self._lock:
+            jid = f"j{self._next:05d}"
+            self._next += 1
+            job = {
+                "schema": JOB_SCHEMA,
+                "id": jid,
+                "state": "queued",
+                "spec": spec_dict,
+                "spec_name": spec_name,
+                "spec_hash": spec_hash,
+                "submitted_unix": round(time.time(), 3),
+                "progress": None,
+                "summary": None,
+                "error": None,
+                "report": None,
+                "wall_s": None,
+            }
+            self._jobs[jid] = job
+            self._persist(job)
+            return dict(job)
+
+    def update(self, jid: str, persist: bool = False,
+               **fields: Any) -> None:
+        with self._lock:
+            job = self._jobs[jid]
+            job.update(fields)
+            if persist:
+                self._persist(job)
+
+    # ------------------------------------------------------------- queries
+    def get(self, jid: str) -> Optional[Dict[str, Any]]:
+        with self._lock:
+            job = self._jobs.get(jid)
+            return dict(job) if job is not None else None
+
+    def list(self) -> List[Dict[str, Any]]:
+        with self._lock:
+            return [job_summary(self._jobs[j]) for j in sorted(self._jobs)]
+
+    def ids(self, states: Optional[tuple] = None) -> List[str]:
+        with self._lock:
+            return [j for j in sorted(self._jobs)
+                    if states is None or self._jobs[j]["state"] in states]
+
+    # ---------------------------------------------------------- persistence
+    def _persist(self, job: Dict[str, Any]) -> str:
+        path = os.path.join(self.jobs_dir, f"{job['id']}.json")
+        fd, tmp = tempfile.mkstemp(dir=self.jobs_dir, prefix=".job-",
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as fh:
+                fh.write(canonical_json(job) + b"\n")
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        return path

@@ -1,0 +1,387 @@
+"""The live benchmark service: HTTP sweeps in, reports + metrics out.
+
+``repro serve-api`` turns the one-shot ``repro explore`` pipeline into a
+long-running daemon (the ROADMAP's "Live benchmark service"), stdlib-only
+by design — ``http.server.ThreadingHTTPServer`` carries real scrape +
+submit traffic fine at benchmark-service rates, and zero dependencies means
+the service runs in the minimal-deps CI lane unchanged.
+
+Routes (all JSON unless noted):
+
+* ``POST /api/v1/sweeps`` — body is an ExperimentSpec document; validates,
+  enqueues, returns ``202 {"id": ...}``.  Execution runs through the same
+  :func:`~repro.explore.runner.run_sweep` as the CLI against one shared
+  content-addressed :class:`~repro.explore.cache.RunCache`, so a repeat
+  submission (same spec from another user) performs **zero** simulations.
+* ``GET /api/v1/sweeps`` — job listing; ``GET /api/v1/sweeps/{id}`` —
+  status/progress/ETA (the same :class:`SweepProgress` snapshot the stderr
+  heartbeat renders — one accounting path, no second bookkeeping).
+* ``GET /api/v1/sweeps/{id}/report`` — the canonical report JSON,
+  byte-identical to offline ``repro explore --json`` for the same spec
+  (``?format=md`` renders the markdown view instead).
+* ``GET /api/v1/sweeps/{id}/events`` — Server-Sent Events: every
+  structured progress event (run finished/retried/requeued/timeout, pool
+  rebuilt), with SSE ``id:`` for ``Last-Event-ID``/``?after=`` resume.
+* ``GET /metrics`` — Prometheus 0.0.4 text: service-level counters plus
+  every job's sweep registry merged with a ``job="<id>"`` label
+  (:func:`repro.obs.merged_exposition`), ``repro_build_info`` and uptime.
+* ``GET /healthz`` — liveness.
+
+Lifecycle: job transitions persist as atomic canonical-JSON records
+(:mod:`.jobs`), so a restarted daemon serves finished reports unchanged;
+SIGTERM/SIGINT drain — in-flight sweeps finish, still-queued jobs fail
+fast with an explicit error, then the process exits.
+"""
+from __future__ import annotations
+
+import json
+import queue
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Dict, List, Optional, Tuple
+from urllib.parse import parse_qs, urlsplit
+
+from ..explore.report import (REPORT_SCHEMA, build_report, render_markdown,
+                              report_json_bytes)
+from ..explore.runner import run_sweep
+from ..explore.spec import CACHE_SCHEMA, ExperimentSpec, canonical_json
+from ..obs import MetricsRegistry, merged_exposition
+from .events import KEEPALIVE, EventBus
+from .jobs import JobStore, job_summary
+
+API_SCHEMA = "repro-serve-api/v1"
+
+#: services constructed in this process, newest last — the signal handlers
+#: and in-process tests reach the running daemon through this
+_ACTIVE: List["BenchmarkService"] = []
+
+_WORKER_STOP = None               # queue sentinel
+
+
+class BenchmarkService:
+    """Owns the job store, event bus, worker pool, and HTTP server."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 state_dir: str = ".serve_api",
+                 cache_dir: Optional[str] = None,
+                 workers: int = 2, sweep_jobs: int = 1,
+                 timeout_s: Optional[float] = None, max_retries: int = 2,
+                 quiet: bool = False) -> None:
+        self.host = host
+        self.port = int(port)
+        self.state_dir = state_dir
+        self.cache_dir = cache_dir
+        self.workers = max(1, int(workers))
+        self.sweep_jobs = max(1, int(sweep_jobs))
+        self.timeout_s = timeout_s
+        self.max_retries = int(max_retries)
+        self.quiet = quiet
+
+        self.store = JobStore(state_dir)
+        self.recovered = self.store.recover()
+        self.bus = EventBus()
+        self.metrics = MetricsRegistry()
+        self._job_regs: Dict[str, MetricsRegistry] = {}
+        self._lock = threading.RLock()
+        self._t0 = time.monotonic()
+        self._queue: "queue.Queue[Any]" = queue.Queue()
+        self._threads: List[threading.Thread] = []
+        self._httpd: Optional[ThreadingHTTPServer] = None
+        self._http_thread: Optional[threading.Thread] = None
+        self._stop_requested = threading.Event()
+        self._draining = False
+
+        m = self.metrics
+        self._m_jobs = m.counter(
+            "repro_sweep_jobs_total",
+            "Sweep jobs by lifecycle event", labels=("event",))
+        self._m_runs = m.counter(
+            "repro_sweep_runs_total",
+            "Individual sweep runs by outcome, across all jobs",
+            labels=("status",))
+        self._m_active = m.gauge(
+            "repro_sweep_active_jobs", "Sweeps currently executing")
+        self._m_queued = m.gauge(
+            "repro_sweep_queued_jobs", "Sweeps waiting for a worker")
+        self._m_uptime = m.gauge(
+            "repro_uptime_seconds", "Daemon uptime (monotonic)")
+        m.gauge("repro_build_info",
+                "Constant 1; schema versions ride the labels",
+                labels=("api", "cache_schema", "report_schema"),
+                ).set(1.0, api=API_SCHEMA, cache_schema=CACHE_SCHEMA,
+                      report_schema=REPORT_SCHEMA)
+        _ACTIVE.append(self)
+
+    # -------------------------------------------------------------- control
+    @property
+    def address(self) -> Tuple[str, int]:
+        if self._httpd is None:
+            raise RuntimeError("service not started")
+        return self._httpd.server_address[:2]
+
+    def start(self) -> Tuple[str, int]:
+        """Bind, start worker + HTTP threads, return ``(host, port)``."""
+        svc = self
+
+        class Handler(_Handler):
+            service = svc
+
+        try:
+            self._httpd = ThreadingHTTPServer((self.host, self.port), Handler)
+        except (OSError, OverflowError) as exc:
+            # one-line `error: ...` + exit 2 via the CLI's RuntimeError catch
+            raise RuntimeError(
+                f"cannot bind {self.host}:{self.port}: {exc}") from exc
+        self._httpd.daemon_threads = True
+        for i in range(self.workers):
+            t = threading.Thread(target=self._worker_loop,
+                                 name=f"sweep-worker-{i}", daemon=True)
+            t.start()
+            self._threads.append(t)
+        self._http_thread = threading.Thread(
+            target=self._httpd.serve_forever, name="serve-api-http",
+            daemon=True)
+        self._http_thread.start()
+        return self.address
+
+    def request_stop(self) -> None:
+        """Signal-handler-safe: ask the serve loop to drain and exit."""
+        self._stop_requested.set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._stop_requested.wait(timeout)
+
+    def stop(self, drain: bool = True,
+             timeout_s: Optional[float] = None) -> None:
+        """Stop accepting HTTP, resolve the queue, join the workers.
+
+        ``drain=True`` (the SIGTERM path) lets in-flight sweeps finish;
+        jobs still queued fail fast with an explicit error instead of
+        silently vanishing — their records persist either way.
+        """
+        self._stop_requested.set()
+        if self._httpd is not None:
+            self._httpd.shutdown()
+            self._httpd.server_close()
+        self._draining = True     # workers fail queued jobs instead of
+        for _ in self._threads:   # running them; in-flight sweeps finish
+            self._queue.put(_WORKER_STOP)
+        if not drain:
+            return                # workers are daemon threads; process exit
+        deadline = (time.monotonic() + timeout_s
+                    if timeout_s is not None else None)
+        for t in self._threads:
+            left = (None if deadline is None
+                    else max(0.0, deadline - time.monotonic()))
+            t.join(timeout=left)
+
+    # -------------------------------------------------------------- workers
+    def submit(self, spec_dict: Dict[str, Any]) -> Dict[str, Any]:
+        """Validate + enqueue one spec; returns the fresh job record."""
+        if not isinstance(spec_dict, dict):
+            raise ValueError("request body must be an ExperimentSpec "
+                             "JSON object")
+        spec = ExperimentSpec.from_dict(spec_dict)
+        spec.validate()
+        job = self.store.create(spec_dict, spec.name, spec.spec_hash())
+        jid = job["id"]
+        with self._lock:
+            self._job_regs[jid] = MetricsRegistry()
+        self.bus.register(jid)
+        self._m_jobs.inc(event="submitted")
+        self._m_queued.inc()
+        self._queue.put(jid)
+        return job
+
+    def _worker_loop(self) -> None:
+        while True:
+            jid = self._queue.get()
+            if jid is _WORKER_STOP:
+                return
+            self._m_queued.dec()
+            if self._draining:
+                self.store.update(jid, persist=True, state="failed",
+                                  error="daemon stopped before this sweep "
+                                        "started; resubmit")
+                self._m_jobs.inc(event="failed")
+                self.bus.close(jid)
+                continue
+            self._run_job(jid)
+
+    def _run_job(self, jid: str) -> None:
+        job = self.store.get(jid)
+        self.store.update(jid, persist=True, state="running")
+        self._m_active.inc()
+        with self._lock:
+            reg = self._job_regs[jid]
+
+        def on_event(ev: Dict[str, Any]) -> None:
+            self.store.update(jid, progress=ev.get("progress"))
+            if ev.get("event") == "run_finished":
+                self._m_runs.inc(status=ev.get("status", "unknown"))
+            self.bus.publish(jid, ev)
+
+        try:
+            spec = ExperimentSpec.from_dict(job["spec"])
+            res = run_sweep(spec, jobs=self.sweep_jobs,
+                            cache_dir=self.cache_dir,
+                            timeout_s=self.timeout_s,
+                            max_retries=self.max_retries,
+                            metrics=reg, on_event=on_event)
+            doc = build_report(res)
+            self.store.update(jid, persist=True, state="done",
+                              report=doc, summary=res.summary(),
+                              wall_s=res.wall_s)
+            self._m_jobs.inc(event="completed")
+        except Exception as exc:   # noqa: BLE001 — one job never kills the
+            self.store.update(     # daemon; the record carries the reason
+                jid, persist=True, state="failed",
+                error=f"{type(exc).__name__}: {exc}")
+            self._m_jobs.inc(event="failed")
+        finally:
+            self._m_active.dec()
+            self.bus.close(jid)
+
+    # ------------------------------------------------------------ exposition
+    def exposition(self) -> str:
+        self._m_uptime.set(round(time.monotonic() - self._t0, 3))
+        with self._lock:
+            parts: List[Tuple[Dict[str, str], MetricsRegistry]] = \
+                [({}, self.metrics)]
+            parts += [({"job": jid}, self._job_regs[jid])
+                      for jid in sorted(self._job_regs)]
+        return merged_exposition(parts)
+
+
+# ------------------------------------------------------------------ handler
+class _Handler(BaseHTTPRequestHandler):
+    service: BenchmarkService   # bound by the per-service subclass
+    protocol_version = "HTTP/1.1"
+    server_version = "repro-serve-api/1"
+
+    _MAX_BODY = 8 << 20          # a spec is small; 8 MiB is already generous
+
+    def log_message(self, fmt: str, *args: Any) -> None:
+        if not self.service.quiet:
+            super().log_message(fmt, *args)
+
+    # ------------------------------------------------------------- plumbing
+    def _send(self, code: int, body: bytes, ctype: str) -> None:
+        self.send_response(code)
+        self.send_header("Content-Type", ctype)
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _json(self, code: int, obj: Any) -> None:
+        self._send(code, canonical_json(obj) + b"\n",
+                   "application/json; charset=utf-8")
+
+    def _error(self, code: int, message: str) -> None:
+        self._json(code, {"error": message})
+
+    def _read_body(self) -> bytes:
+        n = int(self.headers.get("Content-Length") or 0)
+        if n <= 0:
+            raise ValueError("missing request body")
+        if n > self._MAX_BODY:
+            raise ValueError(f"request body too large ({n} bytes)")
+        return self.rfile.read(n)
+
+    # --------------------------------------------------------------- routes
+    def do_POST(self) -> None:   # noqa: N802 — http.server API
+        path = urlsplit(self.path).path.rstrip("/")
+        if path != "/api/v1/sweeps":
+            self._error(404, f"no such endpoint: POST {path}")
+            return
+        try:
+            spec_dict = json.loads(self._read_body().decode("utf-8"))
+            job = self.service.submit(spec_dict)
+        except (ValueError, KeyError, TypeError, FileNotFoundError) as exc:
+            self._error(400, f"invalid spec: {exc.args[0] if exc.args else exc}")
+            return
+        self._json(202, {"id": job["id"], "state": job["state"],
+                         "spec_hash": job["spec_hash"],
+                         "url": f"/api/v1/sweeps/{job['id']}"})
+
+    def do_GET(self) -> None:    # noqa: N802 — http.server API
+        url = urlsplit(self.path)
+        path, query = url.path.rstrip("/"), parse_qs(url.query)
+        if path == "/healthz":
+            self._json(200, {"ok": True, "schema": API_SCHEMA})
+            return
+        if path == "/metrics":
+            self._send(200, self.service.exposition().encode("utf-8"),
+                       "text/plain; version=0.0.4; charset=utf-8")
+            return
+        if path == "/api/v1/sweeps":
+            self._json(200, {"jobs": self.service.store.list()})
+            return
+        parts = path.split("/")
+        # /api/v1/sweeps/{id}[/report|/events]
+        if parts[:4] == ["", "api", "v1", "sweeps"] and len(parts) in (5, 6):
+            jid = parts[4]
+            job = self.service.store.get(jid)
+            if job is None:
+                self._error(404, f"no such job: {jid}")
+                return
+            sub = parts[5] if len(parts) == 6 else None
+            if sub is None:
+                self._json(200, job_summary(job))
+            elif sub == "report":
+                self._serve_report(job, query)
+            elif sub == "events":
+                self._serve_events(jid, query)
+            else:
+                self._error(404, f"no such endpoint: {path}")
+            return
+        self._error(404, f"no such endpoint: {path}")
+
+    def _serve_report(self, job: Dict[str, Any],
+                      query: Dict[str, List[str]]) -> None:
+        if job["state"] != "done":
+            self._error(409, f"job {job['id']} is {job['state']}"
+                             + (f": {job['error']}" if job.get("error")
+                                else " — report not ready"))
+            return
+        if query.get("format", ["json"])[0] == "md":
+            self._send(200, render_markdown(job["report"]).encode("utf-8"),
+                       "text/markdown; charset=utf-8")
+        else:
+            # report_json_bytes over the persisted doc: byte-identical to
+            # offline `repro explore --json` for the same spec, across
+            # daemon restarts (json round-trip preserves canonical floats)
+            self._send(200, report_json_bytes(job["report"]),
+                       "application/json; charset=utf-8")
+
+    def _serve_events(self, jid: str,
+                      query: Dict[str, List[str]]) -> None:
+        after = 0
+        last_id = self.headers.get("Last-Event-ID")
+        try:
+            if "after" in query:
+                after = int(query["after"][0])
+            elif last_id:
+                after = int(last_id)
+        except ValueError:
+            self._error(400, "after / Last-Event-ID must be an integer")
+            return
+        self.send_response(200)
+        self.send_header("Content-Type", "text/event-stream; charset=utf-8")
+        self.send_header("Cache-Control", "no-store")
+        self.send_header("Connection", "close")
+        self.end_headers()
+        self.close_connection = True
+        try:
+            for seq, ev in self.service.bus.stream(jid, after=after,
+                                                   keepalive_s=15.0):
+                if ev is KEEPALIVE:
+                    self.wfile.write(b": keepalive\n\n")
+                else:
+                    self.wfile.write(
+                        f"id: {seq}\nevent: {ev['event']}\n".encode("utf-8")
+                        + b"data: " + canonical_json(ev) + b"\n\n")
+                self.wfile.flush()
+        except (BrokenPipeError, ConnectionResetError):
+            pass                  # client went away; nothing to clean up

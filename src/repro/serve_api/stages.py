@@ -1,0 +1,22 @@
+"""Pipeline-registry wiring for the benchmark service.
+
+* ``serve.api`` (kind="service") — construct a :class:`BenchmarkService`;
+  the caller (the ``repro serve-api`` verb, or embedding code/tests) owns
+  ``start()``/``stop()``.  Registering the daemon like any other stage
+  keeps `repro stages` the one discovery surface for every capability.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from ..pipeline.registry import register_stage
+
+
+@register_stage("serve.api", kind="service")
+def serve_api(**kw: Any) -> Any:
+    """HTTP sweep submission + SSE progress + fleet /metrics daemon."""
+    # imported lazily: the registry import chain (pipeline.builtin ->
+    # here) must not drag in the server while repro.serve_api.jobs is
+    # still initializing on the sibling import path
+    from .server import BenchmarkService
+    return BenchmarkService(**kw)

@@ -98,7 +98,8 @@ def test_stages_lists_all_kinds(capsys):
     assert cli.main(["stages"]) == 0
     out = capsys.readouterr().out
     for name in ("generate", "convert", "sim", "synth.generate",
-                 "explore.run", "explore.report", "perf_feeder"):
+                 "explore.run", "explore.report", "perf_feeder",
+                 "serve.api"):
         assert name in out, name
 
 
@@ -153,3 +154,56 @@ def test_cli_error_paths(capsys, tmp_path):
     assert cli.main(["capture", "--generate", "nonsense",
                      "-o", str(tmp_path / "x.chkb")]) == 2
     assert "error:" in capsys.readouterr().err
+    # unbindable port: one-line error + exit 2, never a traceback
+    assert cli.main(["serve-api", "--port", "99999"]) == 2
+    assert "cannot bind" in capsys.readouterr().err
+
+
+def test_serve_api_cli_roundtrip(tmp_path, capsys):
+    # drive the real verb in a thread: ephemeral port via --port-file,
+    # submit over HTTP, then stop through the module's active-service hook
+    import json as _json
+    import threading
+    import time
+    import urllib.request
+
+    from repro.serve_api.server import _ACTIVE
+
+    port_file = str(tmp_path / "port")
+    rc = []
+    t = threading.Thread(target=lambda: rc.append(cli.main(
+        ["serve-api", "--port", "0", "--port-file", port_file,
+         "--state-dir", str(tmp_path / "state"),
+         "--cache-dir", str(tmp_path / "cache"),
+         "--workers", "1", "--retries", "1", "-q"])))
+    t.start()
+    try:
+        deadline = time.monotonic() + 30
+        while not os.path.exists(port_file):
+            assert time.monotonic() < deadline, "daemon never bound"
+            time.sleep(0.02)
+        host, port = open(port_file).read().split()
+        base = f"http://{host}:{port}"
+        with urllib.request.urlopen(base + "/healthz") as r:
+            assert _json.loads(r.read())["ok"] is True
+        spec = {"workloads": [{"pattern": "dp_allreduce"}],
+                "axes": {"world_size": [4]}}
+        req = urllib.request.Request(base + "/api/v1/sweeps",
+                                     data=_json.dumps(spec).encode(),
+                                     method="POST")
+        with urllib.request.urlopen(req) as r:
+            jid = _json.loads(r.read())["id"]
+        while True:
+            with urllib.request.urlopen(base + f"/api/v1/sweeps/{jid}") as r:
+                st = _json.loads(r.read())
+            if st["state"] in ("done", "failed"):
+                break
+            assert time.monotonic() < deadline, st
+            time.sleep(0.02)
+        assert st["state"] == "done", st
+        with urllib.request.urlopen(base + "/metrics") as r:
+            assert "repro_sweep_runs_total" in r.read().decode()
+    finally:
+        _ACTIVE[-1].request_stop()
+        t.join(timeout=60)
+    assert rc == [0]

@@ -388,6 +388,6 @@ def test_cli_stages_kind_filter(capsys):
     order = [ln[:-1] for ln in out.splitlines()
              if ln.endswith(":") and not ln.startswith(" ")]
     assert order == [k for k in ("source", "pass", "sink", "benchmark",
-                                 "experiment", "observe") if k in order]
+                                 "experiment", "observe", "service") if k in order]
     with pytest.raises(SystemExit):
         cli.main(["stages", "--kind", "nope"])

@@ -102,6 +102,85 @@ def test_snapshot_cadence_injected_clock(tmp_path):
     assert [p.name for p in tmp_path.iterdir()] == ["m.prom"]
 
 
+def _assert_parseable_exposition(text):
+    """Minimal 0.0.4 grammar check: every line is HELP/TYPE or a sample."""
+    for line in text.splitlines():
+        if line.startswith("# HELP ") or line.startswith("# TYPE "):
+            continue
+        name_part, _, value = line.rpartition(" ")
+        assert name_part and value, line
+        float(value)                        # sample value parses
+        assert name_part.startswith("repro_"), line
+
+
+def test_metrics_thread_safety_hammer():
+    # worker threads hammer all three instrument kinds while scrape
+    # threads render: final counts must be exact (no lost updates) and
+    # every mid-flight exposition must parse (no torn lines)
+    import threading
+    reg = MetricsRegistry()
+    c = reg.counter("repro_hammer_total", "hits", labels=("who",))
+    g = reg.gauge("repro_hammer_depth")
+    h = reg.histogram("repro_hammer_lat_seconds", buckets=(0.1, 1.0))
+    n_threads, n_iter = 8, 2000
+    stop = threading.Event()
+    scrapes = []
+
+    def work(tid):
+        for i in range(n_iter):
+            c.inc(who=f"t{tid}")
+            g.set(float(i))
+            h.observe(0.05 if i % 2 else 5.0)
+
+    def scrape():
+        while not stop.is_set():
+            scrapes.append(reg.expose())
+
+    workers = [threading.Thread(target=work, args=(t,))
+               for t in range(n_threads)]
+    scraper = threading.Thread(target=scrape)
+    scraper.start()
+    for t in workers:
+        t.start()
+    for t in workers:
+        t.join()
+    stop.set()
+    scraper.join()
+    for tid in range(n_threads):
+        assert c.value(who=f"t{tid}") == n_iter
+    final = reg.expose()
+    assert f"repro_hammer_lat_seconds_count {n_threads * n_iter}" in final
+    assert scrapes, "scraper never ran"
+    for text in scrapes[:: max(1, len(scrapes) // 50)] + [final]:
+        _assert_parseable_exposition(text)
+
+
+def test_merged_exposition_per_part_labels():
+    from repro.obs import merged_exposition
+    svc, j1, j2 = MetricsRegistry(), MetricsRegistry(), MetricsRegistry()
+    svc.gauge("repro_up", "Daemon up").set(1)
+    for reg, n in ((j1, 2), (j2, 5)):
+        reg.counter("repro_explore_runs_total", "Sweep runs by outcome",
+                    labels=("status",)).inc(n, status="ok")
+    merged = merged_exposition([({}, svc), ({"job": "j1"}, j1),
+                                ({"job": "j2"}, j2)])
+    assert merged == (
+        '# HELP repro_explore_runs_total Sweep runs by outcome\n'
+        '# TYPE repro_explore_runs_total counter\n'
+        'repro_explore_runs_total{status="ok",job="j1"} 2\n'
+        'repro_explore_runs_total{status="ok",job="j2"} 5\n'
+        '# HELP repro_up Daemon up\n'
+        '# TYPE repro_up gauge\n'
+        'repro_up 1\n'
+    )
+    _assert_parseable_exposition(merged)
+    # conflicting kinds across registries are rejected loudly
+    other = MetricsRegistry()
+    other.gauge("repro_explore_runs_total")
+    with pytest.raises(ValueError, match="refusing to merge"):
+        merged_exposition([({}, j1), ({}, other)])
+
+
 # ------------------------------------------------- timeline: closed loop
 def test_timeline_self_ingestion_closed_loop():
     res, rec = run_recorded(ranks=8, iters=3)

@@ -1,0 +1,243 @@
+"""repro.serve_api: live benchmark service acceptance.
+
+The gates: a daemon on an ephemeral port accepts an ExperimentSpec over
+HTTP, streams well-formed ordered SSE progress, serves a report
+byte-identical to the offline CLI, exposes per-job outcome counters on one
+merged /metrics, runs a repeat submission entirely from the shared cache
+(zero new simulations), survives a restart with finished jobs intact, and
+the progress events share one accounting path with the stderr heartbeat."""
+import io
+import json
+import time
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.explore import (ExperimentSpec, build_report, report_json_bytes,
+                           run_sweep)
+from repro.serve_api import BenchmarkService, EventBus, JobStore
+
+SPEC = {
+    "name": "serve-mini",
+    "workloads": [{"pattern": "moe_mixed",
+                   "args": {"mode": "allreduce", "iters": 2}}],
+    "axes": {"topology": ["ring", "switch", "clos"], "world_size": [4]},
+}
+
+
+# ------------------------------------------------------------------ helpers
+def http_get(base, path):
+    with urllib.request.urlopen(base + path) as r:
+        return r.status, r.read()
+
+
+def http_post(base, path, obj):
+    req = urllib.request.Request(
+        base + path, data=json.dumps(obj).encode(), method="POST",
+        headers={"Content-Type": "application/json"})
+    with urllib.request.urlopen(req) as r:
+        return r.status, json.loads(r.read())
+
+
+def wait_terminal(base, jid, timeout_s=60.0):
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        _, body = http_get(base, f"/api/v1/sweeps/{jid}")
+        st = json.loads(body)
+        if st["state"] in ("done", "failed"):
+            return st
+        time.sleep(0.02)
+    raise AssertionError(f"job {jid} did not finish: {st}")
+
+
+@pytest.fixture()
+def service(tmp_path):
+    svc = BenchmarkService(port=0, state_dir=str(tmp_path / "state"),
+                           cache_dir=str(tmp_path / "cache"), workers=2,
+                           quiet=True)
+    host, port = svc.start()
+    yield svc, f"http://{host}:{port}", tmp_path
+    svc.stop(drain=True, timeout_s=30)
+
+
+# -------------------------------------------------------------- end to end
+def test_service_end_to_end(service):
+    svc, base, tmp_path = service
+    status, sub = http_post(base, "/api/v1/sweeps", SPEC)
+    assert status == 202 and sub["state"] == "queued"
+    jid = sub["id"]
+    st = wait_terminal(base, jid)
+    assert st["state"] == "done", st
+    assert st["progress"]["done"] == st["progress"]["total"] == 3
+    assert st["progress"]["eta_s"] == 0.0
+
+    # report byte-identity vs the offline path (fresh cache: same spec,
+    # independent execution — the determinism contract, not cache reuse)
+    _, served = http_get(base, f"/api/v1/sweeps/{jid}/report")
+    res = run_sweep(ExperimentSpec.from_dict(SPEC),
+                    cache_dir=str(tmp_path / "offline_cache"))
+    assert served == report_json_bytes(build_report(res))
+
+    # markdown view renders the same doc
+    _, md = http_get(base, f"/api/v1/sweeps/{jid}/report?format=md")
+    assert md.decode().startswith("# Co-design sweep report: serve-mini")
+
+    # SSE: well-formed, ordered ids, bracketed by sweep_started/finished
+    _, raw = http_get(base, f"/api/v1/sweeps/{jid}/events")
+    events, ids = [], []
+    for block in raw.decode().strip().split("\n\n"):
+        lines = block.splitlines()
+        assert lines[0].startswith("id: ")
+        assert lines[1].startswith("event: ")
+        assert lines[2].startswith("data: ")
+        ids.append(int(lines[0][4:]))
+        events.append(json.loads(lines[2][6:]))
+    assert ids == list(range(1, len(ids) + 1))
+    kinds = [e["event"] for e in events]
+    assert kinds[0] == "sweep_started" and kinds[-1] == "sweep_finished"
+    assert kinds.count("run_finished") == 3
+    # ?after= replay resumes mid-stream: exactly the final event remains
+    _, tail = http_get(base, f"/api/v1/sweeps/{jid}/events?after={ids[-2]}")
+    blocks = tail.decode().strip().split("\n\n")
+    assert len(blocks) == 1 and blocks[0].startswith(f"id: {ids[-1]}\n")
+
+    # /metrics: service counters + the job's sweep registry under job=""
+    _, m = http_get(base, "/metrics")
+    text = m.decode()
+    assert 'repro_sweep_runs_total{status="ok"} 3' in text
+    assert 'repro_sweep_jobs_total{event="completed"} 1' in text
+    assert f'repro_explore_runs_total{{status="ok",job="{jid}"}} 3' in text
+    assert "repro_build_info{" in text
+    assert "repro_uptime_seconds" in text
+
+    # second identical submission: served fully from the shared cache
+    _, sub2 = http_post(base, "/api/v1/sweeps", SPEC)
+    st2 = wait_terminal(base, sub2["id"])
+    assert st2["state"] == "done"
+    assert st2["progress"]["cached"] == 3          # zero new simulations
+    _, served2 = http_get(base, f"/api/v1/sweeps/{sub2['id']}/report")
+    assert served2 == served
+    _, m2 = http_get(base, "/metrics")
+    assert 'repro_sweep_runs_total{status="cached"} 3' in m2.decode()
+
+    # listing shows both jobs
+    _, listing = http_get(base, "/api/v1/sweeps")
+    jobs = json.loads(listing)["jobs"]
+    assert [j["id"] for j in jobs] == [jid, sub2["id"]]
+
+
+def test_restart_serves_finished_reports(tmp_path):
+    state = str(tmp_path / "state")
+    svc = BenchmarkService(port=0, state_dir=state,
+                           cache_dir=str(tmp_path / "cache"), quiet=True)
+    host, port = svc.start()
+    base = f"http://{host}:{port}"
+    _, sub = http_post(base, "/api/v1/sweeps", SPEC)
+    wait_terminal(base, sub["id"])
+    _, served = http_get(base, f"/api/v1/sweeps/{sub['id']}/report")
+    # simulate an unclean exit mid-sweep: a queued record the old daemon
+    # never ran (written behind the running server's back)
+    svc.store.create(SPEC, "serve-mini", "x" * 64)
+    svc.stop(drain=True, timeout_s=30)
+
+    svc2 = BenchmarkService(port=0, state_dir=state,
+                            cache_dir=str(tmp_path / "cache"), quiet=True)
+    host2, port2 = svc2.start()
+    base2 = f"http://{host2}:{port2}"
+    try:
+        # finished report: byte-identical across the restart
+        _, served2 = http_get(base2, f"/api/v1/sweeps/{sub['id']}/report")
+        assert served2 == served
+        # interrupted job: failed loudly, report answers 409
+        assert svc2.recovered == ["j00002"]
+        _, body = http_get(base2, "/api/v1/sweeps/j00002")
+        st = json.loads(body)
+        assert st["state"] == "failed" and "restarted" in st["error"]
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            http_get(base2, "/api/v1/sweeps/j00002/report")
+        assert ei.value.code == 409
+    finally:
+        svc2.stop(drain=True, timeout_s=30)
+
+
+def test_http_error_paths(service):
+    _, base, _ = service
+    _, sub = http_post(base, "/api/v1/sweeps", SPEC)
+    for path, code in [("/api/v1/sweeps/nope", 404),
+                       ("/nope", 404),
+                       (f"/api/v1/sweeps/{sub['id']}/nope", 404),
+                       (f"/api/v1/sweeps/{sub['id']}/events?after=x", 400)]:
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            http_get(base, path)
+        assert ei.value.code == code, path
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        http_post(base, "/api/v1/sweeps", {"workloads": []})
+    assert ei.value.code == 400
+    assert "invalid spec" in json.loads(ei.value.read())["error"]
+    _, body = http_get(base, "/healthz")
+    assert json.loads(body)["ok"] is True
+
+
+# ------------------------------------- one accounting path (heartbeat/SSE)
+def test_progress_events_agree_with_heartbeat(tmp_path):
+    events = []
+    buf = io.StringIO()
+    res = run_sweep(ExperimentSpec.from_dict(SPEC),
+                    cache_dir=str(tmp_path / "cache"),
+                    heartbeat_s=1e-4, heartbeat_stream=buf,
+                    on_event=events.append)
+    last = events[-1]
+    assert last["event"] == "sweep_finished"
+    p = last["progress"]
+    assert p["done"] == p["total"] == 3
+    assert [e["event"] for e in events].count("run_finished") == 3
+    # the heartbeat line renders the same numbers the events carry
+    final_line = buf.getvalue().strip().splitlines()[-1]
+    assert (f"explore[serve-mini]: {p['done']}/{p['total']} done "
+            f"({p['cached']} cached, {p['failed']} failed, "
+            f"{p['aborted']} aborted)") in final_line
+    assert res.retries == p["retries"]
+    assert res.executed + res.cached == p["done"]
+    # every event carries a monotonically non-decreasing done counter
+    dones = [e["progress"]["done"] for e in events]
+    assert dones == sorted(dones)
+
+
+# ------------------------------------------------------------------- units
+def test_event_bus_replay_and_close():
+    bus = EventBus()
+    bus.register("j1")
+    assert bus.publish("j1", {"event": "a"}) == 1
+    assert bus.publish("j1", {"event": "b"}) == 2
+    bus.close("j1")
+    assert [(s, e["event"]) for s, e in bus.stream("j1")] == \
+        [(1, "a"), (2, "b")]
+    assert [s for s, _ in bus.stream("j1", after=1)] == [2]
+    with pytest.raises(ValueError):
+        bus.publish("j1", {"event": "c"})       # closed stream
+    assert list(bus.stream("unknown")) == []    # unknown job: empty stream
+
+
+def test_job_store_persistence_roundtrip(tmp_path):
+    store = JobStore(str(tmp_path))
+    job = store.create({"workloads": []}, "x", "h" * 64)
+    store.update(job["id"], persist=True, state="done",
+                 report={"schema": "r"}, summary="s")
+    # a fresh store (new daemon) sees the terminal record verbatim
+    store2 = JobStore(str(tmp_path))
+    assert store2.recover() == []
+    got = store2.get(job["id"])
+    assert got["state"] == "done" and got["report"] == {"schema": "r"}
+    # ids keep counting after reload — no reuse across restarts
+    assert store2.create({}, "y", "h" * 64)["id"] == "j00002"
+    # atomic persistence: no tmp litter
+    assert all(not p.name.endswith(".tmp")
+               for p in (tmp_path / "jobs").iterdir())
+
+
+def test_service_stage_registered():
+    from repro.pipeline.registry import available_stages, stage_doc
+    import repro.pipeline  # noqa: F401 — registers builtins
+    assert "serve.api" in available_stages()["service"]
+    assert "daemon" in stage_doc("service", "serve.api")
